@@ -1,0 +1,104 @@
+//! Heterogeneity-aware planning walkthrough (paper §V-A + Fig. 17).
+//!
+//! Plans all three evaluation models over the heterogeneous Env.B and a
+//! range of homogeneous Nano clusters, showing how the DP planner picks
+//! stage boundaries, device groups, and per-device sample dispatch — and
+//! what the heterogeneity-unaware ablation (the older PAC planner) loses.
+//!
+//! ```bash
+//! cargo run --release --example hetero_planning
+//! ```
+
+use pacpp::cluster::Env;
+use pacpp::model::graph::LayerGraph;
+use pacpp::model::{Method, ModelSpec, Precision};
+use pacpp::planner::{plan, PlannerOptions};
+use pacpp::profiler::Profile;
+use pacpp::sched::simulate_minibatch;
+use pacpp::util::{fmt_bytes, fmt_secs};
+
+fn show_plan(spec: &ModelSpec, env: &Env, hetero: bool) -> Option<f64> {
+    let profile =
+        Profile::new(LayerGraph::new(spec.clone()), Method::pa(false), Precision::FP32, 128);
+    let opts = PlannerOptions {
+        microbatch: 8,
+        n_microbatches: 4,
+        hetero_aware: hetero,
+        ..Default::default()
+    };
+    match plan(&profile, env, &opts) {
+        Ok(p) => {
+            println!(
+                "  {} planner: {} stages {}",
+                if hetero { "hetero-aware" } else { "homogeneous" },
+                p.n_stages(),
+                p.grouping()
+            );
+            for (i, s) in p.stages.iter().enumerate() {
+                let devs: Vec<String> = s
+                    .devices
+                    .iter()
+                    .zip(&s.dispatch)
+                    .map(|(d, b)| format!("{}:{}smp", d.kind.name(), b))
+                    .collect();
+                println!(
+                    "    stage {i} blocks [{:>2},{:>2})  [{}]  peak {}",
+                    s.range.0,
+                    s.range.1,
+                    devs.join(" "),
+                    fmt_bytes(s.peak_mem)
+                );
+            }
+            let sim = simulate_minibatch(&p, &profile, &env.network);
+            println!(
+                "    minibatch {} (bubbles {:.0}%)",
+                fmt_secs(sim.minibatch_time),
+                sim.bubble_fraction * 100.0
+            );
+            Some(sim.minibatch_time)
+        }
+        Err(e) => {
+            println!("  planning failed: {e}");
+            None
+        }
+    }
+}
+
+fn main() {
+    println!("== heterogeneity-aware planning (Env.B: TX2-H, TX2-L, Nano-H, Nano-L) ==");
+    let env_b = Env::env_b();
+    for spec in ModelSpec::paper_models() {
+        println!("\n{}:", spec.name);
+        let het = show_plan(&spec, &env_b, true);
+        let homo = show_plan(&spec, &env_b, false);
+        if let (Some(h), Some(o)) = (het, homo) {
+            println!(
+                "  => heterogeneity awareness saves {:.0}% latency",
+                (1.0 - h / o) * 100.0
+            );
+        }
+    }
+
+    println!("\n== grouping evolution over cluster size (Fig. 17) ==");
+    for spec in ModelSpec::paper_models() {
+        println!("\n{}:", spec.name);
+        for n in 2..=8 {
+            let env = Env::nanos(n);
+            let profile = Profile::new(
+                LayerGraph::new(spec.clone()),
+                Method::pa(false),
+                Precision::FP32,
+                128,
+            );
+            let opts = PlannerOptions {
+                microbatch: (n / 2).max(2),
+                n_microbatches: 4,
+                ..Default::default()
+            };
+            match plan(&profile, &env, &opts) {
+                Ok(p) => println!("  {n} devices: {}", p.grouping()),
+                Err(e) => println!("  {n} devices: {e}"),
+            }
+        }
+    }
+}

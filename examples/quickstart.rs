@@ -1,0 +1,76 @@
+//! Quickstart: plan and simulate PAC+ fine-tuning on the paper's two
+//! evaluation environments — no artifacts required.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pacpp::baselines::{run_system, System, TrainJob};
+use pacpp::cluster::Env;
+use pacpp::data::Task;
+use pacpp::model::graph::LayerGraph;
+use pacpp::model::{Method, ModelSpec, Precision};
+use pacpp::planner::{plan, PlannerOptions};
+use pacpp::profiler::Profile;
+use pacpp::sched::simulate_minibatch;
+use pacpp::util::{fmt_bytes, fmt_secs};
+
+fn main() {
+    println!("== PAC+ quickstart ==\n");
+
+    // 1. Describe the model and the fine-tuning method.
+    let spec = ModelSpec::t5_large();
+    let method = Method::pa(true); // Parallel Adapters + activation cache
+    let profile = Profile::new(LayerGraph::new(spec.clone()), method, Precision::FP32, 128);
+    println!(
+        "model: {} ({:.2}B params, adapter {:.1}M trainable)",
+        spec.name,
+        spec.params_total() as f64 / 1e9,
+        method.trainable_params(&spec) as f64 / 1e6
+    );
+
+    // 2. Plan hybrid parallelism on the homogeneous Env.A.
+    let env = Env::env_a();
+    let opts = PlannerOptions { microbatch: 4, n_microbatches: 4, ..Default::default() };
+    let p = plan(&profile, &env, &opts).expect("planning failed");
+    println!("\nplan on {} ({} devices):", env.name, env.n());
+    println!("  stages: {}  grouping: {}", p.n_stages(), p.grouping());
+    for (i, s) in p.stages.iter().enumerate() {
+        println!(
+            "  stage {i}: blocks [{:>2}, {:>2})  {} device(s), dispatch {:?}, peak mem {}",
+            s.range.0,
+            s.range.1,
+            s.devices.len(),
+            s.dispatch,
+            fmt_bytes(s.peak_mem)
+        );
+    }
+
+    // 3. Simulate one mini-batch through the 1F1B pipeline.
+    let sim = simulate_minibatch(&p, &profile, &env.network);
+    println!(
+        "\n1F1B simulation: minibatch {}  (bubbles {:.0}%, in-flight {:?})",
+        fmt_secs(sim.minibatch_time),
+        sim.bubble_fraction * 100.0,
+        sim.peak_in_flight
+    );
+
+    // 4. Full fine-tuning run (MRPC, 3 epochs) vs the baselines.
+    println!("\nMRPC x 3 epochs on Env.A:");
+    let job = TrainJob::new(Task::Mrpc.train_samples(), 3, 128, 16);
+    for system in [
+        System::PipelineParallel,
+        System::DataParallel,
+        System::Standalone,
+        System::PacPlus,
+    ] {
+        // baselines use serial Adapters (their best non-OOM method);
+        // PAC+ uses Parallel Adapters with the cache
+        let m = if system == System::PacPlus { method } else { Method::adapters_default() };
+        let prof = Profile::new(LayerGraph::new(spec.clone()), m, Precision::FP32, 128);
+        match run_system(system, &prof, &env, job) {
+            Ok(r) => println!("  {:<14} {}", system.name(), fmt_secs(r.total)),
+            Err(e) => println!("  {:<14} {e}", system.name()),
+        }
+    }
+}

@@ -1,0 +1,364 @@
+"""AOT export: lower every PAC+ train/forward function to HLO text.
+
+Build-time entry point (``make artifacts``)::
+
+    python -m compile.aot --config tiny --out ../artifacts/tiny
+    python -m compile.aot --config small --baselines --golden --out ...
+    python -m compile.aot --config base100m --out ...
+
+Outputs, per config directory:
+
+* ``<name>.hlo.txt``     — one HLO-text module per exported function
+* ``params_*.bin``       — raw little-endian parameter dumps (backbone,
+                           adapter inits, quantized backbone, baselines)
+* ``manifest.json``      — the contract with the Rust runtime: artifact
+                           input/output specs and parameter-file layouts
+* ``golden.json``        — (tiny only) input/output vectors for Rust
+                           integration tests
+
+Interchange format is HLO **text**, not serialized HloModuleProto — the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import get_config, ModelConfig
+from . import model as M
+from . import init as I
+from . import quantize as Q
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32",
+          np.dtype(np.int8): "i8", np.dtype(np.float16): "f16"}
+
+
+def _spec_of(x):
+    d = np.dtype(x.dtype)
+    return {"shape": [int(s) for s in x.shape], "dtype": _DTYPE[d]}
+
+
+def lower_artifact(name, fn, arg_arrays, out_dir, manifest, input_names=None):
+    """Lower fn(*args) to HLO text; record IO specs in the manifest."""
+    specs = [jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
+             for a in arg_arrays]
+    # keep_unused: jit would otherwise DCE parameters that a particular
+    # artifact does not read (e.g. ln_f in backbone_fwd), silently
+    # changing the calling convention the Rust runtime relies on.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    outs = jax.eval_shape(fn, *specs)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    manifest["artifacts"][name] = {
+        "file": fname,
+        "inputs": [
+            dict(_spec_of(s), name=(input_names[i] if input_names else f"arg{i}"))
+            for i, s in enumerate(specs)
+        ],
+        "outputs": [_spec_of(o) for o in outs],
+    }
+    print(f"  lowered {name}: {len(text)} chars, "
+          f"{len(specs)} inputs, {len(outs)} outputs")
+
+
+# ---------------------------------------------------------------------------
+# Parameter dumps
+# ---------------------------------------------------------------------------
+
+def dump_params(tag, arrays, names, out_dir, manifest):
+    """Concatenate arrays into params_<tag>.bin; record offsets."""
+    fname = f"params_{tag}.bin"
+    entries = []
+    off = 0
+    with open(os.path.join(out_dir, fname), "wb") as f:
+        for name, a in zip(names, arrays):
+            a = np.ascontiguousarray(a)
+            raw = a.tobytes()
+            entries.append({
+                "name": name, "shape": [int(s) for s in a.shape],
+                "dtype": _DTYPE[np.dtype(a.dtype)],
+                "offset": off, "nbytes": len(raw),
+            })
+            f.write(raw)
+            off += len(raw)
+    manifest["params"][tag] = {"file": fname, "entries": entries,
+                               "total_bytes": off}
+    print(f"  dumped {tag}: {off / 1e6:.1f} MB, {len(entries)} arrays")
+
+
+# ---------------------------------------------------------------------------
+# Export sets
+# ---------------------------------------------------------------------------
+
+def export_core(cfg: ModelConfig, out_dir, manifest, stage_sizes):
+    """Core artifacts: backbone fwd (full + per-stage), adapter steps."""
+    B, S, D, L = cfg.batch, cfg.seq_len, cfg.d_model, cfg.layers
+    bspec = M.backbone_spec(cfg)
+    aspec = M.adapter_spec(cfg)
+    bshapes = [np.zeros(s, np.float32) for _, s in bspec]
+    ashapes = [np.zeros(s, np.float32) for _, s in aspec]
+    tokens = np.zeros((B, S), np.int32)
+    labels = np.zeros((B,), np.int32)
+    acts = np.zeros((L + 1, B, S, D), np.float32)
+    lr = np.zeros((), np.float32)
+
+    bnames = [n for n, _ in bspec]
+    anames = [n for n, _ in aspec]
+
+    # Embedding-only forward (stage 0 prologue of the pipeline).
+    lower_artifact(
+        "embed_fwd",
+        lambda te, pe, tok: (M.embed_fwd(cfg, te, pe, tok),),
+        [bshapes[0], bshapes[1], tokens],
+        out_dir, manifest, ["tok_emb", "pos_emb", "tokens"])
+
+    # Per-stage forward: k consecutive layers, returns output + cache slab.
+    for k in stage_sizes:
+        layer_arrays = [np.zeros(s, np.float32)
+                        for _, s in bspec[2:2 + k * 8]]
+        x_in = np.zeros((B, S, D), np.float32)
+
+        def stage_fn(*args, _k=k):
+            lparams, x = list(args[:-1]), args[-1]
+            x_out, acts_k = M.backbone_layers_fwd(cfg, lparams, x)
+            return (x_out, acts_k)
+
+        lower_artifact(
+            f"stage_fwd_k{k}", stage_fn, layer_arrays + [x_in],
+            out_dir, manifest,
+            [n for n, _ in bspec[2:2 + k * 8]] + ["x"])
+
+    # Whole-backbone forward (standalone / DP baselines, cache building).
+    lower_artifact(
+        "backbone_fwd",
+        lambda *args: (M.backbone_fwd(cfg, list(args[:-1]), args[-1]),),
+        bshapes + [tokens], out_dir, manifest, bnames + ["tokens"])
+
+    # Phase-2 hot path: adapter train step on cached activations.
+    lower_artifact(
+        "adapter_step",
+        lambda *args: M.adapter_step(cfg, list(args[:-3]), *args[-3:]),
+        ashapes + [acts, labels, lr], out_dir, manifest,
+        anames + ["acts", "labels", "lr"])
+
+    # Per-microbatch gradients (for the coordinator's AllReduce).
+    lower_artifact(
+        "adapter_grads",
+        lambda *args: M.adapter_grads(cfg, list(args[:-2]), *args[-2:]),
+        ashapes + [acts, labels], out_dir, manifest,
+        anames + ["acts", "labels"])
+
+    # Eval pass.
+    lower_artifact(
+        "adapter_eval",
+        lambda *args: M.adapter_eval(cfg, list(args[:-2]), *args[-2:]),
+        ashapes + [acts, labels], out_dir, manifest,
+        anames + ["acts", "labels"])
+
+    # Epoch-1 fused step (backbone fwd + adapter step + cache emission).
+    nb = len(bshapes)
+    lower_artifact(
+        "full_step",
+        lambda *args: M.full_step(cfg, list(args[:nb]),
+                                  list(args[nb:-3]), *args[-3:]),
+        bshapes + ashapes + [tokens, labels, lr], out_dir, manifest,
+        bnames + anames + ["tokens", "labels", "lr"])
+
+
+def export_quantized(cfg: ModelConfig, backbone, out_dir, manifest):
+    """FP16/INT8/INT4 backbone forwards + reduced-precision param dumps."""
+    B, S = cfg.batch, cfg.seq_len
+    tokens = np.zeros((B, S), np.int32)
+    block = min(64, cfg.d_model)
+
+    bnames = [n for n, _ in M.backbone_spec(cfg)]
+    f16 = M.fp16_backbone(backbone)
+    lower_artifact(
+        "qbackbone_fwd_fp16",
+        lambda *args: (M.fp16_backbone_fwd(cfg, list(args[:-1]), args[-1]),),
+        f16 + [tokens], out_dir, manifest, bnames + ["tokens"])
+    dump_params("backbone_fp16", f16, bnames, out_dir, manifest)
+    for bits in ("int8", "int4"):
+        qparams, qspec = M.quantize_backbone(cfg, backbone, bits, block)
+        lower_artifact(
+            f"qbackbone_fwd_{bits}",
+            lambda *args, _bits=bits: (
+                M.quant_backbone_fwd(cfg, list(args[:-1]), args[-1],
+                                     _bits, block),),
+            qparams + [tokens], out_dir, manifest,
+            [n for n, _, _ in qspec] + ["tokens"])
+        dump_params(f"backbone_{bits}", qparams,
+                    [n for n, _, _ in qspec], out_dir, manifest)
+
+
+def export_baselines(cfg: ModelConfig, backbone, out_dir, manifest):
+    """Full-FT / LoRA / serial-Adapters train steps (accuracy experiments)."""
+    B, S = cfg.batch, cfg.seq_len
+    tokens = np.zeros((B, S), np.int32)
+    labels = np.zeros((B,), np.int32)
+    lr = np.zeros((), np.float32)
+    bspec = M.backbone_spec(cfg)
+    bshapes = [np.zeros(s, np.float32) for _, s in bspec]
+    bnames = [n for n, _ in bspec]
+    nb = len(bshapes)
+
+    head = [np.zeros((cfg.d_model, cfg.n_classes), np.float32),
+            np.zeros((cfg.n_classes,), np.float32)]
+    lower_artifact(
+        "full_ft_step",
+        lambda *args: M.full_ft_step(
+            cfg, list(args[:nb]), list(args[nb:nb + 2]), *args[-3:]),
+        bshapes + head + [tokens, labels, lr], out_dir, manifest,
+        bnames + ["head_w", "head_b", "tokens", "labels", "lr"])
+
+    lspec = M.lora_spec(cfg)
+    lshapes = [np.zeros(s, np.float32) for _, s in lspec]
+    lower_artifact(
+        "lora_step",
+        lambda *args: M.lora_step(
+            cfg, list(args[:nb]), list(args[nb:-3]), *args[-3:]),
+        bshapes + lshapes + [tokens, labels, lr], out_dir, manifest,
+        bnames + [n for n, _ in lspec] + ["tokens", "labels", "lr"])
+    dump_params("lora", M.init_lora(cfg), [n for n, _ in lspec],
+                out_dir, manifest)
+
+    hspec = M.houlsby_spec(cfg)
+    hshapes = [np.zeros(s, np.float32) for _, s in hspec]
+    lower_artifact(
+        "houlsby_step",
+        lambda *args: M.houlsby_step(
+            cfg, list(args[:nb]), list(args[nb:-3]), *args[-3:]),
+        bshapes + hshapes + [tokens, labels, lr], out_dir, manifest,
+        bnames + [n for n, _ in hspec] + ["tokens", "labels", "lr"])
+    dump_params("houlsby", M.init_houlsby(cfg), [n for n, _ in hspec],
+                out_dir, manifest)
+    dump_params("head", head, ["head_w", "head_b"], out_dir, manifest)
+
+
+def export_golden(cfg: ModelConfig, backbone, adapter, out_dir, manifest):
+    """Concrete input/output vectors for Rust integration tests."""
+    rng = np.random.default_rng(7)
+    tokens = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    labels = rng.integers(0, cfg.n_classes, (cfg.batch,)).astype(np.int32)
+    lr = np.float32(0.1)
+
+    acts = np.asarray(M.backbone_fwd(cfg, backbone, tokens))
+    step_out = M.adapter_step(cfg, [jnp.asarray(a) for a in adapter],
+                              jnp.asarray(acts), jnp.asarray(labels),
+                              jnp.asarray(lr))
+    loss = float(step_out[-1])
+    golden = {
+        "tokens": tokens.flatten().tolist(),
+        "labels": labels.flatten().tolist(),
+        "lr": float(lr),
+        "acts_sum": float(acts.sum()),
+        "acts_l2": float(np.sqrt((acts.astype(np.float64) ** 2).sum())),
+        "acts_slice": acts[0, 0, 0, :8].tolist(),
+        "adapter_step_loss": loss,
+        "new_param0_l2": float(np.linalg.norm(np.asarray(step_out[0]))),
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    manifest["golden"] = "golden.json"
+    print(f"  golden vectors written (loss={loss:.4f})")
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def default_stage_sizes(cfg: ModelConfig):
+    """Stage lengths the pipeline planner may pick. All k in 1..L would be
+    exhaustive; we export the divisors of L plus 1..min(4, L) which covers
+    every balanced partition of up to 8 devices."""
+    ks = {k for k in range(1, cfg.layers + 1)
+          if cfg.layers % k == 0 or k <= 4}
+    return sorted(ks)
+
+
+def build(config_name: str, out_root: str, baselines: bool, golden: bool,
+          inits: str, quant: bool, seed: int = 0):
+    cfg = get_config(config_name)
+    assert cfg.runnable, f"{config_name} is a cost-model-only descriptor"
+    out_dir = os.path.join(out_root)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"config": cfg.to_dict(), "artifacts": {}, "params": {}}
+
+    print(f"[aot] config={cfg.name} L={cfg.layers} d={cfg.d_model} "
+          f"B={cfg.batch} S={cfg.seq_len} "
+          f"(backbone {cfg.param_count_backbone()/1e6:.1f}M params, "
+          f"adapter {cfg.param_count_adapter()/1e6:.2f}M)")
+
+    backbone = M.init_backbone(cfg, seed)
+    bnames = [n for n, _ in M.backbone_spec(cfg)]
+    anames = [n for n, _ in M.adapter_spec(cfg)]
+    dump_params("backbone", backbone, bnames, out_dir, manifest)
+
+    strategies = [s.strip() for s in inits.split(",") if s.strip()]
+    adapter0 = None
+    for strat in strategies:
+        ap = I.init_adapter(cfg, strat, backbone=backbone, seed=seed + 1)
+        dump_params(f"adapter_{strat}", ap, anames, out_dir, manifest)
+        if adapter0 is None:
+            adapter0 = ap
+
+    export_core(cfg, out_dir, manifest, default_stage_sizes(cfg))
+    if quant:
+        export_quantized(cfg, backbone, out_dir, manifest)
+    if baselines:
+        export_baselines(cfg, backbone, out_dir, manifest)
+    if golden:
+        export_golden(cfg, backbone, adapter0, out_dir, manifest)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written to {out_dir}/manifest.json "
+          f"({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--config", default="tiny")
+    p.add_argument("--out", default=None,
+                   help="output dir (default ../artifacts/<config>)")
+    p.add_argument("--baselines", action="store_true",
+                   help="also export full-FT/LoRA/serial-adapter steps")
+    p.add_argument("--golden", action="store_true",
+                   help="emit golden IO vectors for Rust integration tests")
+    p.add_argument("--inits", default="prune",
+                   help="comma-separated adapter init strategies to dump")
+    p.add_argument("--no-quant", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+    out = args.out or os.path.join("..", "artifacts", args.config)
+    build(args.config, out, args.baselines, args.golden, args.inits,
+          not args.no_quant, args.seed)
+
+
+if __name__ == "__main__":
+    main()

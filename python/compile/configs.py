@@ -1,0 +1,142 @@
+"""Model configurations for the PAC+ reproduction.
+
+Two kinds of configs live here:
+
+* **Runnable configs** (`tiny`, `small`, `base100m`) — encoder transformers
+  that are actually AOT-lowered to HLO artifacts and executed by the Rust
+  runtime. `base100m` is the ~100M-parameter model used by the end-to-end
+  example (`examples/train_e2e.rs`).
+* **Paper configs** (`t5-base`, `t5-large`, `bart-large`) — layer-count /
+  width descriptors of the paper's evaluation models (Table III). These are
+  consumed by the Rust analytic cost model to regenerate Fig. 3 / Table I /
+  Table V etc.; they are far too large to execute on this CPU testbed.
+
+The paper's models are encoder-decoder (en-de); the runnable path here uses
+an encoder + pooled classification head, which exercises the identical
+system machinery (per-layer activations, adapters, cache, pipeline stages).
+The substitution is recorded in DESIGN.md §2.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A transformer backbone + Parallel Adapters configuration."""
+
+    name: str
+    layers: int            # L — number of transformer layers
+    d_model: int           # d — hidden size
+    n_heads: int           # attention heads
+    d_ff: int              # feed-forward inner size
+    vocab: int             # vocabulary size
+    seq_len: int           # fixed sequence length (static AOT shapes)
+    batch: int             # per-device micro-batch used for lowering
+    reduction: int = 8     # r — adapter width reduction factor (paper: 8)
+    n_classes: int = 2     # classification head width
+    runnable: bool = True  # False => cost-model-only descriptor
+
+    @property
+    def d_adapter(self) -> int:
+        """Adapter hidden width d/r (paper §IV-A)."""
+        assert self.d_model % self.reduction == 0
+        return self.d_model // self.reduction
+
+    @property
+    def d_ff_adapter(self) -> int:
+        return max(4, self.d_ff // self.reduction)
+
+    @property
+    def adapter_heads(self) -> int:
+        """Head count for the adapter's attention, adjusted to divide d/r."""
+        h = max(1, self.n_heads // self.reduction)
+        da = self.d_adapter
+        while da % h != 0:
+            h -= 1
+        return h
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count_backbone(self) -> int:
+        """Parameter count of the frozen backbone (embeddings included)."""
+        per_layer = (
+            2 * self.d_model                      # rmsnorm scales
+            + 4 * self.d_model * self.d_model     # Wq Wk Wv Wo
+            + 2 * self.d_model * self.d_ff        # W1 W2
+        )
+        return (
+            self.vocab * self.d_model             # token embedding
+            + self.seq_len * self.d_model         # positional embedding
+            + self.layers * per_layer
+            + self.d_model                        # final norm
+        )
+
+    def param_count_adapter(self) -> int:
+        da, dff = self.d_adapter, self.d_ff_adapter
+        per_layer = 2 * da + 4 * da * da + 2 * da * dff
+        return (
+            (self.layers + 1) * self.d_model * da     # W_down_0..L
+            + self.layers                             # lambda_i
+            + self.layers * per_layer
+            + da * self.d_model                       # W_up
+            + self.d_model * self.n_classes + self.n_classes  # head
+        )
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["d_adapter"] = self.d_adapter
+        d["d_ff_adapter"] = self.d_ff_adapter
+        d["adapter_heads"] = self.adapter_heads
+        d["params_backbone"] = self.param_count_backbone()
+        d["params_adapter"] = self.param_count_adapter()
+        return d
+
+
+# --------------------------------------------------------------------------
+# Runnable configurations
+# --------------------------------------------------------------------------
+
+TINY = ModelConfig(
+    name="tiny", layers=2, d_model=32, n_heads=2, d_ff=64,
+    vocab=128, seq_len=16, batch=4, reduction=4, n_classes=2,
+)
+
+SMALL = ModelConfig(
+    name="small", layers=4, d_model=128, n_heads=4, d_ff=256,
+    vocab=1000, seq_len=32, batch=8, reduction=8, n_classes=2,
+)
+
+# ~97M backbone parameters: the end-to-end example's model.
+BASE100M = ModelConfig(
+    name="base100m", layers=12, d_model=768, n_heads=12, d_ff=3072,
+    vocab=16000, seq_len=64, batch=8, reduction=8, n_classes=2,
+)
+
+# --------------------------------------------------------------------------
+# Paper model descriptors (Table III) — cost model only, never lowered.
+# --------------------------------------------------------------------------
+
+T5_BASE = ModelConfig(
+    name="t5-base", layers=12, d_model=768, n_heads=12, d_ff=3072,
+    vocab=32128, seq_len=128, batch=16, reduction=8, runnable=False,
+)
+BART_LARGE = ModelConfig(
+    name="bart-large", layers=12, d_model=1024, n_heads=16, d_ff=4096,
+    vocab=50265, seq_len=128, batch=16, reduction=8, runnable=False,
+)
+T5_LARGE = ModelConfig(
+    name="t5-large", layers=24, d_model=1024, n_heads=16, d_ff=4096,
+    vocab=32128, seq_len=128, batch=16, reduction=8, runnable=False,
+)
+
+CONFIGS = {c.name: c for c in [TINY, SMALL, BASE100M, T5_BASE, BART_LARGE, T5_LARGE]}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown config {name!r}; available: {sorted(CONFIGS)}")

@@ -1,0 +1,168 @@
+"""Adapter weight-initialization strategies (paper §IV-C, Fig. 7/14).
+
+Four strategies are compared in the paper's Fig. 14:
+
+* ``gaussian`` — random N(0, 0.02) (the LoRA-style default),
+* ``zero``     — zero projection weights (slowest to converge),
+* ``prune``    — norm-based structural pruning of the backbone down to the
+  adapter width (Torch-Pruning-style: keep the top-``Da`` hidden channels
+  and top-``Fa`` FFN channels by aggregate weight norm),
+* ``distill``  — short knowledge-distillation loop matching the adapter's
+  up-projected output to the backbone's final hidden states on unlabeled
+  (random-token) data — the paper runs this "in the cloud"; here it runs
+  at artifact-build time.
+
+All return the adapter flat-parameter list of `model.adapter_spec`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from . import model as M
+
+STRATEGIES = ("gaussian", "zero", "prune", "distill")
+
+
+def init_adapter(cfg: ModelConfig, strategy: str, backbone=None, seed: int = 1,
+                 distill_steps: int = 300, distill_lr: float = 3e-3):
+    if strategy == "gaussian":
+        return M.init_adapter_gaussian(cfg, seed)
+    if strategy == "zero":
+        return init_zero(cfg, seed)
+    if strategy == "prune":
+        assert backbone is not None, "prune init needs backbone params"
+        return init_prune(cfg, backbone, seed)
+    if strategy == "distill":
+        assert backbone is not None, "distill init needs backbone params"
+        return init_distill(cfg, backbone, seed, distill_steps, distill_lr)
+    raise ValueError(f"unknown init strategy {strategy!r}")
+
+
+def init_zero(cfg: ModelConfig, seed: int = 1):
+    """Zero init for all projections; W_down stays Gaussian (a fully-zero
+    adapter passes no signal at all and has exactly-zero gradients)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in M.adapter_spec(cfg):
+        short = name.split(".")[-1]
+        if short in ("ln1", "ln2"):
+            out.append(np.ones(shape, np.float32))
+        elif short == "lam":
+            out.append(np.full(shape, 0.5, np.float32))
+        elif short in ("w_down", "w_down0"):
+            out.append(rng.normal(0.0, 0.02, shape).astype(np.float32))
+        else:
+            out.append(np.zeros(shape, np.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Structural-pruning init
+# ---------------------------------------------------------------------------
+
+def _channel_importance(layer):
+    """Aggregate L2 norm of each hidden channel across a layer's weights."""
+    _, wq, wk, wv, wo, _, w1, w2 = layer
+    imp = (np.linalg.norm(wq, axis=1) + np.linalg.norm(wk, axis=1)
+           + np.linalg.norm(wv, axis=1) + np.linalg.norm(wo, axis=0)
+           + np.linalg.norm(w1, axis=1) + np.linalg.norm(w2, axis=0))
+    return imp
+
+
+def _ffn_importance(layer):
+    _, _, _, _, _, _, w1, w2 = layer
+    return np.linalg.norm(w1, axis=0) + np.linalg.norm(w2, axis=1)
+
+
+def _topk_sorted(imp, k):
+    idx = np.argpartition(-imp, k - 1)[:k]
+    return np.sort(idx)
+
+
+def _selection_matrix(d, idx):
+    s = np.zeros((d, len(idx)), np.float32)
+    s[idx, np.arange(len(idx))] = 1.0
+    return s
+
+
+def init_prune(cfg: ModelConfig, backbone, seed: int = 1):
+    """Norm-criterion structural pruning of the backbone to adapter width."""
+    rng = np.random.default_rng(seed)
+    d, da, fa = cfg.d_model, cfg.d_adapter, cfg.d_ff_adapter
+    layers = [backbone[2 + i * 8: 2 + (i + 1) * 8] for i in range(cfg.layers)]
+
+    out = []
+    idx0 = _topk_sorted(_channel_importance(layers[0]), da)
+    out.append(_selection_matrix(d, idx0))  # w_down0
+
+    last_idx = idx0
+    for i in range(cfg.layers):
+        ln1, wq, wk, wv, wo, ln2, w1, w2 = [np.asarray(a) for a in layers[i]]
+        idx = _topk_sorted(_channel_importance(layers[i]), da)
+        idxf = _topk_sorted(_ffn_importance(layers[i]), fa)
+        out.append(_selection_matrix(d, idx))                    # w_down
+        out.append(np.full((1,), 0.5, np.float32))               # lam
+        out.append(ln1[idx])                                     # ln1
+        out.append(wq[np.ix_(idx, idx)])                         # wq
+        out.append(wk[np.ix_(idx, idx)])
+        out.append(wv[np.ix_(idx, idx)])
+        out.append(wo[np.ix_(idx, idx)])
+        out.append(ln2[idx])
+        out.append(w1[np.ix_(idx, idxf)])
+        out.append(w2[np.ix_(idxf, idx)])
+        last_idx = idx
+
+    out.append(_selection_matrix(d, last_idx).T)                 # w_up
+    out.append(rng.normal(0.0, 0.02, (d, cfg.n_classes)).astype(np.float32))
+    out.append(np.zeros((cfg.n_classes,), np.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Knowledge-distillation init
+# ---------------------------------------------------------------------------
+
+def _adapter_hidden(cfg, aparams, acts):
+    """Final up-projected adapter hidden states [B, S, D] (pre-head)."""
+    a = acts[0] @ aparams[0]
+    for i in range(cfg.layers):
+        off = 1 + i * M.ARRAYS_PER_ADAPTER_LAYER
+        w_down, lam = aparams[off], aparams[off + 1]
+        lp = aparams[off + 2:off + 10]
+        comb = lam[0] * (acts[i + 1] @ w_down) + (1.0 - lam[0]) * a
+        a = M._layer_fwd(comb, lp, cfg.adapter_heads, use_pallas=False)
+    return a @ aparams[-3]
+
+
+def init_distill(cfg: ModelConfig, backbone, seed: int = 1,
+                 steps: int = 300, lr: float = 3e-3, batch: int = None):
+    """Distill the backbone's final hidden states into the adapter.
+
+    Teacher: frozen backbone (final residual stream b_L). Student: the
+    Parallel Adapter stack. Data: random token sequences (the in-repo
+    stand-in for the paper's "open dataset in the cloud"). Loss: MSE of
+    hidden states. Starts from the prune init (best of both)."""
+    rng = np.random.default_rng(seed)
+    batch = batch or cfg.batch
+    aparams = [jnp.asarray(a) for a in init_prune(cfg, backbone, seed)]
+    bparams = [jnp.asarray(a) for a in backbone]
+
+    @jax.jit
+    def step(ap, tokens):
+        acts = jax.lax.stop_gradient(
+            M.backbone_fwd(cfg, bparams, tokens, use_pallas=False))
+
+        def loss_fn(ap_):
+            h = _adapter_hidden(cfg, ap_, acts)
+            return jnp.mean(jnp.square(h - acts[-1]))
+
+        loss, grads = jax.value_and_grad(loss_fn)(ap)
+        return [p - lr * g for p, g in zip(ap, grads)], loss
+
+    loss = None
+    for _ in range(steps):
+        tokens = rng.integers(0, cfg.vocab, (batch, cfg.seq_len)).astype(np.int32)
+        aparams, loss = step(aparams, tokens)
+    return [np.asarray(a) for a in aparams]

@@ -1,0 +1,60 @@
+"""Pallas kernel: fused adapter-input combination (paper §IV-A, Fig. 6).
+
+    input_i = lambda_i * (b_i @ W_down_i) + (1 - lambda_i) * a_{i-1}
+
+Fusing the down-projection with the blend means the full-width backbone
+activation b_i [S, D] is read from HBM exactly once and the intermediate
+(b @ W_down) [S, D/r] never round-trips to HBM — on TPU the tile lives in
+VMEM between the MXU matmul and the VPU blend (DESIGN.md §4).
+
+Used on the cache-build / serving path; the differentiated training path
+uses the jnp oracle (ref.adapter_combine_ref), which XLA fuses similarly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(b_ref, a_ref, w_ref, lam_ref, o_ref):
+    lam = lam_ref[0, 0]
+    proj = jnp.dot(b_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = lam * proj + (1.0 - lam) * a_ref[...]
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bda"))
+def adapter_combine(b, a, w_down, lam, bs: int = 128, bda: int = 128):
+    """Fused ``lam * (b @ w_down) + (1 - lam) * a``.
+
+    b: [S, D] f32; a: [S, Da] f32; w_down: [D, Da] f32; lam: scalar f32.
+    """
+    s, d = b.shape
+    d2, da = w_down.shape
+    assert d == d2 and a.shape == (s, da), (b.shape, a.shape, w_down.shape)
+
+    bs = _pick_tile(s, bs)
+    bda = _pick_tile(da, bda)
+    lam_arr = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(s // bs, da // bda),
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, bda), lambda i, j: (i, j)),
+            pl.BlockSpec((d, bda), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, bda), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, da), jnp.float32),
+        interpret=True,
+    )(b, a, w_down, lam_arr)

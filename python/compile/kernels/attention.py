@@ -1,0 +1,84 @@
+"""Pallas kernel: flash-style multi-head attention for the frozen backbone.
+
+Used only on the non-differentiated backbone forward path (the Parallel
+Adapters design means gradients never cross the backbone — paper §IV-A),
+so no custom VJP is needed.
+
+TPU adaptation (DESIGN.md §4): each kernel instance owns one (batch*head,
+q-block) tile resident in VMEM and streams K/V in chunks with an online
+(running max / running denominator) softmax — the standard flash recurrence
+— instead of materializing the [S, S] score matrix in HBM the way the
+paper's Jetson (CUDA) implementation does with shared-memory tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, kv_chunk, scale):
+    q = q_ref[0]                      # [bq, dh]
+    seq = k_ref.shape[1]
+    n_chunks = seq // kv_chunk
+    bq, dh = q.shape
+
+    def body(c, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.dslice(c * kv_chunk, kv_chunk), :]   # [ck, dh]
+        v = v_ref[0, pl.dslice(c * kv_chunk, kv_chunk), :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        m_cur = jnp.max(s, axis=-1)                          # [bq]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])                      # [bq, ck]
+        alpha = jnp.exp(m_prev - m_new)                      # [bq]
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    init = (
+        jnp.full((bq,), -jnp.inf, jnp.float32),
+        jnp.zeros((bq,), jnp.float32),
+        jnp.zeros((bq, dh), jnp.float32),
+    )
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, init)
+    o_ref[0] = acc / l[:, None]
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "kv_chunk"))
+def flash_attention(q, k, v, bq: int = 128, kv_chunk: int = 128):
+    """Scaled dot-product attention, [B, H, S, Dh] -> [B, H, S, Dh]."""
+    b, h, s, dh = q.shape
+    assert k.shape == v.shape == (b, h, s, dh)
+    scale = 1.0 / (dh ** 0.5)
+
+    bq = _pick_tile(s, bq)
+    kv_chunk = _pick_tile(s, kv_chunk)
+
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, kv_chunk=kv_chunk, scale=scale),
+        grid=(b * h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, s, dh), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda g, i: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)

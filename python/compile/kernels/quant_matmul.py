@@ -1,0 +1,86 @@
+"""Pallas kernel: block-wise dequantizing matmul (the PAC+ L1 hot-spot).
+
+The frozen, quantized backbone spends ~98% of its FLOPs in GEMMs whose
+weights are stored INT8/INT4 block-wise (quantize.py). On the paper's CUDA
+testbed this is a per-warp shared-memory dequant; the TPU adaptation
+(DESIGN.md §4) streams quantized weight tiles HBM→VMEM at 1/4–1/8 the f32
+bytes and dequantizes on the VMEM-resident tile right before feeding the
+MXU:
+
+  grid = (M/bm, N/bn, K/bk)  with bk == the quantization block size, so
+  each kernel instance consumes exactly one scale row.
+
+Executed with ``interpret=True`` (CPU correctness path); real-TPU numbers
+are estimated in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref, *, qmax):
+    """One (bm, bn) output tile, accumulating over the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Dequantize the VMEM-resident weight tile: w = w_q * scale / qmax.
+    w = w_ref[...].astype(jnp.float32) * (s_ref[0, :] / qmax)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (tiles must divide)."""
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "block", "bm", "bn"))
+def block_dequant_matmul(x, w_q, scales, qmax: int = 127, block: int = 64,
+                         bm: int = 128, bn: int = 128):
+    """Compute ``x @ dequant(w_q, scales)``.
+
+    x: [M, K] f32; w_q: [K, N] int8 (values in [-qmax, qmax]);
+    scales: [K/block, N] f32 per-(block, column) absmax.
+    K must be a multiple of `block`.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2, (x.shape, w_q.shape)
+    assert k % block == 0, f"K={k} not a multiple of quant block {block}"
+    assert scales.shape == (k // block, n), (scales.shape, (k // block, n))
+
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    bk = block  # one scale row per K-tile
+    grid = (m // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_q, scales)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, bits: str = "int8") -> int:
+    """Estimated VMEM working set of one kernel instance (DESIGN.md §8)."""
+    x_tile = bm * bk * 4
+    w_tile = bm and bk * bn * (1 if bits == "int8" else 1)  # int4 stored unpacked
+    s_tile = bn * 4
+    o_tile = bm * bn * 4
+    return x_tile + w_tile + s_tile + o_tile

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function is the semantic specification that the Pallas
+kernel of the same name must reproduce (``pytest python/tests`` asserts
+allclose across a hypothesis-driven shape/dtype sweep). These are also the
+implementations used inside differentiated subgraphs, where Pallas
+(interpret-mode, no custom VJP) cannot be used.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale=None):
+    """Multi-head scaled dot-product attention (no mask — encoder style).
+
+    q, k, v: [B, H, S, Dh]  ->  [B, H, S, Dh]
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v)
+
+
+def block_dequant_matmul_ref(x, w_q, scales, qmax=127, block=64):
+    """x @ dequant(w_q, scales) with block-wise absmax dequantization.
+
+    x: [M, K] f32; w_q: [K, N] int8; scales: [ceil(K/B), N] f32.
+    Matches quantize.dequantize_blockwise_jnp followed by a matmul.
+    """
+    k, n = w_q.shape
+    nblocks = scales.shape[0]
+    pad = nblocks * block - k
+    qp = jnp.pad(w_q.astype(jnp.float32), ((0, pad), (0, 0)))
+    qb = qp.reshape(nblocks, block, n)
+    w = (qb * (scales[:, None, :] / qmax)).reshape(nblocks * block, n)[:k]
+    return x @ w
+
+
+def adapter_combine_ref(b, a, w_down, lam):
+    """Fused adapter input combination (paper §IV-A, Fig. 6).
+
+    input_i = lambda_i * (b_i @ W_down_i) + (1 - lambda_i) * a_{i-1}
+
+    b: [S, D] backbone activation; a: [S, Da] adapter state;
+    w_down: [D, Da]; lam: scalar in [0, 1].
+    """
+    return lam * (b @ w_down) + (1.0 - lam) * a
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    """RMSNorm: x * scale / rms(x). x: [..., D], scale: [D]."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def ffn_ref(x, w1, w2):
+    """Transformer feed-forward: gelu(x @ w1) @ w2."""
+    return jax.nn.gelu(x @ w1) @ w2

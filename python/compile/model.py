@@ -1,0 +1,493 @@
+"""L2: the PAC+ JAX model — frozen transformer backbone + Parallel Adapters.
+
+Everything here is build-time Python: `aot.py` lowers the functions below
+to HLO text artifacts which the Rust runtime loads and executes. Python is
+never on the training hot path.
+
+Parameter layout convention (shared with the Rust side via the manifest):
+parameters are **flat lists** of arrays in a fixed documented order — no
+pytree-dict ordering ambiguity crosses the language boundary.
+
+Backbone (frozen), pre-RMSNorm encoder:
+    [tok_emb (V,D), pos_emb (S,D)]
+    + per layer i in 0..L:
+        [ln1 (D,), wq (D,D), wk (D,D), wv (D,D), wo (D,D),
+         ln2 (D,), w1 (D,F), w2 (F,D)]
+    + [ln_f (D,)]
+
+Parallel Adapter (trainable), paper §IV-A / Fig. 6:
+    [w_down0 (D,Da)]
+    + per layer i in 0..L:
+        [w_down (D,Da), lam (1,),
+         ln1 (Da,), wq (Da,Da), wk, wv, wo, ln2 (Da,), w1 (Da,Fa), w2 (Fa,Da)]
+    + [w_up (Da,D), head_w (D,C), head_b (C,)]
+
+The backbone forward returns the stacked per-layer activations
+b_0..b_L — exactly the tensors the PAC+ activation cache stores (paper
+§IV-B); the adapter consumes only this stack, so `adapter_*` functions are
+the phase-2 (cached) training path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.ref import attention_ref, rmsnorm_ref, ffn_ref
+from .kernels.attention import flash_attention
+from .kernels.quant_matmul import block_dequant_matmul
+from . import quantize
+
+ARRAYS_PER_BACKBONE_LAYER = 8
+ARRAYS_PER_ADAPTER_LAYER = 10
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs + initialization
+# ---------------------------------------------------------------------------
+
+def backbone_spec(cfg: ModelConfig):
+    """[(name, shape)] for the backbone flat parameter list."""
+    d, f = cfg.d_model, cfg.d_ff
+    spec = [("tok_emb", (cfg.vocab, d)), ("pos_emb", (cfg.seq_len, d))]
+    for i in range(cfg.layers):
+        spec += [
+            (f"l{i}.ln1", (d,)),
+            (f"l{i}.wq", (d, d)), (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)), (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2", (d,)),
+            (f"l{i}.w1", (d, f)), (f"l{i}.w2", (f, d)),
+        ]
+    spec.append(("ln_f", (d,)))
+    return spec
+
+
+def adapter_spec(cfg: ModelConfig):
+    """[(name, shape)] for the adapter flat parameter list."""
+    d, da, fa = cfg.d_model, cfg.d_adapter, cfg.d_ff_adapter
+    spec = [("w_down0", (d, da))]
+    for i in range(cfg.layers):
+        spec += [
+            (f"a{i}.w_down", (d, da)), (f"a{i}.lam", (1,)),
+            (f"a{i}.ln1", (da,)),
+            (f"a{i}.wq", (da, da)), (f"a{i}.wk", (da, da)),
+            (f"a{i}.wv", (da, da)), (f"a{i}.wo", (da, da)),
+            (f"a{i}.ln2", (da,)),
+            (f"a{i}.w1", (da, fa)), (f"a{i}.w2", (fa, da)),
+        ]
+    spec += [("w_up", (da, d)), ("head_w", (d, cfg.n_classes)),
+             ("head_b", (cfg.n_classes,))]
+    return spec
+
+
+def _init_from_spec(spec, rng, scale=0.02):
+    out = []
+    for name, shape in spec:
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            out.append(np.ones(shape, np.float32))
+        elif name.endswith("lam"):
+            out.append(np.full(shape, 0.5, np.float32))  # paper: lam init 0.5
+        elif name.endswith("head_b"):
+            out.append(np.zeros(shape, np.float32))
+        else:
+            out.append(rng.normal(0.0, scale, shape).astype(np.float32))
+    return out
+
+
+def init_backbone(cfg: ModelConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return _init_from_spec(backbone_spec(cfg), rng)
+
+
+def init_adapter_gaussian(cfg: ModelConfig, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    return _init_from_spec(adapter_spec(cfg), rng)
+
+
+# ---------------------------------------------------------------------------
+# Backbone forward
+# ---------------------------------------------------------------------------
+
+def _mha(x, wq, wk, wv, wo, n_heads, use_pallas):
+    """Multi-head attention block. x: [B, S, D]."""
+    b, s, d = x.shape
+    dh = d // n_heads
+
+    def split(t):
+        return t.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    if use_pallas:
+        o = flash_attention(q, k, v)
+    else:
+        o = attention_ref(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ wo
+
+
+def _layer_fwd(x, lp, n_heads, use_pallas):
+    """One pre-norm transformer layer. lp: the 8 layer arrays."""
+    ln1, wq, wk, wv, wo, ln2, w1, w2 = lp
+    h = x + _mha(rmsnorm_ref(x, ln1), wq, wk, wv, wo, n_heads, use_pallas)
+    return h + ffn_ref(rmsnorm_ref(h, ln2), w1, w2)
+
+
+def embed_fwd(cfg: ModelConfig, tok_emb, pos_emb, tokens):
+    """tokens [B, S] int32 -> b_0 [B, S, D]."""
+    return tok_emb[tokens] + pos_emb[None, :, :]
+
+
+def backbone_layers_fwd(cfg: ModelConfig, layer_params, x, use_pallas=True):
+    """Run a span of layers; returns activations after each layer.
+
+    layer_params: flat list, 8 arrays per layer.
+    Returns (x_out [B,S,D], acts [K, B, S, D]) where K = #layers in span.
+    """
+    n = len(layer_params) // ARRAYS_PER_BACKBONE_LAYER
+    acts = []
+    for i in range(n):
+        lp = layer_params[i * 8:(i + 1) * 8]
+        x = _layer_fwd(x, lp, cfg.n_heads, use_pallas)
+        acts.append(x)
+    return x, jnp.stack(acts)
+
+
+def backbone_fwd(cfg: ModelConfig, params, tokens, use_pallas=True):
+    """Full frozen-backbone forward.
+
+    Returns the activation stack b_0..b_L: [L+1, B, S, D] — exactly what
+    the PAC+ activation cache stores per input sequence (paper §IV-B).
+    The final RMSNorm (ln_f) is applied *inside the adapter head path*,
+    not here, so b_L is the raw residual-stream output.
+    """
+    tok_emb, pos_emb = params[0], params[1]
+    layer_params = params[2:2 + cfg.layers * 8]
+    b0 = embed_fwd(cfg, tok_emb, pos_emb, tokens)
+    _, acts = backbone_layers_fwd(cfg, layer_params, b0, use_pallas)
+    return jnp.concatenate([b0[None], acts], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Quantized backbone forward (paper §IV-D): INT8/INT4 storage, f32 compute.
+# ---------------------------------------------------------------------------
+
+QUANTIZED_NAMES = ("wq", "wk", "wv", "wo", "w1", "w2")
+
+
+def quantize_backbone(cfg: ModelConfig, params, bits="int8", block=None):
+    """Quantize every 2-D projection weight of the backbone block-wise.
+
+    Embeddings and norm scales stay f32 (they are a small fraction of
+    bytes and quantizing the embedding table hurts accuracy most).
+    Returns a flat list where each quantized weight contributes two
+    entries: (w_q int8, scales f32); plus the same spec description.
+    """
+    if block is None:
+        block = min(64, cfg.d_model)
+    spec = backbone_spec(cfg)
+    out, out_spec = [], []
+    for (name, shape), w in zip(spec, params):
+        short = name.split(".")[-1]
+        if short in QUANTIZED_NAMES:
+            w_q, scales = quantize_blockwise_np(np.asarray(w), bits, block)
+            out += [w_q, scales]
+            out_spec += [(name + ".q", w_q.shape, "i8"),
+                         (name + ".s", scales.shape, "f32")]
+        else:
+            out.append(np.asarray(w, np.float32))
+            out_spec.append((name, shape, "f32"))
+    return out, out_spec
+
+
+def quantize_blockwise_np(w, bits, block):
+    return quantize.quantize_blockwise(w, bits=bits, block=block)
+
+
+def fp16_backbone(params):
+    """Cast every backbone array to f16 storage (paper Table VII's FP16
+    row). Compute stays f32: the forward casts back on entry."""
+    return [np.asarray(p, np.float16) for p in params]
+
+
+def fp16_backbone_fwd(cfg: ModelConfig, params_f16, tokens, use_pallas=True):
+    """Backbone forward over f16-stored parameters (f32 compute)."""
+    params = [jnp.asarray(p, jnp.float32) for p in params_f16]
+    return backbone_fwd(cfg, params, tokens, use_pallas)
+
+
+def quant_backbone_fwd(cfg: ModelConfig, qparams, tokens, bits="int8",
+                       block=None, use_pallas=True):
+    """Backbone forward over the quantized parameter list.
+
+    Every projection matmul runs through the Pallas block-dequant GEMM
+    (the L1 hot-spot); norms/residuals stay f32.
+    """
+    if block is None:
+        block = min(64, cfg.d_model)
+    qmax = quantize.QMAX[bits]
+
+    # Walk the quantized flat list back into per-layer structure.
+    idx = 0
+
+    def take_f32():
+        nonlocal idx
+        v = qparams[idx]
+        idx += 1
+        return v
+
+    def take_q():
+        nonlocal idx
+        w_q, scales = qparams[idx], qparams[idx + 1]
+        idx += 2
+        return w_q, scales
+
+    tok_emb = take_f32()
+    pos_emb = take_f32()
+
+    def qmm(x2d, wq_s):
+        w_q, scales = wq_s
+        if use_pallas:
+            return block_dequant_matmul(x2d, w_q, scales, qmax=qmax, block=block)
+        w = quantize.dequantize_blockwise_jnp(w_q, scales, bits, block)
+        return x2d @ w
+
+    x = embed_fwd(cfg, tok_emb, pos_emb, tokens)
+    b, s, d = x.shape
+    acts = [x]
+    for _ in range(cfg.layers):
+        ln1 = take_f32()
+        wq_, wk_, wv_, wo_ = take_q(), take_q(), take_q(), take_q()
+        ln2 = take_f32()
+        w1_, w2_ = take_q(), take_q()
+
+        xn = rmsnorm_ref(x, ln1).reshape(b * s, d)
+        dh = d // cfg.n_heads
+
+        def split(t2d):
+            return t2d.reshape(b, s, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+
+        q_, k_, v_ = split(qmm(xn, wq_)), split(qmm(xn, wk_)), split(qmm(xn, wv_))
+        if use_pallas:
+            o = flash_attention(q_, k_, v_)
+        else:
+            o = attention_ref(q_, k_, v_)
+        o2d = o.transpose(0, 2, 1, 3).reshape(b * s, d)
+        x = x + qmm(o2d, wo_).reshape(b, s, d)
+
+        hn = rmsnorm_ref(x, ln2).reshape(b * s, d)
+        inner = jax.nn.gelu(qmm(hn, w1_))
+        x = x + qmm(inner, w2_).reshape(b, s, d)
+        acts.append(x)
+
+    take_f32()  # ln_f (unused here; applied by the adapter head path)
+    return jnp.stack(acts)
+
+
+# ---------------------------------------------------------------------------
+# Parallel Adapter forward / loss / train step (the trainable side network)
+# ---------------------------------------------------------------------------
+
+def adapter_fwd(cfg: ModelConfig, aparams, acts):
+    """Parallel Adapter forward over cached backbone activations.
+
+    acts: [L+1, B, S, D] (b_0..b_L). Returns logits [B, C].
+
+    a_0   = b_0 @ w_down0
+    in_i  = lam_i * (b_{i+1} @ w_down_i) + (1 - lam_i) * a_i
+    a_{i+1} = AdapterLayer_i(in_i)
+    out   = mean_S(a_L @ w_up) @ head_w + head_b
+    """
+    da = cfg.d_adapter
+    w_down0 = aparams[0]
+    a = acts[0] @ w_down0
+    for i in range(cfg.layers):
+        off = 1 + i * ARRAYS_PER_ADAPTER_LAYER
+        w_down, lam = aparams[off], aparams[off + 1]
+        lp = aparams[off + 2:off + 10]
+        comb = lam[0] * (acts[i + 1] @ w_down) + (1.0 - lam[0]) * a
+        a = _layer_fwd(comb, lp, cfg.adapter_heads, use_pallas=False)
+    w_up, head_w, head_b = aparams[-3], aparams[-2], aparams[-1]
+    up = a @ w_up                                   # [B, S, D]
+    pooled = jnp.mean(up, axis=1)                   # [B, D]
+    return pooled @ head_w + head_b
+
+
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def adapter_loss(cfg: ModelConfig, aparams, acts, labels):
+    return softmax_xent(adapter_fwd(cfg, aparams, acts), labels)
+
+
+def sgd(params, grads, lr):
+    return [p - lr * g for p, g in zip(params, grads)]
+
+
+def adapter_step(cfg: ModelConfig, aparams, acts, labels, lr):
+    """One SGD step of the adapter on cached activations (phase-2 path).
+
+    Returns (new_params..., loss). This is the artifact executed in a
+    data-parallel loop by the Rust coordinator after epoch 1.
+    """
+    acts = jax.lax.stop_gradient(acts)
+    loss, grads = jax.value_and_grad(
+        lambda ap: adapter_loss(cfg, ap, acts, labels))(aparams)
+    return tuple(sgd(aparams, grads, lr)) + (loss,)
+
+
+def adapter_grads(cfg: ModelConfig, aparams, acts, labels):
+    """Per-microbatch adapter gradients (for cross-device AllReduce).
+
+    Returns (grads..., loss) — the Rust coordinator averages gradients
+    across the data-parallel group and applies the update itself.
+    """
+    acts = jax.lax.stop_gradient(acts)
+    loss, grads = jax.value_and_grad(
+        lambda ap: adapter_loss(cfg, ap, acts, labels))(aparams)
+    return tuple(grads) + (loss,)
+
+
+def full_step(cfg: ModelConfig, bparams, aparams, tokens, labels, lr,
+              use_pallas=True):
+    """Epoch-1 step: frozen backbone forward + adapter fwd/bwd.
+
+    Returns (new_adapter_params..., loss, acts). `acts` is handed to the
+    Rust activation cache. Gradients never cross the backbone: the
+    activation stack is stop_gradient'ed (the paper's "gradient highway").
+    """
+    acts = jax.lax.stop_gradient(backbone_fwd(cfg, bparams, tokens, use_pallas))
+    loss, grads = jax.value_and_grad(
+        lambda ap: adapter_loss(cfg, ap, acts, labels))(aparams)
+    return tuple(sgd(aparams, grads, lr)) + (loss, acts)
+
+
+def adapter_eval(cfg: ModelConfig, aparams, acts, labels):
+    """Eval pass: (loss, #correct) over one cached batch."""
+    logits = adapter_fwd(cfg, aparams, acts)
+    loss = softmax_xent(logits, labels)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# Baseline fine-tuning algorithms (accuracy-shape experiments, Table VI /
+# Fig. 14 / Table VII). These differentiate *through* the backbone, so they
+# use the jnp reference path (no Pallas on differentiated subgraphs).
+# ---------------------------------------------------------------------------
+
+def _backbone_logits(cfg, bparams, head, tokens, extra=None):
+    """Backbone + pooled classification head; `extra` hooks PEFT variants."""
+    acts = backbone_fwd(cfg, bparams, tokens, use_pallas=False)
+    x = rmsnorm_ref(acts[-1], bparams[-1])
+    pooled = jnp.mean(x, axis=1)
+    head_w, head_b = head
+    return pooled @ head_w + head_b
+
+
+def full_ft_step(cfg: ModelConfig, bparams, head, tokens, labels, lr):
+    """Full-model fine-tuning baseline: every backbone param is trainable."""
+    def loss_fn(bp, hd):
+        return softmax_xent(_backbone_logits(cfg, bp, hd, tokens), labels)
+
+    loss, (gb, gh) = jax.value_and_grad(loss_fn, argnums=(0, 1))(bparams, head)
+    return tuple(sgd(bparams, gb, lr)) + tuple(sgd(head, gh, lr)) + (loss,)
+
+
+def lora_spec(cfg: ModelConfig, rank: int = 8):
+    """LoRA on Wq and Wv of every layer (paper's setting from [11])."""
+    d = cfg.d_model
+    spec = []
+    for i in range(cfg.layers):
+        for nm in ("wq", "wv"):
+            spec += [(f"l{i}.{nm}.lora_a", (d, rank)),
+                     (f"l{i}.{nm}.lora_b", (rank, d))]
+    spec += [("head_w", (d, cfg.n_classes)), ("head_b", (cfg.n_classes,))]
+    return spec
+
+
+def init_lora(cfg: ModelConfig, rank: int = 8, seed: int = 2):
+    """A ~ N(0, 0.02), B = 0 so that dW = BA = 0 at init (paper §IV-C)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in lora_spec(cfg, rank):
+        if name.endswith("lora_b") or name.endswith("head_b"):
+            out.append(np.zeros(shape, np.float32))
+        else:
+            out.append(rng.normal(0.0, 0.02, shape).astype(np.float32))
+    return out
+
+
+def _lora_backbone_fwd(cfg, bparams, lparams, tokens):
+    """Backbone forward with LoRA deltas injected on Wq/Wv."""
+    tok_emb, pos_emb = bparams[0], bparams[1]
+    x = embed_fwd(cfg, tok_emb, pos_emb, tokens)
+    for i in range(cfg.layers):
+        off = 2 + i * 8
+        ln1, wq, wk, wv, wo, ln2, w1, w2 = bparams[off:off + 8]
+        la_q, lb_q, la_v, lb_v = lparams[i * 4:(i + 1) * 4]
+        wq_eff = wq + la_q @ lb_q
+        wv_eff = wv + la_v @ lb_v
+        h = x + _mha(rmsnorm_ref(x, ln1), wq_eff, wk, wv_eff, wo,
+                     cfg.n_heads, use_pallas=False)
+        x = h + ffn_ref(rmsnorm_ref(h, ln2), w1, w2)
+    return rmsnorm_ref(x, bparams[-1])
+
+
+def lora_step(cfg: ModelConfig, bparams, lparams, tokens, labels, lr):
+    """LoRA fine-tuning step (backbone frozen, low-rank deltas trained)."""
+    def loss_fn(lp):
+        x = _lora_backbone_fwd(cfg, bparams, lp[:-2], tokens)
+        pooled = jnp.mean(x, axis=1)
+        logits = pooled @ lp[-2] + lp[-1]
+        return softmax_xent(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(lparams)
+    return tuple(sgd(lparams, grads, lr)) + (loss,)
+
+
+def houlsby_spec(cfg: ModelConfig, bottleneck: int = 32):
+    """Serial Adapters (Houlsby): bottleneck MLP after each layer."""
+    d = cfg.d_model
+    m = min(bottleneck, d // 2)
+    spec = []
+    for i in range(cfg.layers):
+        spec += [(f"l{i}.ad_down", (d, m)), (f"l{i}.ad_up", (m, d))]
+    spec += [("head_w", (d, cfg.n_classes)), ("head_b", (cfg.n_classes,))]
+    return spec
+
+
+def init_houlsby(cfg: ModelConfig, bottleneck: int = 32, seed: int = 3):
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in houlsby_spec(cfg, bottleneck):
+        if name.endswith(("ad_up", "head_b")):
+            out.append(np.zeros(shape, np.float32))  # identity at init
+        else:
+            out.append(rng.normal(0.0, 0.02, shape).astype(np.float32))
+    return out
+
+
+def houlsby_step(cfg: ModelConfig, bparams, hparams, tokens, labels, lr):
+    """Serial-Adapters fine-tuning step (trainable modules inside the
+    backbone — backprop must traverse the whole backbone, which is the
+    inefficiency PAC+ removes)."""
+    def loss_fn(hp):
+        tok_emb, pos_emb = bparams[0], bparams[1]
+        x = embed_fwd(cfg, tok_emb, pos_emb, tokens)
+        for i in range(cfg.layers):
+            off = 2 + i * 8
+            lp = bparams[off:off + 8]
+            x = _layer_fwd(x, lp, cfg.n_heads, use_pallas=False)
+            dn, up = hp[i * 2], hp[i * 2 + 1]
+            x = x + jax.nn.gelu(x @ dn) @ up
+        x = rmsnorm_ref(x, bparams[-1])
+        pooled = jnp.mean(x, axis=1)
+        logits = pooled @ hp[-2] + hp[-1]
+        return softmax_xent(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(hparams)
+    return tuple(sgd(hparams, grads, lr)) + (loss,)

@@ -1,0 +1,96 @@
+"""Block-wise absmax quantization (paper §IV-D, Eq. 1–2).
+
+The backbone LLM weights are stored in a low-bit integer format and
+dequantized to the compute dtype (f32) on the fly. Following QLoRA-style
+block-wise quantization, each weight matrix ``W in R^{K x N}`` is split
+into blocks of ``BLOCK`` consecutive entries along K (per output column n),
+and each block gets its own absmax scale. This bounds the blast radius of
+outliers (paper §IV-D).
+
+Storage layout used across the whole repo (Python oracle, Pallas kernel,
+and the Rust `quant` module all agree on it):
+
+    w_q    : int8 [K, N]          quantized values in [-Q, Q]
+    scales : f32  [ceil(K/B), N]  absmax of each (block, column)
+
+with Q = 127 for INT8 and Q = 7 for INT4 (INT4 values are stored one per
+int8 byte; the 2x packing is a pure storage concern handled by the Rust
+side's bit-packing tests, not by the compute path).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+BLOCK = 64
+
+QMAX = {"int8": 127, "int4": 7}
+
+
+def _check(w):
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weight, got shape {w.shape}")
+
+
+def quantize_blockwise(w: np.ndarray, bits: str = "int8", block: int = BLOCK):
+    """Quantize a [K, N] f32 matrix block-wise along K. Returns (w_q, scales).
+
+    Implements Eq. (1): X_q = round(Q / absmax(X_block) * X_block).
+    Blocks where absmax == 0 get scale 1.0 (their values are all zeros).
+    """
+    _check(w)
+    qmax = QMAX[bits]
+    k, n = w.shape
+    nblocks = -(-k // block)  # ceil
+    pad = nblocks * block - k
+    wp = np.pad(w.astype(np.float32), ((0, pad), (0, 0)))
+    wb = wp.reshape(nblocks, block, n)
+    absmax = np.abs(wb).max(axis=1)  # [nblocks, n]
+    scales = np.where(absmax == 0.0, 1.0, absmax).astype(np.float32)
+    q = np.rint(wb * (qmax / scales[:, None, :]))
+    q = np.clip(q, -qmax, qmax).astype(np.int8)
+    return q.reshape(nblocks * block, n)[:k], scales
+
+
+def dequantize_blockwise(w_q: np.ndarray, scales: np.ndarray,
+                         bits: str = "int8", block: int = BLOCK) -> np.ndarray:
+    """Inverse of :func:`quantize_blockwise` (Eq. 2)."""
+    _check(w_q)
+    qmax = QMAX[bits]
+    k, n = w_q.shape
+    nblocks = scales.shape[0]
+    pad = nblocks * block - k
+    qp = np.pad(w_q.astype(np.float32), ((0, pad), (0, 0)))
+    qb = qp.reshape(nblocks, block, n)
+    wb = qb * (scales[:, None, :] / qmax)
+    return wb.reshape(nblocks * block, n)[:k].astype(np.float32)
+
+
+def dequantize_blockwise_jnp(w_q, scales, bits: str = "int8", block: int = BLOCK):
+    """jnp version usable inside jitted/lowered graphs."""
+    qmax = QMAX[bits]
+    k, n = w_q.shape
+    nblocks = scales.shape[0]
+    pad = nblocks * block - k
+    qp = jnp.pad(w_q.astype(jnp.float32), ((0, pad), (0, 0)))
+    qb = qp.reshape(nblocks, block, n)
+    wb = qb * (scales[:, None, :] / qmax)
+    return wb.reshape(nblocks * block, n)[:k]
+
+
+def quantization_error(w: np.ndarray, bits: str = "int8", block: int = BLOCK) -> float:
+    """Max elementwise round-trip error, normalized by per-block absmax."""
+    q, s = quantize_blockwise(w, bits, block)
+    w2 = dequantize_blockwise(q, s, bits, block)
+    denom = max(np.abs(w).max(), 1e-12)
+    return float(np.abs(w - w2).max() / denom)
+
+
+def quantized_bytes(shape, bits: str = "int8", block: int = BLOCK) -> int:
+    """Storage bytes of a quantized [K, N] weight (values + scales).
+
+    INT4 counts 0.5 byte/value (packed); the scales are f32.
+    """
+    k, n = shape
+    nblocks = -(-k // block)
+    val_bytes = k * n if bits == "int8" else (k * n + 1) // 2
+    return val_bytes + nblocks * n * 4

@@ -1,0 +1,117 @@
+"""AOT export: manifest contract, HLO text validity, golden reproducibility."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.configs import TINY
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    """Use the checked-out artifacts dir if present, else build into tmp."""
+    if os.path.exists(os.path.join(ART, "manifest.json")):
+        return ART
+    out = str(tmp_path_factory.mktemp("tiny_artifacts"))
+    aot.build("tiny", out, baselines=True, golden=True,
+              inits="gaussian,prune", quant=True)
+    return out
+
+
+@pytest.fixture(scope="module")
+def manifest(tiny_artifacts):
+    with open(os.path.join(tiny_artifacts, "manifest.json")) as f:
+        return json.load(f)
+
+
+EXPECTED_ARTIFACTS = {
+    "embed_fwd", "backbone_fwd", "adapter_step", "adapter_grads",
+    "adapter_eval", "full_step", "qbackbone_fwd_int8", "qbackbone_fwd_int4",
+}
+
+
+def test_manifest_artifacts_present(manifest, tiny_artifacts):
+    assert EXPECTED_ARTIFACTS <= set(manifest["artifacts"])
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(tiny_artifacts, art["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_manifest_io_specs_match_model(manifest):
+    cfg = TINY
+    art = manifest["artifacts"]["adapter_step"]
+    aspec = M.adapter_spec(cfg)
+    # inputs: adapter params + acts + labels + lr
+    assert len(art["inputs"]) == len(aspec) + 3
+    for (name, shape), inp in zip(aspec, art["inputs"]):
+        assert inp["name"] == name
+        assert tuple(inp["shape"]) == tuple(shape)
+    acts_in = art["inputs"][len(aspec)]
+    assert acts_in["shape"] == [cfg.layers + 1, cfg.batch, cfg.seq_len,
+                                cfg.d_model]
+    # outputs: updated params + loss
+    assert len(art["outputs"]) == len(aspec) + 1
+
+
+def test_stage_artifacts_cover_partitions(manifest):
+    cfg = TINY
+    ks = sorted(int(n.split("stage_fwd_k")[1])
+                for n in manifest["artifacts"] if n.startswith("stage_fwd_k"))
+    # every layer count 1..L must be composable from exported stage sizes
+    assert 1 in ks
+    assert cfg.layers in ks or cfg.layers % max(ks) == 0
+
+
+def test_param_dump_roundtrip(manifest, tiny_artifacts):
+    """Binary dump + offsets reproduce the exact backbone arrays."""
+    cfg = TINY
+    backbone = M.init_backbone(cfg, seed=0)
+    entry = manifest["params"]["backbone"]
+    raw = open(os.path.join(tiny_artifacts, entry["file"]), "rb").read()
+    assert len(raw) == entry["total_bytes"]
+    for (name, shape), e in zip(M.backbone_spec(cfg), entry["entries"]):
+        assert e["name"] == name
+        a = np.frombuffer(raw[e["offset"]:e["offset"] + e["nbytes"]],
+                          dtype=np.float32).reshape(e["shape"])
+        np.testing.assert_array_equal(a, backbone.pop(0))
+
+
+def test_quantized_dump_dtypes(manifest):
+    entries = manifest["params"]["backbone_int8"]["entries"]
+    qs = [e for e in entries if e["name"].endswith(".q")]
+    ss = [e for e in entries if e["name"].endswith(".s")]
+    assert qs and len(qs) == len(ss)
+    for e in qs:
+        assert e["dtype"] == "i8"
+        assert e["nbytes"] == int(np.prod(e["shape"]))
+
+
+def test_golden_reproducible(manifest, tiny_artifacts):
+    """Re-deriving the golden outputs from seeds must match the file."""
+    import jax.numpy as jnp
+    with open(os.path.join(tiny_artifacts, manifest["golden"])) as f:
+        golden = json.load(f)
+    cfg = TINY
+    backbone = M.init_backbone(cfg, seed=0)
+    tokens = np.array(golden["tokens"], np.int32).reshape(cfg.batch, cfg.seq_len)
+    acts = np.asarray(M.backbone_fwd(cfg, backbone, tokens))
+    assert abs(acts.sum() - golden["acts_sum"]) < 1e-2 * max(1, abs(golden["acts_sum"]))
+    np.testing.assert_allclose(acts[0, 0, 0, :8], golden["acts_slice"],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_default_stage_sizes():
+    ks = aot.default_stage_sizes(TINY)
+    assert ks == [1, 2]
+    from compile.configs import BASE100M
+    ks = aot.default_stage_sizes(BASE100M)
+    assert set([1, 2, 3, 4, 6, 12]) <= set(ks)

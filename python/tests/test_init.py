@@ -1,0 +1,118 @@
+"""Adapter initialization strategies (paper §IV-C): structural properties
+and the convergence ordering the paper's Fig. 14 demonstrates."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import TINY
+from compile import model as M
+from compile import init as I
+
+CFG = TINY
+RNG = np.random.default_rng(9)
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    return M.init_backbone(CFG, seed=0)
+
+
+def _shapes_ok(params):
+    spec = M.adapter_spec(CFG)
+    assert len(params) == len(spec)
+    for (name, shape), p in zip(spec, params):
+        assert tuple(p.shape) == tuple(shape), (name, p.shape, shape)
+
+
+def test_all_strategies_produce_valid_specs(backbone):
+    for strat in I.STRATEGIES:
+        p = I.init_adapter(CFG, strat, backbone=backbone, distill_steps=5)
+        _shapes_ok(p)
+        for a in p:
+            assert np.isfinite(a).all(), strat
+
+
+def test_prune_selection_matrices(backbone):
+    """w_down columns of the prune init are one-hot channel selectors."""
+    p = I.init_prune(CFG, backbone)
+    w_down0 = p[0]
+    assert set(np.unique(w_down0)) <= {0.0, 1.0}
+    assert (w_down0.sum(axis=0) == 1.0).all()       # each column selects one
+    assert (w_down0.sum(axis=1) <= 1.0).all()       # channels used once
+    w_up = p[-3]
+    assert set(np.unique(w_up)) <= {0.0, 1.0}
+
+
+def test_prune_keeps_top_norm_channels(backbone):
+    """Boost one channel's weights; the prune init must select it."""
+    bp = [np.array(a) for a in backbone]
+    # inflate channel 7 of layer 0's wq rows
+    bp[3][7, :] *= 100.0
+    p = I.init_prune(CFG, bp)
+    idx_selected = np.where(p[0].sum(axis=1) > 0)[0]
+    assert 7 in idx_selected
+
+
+def test_prune_weights_come_from_backbone(backbone):
+    """Adapter layer-0 wq must be a submatrix of the backbone's layer-0 wq."""
+    p = I.init_prune(CFG, backbone)
+    idx = np.where(p[1].sum(axis=1) > 0)[0]          # layer-0 selection
+    b_wq = np.asarray(backbone[3])
+    a_wq = p[4]                                      # a0.wq
+    np.testing.assert_array_equal(a_wq, b_wq[np.ix_(idx, idx)])
+
+
+def test_distill_reduces_hidden_mse(backbone):
+    """The distill loop must reduce the student/teacher hidden-state MSE."""
+    tokens = RNG.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+    acts = M.backbone_fwd(CFG, backbone, tokens, use_pallas=False)
+
+    def hidden_mse(ap):
+        h = I._adapter_hidden(CFG, [jnp.asarray(a) for a in ap], acts)
+        return float(jnp.mean(jnp.square(h - acts[-1])))
+
+    p0 = I.init_prune(CFG, backbone)
+    p1 = I.init_distill(CFG, backbone, steps=60, lr=3e-3)
+    assert hidden_mse(p1) < hidden_mse(p0)
+
+
+def test_zero_init_passes_no_signal(backbone):
+    """Zero init's first logits come from head_b alone (all-zero)."""
+    p = I.init_zero(CFG)
+    tokens = RNG.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+    acts = M.backbone_fwd(CFG, backbone, tokens, use_pallas=False)
+    logits = np.asarray(M.adapter_fwd(CFG, [jnp.asarray(a) for a in p], acts))
+    np.testing.assert_array_equal(logits, np.zeros_like(logits))
+
+
+def test_informed_inits_converge_faster():
+    """Fig. 14's ordering on a learnable synthetic task: prune/distill init
+    reaches a loss threshold in fewer iterations than gaussian."""
+    cfg = CFG
+    backbone = M.init_backbone(cfg, seed=0)
+    # build a simple separable task: label = (count of token<vocab/2) parity
+    rng = np.random.default_rng(3)
+    tokens = rng.integers(0, cfg.vocab, (cfg.batch * 4, cfg.seq_len)).astype(np.int32)
+    labels = ((tokens < cfg.vocab // 2).sum(axis=1) % 2).astype(np.int32)
+
+    def iterations_to(threshold, ap, max_iters=150):
+        params = [jnp.asarray(a) for a in ap]
+        lr = jnp.asarray(0.3, jnp.float32)
+        for it in range(max_iters):
+            tot = 0.0
+            for mb in range(4):
+                sl = slice(mb * cfg.batch, (mb + 1) * cfg.batch)
+                acts = M.backbone_fwd(cfg, backbone, tokens[sl],
+                                      use_pallas=False)
+                out = M.adapter_step(cfg, params, acts,
+                                     jnp.asarray(labels[sl]), lr)
+                params, loss = list(out[:-1]), float(out[-1])
+                tot += loss
+            if tot / 4 < threshold:
+                return it
+        return max_iters
+
+    it_prune = iterations_to(0.55, I.init_prune(cfg, backbone))
+    it_gauss = iterations_to(0.55, M.init_adapter_gaussian(cfg, seed=1))
+    assert it_prune <= it_gauss, (it_prune, it_gauss)

@@ -1,0 +1,169 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept across shapes/dtypes with hypothesis (the CORE correctness signal)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    attention_ref, block_dequant_matmul_ref, adapter_combine_ref,
+    rmsnorm_ref, ffn_ref,
+)
+from compile.kernels.attention import flash_attention
+from compile.kernels.quant_matmul import block_dequant_matmul
+from compile.kernels.adapter_combine import adapter_combine
+from compile.quantize import quantize_blockwise, QMAX
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape, scale=1.0):
+    return (RNG.normal(0, scale, shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# block_dequant_matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 3, 8, 16, 33]),
+    kb=st.sampled_from([1, 2, 3, 4]),
+    n=st.sampled_from([8, 16, 48, 96]),
+    block=st.sampled_from([32, 64]),
+    bits=st.sampled_from(["int8", "int4"]),
+)
+def test_quant_matmul_matches_ref(m, kb, n, block, bits):
+    k = kb * block
+    x = randn(m, k)
+    w = randn(k, n)
+    w_q, scales = quantize_blockwise(w, bits, block)
+    qmax = QMAX[bits]
+    got = np.asarray(block_dequant_matmul(x, w_q, scales, qmax=qmax, block=block))
+    want = np.asarray(block_dequant_matmul_ref(x, w_q, scales, qmax=qmax, block=block))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_quant_matmul_outlier_blocks():
+    """Outliers in one block must not poison other blocks (paper §IV-D)."""
+    k, n = 128, 16
+    w = randn(k, n, scale=0.1)
+    w[3, 5] = 100.0  # outlier confined to block 0
+    w_q, scales = quantize_blockwise(w, "int8", 64)
+    x = np.eye(k, dtype=np.float32)[:8]
+    got = np.asarray(block_dequant_matmul(x, w_q, scales, block=64))
+    # rows 0..7 of dequant(w) — block 1 rows unaffected by the outlier
+    w2 = np.asarray(block_dequant_matmul_ref(np.eye(k, dtype=np.float32),
+                                             w_q, scales, block=64))
+    np.testing.assert_allclose(got, w2[:8], rtol=1e-5, atol=1e-5)
+    assert np.abs(w2[64:] - w[64:]).max() < 0.01 * 0.1 * 64
+
+
+def test_quant_matmul_rejects_bad_k():
+    x = randn(4, 65)
+    w_q = np.zeros((65, 8), np.int8)
+    s = np.ones((2, 8), np.float32)
+    with pytest.raises(AssertionError):
+        block_dequant_matmul(x, w_q, s, block=64)
+
+
+def test_quant_matmul_zero_weights():
+    x = randn(4, 64)
+    w_q, s = quantize_blockwise(np.zeros((64, 8), np.float32))
+    got = np.asarray(block_dequant_matmul(x, w_q, s))
+    np.testing.assert_array_equal(got, np.zeros((4, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 16, 32, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+)
+def test_attention_matches_ref(b, h, s, dh):
+    q, k, v = randn(b, h, s, dh), randn(b, h, s, dh), randn(b, h, s, dh)
+    got = np.asarray(flash_attention(q, k, v))
+    want = np.asarray(attention_ref(q, k, v))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_large_logits_stable():
+    """Online softmax must survive large score magnitudes."""
+    q = randn(1, 1, 32, 16, scale=30.0)
+    k = randn(1, 1, 32, 16, scale=30.0)
+    v = randn(1, 1, 32, 16)
+    got = np.asarray(flash_attention(q, k, v))
+    want = np.asarray(attention_ref(q, k, v))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_attention_uniform_when_keys_equal():
+    """Identical keys => output = mean of values."""
+    q = randn(1, 2, 16, 8)
+    k = np.broadcast_to(randn(1, 2, 1, 8), (1, 2, 16, 8)).copy()
+    v = randn(1, 2, 16, 8)
+    got = np.asarray(flash_attention(q, k, v))
+    want = np.broadcast_to(v.mean(axis=2, keepdims=True), got.shape)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_odd_blocking():
+    """Non-default tile sizes must not change the result."""
+    q, k, v = randn(1, 2, 48, 16), randn(1, 2, 48, 16), randn(1, 2, 48, 16)
+    a = np.asarray(flash_attention(q, k, v, bq=16, kv_chunk=12))
+    b = np.asarray(flash_attention(q, k, v, bq=48, kv_chunk=48))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# adapter_combine
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([4, 16, 32, 64]),
+    d=st.sampled_from([16, 32, 64]),
+    r=st.sampled_from([2, 4, 8]),
+    lam=st.floats(0.0, 1.0),
+)
+def test_adapter_combine_matches_ref(s, d, r, lam):
+    da = max(2, d // r)
+    b = randn(s, d)
+    a = randn(s, da)
+    w = randn(d, da)
+    got = np.asarray(adapter_combine(b, a, w, lam))
+    want = np.asarray(adapter_combine_ref(b, a, w, np.float32(lam)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_adapter_combine_lambda_extremes():
+    """lam=0 passes the adapter state through; lam=1 is pure projection."""
+    b, a, w = randn(8, 32), randn(8, 8), randn(32, 8)
+    np.testing.assert_allclose(
+        np.asarray(adapter_combine(b, a, w, 0.0)), a, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(adapter_combine(b, a, w, 1.0)), b @ w, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# helper oracles sanity
+# ---------------------------------------------------------------------------
+
+def test_rmsnorm_unit_scale():
+    x = randn(4, 16)
+    y = np.asarray(rmsnorm_ref(x, np.ones(16, np.float32)))
+    rms = np.sqrt((y ** 2).mean(axis=-1))
+    np.testing.assert_allclose(rms, np.ones(4), rtol=1e-3)
+
+
+def test_ffn_zero_weights():
+    x = randn(4, 16)
+    y = np.asarray(ffn_ref(x, np.zeros((16, 32), np.float32),
+                           np.zeros((32, 16), np.float32)))
+    np.testing.assert_array_equal(y, np.zeros_like(x))

@@ -1,0 +1,221 @@
+"""L2 model semantics: shapes, the frozen-backbone invariants that make the
+PAC+ activation cache sound, and trainability of every step variant."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import TINY, SMALL, get_config
+from compile import model as M
+
+CFG = TINY
+RNG = np.random.default_rng(42)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    bp = M.init_backbone(CFG, seed=0)
+    ap = M.init_adapter_gaussian(CFG, seed=1)
+    tokens = RNG.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+    labels = RNG.integers(0, CFG.n_classes, (CFG.batch,)).astype(np.int32)
+    return bp, ap, tokens, labels
+
+
+def test_spec_counts():
+    assert len(M.backbone_spec(CFG)) == 3 + CFG.layers * 8
+    assert len(M.adapter_spec(CFG)) == 4 + CFG.layers * 10
+    for cfg_name in ("tiny", "small", "base100m"):
+        cfg = get_config(cfg_name)
+        spec = M.backbone_spec(cfg)
+        n = sum(int(np.prod(s)) for _, s in spec)
+        assert n == cfg.param_count_backbone()
+        aspec = M.adapter_spec(cfg)
+        na = sum(int(np.prod(s)) for _, s in aspec)
+        assert na == cfg.param_count_adapter()
+
+
+def test_base100m_is_about_100m():
+    cfg = get_config("base100m")
+    assert 80e6 < cfg.param_count_backbone() < 120e6
+    # adapter must be a small fraction (parameter efficiency)
+    assert cfg.param_count_adapter() < 0.05 * cfg.param_count_backbone()
+
+
+def test_backbone_fwd_shape(setup):
+    bp, _, tokens, _ = setup
+    acts = M.backbone_fwd(CFG, bp, tokens)
+    assert acts.shape == (CFG.layers + 1, CFG.batch, CFG.seq_len, CFG.d_model)
+    assert np.isfinite(np.asarray(acts)).all()
+
+
+def test_backbone_pallas_matches_ref_path(setup):
+    bp, _, tokens, _ = setup
+    a = np.asarray(M.backbone_fwd(CFG, bp, tokens, use_pallas=True))
+    b = np.asarray(M.backbone_fwd(CFG, bp, tokens, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_activation_cache_invariance(setup):
+    """Same input sequence => identical backbone activations, regardless of
+    adapter state — the property that makes the activation cache sound
+    (paper §IV-B, Observation 2)."""
+    bp, ap, tokens, labels = setup
+    acts1 = np.asarray(M.backbone_fwd(CFG, bp, tokens))
+    # mutate the adapter arbitrarily; backbone activations must not change
+    out = M.full_step(CFG, bp, ap, tokens, labels, 0.5)
+    acts2 = np.asarray(out[-1])
+    acts3 = np.asarray(M.backbone_fwd(CFG, bp, tokens))
+    np.testing.assert_array_equal(acts1, acts2)
+    np.testing.assert_array_equal(acts1, acts3)
+
+
+def test_cached_step_equals_full_step(setup):
+    """adapter_step on cached activations == full_step's adapter update."""
+    bp, ap, tokens, labels = setup
+    acts = M.backbone_fwd(CFG, bp, tokens)
+    full = M.full_step(CFG, bp, ap, tokens, labels, 0.1)
+    cached = M.adapter_step(CFG, [jnp.asarray(a) for a in ap], acts,
+                            jnp.asarray(labels), jnp.asarray(0.1, jnp.float32))
+    assert np.allclose(float(full[-2]), float(cached[-1]))
+    for f, c in zip(full[:-2], cached[:-1]):
+        np.testing.assert_allclose(np.asarray(f), np.asarray(c),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_gradient_highway_no_backbone_grads(setup):
+    """Gradients must never touch the backbone: full_step returns only
+    adapter updates; backbone arrays are bit-identical afterwards."""
+    bp, ap, tokens, labels = setup
+    before = [np.asarray(p).copy() for p in bp]
+    M.full_step(CFG, bp, ap, tokens, labels, 0.1)
+    for b, a in zip(before, bp):
+        np.testing.assert_array_equal(b, np.asarray(a))
+
+
+def test_adapter_step_changes_params_and_reduces_loss(setup):
+    bp, ap, tokens, labels = setup
+    acts = M.backbone_fwd(CFG, bp, tokens)
+    params = [jnp.asarray(a) for a in ap]
+    lr = jnp.asarray(0.2, jnp.float32)
+    losses = []
+    for _ in range(20):
+        out = M.adapter_step(CFG, params, acts, jnp.asarray(labels), lr)
+        params, loss = list(out[:-1]), float(out[-1])
+        losses.append(loss)
+    assert losses[-1] < losses[0], f"no learning: {losses[0]} -> {losses[-1]}"
+
+
+def test_adapter_grads_match_step(setup):
+    """grads artifact + SGD applied externally == adapter_step output."""
+    bp, ap, tokens, labels = setup
+    acts = M.backbone_fwd(CFG, bp, tokens)
+    params = [jnp.asarray(a) for a in ap]
+    gout = M.adapter_grads(CFG, params, acts, jnp.asarray(labels))
+    grads, gloss = list(gout[:-1]), float(gout[-1])
+    sout = M.adapter_step(CFG, params, acts, jnp.asarray(labels),
+                          jnp.asarray(0.1, jnp.float32))
+    assert np.allclose(gloss, float(sout[-1]))
+    for p, g, s in zip(params, grads, sout[:-1]):
+        np.testing.assert_allclose(np.asarray(p - 0.1 * g), np.asarray(s),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_quant_backbone_close_to_f32(setup):
+    bp, _, tokens, _ = setup
+    acts = np.asarray(M.backbone_fwd(CFG, bp, tokens))
+    for bits, tol in (("int8", 0.02), ("int4", 0.30)):
+        qp, _ = M.quantize_backbone(CFG, bp, bits)
+        qacts = np.asarray(M.quant_backbone_fwd(CFG, qp, tokens, bits))
+        rel = np.abs(qacts - acts).max() / np.abs(acts).max()
+        assert rel < tol, f"{bits}: rel err {rel}"
+
+
+def test_quant_backbone_pallas_matches_jnp(setup):
+    bp, _, tokens, _ = setup
+    qp, _ = M.quantize_backbone(CFG, bp, "int8")
+    a = np.asarray(M.quant_backbone_fwd(CFG, qp, tokens, "int8", use_pallas=True))
+    b = np.asarray(M.quant_backbone_fwd(CFG, qp, tokens, "int8", use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_adapter_eval_counts(setup):
+    bp, ap, tokens, labels = setup
+    acts = M.backbone_fwd(CFG, bp, tokens)
+    loss, correct = M.adapter_eval(CFG, [jnp.asarray(a) for a in ap],
+                                   acts, jnp.asarray(labels))
+    assert 0 <= int(correct) <= CFG.batch
+    assert float(loss) > 0
+
+
+def test_baseline_steps_learn(setup):
+    """Each baseline fine-tuning algorithm reduces loss on a fixed batch."""
+    bp, _, tokens, labels = setup
+    bp = [jnp.asarray(p) for p in bp]
+    lr = jnp.asarray(0.05, jnp.float32)
+
+    lparams = [jnp.asarray(p) for p in M.init_lora(CFG)]
+    l0 = None
+    for _ in range(10):
+        out = M.lora_step(CFG, bp, lparams, tokens, labels, lr)
+        lparams, loss = list(out[:-1]), float(out[-1])
+        l0 = l0 if l0 is not None else loss
+    assert loss < l0
+
+    hparams = [jnp.asarray(p) for p in M.init_houlsby(CFG)]
+    l0 = None
+    for _ in range(10):
+        out = M.houlsby_step(CFG, bp, hparams, tokens, labels, lr)
+        hparams, loss = list(out[:-1]), float(out[-1])
+        l0 = l0 if l0 is not None else loss
+    assert loss < l0
+
+    head = [jnp.zeros((CFG.d_model, CFG.n_classes)), jnp.zeros((CFG.n_classes,))]
+    nb = len(bp)
+    l0 = None
+    for _ in range(10):
+        out = M.full_ft_step(CFG, bp, head, tokens, labels, lr)
+        bp, head, loss = list(out[:nb]), list(out[nb:nb + 2]), float(out[-1])
+        l0 = l0 if l0 is not None else loss
+    assert loss < l0
+
+
+def test_lora_init_is_identity(setup):
+    """LoRA B=0 at init => logits identical to frozen backbone + zero head
+    delta (paper §IV-C's rationale)."""
+    bp, _, tokens, _ = setup
+    lp = M.init_lora(CFG)
+    x_lora = np.asarray(M._lora_backbone_fwd(
+        CFG, [jnp.asarray(p) for p in bp], [jnp.asarray(p) for p in lp[:-2]],
+        tokens))
+    acts = np.asarray(M.backbone_fwd(CFG, bp, tokens, use_pallas=False))
+    from compile.kernels.ref import rmsnorm_ref
+    want = np.asarray(rmsnorm_ref(jnp.asarray(acts[-1]), jnp.asarray(bp[-1])))
+    np.testing.assert_allclose(x_lora, want, rtol=1e-5, atol=1e-6)
+
+
+def test_small_config_end_to_end():
+    cfg = SMALL
+    bp = M.init_backbone(cfg, seed=0)
+    ap = M.init_adapter_gaussian(cfg, seed=1)
+    tokens = RNG.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    labels = RNG.integers(0, cfg.n_classes, (cfg.batch,)).astype(np.int32)
+    out = M.full_step(cfg, bp, ap, tokens, labels, 0.1)
+    assert out[-1].shape == (cfg.layers + 1, cfg.batch, cfg.seq_len, cfg.d_model)
+    assert np.isfinite(float(out[-2]))
+
+
+def test_fp16_backbone_close_to_f32(setup):
+    bp, _, tokens, _ = setup
+    acts = np.asarray(M.backbone_fwd(CFG, bp, tokens))
+    f16 = M.fp16_backbone(bp)
+    assert all(p.dtype == np.float16 for p in f16)
+    qacts = np.asarray(M.fp16_backbone_fwd(CFG, f16, tokens))
+    rel = np.abs(qacts - acts).max() / np.abs(acts).max()
+    assert rel < 5e-3, f"fp16 rel err {rel}"
+
+
+def test_fp16_halves_storage(setup):
+    bp, _, _, _ = setup
+    f32_bytes = sum(p.nbytes for p in bp)
+    f16_bytes = sum(p.nbytes for p in M.fp16_backbone(bp))
+    assert f16_bytes * 2 == f32_bytes

@@ -1,0 +1,96 @@
+"""Block-wise quantization (paper Eq. 1-2): round-trip bounds + properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import (
+    quantize_blockwise, dequantize_blockwise, dequantize_blockwise_jnp,
+    quantization_error, quantized_bytes, QMAX, BLOCK,
+)
+
+RNG = np.random.default_rng(5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.integers(1, 200),
+    n=st.integers(1, 40),
+    bits=st.sampled_from(["int8", "int4"]),
+    block=st.sampled_from([16, 64]),
+)
+def test_roundtrip_error_bound(k, n, bits, block):
+    """|w - dequant(quant(w))| <= absmax_block / (2 * qmax) per entry."""
+    w = RNG.normal(0, 1, (k, n)).astype(np.float32)
+    q, s = quantize_blockwise(w, bits, block)
+    w2 = dequantize_blockwise(q, s, bits, block)
+    qmax = QMAX[bits]
+    nblocks = s.shape[0]
+    pad = nblocks * block - k
+    wp = np.pad(w, ((0, pad), (0, 0))).reshape(nblocks, block, n)
+    w2p = np.pad(w2, ((0, pad), (0, 0))).reshape(nblocks, block, n)
+    bound = s[:, None, :] / (2 * qmax) + 1e-7
+    assert (np.abs(wp - w2p) <= bound).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(1, 100), n=st.integers(1, 16))
+def test_values_in_range(k, n):
+    w = RNG.normal(0, 10, (k, n)).astype(np.float32)
+    for bits in ("int8", "int4"):
+        q, _ = quantize_blockwise(w, bits)
+        assert np.abs(q).max() <= QMAX[bits]
+
+
+def test_scales_are_block_absmax():
+    w = RNG.normal(0, 1, (128, 8)).astype(np.float32)
+    _, s = quantize_blockwise(w, "int8", 64)
+    want = np.abs(w.reshape(2, 64, 8)).max(axis=1)
+    np.testing.assert_allclose(s, want, rtol=1e-6)
+
+
+def test_zero_block_scale_is_one():
+    w = np.zeros((64, 4), np.float32)
+    q, s = quantize_blockwise(w)
+    assert (s == 1.0).all()
+    assert (q == 0).all()
+
+
+def test_outlier_containment():
+    """An outlier only degrades its own block (the point of block-wise)."""
+    w = RNG.normal(0, 0.1, (128, 4)).astype(np.float32)
+    werr_clean = quantization_error(w, "int8", 64)
+    w_out = w.copy()
+    w_out[0, 0] = 50.0
+    q, s = quantize_blockwise(w_out, "int8", 64)
+    w2 = dequantize_blockwise(q, s, "int8", 64)
+    # second block untouched by the outlier in the first
+    assert np.abs(w2[64:] - w_out[64:]).max() <= np.abs(w_out[64:]).max() / 254 + 1e-7
+    # whereas per-tensor quantization would smear ~50/254 error everywhere
+    assert np.abs(w2[64:] - w_out[64:]).max() < 50.0 / 254
+
+
+def test_jnp_matches_numpy_dequant():
+    w = RNG.normal(0, 1, (96, 8)).astype(np.float32)
+    for bits in ("int8", "int4"):
+        q, s = quantize_blockwise(w, bits, 32)
+        a = dequantize_blockwise(q, s, bits, 32)
+        b = np.asarray(dequantize_blockwise_jnp(q, s, bits, 32))
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_int4_coarser_than_int8():
+    w = RNG.normal(0, 1, (256, 16)).astype(np.float32)
+    assert quantization_error(w, "int4") > quantization_error(w, "int8")
+
+
+def test_quantized_bytes():
+    # 128x64 int8: values 8192 B + scales 2*64*4 B
+    assert quantized_bytes((128, 64), "int8", 64) == 128 * 64 + 2 * 64 * 4
+    # int4 packs two values per byte
+    assert quantized_bytes((128, 64), "int4", 64) == 128 * 64 // 2 + 2 * 64 * 4
+
+
+def test_rejects_non_2d():
+    with pytest.raises(ValueError):
+        quantize_blockwise(np.zeros((2, 2, 2), np.float32))

@@ -1,0 +1,95 @@
+//! Planner performance benchmarks (DESIGN.md §8 L3 target: < 1 s for
+//! L=50 blocks, |D|=8, B=16 — the paper reports "several minutes on an
+//! edge device" for the same O(B·L²·|D|³) DP).
+//!
+//! Run: `cargo bench --bench bench_planner`
+
+use pacpp::cluster::Env;
+use pacpp::model::graph::LayerGraph;
+use pacpp::model::{Method, ModelSpec, Precision};
+use pacpp::planner::{plan, PlannerOptions};
+use pacpp::profiler::Profile;
+use pacpp::sched::simulate_minibatch;
+use pacpp::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("planner");
+
+    for (name, spec) in [
+        ("t5-base", ModelSpec::t5_base()),
+        ("t5-large", ModelSpec::t5_large()),
+    ] {
+        for n in [4usize, 8] {
+            let profile = Profile::new(
+                LayerGraph::new(spec.clone()),
+                Method::pa(false),
+                Precision::FP32,
+                128,
+            );
+            let env = Env::nanos(n);
+            let opts = PlannerOptions {
+                microbatch: 4,
+                n_microbatches: 4,
+                ..Default::default()
+            };
+            b.run(&format!("plan/{name}/{n}dev/B4"), || {
+                plan(&profile, &env, &opts).unwrap()
+            });
+        }
+    }
+
+    // heterogeneous planning (Eq. 4 dispatch DP dominates)
+    {
+        let profile = Profile::new(
+            LayerGraph::new(ModelSpec::t5_large()),
+            Method::pa(false),
+            Precision::FP32,
+            128,
+        );
+        let env = Env::env_b();
+        for bsz in [4usize, 16] {
+            let opts = PlannerOptions {
+                microbatch: bsz,
+                n_microbatches: 4,
+                ..Default::default()
+            };
+            b.run(&format!("plan/t5-large/env_b/B{bsz}"), || {
+                plan(&profile, &env, &opts).unwrap()
+            });
+        }
+    }
+
+    // 1F1B event simulation
+    {
+        let profile = Profile::new(
+            LayerGraph::new(ModelSpec::t5_large()),
+            Method::pa(false),
+            Precision::FP32,
+            128,
+        );
+        let env = Env::nanos(8);
+        let opts = PlannerOptions {
+            microbatch: 4,
+            n_microbatches: 8,
+            ..Default::default()
+        };
+        let p = plan(&profile, &env, &opts).unwrap();
+        b.run("simulate/t5-large/8dev/M8", || {
+            simulate_minibatch(&p, &profile, &env.network)
+        });
+    }
+
+    // paper target check: planning must be far under the paper's
+    // "several minutes"
+    let slowest = b
+        .results()
+        .iter()
+        .filter(|r| r.name.starts_with("plan/"))
+        .map(|r| r.summary.mean)
+        .fold(0.0f64, f64::max);
+    println!(
+        "\nslowest planning case: {:.3} s (target < 1 s, paper: minutes on a Nano)",
+        slowest
+    );
+    assert!(slowest < 1.0, "planner regression: {slowest} s");
+}

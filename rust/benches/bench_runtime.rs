@@ -1,0 +1,87 @@
+//! Real-runtime hot-path benchmarks over the AOT artifacts: artifact
+//! execution latency, activation-cache IO, quantization, and JSON
+//! plumbing. These are the numbers behind EXPERIMENTS.md §Perf (L3).
+//!
+//! Run: `cargo bench --bench bench_runtime` (needs `make artifacts`).
+
+use std::sync::Arc;
+
+use pacpp::cache::ActivationCache;
+use pacpp::data::SyntheticTask;
+use pacpp::quant::{dequantize, quantize, Bits};
+use pacpp::runtime::{Runtime, Tensor};
+use pacpp::util::bench::Bench;
+use pacpp::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("runtime");
+    let dir = std::env::var("PACPP_ARTIFACTS").unwrap_or("artifacts/small".into());
+    let rt = Arc::new(Runtime::load(&dir).expect("run `make artifacts` first"));
+    let cfg = rt.manifest.config.clone();
+    println!(
+        "artifacts: {} (L={} d={} B={} S={})",
+        dir, cfg.layers, cfg.d_model, cfg.batch, cfg.seq_len
+    );
+
+    let task = SyntheticTask::generate(cfg.batch * 2, cfg.seq_len, cfg.vocab, 0.0, 3);
+    let (tokens, labels) = task.batches(cfg.batch).remove(0);
+
+    // --- backbone forward (epoch-1 per-microbatch cost) -------------------
+    let mut binputs = rt.load_params("backbone").unwrap();
+    binputs.push(Tensor::I32(tokens.clone(), vec![cfg.batch, cfg.seq_len]));
+    rt.executable("backbone_fwd").unwrap(); // compile outside timing
+    b.run("execute/backbone_fwd", || rt.execute("backbone_fwd", &binputs).unwrap());
+    let acts = rt.execute("backbone_fwd", &binputs).unwrap().remove(0);
+
+    // --- quantized backbone forward ---------------------------------------
+    if rt.manifest.artifacts.contains_key("qbackbone_fwd_int8") {
+        let mut qinputs = rt.load_params("backbone_int8").unwrap();
+        qinputs.push(Tensor::I32(tokens.clone(), vec![cfg.batch, cfg.seq_len]));
+        rt.executable("qbackbone_fwd_int8").unwrap();
+        b.run("execute/qbackbone_fwd_int8", || {
+            rt.execute("qbackbone_fwd_int8", &qinputs).unwrap()
+        });
+    }
+
+    // --- adapter step on cached activations (phase-2 hot path) ------------
+    let mut ainputs = rt.load_params("adapter_prune").unwrap();
+    ainputs.push(acts.clone());
+    ainputs.push(Tensor::I32(labels.clone(), vec![cfg.batch]));
+    ainputs.push(Tensor::F32(vec![0.1], vec![]));
+    rt.executable("adapter_step").unwrap();
+    b.run("execute/adapter_step(cached)", || rt.execute("adapter_step", &ainputs).unwrap());
+
+    let mut ginputs = rt.load_params("adapter_prune").unwrap();
+    ginputs.push(acts.clone());
+    ginputs.push(Tensor::I32(labels.clone(), vec![cfg.batch]));
+    rt.executable("adapter_grads").unwrap();
+    b.run("execute/adapter_grads", || rt.execute("adapter_grads", &ginputs).unwrap());
+
+    // --- activation cache IO ----------------------------------------------
+    let entry_len = acts.numel();
+    let dir_c = std::env::temp_dir().join("pacpp_bench_cache");
+    let mut cache = ActivationCache::open(&dir_c, 8, entry_len).unwrap();
+    let slab = acts.as_f32().unwrap().to_vec();
+    b.run(&format!("cache/put({}KB)", entry_len * 4 / 1024), || {
+        cache.put(0, &slab).unwrap()
+    });
+    b.run("cache/get", || cache.get(0).unwrap());
+    cache.clear().unwrap();
+
+    // --- block-wise quantization kernel ------------------------------------
+    let mut rng = Rng::new(5);
+    for (k, n) in [(768, 768), (1024, 4096)] {
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        b.run(&format!("quant/int8/{k}x{n}"), || quantize(&w, k, n, Bits::Int8, 64));
+        let q = quantize(&w, k, n, Bits::Int8, 64);
+        b.run(&format!("dequant/int8/{k}x{n}"), || dequantize(&q));
+    }
+
+    // --- manifest / JSON plumbing ------------------------------------------
+    let manifest_text =
+        std::fs::read_to_string(format!("{dir}/manifest.json")).unwrap();
+    b.run("json/parse_manifest", || {
+        pacpp::util::json::Json::parse(&manifest_text).unwrap()
+    });
+    b.run("params/load_adapter_set", || rt.load_params("adapter_prune").unwrap());
+}

@@ -1,0 +1,58 @@
+//! Paper table/figure regeneration harness — one target per table AND
+//! figure of the evaluation section (§VI). Usage:
+//!
+//! ```bash
+//! cargo bench --bench bench_tables              # everything simulated
+//! cargo bench --bench bench_tables -- table5    # one table
+//! cargo bench --bench bench_tables -- fig16
+//! PACPP_REAL=1 cargo bench --bench bench_tables -- table6   # real runs
+//! ```
+//!
+//! The real-training targets (table6/table7/fig14) execute actual PJRT
+//! training on `artifacts/small` and are gated behind `PACPP_REAL=1`
+//! (they take minutes, not milliseconds).
+
+use std::sync::Arc;
+
+use pacpp::exp;
+use pacpp::runtime::Runtime;
+use pacpp::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("paper-tables");
+
+    b.table("fig3", exp::print_fig3);
+    b.table("table1", exp::print_table1);
+    b.table("table5", exp::print_table5);
+    b.table("fig12", exp::print_fig12);
+    b.table("fig13", exp::print_fig13);
+    b.table("fig15", exp::print_fig15);
+    b.table("fig16", exp::print_fig16);
+    b.table("fig17", exp::print_fig17);
+    b.table("fig18", exp::print_fig18);
+
+    // design-choice ablations (DESIGN.md §5)
+    b.table("ablate_schedule", exp::ablations::print_ablate_schedule);
+    b.table("ablate_bandwidth", exp::ablations::print_ablate_bandwidth);
+    b.table("ablate_microbatches", exp::ablations::print_ablate_microbatches);
+
+    let real = std::env::var("PACPP_REAL").is_ok();
+    if real {
+        let dir = std::env::var("PACPP_ARTIFACTS").unwrap_or("artifacts/small".into());
+        let rt = Arc::new(Runtime::load(&dir).expect("run `make artifacts` first"));
+        let budget = exp::accuracy::Budget::default();
+        b.table("table6", || {
+            exp::accuracy::print_table6(&rt, budget).unwrap();
+        });
+        b.table("table7", || {
+            exp::accuracy::print_table7(&rt, budget).unwrap();
+        });
+        b.table("fig14", || {
+            exp::accuracy::print_fig14(&rt, budget).unwrap();
+        });
+    } else if b.enabled("table6") || b.enabled("table7") || b.enabled("fig14") {
+        println!(
+            "\n(table6/table7/fig14 run real PJRT training; set PACPP_REAL=1 to include them)"
+        );
+    }
+}

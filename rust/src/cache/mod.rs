@@ -1,0 +1,248 @@
+//! The PAC+ activation cache (paper §IV-B, Fig. 11).
+//!
+//! Because the backbone is frozen, its per-layer activations for a given
+//! input sequence are invariant across epochs; caching them removes the
+//! backbone forward pass from every epoch after the first. This module is
+//! the *real* cache used by the execution engine (`exec`): a disk-backed
+//! store of f32 activation slabs keyed by sample id, with an in-memory
+//! index, capacity accounting, and integrity checks.
+
+use std::fs::{self, File};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Disk-backed store of per-sample activation slabs.
+///
+/// Each entry is the stacked backbone activation `[L+1, S, D]` for one
+/// sample, stored as little-endian f32 — exactly the per-sample slice of
+/// the `acts` tensor the AOT `backbone_fwd` artifact produces.
+pub struct ActivationCache {
+    dir: PathBuf,
+    /// Floats per entry (= (L+1)·S·D).
+    entry_len: usize,
+    /// Present sample ids (dense bitmap).
+    present: Vec<bool>,
+    bytes_written: u64,
+}
+
+impl ActivationCache {
+    /// Open (or create) a cache directory sized for `capacity` samples of
+    /// `entry_len` floats each.
+    pub fn open(dir: impl AsRef<Path>, capacity: usize, entry_len: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        let mut cache = ActivationCache {
+            dir,
+            entry_len,
+            present: vec![false; capacity],
+            bytes_written: 0,
+        };
+        // recover any entries already on disk (resume support)
+        for id in 0..capacity {
+            let p = cache.path(id);
+            if let Ok(md) = fs::metadata(&p) {
+                if md.len() == (entry_len * 4) as u64 {
+                    cache.present[id] = true;
+                }
+            }
+        }
+        Ok(cache)
+    }
+
+    fn path(&self, id: usize) -> PathBuf {
+        self.dir.join(format!("act_{id:08}.bin"))
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.present.len()
+    }
+
+    pub fn entry_len(&self) -> usize {
+        self.entry_len
+    }
+
+    /// Number of cached samples.
+    pub fn len(&self) -> usize {
+        self.present.iter().filter(|&&p| p).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        self.present.get(id).copied().unwrap_or(false)
+    }
+
+    /// Whether every sample id in `[0, capacity)` is cached — the
+    /// condition for entering the phase-2 (backbone-free) epochs.
+    pub fn is_complete(&self) -> bool {
+        self.present.iter().all(|&p| p)
+    }
+
+    /// Store one sample's activation slab.
+    pub fn put(&mut self, id: usize, acts: &[f32]) -> Result<()> {
+        if id >= self.capacity() {
+            bail!("sample id {id} out of capacity {}", self.capacity());
+        }
+        if acts.len() != self.entry_len {
+            bail!("entry length {} != expected {}", acts.len(), self.entry_len);
+        }
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(acts.as_ptr() as *const u8, acts.len() * 4)
+        };
+        let tmp = self.dir.join(format!(".tmp_{id:08}"));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(bytes)?;
+        }
+        fs::rename(&tmp, self.path(id))?; // atomic publish
+        self.present[id] = true;
+        self.bytes_written += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Load one sample's slab.
+    pub fn get(&self, id: usize) -> Result<Vec<f32>> {
+        if !self.contains(id) {
+            bail!("sample {id} not cached");
+        }
+        let mut f = File::open(self.path(id))?;
+        let mut out = vec![0f32; self.entry_len];
+        // read straight into the f32 buffer (little-endian hosts; the
+        // per-element from_le_bytes loop cost ~10x this — §Perf)
+        #[cfg(target_endian = "little")]
+        {
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(
+                    out.as_mut_ptr() as *mut u8,
+                    out.len() * 4,
+                )
+            };
+            f.read_exact(bytes)?;
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            let mut buf = vec![0u8; self.entry_len * 4];
+            f.read_exact(&mut buf)?;
+            for (i, chunk) in buf.chunks_exact(4).enumerate() {
+                out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Load a batch of samples concatenated (micro-batch assembly for the
+    /// `adapter_step` artifact). Order is preserved.
+    pub fn get_batch(&self, ids: &[usize]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(ids.len() * self.entry_len);
+        for &id in ids {
+            out.extend_from_slice(&self.get(id)?);
+        }
+        Ok(out)
+    }
+
+    /// Total bytes currently on disk.
+    pub fn disk_bytes(&self) -> u64 {
+        self.len() as u64 * self.entry_len as u64 * 4
+    }
+
+    /// Remove every entry (paper §V-B: "the cache will be cleared once
+    /// the fine-tuning process finishes").
+    pub fn clear(&mut self) -> Result<()> {
+        for id in 0..self.capacity() {
+            if self.present[id] {
+                let _ = fs::remove_file(self.path(id));
+                self.present[id] = false;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pacpp_cache_test_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let mut c = ActivationCache::open(&dir, 4, 8).unwrap();
+        let data: Vec<f32> = (0..8).map(|i| i as f32 * 0.5).collect();
+        c.put(2, &data).unwrap();
+        assert!(c.contains(2));
+        assert!(!c.contains(1));
+        assert_eq!(c.get(2).unwrap(), data);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let dir = tmpdir("badshape");
+        let mut c = ActivationCache::open(&dir, 2, 8).unwrap();
+        assert!(c.put(0, &[1.0; 7]).is_err());
+        assert!(c.put(5, &[1.0; 8]).is_err());
+        assert!(c.get(0).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn completeness_tracking() {
+        let dir = tmpdir("complete");
+        let mut c = ActivationCache::open(&dir, 3, 4).unwrap();
+        assert!(!c.is_complete());
+        for id in 0..3 {
+            c.put(id, &[id as f32; 4]).unwrap();
+        }
+        assert!(c.is_complete());
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.disk_bytes(), 3 * 4 * 4);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn batch_assembly_preserves_order() {
+        let dir = tmpdir("batch");
+        let mut c = ActivationCache::open(&dir, 4, 2).unwrap();
+        for id in 0..4 {
+            c.put(id, &[id as f32, id as f32 + 0.5]).unwrap();
+        }
+        let b = c.get_batch(&[3, 0, 2]).unwrap();
+        assert_eq!(b, vec![3.0, 3.5, 0.0, 0.5, 2.0, 2.5]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_recovers_entries() {
+        let dir = tmpdir("reopen");
+        {
+            let mut c = ActivationCache::open(&dir, 2, 4).unwrap();
+            c.put(1, &[9.0; 4]).unwrap();
+        }
+        let c2 = ActivationCache::open(&dir, 2, 4).unwrap();
+        assert!(c2.contains(1));
+        assert!(!c2.contains(0));
+        assert_eq!(c2.get(1).unwrap(), vec![9.0; 4]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn clear_empties_cache() {
+        let dir = tmpdir("clear");
+        let mut c = ActivationCache::open(&dir, 2, 4).unwrap();
+        c.put(0, &[1.0; 4]).unwrap();
+        c.clear().unwrap();
+        assert!(c.is_empty());
+        assert!(!c.path(0).exists());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,150 @@
+//! Edge-device performance models (paper Table IV).
+
+/// The device types used in the paper's evaluation, with both power modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Jetson Nano, 10 W mode (921 MHz, 128-core Maxwell, 4 GB).
+    NanoH,
+    /// Jetson Nano, 5 W mode (640 MHz).
+    NanoL,
+    /// Jetson TX2, 15 W mode (1.3 GHz, 256-core Pascal, 8 GB).
+    Tx2H,
+    /// Jetson TX2, 7.5 W mode (850 MHz).
+    Tx2L,
+}
+
+impl DeviceKind {
+    /// Peak throughput in FLOP/s.
+    ///
+    /// Nano-H: 472 GFLOPS (the paper quotes 0.47 TFLOPS, §II-B); scaled by
+    /// GPU frequency for the low-power modes; TX2 at ~1.33 TFLOPS
+    /// (256 Pascal cores @ 1.3 GHz).
+    pub fn peak_flops(self) -> f64 {
+        match self {
+            DeviceKind::NanoH => 472e9,
+            DeviceKind::NanoL => 472e9 * 640.0 / 921.0,
+            DeviceKind::Tx2H => 1330e9,
+            DeviceKind::Tx2L => 1330e9 * 850.0 / 1300.0,
+        }
+    }
+
+    /// Total DRAM (Table IV "Memory Budget").
+    pub fn dram_bytes(self) -> u64 {
+        match self {
+            DeviceKind::NanoH | DeviceKind::NanoL => 4 * 1024 * 1024 * 1024,
+            DeviceKind::Tx2H | DeviceKind::Tx2L => 8 * 1024 * 1024 * 1024,
+        }
+    }
+
+    /// Memory budget available to training. Jetsons share DRAM between
+    /// CPU and GPU; the OS, CUDA context and framework runtime reserve
+    /// ~1.5 GB (§II-B: "typical mobile devices ... run both system
+    /// software and applications").
+    pub fn mem_budget(self) -> u64 {
+        self.dram_bytes() - 1536 * 1024 * 1024
+    }
+
+    /// Achieved fraction of peak on transformer fine-tuning workloads.
+    ///
+    /// Calibrated so that T5-Base + Adapters on one Nano-H takes the
+    /// paper's measured 72.6 min/epoch on MRPC (§II-B) — see the test.
+    pub fn efficiency(self) -> f64 {
+        match self {
+            DeviceKind::NanoH | DeviceKind::NanoL => 0.24,
+            // newer Pascal cores sustain slightly better utilization
+            DeviceKind::Tx2H | DeviceKind::Tx2L => 0.28,
+        }
+    }
+
+    /// Effective sustained FLOP/s for training kernels.
+    pub fn effective_flops(self) -> f64 {
+        self.peak_flops() * self.efficiency()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::NanoH => "Nano-H",
+            DeviceKind::NanoL => "Nano-L",
+            DeviceKind::Tx2H => "TX2-H",
+            DeviceKind::Tx2L => "TX2-L",
+        }
+    }
+}
+
+/// A concrete device instance in a cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub id: usize,
+    pub kind: DeviceKind,
+}
+
+impl Device {
+    pub fn new(id: usize, kind: DeviceKind) -> Device {
+        Device { id, kind }
+    }
+
+    /// Time to execute `flops` of training compute on this device, with a
+    /// small per-kernel launch overhead (visible at tiny batch sizes).
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        const LAUNCH_OVERHEAD: f64 = 150e-6; // per fused block execution
+        flops / self.kind.effective_flops() + LAUNCH_OVERHEAD
+    }
+
+    pub fn mem_budget(&self) -> u64 {
+        self.kind.mem_budget()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{cost, Method, ModelSpec};
+
+    /// §II-B: "Fine-tuning a T5-Base model with Adapters on a single
+    /// Jetson Nano requires an epoch time of 72.6 minutes" (MRPC: 3668
+    /// samples, seq 128).
+    #[test]
+    fn nano_epoch_time_calibration() {
+        let spec = ModelSpec::t5_base();
+        let per_token =
+            cost::flops_train_per_token(&spec, Method::adapters_default(), 128);
+        let tokens = 3668.0 * 128.0;
+        let secs = per_token * tokens / DeviceKind::NanoH.effective_flops();
+        let minutes = secs / 60.0;
+        assert!(
+            (minutes - 72.6).abs() < 15.0,
+            "calibration off: {minutes} min vs paper 72.6"
+        );
+    }
+
+    /// §II-B: the A100 runs the same workload ~175.5× faster. With 312
+    /// TFLOPS peak at ~0.45 efficiency the ratio lands in range.
+    #[test]
+    fn a100_speedup_ratio_plausible() {
+        let a100_eff = 312e12 * 0.45;
+        let ratio = a100_eff / DeviceKind::NanoH.effective_flops();
+        assert!(ratio > 100.0 && ratio < 2500.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn power_modes_scale_frequency() {
+        assert!(DeviceKind::NanoL.peak_flops() < DeviceKind::NanoH.peak_flops());
+        assert!(DeviceKind::Tx2L.peak_flops() < DeviceKind::Tx2H.peak_flops());
+        let r = DeviceKind::NanoL.peak_flops() / DeviceKind::NanoH.peak_flops();
+        assert!((r - 640.0 / 921.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_budgets() {
+        assert!(DeviceKind::NanoH.mem_budget() < 4 * 1024 * 1024 * 1024);
+        assert!(DeviceKind::Tx2H.mem_budget() > DeviceKind::NanoH.mem_budget());
+    }
+
+    #[test]
+    fn compute_time_monotone() {
+        let d = Device::new(0, DeviceKind::NanoH);
+        assert!(d.compute_time(1e9) < d.compute_time(2e9));
+        // launch overhead dominates tiny work
+        assert!(d.compute_time(0.0) > 0.0);
+    }
+}

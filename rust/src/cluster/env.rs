@@ -1,0 +1,132 @@
+//! Evaluation environment presets (§VI-A).
+
+use super::device::{Device, DeviceKind};
+use super::network::Network;
+
+/// A concrete edge cluster: devices + interconnect.
+#[derive(Debug, Clone)]
+pub struct Env {
+    pub name: String,
+    pub devices: Vec<Device>,
+    pub network: Network,
+}
+
+impl Env {
+    /// Homogeneous Environment A: 4 × Nano-H on a 1 Gbps LAN.
+    pub fn env_a() -> Env {
+        Env::homogeneous("Env.A", DeviceKind::NanoH, 4)
+    }
+
+    /// Heterogeneous Environment B: 1×Nano-H + 1×Nano-L + 1×TX2-H + 1×TX2-L.
+    pub fn env_b() -> Env {
+        Env {
+            name: "Env.B".into(),
+            devices: vec![
+                Device::new(0, DeviceKind::Tx2H),
+                Device::new(1, DeviceKind::Tx2L),
+                Device::new(2, DeviceKind::NanoH),
+                Device::new(3, DeviceKind::NanoL),
+            ],
+            network: Network::lan_1gbps(),
+        }
+    }
+
+    /// n × Nano-H (the §VI-D/§VI-G scalability clusters use up to 8).
+    pub fn nanos(n: usize) -> Env {
+        Env::homogeneous(&format!("{n}xNano-H"), DeviceKind::NanoH, n)
+    }
+
+    pub fn homogeneous(name: &str, kind: DeviceKind, n: usize) -> Env {
+        Env {
+            name: name.into(),
+            devices: (0..n).map(|i| Device::new(i, kind)).collect(),
+            network: Network::lan_1gbps(),
+        }
+    }
+
+    /// Single device (the Standalone baseline).
+    pub fn standalone(kind: DeviceKind) -> Env {
+        Env::homogeneous(&format!("1x{}", kind.name()), kind, 1)
+    }
+
+    pub fn by_name(name: &str) -> Option<Env> {
+        match name.to_ascii_lowercase().as_str() {
+            "env_a" | "env-a" | "a" => Some(Env::env_a()),
+            "env_b" | "env-b" | "b" => Some(Env::env_b()),
+            s if s.ends_with("nano") => {
+                s.trim_end_matches("nano").trim_end_matches('x').parse().ok().map(Env::nanos)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Devices sorted fastest-first — the order the planner's `D_n`
+    /// prefixes consume (puts the strongest devices in every sub-problem).
+    pub fn devices_fastest_first(&self) -> Vec<Device> {
+        let mut d = self.devices.clone();
+        d.sort_by(|a, b| {
+            b.kind
+                .effective_flops()
+                .partial_cmp(&a.kind.effective_flops())
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        d
+    }
+
+    /// Aggregate compute of the cluster (for utilization reporting).
+    pub fn total_effective_flops(&self) -> f64 {
+        self.devices.iter().map(|d| d.kind.effective_flops()).sum()
+    }
+
+    pub fn is_heterogeneous(&self) -> bool {
+        self.devices
+            .windows(2)
+            .any(|w| w[0].kind.effective_flops() != w[1].kind.effective_flops())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets() {
+        let a = Env::env_a();
+        assert_eq!(a.n(), 4);
+        assert!(!a.is_heterogeneous());
+        let b = Env::env_b();
+        assert_eq!(b.n(), 4);
+        assert!(b.is_heterogeneous());
+    }
+
+    #[test]
+    fn fastest_first_ordering() {
+        let b = Env::env_b();
+        let d = b.devices_fastest_first();
+        for w in d.windows(2) {
+            assert!(w[0].kind.effective_flops() >= w[1].kind.effective_flops());
+        }
+        assert_eq!(d[0].kind, DeviceKind::Tx2H);
+        assert_eq!(d[3].kind, DeviceKind::NanoL);
+    }
+
+    #[test]
+    fn by_name() {
+        assert_eq!(Env::by_name("env_a").unwrap().n(), 4);
+        assert_eq!(Env::by_name("8xnano").unwrap().n(), 8);
+        assert!(Env::by_name("datacenter").is_none());
+    }
+
+    #[test]
+    fn unique_ids() {
+        let e = Env::nanos(8);
+        let mut ids: Vec<_> = e.devices.iter().map(|d| d.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 8);
+    }
+}

@@ -1,0 +1,17 @@
+//! Edge-cluster substrate: calibrated device performance models, the LAN
+//! model, and the paper's testbed environment presets (Table IV, §VI-A).
+//!
+//! We do not have the paper's physical Jetson boards; per DESIGN.md §2 the
+//! devices are performance models (peak FLOPS × a training-efficiency
+//! factor calibrated against the paper's measured epoch times) that drive
+//! the discrete-event schedule simulator. All heterogeneity structure
+//! (2 device families × 2 power modes, 4 GB vs 8 GB memory walls) matches
+//! Table IV.
+
+pub mod device;
+pub mod env;
+pub mod network;
+
+pub use device::{Device, DeviceKind};
+pub use env::Env;
+pub use network::Network;

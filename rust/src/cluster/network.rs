@@ -1,0 +1,95 @@
+//! LAN model (§VI-A: 1000 Mbps intra-cluster bandwidth).
+
+/// A shared-medium local network connecting the edge devices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Network {
+    /// Point-to-point bandwidth in bytes/s.
+    pub bandwidth: f64,
+    /// Per-transfer latency in seconds (switch + stack).
+    pub latency: f64,
+}
+
+impl Network {
+    /// The paper's evaluation network: 1000 Mbps LAN.
+    pub fn lan_1gbps() -> Network {
+        Network { bandwidth: 1000e6 / 8.0, latency: 0.5e-3 }
+    }
+
+    /// A slower Wi-Fi-class network (for sensitivity studies).
+    pub fn wifi_100mbps() -> Network {
+        Network { bandwidth: 100e6 / 8.0, latency: 2e-3 }
+    }
+
+    /// Time to move `bytes` point-to-point.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Ring AllReduce over `n` participants of a `bytes`-sized buffer:
+    /// 2·(n−1)/n · bytes per link, plus 2·(n−1) latency hops.
+    pub fn allreduce_time(&self, bytes: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let n = n as f64;
+        2.0 * (n - 1.0) / n * bytes as f64 / self.bandwidth + 2.0 * (n - 1.0) * self.latency
+    }
+
+    /// All-gather of `bytes` per participant to all `n` participants
+    /// (used for the cache/parameter redistribution step, §V-B).
+    pub fn allgather_time(&self, bytes_per_rank: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let n_f = n as f64;
+        (n_f - 1.0) * bytes_per_rank as f64 / self.bandwidth + (n_f - 1.0) * self.latency
+    }
+
+    /// Broadcast `bytes` from one rank to `n−1` others (pipelined ring).
+    pub fn broadcast_time(&self, bytes: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        bytes as f64 / self.bandwidth + (n as f64 - 1.0) * self.latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gigabit_transfer() {
+        let net = Network::lan_1gbps();
+        // 125 MB at 125 MB/s ≈ 1 s
+        let t = net.transfer_time(125_000_000);
+        assert!((t - 1.0005).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn allreduce_scales() {
+        let net = Network::lan_1gbps();
+        assert_eq!(net.allreduce_time(1_000_000, 1), 0.0);
+        let t2 = net.allreduce_time(100_000_000, 2);
+        let t8 = net.allreduce_time(100_000_000, 8);
+        // ring allreduce volume approaches 2x buffer as n grows
+        assert!(t8 > t2);
+        assert!(t8 < 2.5 * t2);
+    }
+
+    #[test]
+    fn allgather_grows_linearly() {
+        let net = Network::lan_1gbps();
+        let t2 = net.allgather_time(10_000_000, 2);
+        let t4 = net.allgather_time(10_000_000, 4);
+        assert!(t4 > 2.0 * t2 * 0.9);
+    }
+
+    #[test]
+    fn wifi_slower_than_lan() {
+        let b = 50_000_000;
+        assert!(
+            Network::wifi_100mbps().transfer_time(b) > Network::lan_1gbps().transfer_time(b)
+        );
+    }
+}

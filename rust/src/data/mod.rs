@@ -1,0 +1,231 @@
+//! Synthetic workload generators standing in for the paper's GLUE tasks
+//! (§VI-A: MRPC, STS-B, SST-2, QNLI) — see DESIGN.md §2 for the
+//! substitution rationale.
+//!
+//! Two things are needed from "data" in this reproduction:
+//!
+//! 1. **Dataset sizes** driving the timing experiments (epoch time =
+//!    samples × per-sample cost) — [`Task`] carries the real GLUE train
+//!    sizes and the paper's epoch counts.
+//! 2. **Learnable synthetic token tasks** for the real-execution accuracy
+//!    experiments — [`SyntheticTask::generate`] emits token sequences whose
+//!    label is a (noisy) function of token statistics, so fine-tuning has
+//!    real signal to find.
+
+use crate::util::rng::Rng;
+
+/// A GLUE evaluation task (paper Table V/VI setup).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Mrpc,
+    StsB,
+    Sst2,
+    Qnli,
+}
+
+impl Task {
+    pub fn all() -> [Task; 4] {
+        [Task::Mrpc, Task::StsB, Task::Sst2, Task::Qnli]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Mrpc => "MRPC",
+            Task::StsB => "STS-B",
+            Task::Sst2 => "SST-2",
+            Task::Qnli => "QNLI",
+        }
+    }
+
+    /// GLUE training-split sizes.
+    pub fn train_samples(self) -> usize {
+        match self {
+            Task::Mrpc => 3_668,
+            Task::StsB => 5_749,
+            Task::Sst2 => 67_349,
+            Task::Qnli => 104_743,
+        }
+    }
+
+    /// Paper §VI-B: 3 epochs for the small datasets (MRPC, STS-B),
+    /// 1 epoch for the large ones (SST-2, QNLI).
+    pub fn epochs(self) -> usize {
+        match self {
+            Task::Mrpc | Task::StsB => 3,
+            Task::Sst2 | Task::Qnli => 1,
+        }
+    }
+}
+
+/// Labeling rule for generated tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Parity of the count of "low" tokens (< vocab/2) — hard: the model
+    /// must count mod 2 across the whole sequence.
+    Parity,
+    /// Majority vote of low tokens in the first half of the sequence —
+    /// easier (attention-pooling suffices); used by the accuracy-shape
+    /// experiments where convergence within a small budget matters.
+    HalfMajority,
+}
+
+/// A generated token-classification dataset.
+#[derive(Debug, Clone)]
+pub struct SyntheticTask {
+    pub tokens: Vec<Vec<i32>>, // [n][seq]
+    pub labels: Vec<i32>,      // [n]
+    pub vocab: usize,
+    pub n_classes: usize,
+}
+
+impl SyntheticTask {
+    /// Token-statistic classification with the [`Rule::Parity`] label,
+    /// flipped with probability `noise`.
+    pub fn generate(
+        n: usize,
+        seq: usize,
+        vocab: usize,
+        noise: f64,
+        seed: u64,
+    ) -> SyntheticTask {
+        Self::generate_rule(n, seq, vocab, noise, seed, Rule::Parity)
+    }
+
+    /// Generate with an explicit labeling rule.
+    pub fn generate_rule(
+        n: usize,
+        seq: usize,
+        vocab: usize,
+        noise: f64,
+        seed: u64,
+        rule: Rule,
+    ) -> SyntheticTask {
+        let mut rng = Rng::new(seed);
+        let mut tokens = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<i32> = (0..seq).map(|_| rng.range(0, vocab) as i32).collect();
+            let mut y = match rule {
+                Rule::Parity => {
+                    let low =
+                        row.iter().filter(|&&t| (t as usize) < vocab / 2).count();
+                    (low % 2) as i32
+                }
+                Rule::HalfMajority => {
+                    let half = &row[..seq / 2];
+                    let low =
+                        half.iter().filter(|&&t| (t as usize) < vocab / 2).count();
+                    i32::from(low * 2 > half.len())
+                }
+            };
+            if rng.f64() < noise {
+                y = 1 - y;
+            }
+            tokens.push(row);
+            labels.push(y);
+        }
+        SyntheticTask { tokens, labels, vocab, n_classes: 2 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Iterate micro-batches of exactly `batch` rows (drops the remainder,
+    /// matching the fixed-shape AOT artifacts).
+    pub fn batches(&self, batch: usize) -> Vec<(Vec<i32>, Vec<i32>)> {
+        let n = self.len() / batch;
+        (0..n)
+            .map(|b| {
+                let toks: Vec<i32> = (b * batch..(b + 1) * batch)
+                    .flat_map(|i| self.tokens[i].iter().copied())
+                    .collect();
+                let labs: Vec<i32> =
+                    (b * batch..(b + 1) * batch).map(|i| self.labels[i]).collect();
+                (toks, labs)
+            })
+            .collect()
+    }
+
+    /// Split off the last `frac` of samples as a held-out eval set.
+    pub fn split(mut self, frac: f64) -> (SyntheticTask, SyntheticTask) {
+        let n_eval = ((self.len() as f64 * frac) as usize).max(1);
+        let n_train = self.len() - n_eval;
+        let eval = SyntheticTask {
+            tokens: self.tokens.split_off(n_train),
+            labels: self.labels.split_off(n_train),
+            vocab: self.vocab,
+            n_classes: self.n_classes,
+        };
+        (self, eval)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glue_sizes() {
+        assert_eq!(Task::Mrpc.train_samples(), 3668);
+        assert_eq!(Task::Qnli.train_samples(), 104_743);
+        assert_eq!(Task::Mrpc.epochs(), 3);
+        assert_eq!(Task::Sst2.epochs(), 1);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = SyntheticTask::generate(20, 16, 100, 0.0, 42);
+        let b = SyntheticTask::generate(20, 16, 100, 0.0, 42);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn labels_follow_rule_when_noiseless() {
+        let t = SyntheticTask::generate(50, 16, 100, 0.0, 1);
+        for (row, &y) in t.tokens.iter().zip(&t.labels) {
+            let low = row.iter().filter(|&&t| t < 50).count();
+            assert_eq!(y, (low % 2) as i32);
+        }
+    }
+
+    #[test]
+    fn batching_shapes() {
+        let t = SyntheticTask::generate(25, 8, 100, 0.0, 2);
+        let bs = t.batches(4);
+        assert_eq!(bs.len(), 6); // 25/4 = 6, remainder dropped
+        for (toks, labs) in &bs {
+            assert_eq!(toks.len(), 32);
+            assert_eq!(labs.len(), 4);
+        }
+    }
+
+    #[test]
+    fn split_fractions() {
+        let t = SyntheticTask::generate(100, 8, 100, 0.0, 3);
+        let (train, eval) = t.split(0.2);
+        assert_eq!(train.len(), 80);
+        assert_eq!(eval.len(), 20);
+    }
+
+    #[test]
+    fn half_majority_rule() {
+        let t = SyntheticTask::generate_rule(50, 16, 100, 0.0, 9, Rule::HalfMajority);
+        for (row, &y) in t.tokens.iter().zip(&t.labels) {
+            let low = row[..8].iter().filter(|&&v| v < 50).count();
+            assert_eq!(y, i32::from(low * 2 > 8));
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let t = SyntheticTask::generate(2000, 16, 100, 0.0, 4);
+        let ones: usize = t.labels.iter().filter(|&&y| y == 1).count();
+        assert!(ones > 800 && ones < 1200, "{ones}");
+    }
+}

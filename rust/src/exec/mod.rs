@@ -1,0 +1,659 @@
+//! Real execution engine: multi-threaded PAC+ training over the AOT
+//! artifacts (no Python anywhere on this path).
+//!
+//! Worker threads stand in for edge devices (DESIGN.md §2 — the network
+//! timing is studied separately through the simulator; this path proves
+//! the three layers compose and produces real loss curves).
+//!
+//! Two engines are provided:
+//!
+//! * [`train_data_parallel`] — PAC+ phases on a data-parallel group:
+//!   epoch 1 runs `backbone_fwd` (or the quantized variant) per
+//!   micro-batch, stores the activation slab in the [`ActivationCache`],
+//!   computes adapter gradients, and the leader AllReduces (averages) and
+//!   applies the (clipped Adam) update. Epochs ≥ 2 skip the backbone entirely and
+//!   read activations from the cache.
+//! * [`train_pipelined`] — epoch 1 with the backbone forward split into
+//!   pipeline stages across workers (`embed_fwd` + `stage_fwd_k*`
+//!   artifacts), cache slabs streamed to the leader, adapter trained on
+//!   assembled activations; later epochs fall back to the cached
+//!   data-parallel path.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cache::ActivationCache;
+use crate::data::SyntheticTask;
+use crate::runtime::{Runtime, Tensor};
+
+/// Training options for the real engine.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub epochs: usize,
+    pub lr: f32,
+    /// Worker threads acting as devices.
+    pub workers: usize,
+    /// Adapter init parameter-set tag (e.g. "adapter_prune").
+    pub init_tag: String,
+    /// Use the quantized backbone artifact ("int8"/"int4") for the
+    /// cache-building forward passes.
+    pub quant: Option<String>,
+    /// Directory for the activation cache.
+    pub cache_dir: std::path::PathBuf,
+    /// Disable the activation cache (ablation): epochs > 1 recompute the
+    /// backbone forward.
+    pub use_cache: bool,
+}
+
+impl TrainOptions {
+    pub fn new(cache_dir: impl Into<std::path::PathBuf>) -> TrainOptions {
+        TrainOptions {
+            epochs: 2,
+            lr: 5e-3, // Adam
+            workers: 2,
+            init_tag: "adapter_prune".into(),
+            quant: None,
+            cache_dir: cache_dir.into(),
+            use_cache: true,
+        }
+    }
+}
+
+/// One logged optimizer step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub epoch: usize,
+    pub step: usize,
+    pub loss: f32,
+}
+
+/// Full training run record.
+#[derive(Debug, Clone)]
+pub struct TrainLog {
+    pub steps: Vec<StepLog>,
+    pub epoch_times: Vec<f64>,
+    pub eval_accuracy: Option<f64>,
+    pub eval_loss: Option<f64>,
+    /// Micro-batches served from the activation cache.
+    pub cache_hits: usize,
+    /// Micro-batches that ran the backbone forward.
+    pub backbone_passes: usize,
+}
+
+impl TrainLog {
+    pub fn mean_loss(&self, epoch: usize) -> f32 {
+        let v: Vec<f32> =
+            self.steps.iter().filter(|s| s.epoch == epoch).map(|s| s.loss).collect();
+        v.iter().sum::<f32>() / v.len().max(1) as f32
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        self.steps.last().map(|s| s.loss).unwrap_or(f32::NAN)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor math helpers (adapter update on the leader)
+// ---------------------------------------------------------------------------
+
+/// Global-norm gradient clipping threshold. Keeps the fixed-lr trainer
+/// stable across model scales (the d=768 backbone's prune-init adapter
+/// sees much larger early gradients than d=128).
+pub const CLIP_NORM: f32 = 1.0;
+
+fn grad_global_norm(grads: &[Tensor]) -> f32 {
+    let mut sq = 0.0f64;
+    for g in grads {
+        if let Tensor::F32(gv, _) = g {
+            for x in gv {
+                sq += (*x as f64) * (*x as f64);
+            }
+        }
+    }
+    sq.sqrt() as f32
+}
+
+/// The coordinator-side optimizer. The paper's PEFT methods carry Adam
+/// states for the (small) trainable set — exactly the L3 coordinator's
+/// job here: the AOT artifacts emit raw gradients (`adapter_grads`) and
+/// the leader owns momentum/variance and the update rule.
+pub struct Adam {
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: i32,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Adam {
+    pub fn new(params: &[Tensor], lr: f32) -> Adam {
+        let shapes: Vec<usize> = params.iter().map(|p| p.numel()).collect();
+        Adam {
+            m: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            t: 0,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+
+    /// One clipped Adam step in place.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) -> Result<()> {
+        let norm = grad_global_norm(grads);
+        let clip = if norm > CLIP_NORM { CLIP_NORM / norm } else { 1.0 };
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            match (p, g) {
+                (Tensor::F32(pv, _), Tensor::F32(gv, _)) => {
+                    let (m, v) = (&mut self.m[i], &mut self.v[i]);
+                    for j in 0..pv.len() {
+                        let gj = gv[j] * clip;
+                        m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * gj;
+                        v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * gj * gj;
+                        let mh = m[j] / bc1;
+                        let vh = v[j] / bc2;
+                        pv[j] -= self.lr * mh / (vh.sqrt() + self.eps);
+                    }
+                }
+                _ => bail!("non-f32 parameter in update"),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn accumulate(sum: &mut Vec<Tensor>, add: &[Tensor]) -> Result<()> {
+    if sum.is_empty() {
+        sum.extend_from_slice(add);
+        return Ok(());
+    }
+    for (s, a) in sum.iter_mut().zip(add) {
+        match (s, a) {
+            (Tensor::F32(sv, _), Tensor::F32(av, _)) => {
+                for (x, y) in sv.iter_mut().zip(av) {
+                    *x += y;
+                }
+            }
+            _ => bail!("non-f32 gradient"),
+        }
+    }
+    Ok(())
+}
+
+fn scale(ts: &mut [Tensor], k: f32) {
+    for t in ts {
+        if let Tensor::F32(v, _) = t {
+            for x in v.iter_mut() {
+                *x *= k;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data-parallel engine
+// ---------------------------------------------------------------------------
+
+/// Backbone-forward inputs for a micro-batch (full or quantized variant).
+fn backbone_inputs(
+    rt: &Runtime,
+    quant: &Option<String>,
+    tokens: Vec<i32>,
+) -> Result<(String, Vec<Tensor>)> {
+    let cfg = &rt.manifest.config;
+    let tok = Tensor::I32(tokens, vec![cfg.batch, cfg.seq_len]);
+    match quant {
+        None => {
+            let mut inp = rt.load_params("backbone")?;
+            inp.push(tok);
+            Ok(("backbone_fwd".into(), inp))
+        }
+        Some(bits) => {
+            let mut inp = rt.load_params(&format!("backbone_{bits}"))?;
+            inp.push(tok);
+            Ok((format!("qbackbone_fwd_{bits}"), inp))
+        }
+    }
+}
+
+/// PAC+ data-parallel training (cache-enabled exclusive adapter tuning).
+pub fn train_data_parallel(
+    rt: &Arc<Runtime>,
+    task: &SyntheticTask,
+    opts: &TrainOptions,
+) -> Result<TrainLog> {
+    let cfg = rt.manifest.config.clone();
+    let batches = task.batches(cfg.batch);
+    if batches.is_empty() {
+        bail!("dataset smaller than one micro-batch");
+    }
+    let entry_len = (cfg.layers + 1) * cfg.seq_len * cfg.d_model;
+    let mut cache =
+        ActivationCache::open(&opts.cache_dir, batches.len(), entry_len * cfg.batch)?;
+    cache.clear()?; // fresh run
+
+    // warm the executables once (compile outside the timed region)
+    let backbone_name = match &opts.quant {
+        None => "backbone_fwd".to_string(),
+        Some(b) => format!("qbackbone_fwd_{b}"),
+    };
+    rt.executable(&backbone_name)?;
+    rt.executable("adapter_grads")?;
+
+    let mut adapter = rt.load_params(&opts.init_tag)?;
+    let mut optimizer = Adam::new(&adapter, opts.lr);
+    let n_adapter = adapter.len();
+    let workers = opts.workers.max(1);
+
+    let mut log = TrainLog {
+        steps: Vec::new(),
+        epoch_times: Vec::new(),
+        eval_accuracy: None,
+        eval_loss: None,
+        cache_hits: 0,
+        backbone_passes: 0,
+    };
+
+    let mut step_counter = 0usize;
+    for epoch in 0..opts.epochs {
+        let t0 = Instant::now();
+        // process micro-batches in groups of `workers` (one group = one
+        // data-parallel mini-batch; gradients averaged across the group)
+        for (gi, group) in batches.chunks(workers).enumerate() {
+            let use_cached = opts.use_cache && epoch > 0;
+            // -- parallel part: per-worker acts + grads ------------------
+            let results: Vec<(Vec<Tensor>, f32, Option<(usize, Vec<f32>)>)> =
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::new();
+                    for (wi, (toks, labs)) in group.iter().enumerate() {
+                        let rt = rt.clone();
+                        let adapter_ref = &adapter;
+                        let cache_ref = &cache;
+                        let quant = opts.quant.clone();
+                        let mb_id = gi * workers + wi;
+                        handles.push(scope.spawn(move || -> Result<_> {
+                            let acts = if use_cached && cache_ref.contains(mb_id) {
+                                let data = cache_ref.get(mb_id)?;
+                                Tensor::F32(
+                                    data,
+                                    vec![cfg.layers + 1, cfg.batch, cfg.seq_len, cfg.d_model],
+                                )
+                            } else {
+                                let (name, inp) =
+                                    backbone_inputs(&rt, &quant, toks.clone())?;
+                                rt.execute(&name, &inp)?.remove(0)
+                            };
+                            let was_cached = use_cached && cache_ref.contains(mb_id);
+                            // adapter grads on (possibly cached) acts
+                            let mut ainp = adapter_ref.clone();
+                            ainp.push(acts.clone());
+                            ainp.push(Tensor::I32(labs.clone(), vec![cfg.batch]));
+                            let mut out = rt.execute("adapter_grads", &ainp)?;
+                            let loss = out.pop().unwrap().scalar_f32()?;
+                            let store = if !was_cached {
+                                Some((mb_id, acts.as_f32()?.to_vec()))
+                            } else {
+                                None
+                            };
+                            Ok((out, loss, store))
+                        }));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("worker panicked"))
+                        .collect::<Result<Vec<_>>>()
+                })?;
+
+            // -- leader part: cache writes + AllReduce + update ----------
+            let mut grad_sum: Vec<Tensor> = Vec::new();
+            let mut loss_sum = 0.0f32;
+            let n = results.len() as f32;
+            for (grads, loss, store) in results {
+                if grads.len() != n_adapter {
+                    bail!("gradient arity mismatch");
+                }
+                accumulate(&mut grad_sum, &grads)?;
+                loss_sum += loss;
+                match store {
+                    Some((mb_id, acts)) => {
+                        if opts.use_cache {
+                            cache.put(mb_id, &acts)?;
+                        }
+                        log.backbone_passes += 1;
+                    }
+                    None => log.cache_hits += 1,
+                }
+            }
+            scale(&mut grad_sum, 1.0 / n);
+            optimizer.step(&mut adapter, &grad_sum)?;
+            log.steps.push(StepLog { epoch, step: step_counter, loss: loss_sum / n });
+            step_counter += 1;
+        }
+        log.epoch_times.push(t0.elapsed().as_secs_f64());
+    }
+
+    // hold the final adapter for evaluation by the caller
+    FINAL_ADAPTER.with(|f| *f.borrow_mut() = Some(adapter));
+    Ok(log)
+}
+
+thread_local! {
+    static FINAL_ADAPTER: std::cell::RefCell<Option<Vec<Tensor>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Fetch the adapter parameters produced by the last training run on this
+/// thread (used by evaluation and by tests).
+pub fn take_final_adapter() -> Option<Vec<Tensor>> {
+    FINAL_ADAPTER.with(|f| f.borrow_mut().take())
+}
+
+/// Evaluate an adapter on a held-out set: (mean loss, accuracy).
+pub fn evaluate(
+    rt: &Arc<Runtime>,
+    adapter: &[Tensor],
+    task: &SyntheticTask,
+    quant: &Option<String>,
+) -> Result<(f64, f64)> {
+    let cfg = rt.manifest.config.clone();
+    let batches = task.batches(cfg.batch);
+    if batches.is_empty() {
+        bail!("eval set smaller than one batch");
+    }
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (toks, labs) in &batches {
+        let (name, inp) = backbone_inputs(rt, quant, toks.clone())?;
+        let acts = rt.execute(&name, &inp)?.remove(0);
+        let mut ainp = adapter.to_vec();
+        ainp.push(acts);
+        ainp.push(Tensor::I32(labs.clone(), vec![cfg.batch]));
+        let out = rt.execute("adapter_eval", &ainp)?;
+        loss_sum += out[0].scalar_f32()? as f64;
+        let c = match &out[1] {
+            Tensor::I32(v, _) => v[0] as usize,
+            t => t.scalar_f32()? as usize,
+        };
+        correct += c;
+        total += cfg.batch;
+    }
+    Ok((loss_sum / batches.len() as f64, correct as f64 / total as f64))
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined cache-build engine
+// ---------------------------------------------------------------------------
+
+/// Partition `layers` into `stages` contiguous spans whose sizes all exist
+/// as `stage_fwd_k*` artifacts.
+pub fn partition_layers(layers: usize, stages: usize, available: &[usize]) -> Result<Vec<usize>> {
+    if stages == 0 || stages > layers {
+        bail!("cannot split {layers} layers into {stages} stages");
+    }
+    let base = layers / stages;
+    let rem = layers % stages;
+    let sizes: Vec<usize> =
+        (0..stages).map(|i| base + usize::from(i < rem)).collect();
+    for s in &sizes {
+        if !available.contains(s) {
+            bail!("no stage artifact for k={s} (available: {available:?})");
+        }
+    }
+    Ok(sizes)
+}
+
+/// Epoch-1 pipelined backbone forward + adapter training on assembled
+/// activations; epochs ≥ 2 delegate to the cached data-parallel path.
+pub fn train_pipelined(
+    rt: &Arc<Runtime>,
+    task: &SyntheticTask,
+    opts: &TrainOptions,
+    stages: usize,
+) -> Result<TrainLog> {
+    let cfg = rt.manifest.config.clone();
+    let sizes = partition_layers(cfg.layers, stages, &rt.manifest.stage_sizes())?;
+    let batches = task.batches(cfg.batch);
+    if batches.is_empty() {
+        bail!("dataset smaller than one micro-batch");
+    }
+    let entry_len = (cfg.layers + 1) * cfg.seq_len * cfg.d_model * cfg.batch;
+    let mut cache = ActivationCache::open(&opts.cache_dir, batches.len(), entry_len)?;
+    cache.clear()?;
+
+    let backbone = rt.load_params("backbone")?;
+    // per-stage layer params: [2 + 8*a, 2 + 8*b)
+    let mut bounds = vec![0usize];
+    for s in &sizes {
+        bounds.push(bounds.last().unwrap() + s);
+    }
+    // warm executables
+    rt.executable("embed_fwd")?;
+    for s in &sizes {
+        rt.executable(&format!("stage_fwd_k{s}"))?;
+    }
+    rt.executable("adapter_grads")?;
+
+    let mut adapter = rt.load_params(&opts.init_tag)?;
+    let mut optimizer = Adam::new(&adapter, opts.lr);
+    let mut log = TrainLog {
+        steps: Vec::new(),
+        epoch_times: Vec::new(),
+        eval_accuracy: None,
+        eval_loss: None,
+        cache_hits: 0,
+        backbone_passes: 0,
+    };
+
+    let t0 = Instant::now();
+    // channels: stage i -> stage i+1 (x), every stage -> leader (slabs)
+    let (slab_tx, slab_rx) = mpsc::channel::<(usize, usize, Vec<f32>)>(); // (mb, stage, data)
+    let mut stage_txs: Vec<mpsc::Sender<(usize, Vec<f32>)>> = Vec::new();
+    let mut stage_rxs: Vec<mpsc::Receiver<(usize, Vec<f32>)>> = Vec::new();
+    for _ in 0..stages {
+        let (tx, rx) = mpsc::channel();
+        stage_txs.push(tx);
+        stage_rxs.push(rx);
+    }
+
+    std::thread::scope(|scope| -> Result<()> {
+        // stage workers
+        let mut next_txs: Vec<Option<mpsc::Sender<(usize, Vec<f32>)>>> =
+            stage_txs.iter().skip(1).cloned().map(Some).collect();
+        next_txs.push(None);
+        for (si, rx) in stage_rxs.into_iter().enumerate() {
+            let rt = rt.clone();
+            let slab_tx = slab_tx.clone();
+            let next = next_txs[si].take();
+            let lo = bounds[si];
+            let hi = bounds[si + 1];
+            let k = hi - lo;
+            let params: Vec<Tensor> = backbone[2 + 8 * lo..2 + 8 * hi].to_vec();
+            let cfg = cfg.clone();
+            scope.spawn(move || {
+                while let Ok((mb, x)) = rx.recv() {
+                    let mut inp = params.clone();
+                    inp.push(Tensor::F32(
+                        x,
+                        vec![cfg.batch, cfg.seq_len, cfg.d_model],
+                    ));
+                    let mut out = rt
+                        .execute(&format!("stage_fwd_k{k}"), &inp)
+                        .expect("stage execution failed");
+                    let acts_k = out.pop().unwrap();
+                    let x_out = out.pop().unwrap();
+                    slab_tx
+                        .send((mb, si, acts_k.as_f32().unwrap().to_vec()))
+                        .ok();
+                    if let Some(nx) = &next {
+                        nx.send((mb, x_out.as_f32().unwrap().to_vec())).ok();
+                    }
+                }
+            });
+        }
+        drop(slab_tx);
+
+        // feeder: embed every micro-batch and push into stage 0
+        let feeder_tx = stage_txs.remove(0);
+        drop(stage_txs); // close remaining clones so stages terminate
+        let rt_feed = rt.clone();
+        let tok_emb = backbone[0].clone();
+        let pos_emb = backbone[1].clone();
+        let cfg_feed = cfg.clone();
+        let batches_feed = batches.clone();
+        let b0_slabs: std::thread::ScopedJoinHandle<Vec<Vec<f32>>> =
+            scope.spawn(move || {
+                let mut b0s = Vec::new();
+                for (toks, _) in &batches_feed {
+                    let inp = vec![
+                        tok_emb.clone(),
+                        pos_emb.clone(),
+                        Tensor::I32(
+                            toks.clone(),
+                            vec![cfg_feed.batch, cfg_feed.seq_len],
+                        ),
+                    ];
+                    let b0 = rt_feed
+                        .execute("embed_fwd", &inp)
+                        .expect("embed failed")
+                        .remove(0);
+                    let v = b0.as_f32().unwrap().to_vec();
+                    feeder_tx.send((b0s.len(), v.clone())).ok();
+                    b0s.push(v);
+                }
+                b0s
+            });
+
+        // leader: assemble slabs, cache, train adapter
+        let per_layer = cfg.batch * cfg.seq_len * cfg.d_model;
+        let mut assembled: Vec<Option<Vec<Option<Vec<f32>>>>> =
+            vec![None; batches.len()];
+        let mut done = 0usize;
+        let mut pending_grads: Vec<Tensor> = Vec::new();
+        let mut pending_losses = 0usize;
+        let mut loss_acc = 0.0f32;
+        while done < batches.len() {
+            let (mb, si, slab) = slab_rx.recv().map_err(|_| anyhow!("pipeline closed early"))?;
+            let entry =
+                assembled[mb].get_or_insert_with(|| vec![None; stages]);
+            entry[si] = Some(slab);
+            if entry.iter().all(Option::is_some) {
+                // full stack available once the feeder's b0 exists too —
+                // feeder finishes before slabs of its own mb, join lazily.
+                done += 1;
+                assembled[mb].as_mut().unwrap().push(None); // marker reuse
+            }
+        }
+        let b0s = b0_slabs.join().expect("feeder panicked");
+
+        for (mb, (_, labs)) in batches.iter().enumerate() {
+            let parts = assembled[mb].take().unwrap();
+            let mut acts = Vec::with_capacity((cfg.layers + 1) * per_layer);
+            acts.extend_from_slice(&b0s[mb]);
+            for p in parts.into_iter().flatten() {
+                acts.extend_from_slice(&p);
+            }
+            debug_assert_eq!(acts.len(), (cfg.layers + 1) * per_layer);
+            if opts.use_cache {
+                cache.put(mb, &acts)?;
+            }
+            log.backbone_passes += 1;
+
+            let acts_t = Tensor::F32(
+                acts,
+                vec![cfg.layers + 1, cfg.batch, cfg.seq_len, cfg.d_model],
+            );
+            let mut ainp = adapter.clone();
+            ainp.push(acts_t);
+            ainp.push(Tensor::I32(labs.clone(), vec![cfg.batch]));
+            let mut out = rt.execute("adapter_grads", &ainp)?;
+            let loss = out.pop().unwrap().scalar_f32()?;
+            accumulate(&mut pending_grads, &out)?;
+            loss_acc += loss;
+            pending_losses += 1;
+            if pending_losses == opts.workers.max(1) || mb + 1 == batches.len() {
+                scale(&mut pending_grads, 1.0 / pending_losses as f32);
+                optimizer.step(&mut adapter, &pending_grads)?;
+                log.steps.push(StepLog {
+                    epoch: 0,
+                    step: log.steps.len(),
+                    loss: loss_acc / pending_losses as f32,
+                });
+                pending_grads.clear();
+                pending_losses = 0;
+                loss_acc = 0.0;
+            }
+        }
+        Ok(())
+    })?;
+    log.epoch_times.push(t0.elapsed().as_secs_f64());
+
+    // epochs >= 2: cached data-parallel phase reusing the same cache dir
+    if opts.epochs > 1 {
+        let mut rest = opts.clone();
+        rest.epochs = opts.epochs - 1;
+        rest.init_tag = opts.init_tag.clone();
+        // continue from current adapter: run the DP loop manually
+        let sub =
+            train_cached_only(rt, task, &rest, &mut adapter, &mut optimizer, &cache, &mut log)?;
+        let _ = sub;
+    }
+    FINAL_ADAPTER.with(|f| *f.borrow_mut() = Some(adapter));
+    Ok(log)
+}
+
+/// Cached-only epochs over an existing complete cache (phase 2 proper).
+fn train_cached_only(
+    rt: &Arc<Runtime>,
+    task: &SyntheticTask,
+    opts: &TrainOptions,
+    adapter: &mut Vec<Tensor>,
+    optimizer: &mut Adam,
+    cache: &ActivationCache,
+    log: &mut TrainLog,
+) -> Result<()> {
+    let cfg = rt.manifest.config.clone();
+    let batches = task.batches(cfg.batch);
+    let base_epoch = log.epoch_times.len();
+    for e in 0..opts.epochs {
+        let t0 = Instant::now();
+        for (gi, group) in batches.chunks(opts.workers.max(1)).enumerate() {
+            let mut grad_sum: Vec<Tensor> = Vec::new();
+            let mut loss_sum = 0.0;
+            for (wi, (_, labs)) in group.iter().enumerate() {
+                let mb = gi * opts.workers.max(1) + wi;
+                let data = cache.get(mb)?;
+                log.cache_hits += 1;
+                let acts = Tensor::F32(
+                    data,
+                    vec![cfg.layers + 1, cfg.batch, cfg.seq_len, cfg.d_model],
+                );
+                let mut ainp = adapter.clone();
+                ainp.push(acts);
+                ainp.push(Tensor::I32(labs.clone(), vec![cfg.batch]));
+                let mut out = rt.execute("adapter_grads", &ainp)?;
+                loss_sum += out.pop().unwrap().scalar_f32()?;
+                accumulate(&mut grad_sum, &out)?;
+            }
+            let n = group.len() as f32;
+            scale(&mut grad_sum, 1.0 / n);
+            optimizer.step(adapter, &grad_sum)?;
+            log.steps.push(StepLog {
+                epoch: base_epoch + e,
+                step: log.steps.len(),
+                loss: loss_sum / n,
+            });
+        }
+        log.epoch_times.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,295 @@
+//! Real-execution accuracy experiments (Table VI, Table VII, Fig. 14).
+//!
+//! These run actual training through the PJRT runtime on the `small`
+//! artifact set with synthetic GLUE-like tasks (DESIGN.md §2): the goal
+//! is the paper's *shape* — Parallel Adapters matching the baselines'
+//! final quality, quantized backbones costing little accuracy, informed
+//! initialization converging faster — on models this testbed can train.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::data::SyntheticTask;
+use crate::exec::{self, TrainOptions};
+use crate::runtime::{Runtime, Tensor};
+
+/// Training budget for the accuracy experiments.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub train_samples: usize,
+    pub epochs: usize,
+    pub lr: f32,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Budget { train_samples: 512, epochs: 6, lr: 5e-3 }
+    }
+}
+
+fn dataset(rt: &Runtime, n: usize, seed: u64) -> SyntheticTask {
+    let cfg = &rt.manifest.config;
+    // HalfMajority converges inside the small experiment budget (the
+    // parity rule needs far more steps at d=128 — data/mod.rs docs)
+    SyntheticTask::generate_rule(
+        n, cfg.seq_len, cfg.vocab, 0.02, seed, crate::data::Rule::HalfMajority)
+}
+
+// ---------------------------------------------------------------------------
+// Generic baseline training loops over the step artifacts
+// ---------------------------------------------------------------------------
+
+/// Run a `*_step` artifact in a loop: `inputs = fixed ++ trainable ++
+/// [tokens, labels, lr]`, `outputs = new trainable ++ [loss]`.
+/// Returns (per-step losses, final trainable params).
+fn run_step_loop(
+    rt: &Arc<Runtime>,
+    artifact: &str,
+    fixed: &[Tensor],
+    mut trainable: Vec<Tensor>,
+    task: &SyntheticTask,
+    epochs: usize,
+    lr: f32,
+) -> Result<(Vec<f32>, Vec<Tensor>)> {
+    let cfg = rt.manifest.config.clone();
+    let batches = task.batches(cfg.batch);
+    if batches.is_empty() {
+        bail!("dataset too small");
+    }
+    rt.executable(artifact)?;
+    let mut losses = Vec::new();
+    for _ in 0..epochs {
+        for (toks, labs) in &batches {
+            let mut inp = fixed.to_vec();
+            inp.extend(trainable.iter().cloned());
+            inp.push(Tensor::I32(toks.clone(), vec![cfg.batch, cfg.seq_len]));
+            inp.push(Tensor::I32(labs.clone(), vec![cfg.batch]));
+            inp.push(Tensor::F32(vec![lr], vec![]));
+            let mut out = rt.execute(artifact, &inp)?;
+            let loss = out.pop().unwrap().scalar_f32()?;
+            losses.push(loss);
+            trainable = out;
+        }
+    }
+    Ok((losses, trainable))
+}
+
+/// Accuracy of `full_ft`-style models: rebuild logits via the artifact's
+/// own eval (we reuse the step's loss on held-out data as proxy) — for
+/// the baselines we report train-loss-threshold behavior and final
+/// held-out loss (accuracy is only defined through the adapter head for
+/// the PA variants, evaluated by `exec::evaluate`).
+fn heldout_loss(
+    rt: &Arc<Runtime>,
+    artifact: &str,
+    fixed: &[Tensor],
+    trainable: &[Tensor],
+    task: &SyntheticTask,
+) -> Result<f64> {
+    let cfg = rt.manifest.config.clone();
+    let batches = task.batches(cfg.batch);
+    let mut sum = 0.0;
+    for (toks, labs) in &batches {
+        let mut inp = fixed.to_vec();
+        inp.extend(trainable.iter().cloned());
+        inp.push(Tensor::I32(toks.clone(), vec![cfg.batch, cfg.seq_len]));
+        inp.push(Tensor::I32(labs.clone(), vec![cfg.batch]));
+        inp.push(Tensor::F32(vec![0.0], vec![])); // lr = 0: pure eval
+        let out = rt.execute(artifact, &inp)?;
+        sum += out.last().unwrap().scalar_f32()? as f64;
+    }
+    Ok(sum / batches.len() as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Table VI — fine-tuned quality parity
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table6Row {
+    pub technique: String,
+    pub final_train_loss: f64,
+    pub heldout_loss: f64,
+    /// accuracy where the method has an eval head (PA variants)
+    pub accuracy: Option<f64>,
+}
+
+pub fn table6(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table6Row>> {
+    let full = dataset(rt, budget.train_samples + 64, 11);
+    let (train, eval) = full.split(64.0 / (budget.train_samples + 64) as f64);
+    let mut rows = Vec::new();
+
+    // Parallel Adapters through the real PAC+ engine
+    let mut opts = TrainOptions::new(std::env::temp_dir().join("pacpp_t6"));
+    opts.epochs = budget.epochs;
+    opts.lr = budget.lr;
+    opts.workers = 2;
+    opts.init_tag = "adapter_prune".into();
+    let log = exec::train_data_parallel(rt, &train, &opts)?;
+    let adapter = exec::take_final_adapter().expect("adapter missing");
+    let (eloss, acc) = exec::evaluate(rt, &adapter, &eval, &None)?;
+    rows.push(Table6Row {
+        technique: "Parallel Adapters (PAC+)".into(),
+        final_train_loss: log.final_loss() as f64,
+        heldout_loss: eloss,
+        accuracy: Some(acc),
+    });
+
+    // Baselines through their step artifacts
+    let backbone = rt.load_params("backbone")?;
+    let head = rt.load_params("head")?;
+    let mut run_baseline = |name: &str,
+                            artifact: &str,
+                            fixed: Vec<Tensor>,
+                            trainable: Vec<Tensor>|
+     -> Result<()> {
+        let (losses, final_params) = run_step_loop(
+            rt, artifact, &fixed, trainable, &train, budget.epochs, budget.lr * 0.2,
+        )?;
+        let hl = heldout_loss(rt, artifact, &fixed, &final_params, &eval)?;
+        rows.push(Table6Row {
+            technique: name.into(),
+            final_train_loss: *losses.last().unwrap() as f64,
+            heldout_loss: hl,
+            accuracy: None,
+        });
+        Ok(())
+    };
+
+    // Full FT: trainable = backbone + head (fixed = nothing)
+    let mut full_trainable = backbone.clone();
+    full_trainable.extend(head.clone());
+    run_baseline("Full model", "full_ft_step", vec![], full_trainable)?;
+    run_baseline("LoRA", "lora_step", backbone.clone(), rt.load_params("lora")?)?;
+    run_baseline("Adapters", "houlsby_step", backbone, rt.load_params("houlsby")?)?;
+
+    Ok(rows)
+}
+
+pub fn print_table6(rt: &Arc<Runtime>, budget: Budget) -> Result<()> {
+    println!("Table VI (shape) — fine-tuned quality parity on a synthetic task");
+    println!(
+        "{:<26} {:>12} {:>12} {:>10}",
+        "technique", "train loss", "eval loss", "accuracy"
+    );
+    for r in table6(rt, budget)? {
+        println!(
+            "{:<26} {:>12.4} {:>12.4} {:>10}",
+            r.technique,
+            r.final_train_loss,
+            r.heldout_loss,
+            r.accuracy.map(|a| format!("{:.1}%", a * 100.0)).unwrap_or("-".into())
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table VII — quantized-backbone quality
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table7Row {
+    pub precision: String,
+    pub final_train_loss: f64,
+    pub heldout_loss: f64,
+    pub accuracy: f64,
+}
+
+pub fn table7(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table7Row>> {
+    let full = dataset(rt, budget.train_samples + 64, 12);
+    let (train, eval) = full.split(64.0 / (budget.train_samples + 64) as f64);
+    let mut rows = Vec::new();
+    let mut precisions = vec![("FP32", None)];
+    if rt.manifest.artifacts.contains_key("qbackbone_fwd_fp16") {
+        precisions.push(("FP16", Some("fp16".to_string())));
+    }
+    precisions.push(("INT8", Some("int8".to_string())));
+    precisions.push(("INT4", Some("int4".to_string())));
+    for (name, quant) in precisions {
+        let mut opts = TrainOptions::new(std::env::temp_dir().join(format!("pacpp_t7_{name}")));
+        opts.epochs = budget.epochs;
+        opts.lr = budget.lr;
+        opts.workers = 2;
+        opts.quant = quant.clone();
+        let log = exec::train_data_parallel(rt, &train, &opts)?;
+        let adapter = exec::take_final_adapter().expect("adapter missing");
+        let (eloss, acc) = exec::evaluate(rt, &adapter, &eval, &quant)?;
+        rows.push(Table7Row {
+            precision: name.into(),
+            final_train_loss: log.final_loss() as f64,
+            heldout_loss: eloss,
+            accuracy: acc,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_table7(rt: &Arc<Runtime>, budget: Budget) -> Result<()> {
+    println!("Table VII (shape) — Parallel Adapters with quantized backbone");
+    println!(
+        "{:<8} {:>12} {:>12} {:>10}",
+        "prec", "train loss", "eval loss", "accuracy"
+    );
+    for r in table7(rt, budget)? {
+        println!(
+            "{:<8} {:>12.4} {:>12.4} {:>9.1}%",
+            r.precision, r.final_train_loss, r.heldout_loss, r.accuracy * 100.0
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 14 — weight-initialization strategies
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig14Row {
+    pub strategy: String,
+    /// steps to reach the loss threshold (None = never within budget)
+    pub steps_to_target: Option<usize>,
+    pub final_loss: f32,
+}
+
+pub fn fig14(rt: &Arc<Runtime>, budget: Budget, target_loss: f32) -> Result<Vec<Fig14Row>> {
+    let train = dataset(rt, budget.train_samples, 13);
+    let mut rows = Vec::new();
+    for strat in ["distill", "prune", "gaussian", "zero"] {
+        let tag = format!("adapter_{strat}");
+        if rt.manifest.param_set(&tag).is_err() {
+            continue; // artifact set built without this init
+        }
+        let mut opts = TrainOptions::new(std::env::temp_dir().join(format!("pacpp_f14_{strat}")));
+        opts.epochs = budget.epochs;
+        opts.lr = budget.lr;
+        opts.workers = 2;
+        opts.init_tag = tag;
+        let log = exec::train_data_parallel(rt, &train, &opts)?;
+        let steps_to_target = log
+            .steps
+            .iter()
+            .position(|s| s.loss <= target_loss);
+        rows.push(Fig14Row {
+            strategy: strat.into(),
+            steps_to_target,
+            final_loss: log.final_loss(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_fig14(rt: &Arc<Runtime>, budget: Budget) -> Result<()> {
+    println!("Fig. 14 (shape) — adapter init strategies, steps to loss<=0.55");
+    println!("{:<10} {:>16} {:>12}", "init", "steps to target", "final loss");
+    for r in fig14(rt, budget, 0.55)? {
+        println!(
+            "{:<10} {:>16} {:>12.4}",
+            r.strategy,
+            r.steps_to_target.map(|s| s.to_string()).unwrap_or(">budget".into()),
+            r.final_loss
+        );
+    }
+    Ok(())
+}

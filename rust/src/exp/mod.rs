@@ -1,0 +1,24 @@
+//! Experiment harnesses regenerating every table and figure of the
+//! paper's evaluation (§VI). Each function prints the corresponding
+//! table/series and returns the rows for programmatic checks.
+//!
+//! | fn            | reproduces |
+//! |---------------|------------|
+//! | [`fig3`]      | Fig. 3 — FLOPs of fine-tuning techniques |
+//! | [`table1`]    | Table I — memory breakdown (T5-Large) |
+//! | [`table5`]    | Table V — end-to-end fine-tuning hours, Env.A |
+//! | [`fig12`]     | Fig. 12 — PAC+ vs Asteroid/HetPipe, Env.B |
+//! | [`fig13`]     | Fig. 13 — per-sample time + memory breakdown |
+//! | [`fig15`]     | Fig. 15 — memory vs model size × precision |
+//! | [`fig16`]     | Fig. 16 — scalability 2–8 devices |
+//! | [`fig17`]     | Fig. 17 — planner device groupings |
+//! | [`fig18`]     | Fig. 18 — cache benefit vs epochs |
+//!
+//! The accuracy-side experiments (Table VI, Table VII, Fig. 14) run real
+//! training through the PJRT engine and live in `exp::accuracy`.
+
+pub mod ablations;
+pub mod accuracy;
+pub mod tables;
+
+pub use tables::*;

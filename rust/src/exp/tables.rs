@@ -1,0 +1,746 @@
+//! Simulator-backed experiment harnesses (timing/memory tables & figures).
+
+use crate::baselines::{run_system, System, TrainJob};
+use crate::cluster::Env;
+use crate::data::Task;
+use crate::model::graph::LayerGraph;
+use crate::model::{cost, Method, ModelSpec, Precision, Workload};
+use crate::planner::{plan, PlanError, PlannerOptions};
+use crate::profiler::Profile;
+use crate::util::fmt_bytes;
+
+/// Sequence length used by the timing tables — the paper's stated 128.
+/// (Absolute hours come out ~2–3× the paper's Table V, whose timings
+/// imply shorter effective sequences; the ratios and OOM pattern are the
+/// reproduction target — see EXPERIMENTS.md.)
+pub const TABLE_SEQ: usize = 128;
+
+fn profile(spec: &ModelSpec, method: Method, seq: usize) -> Profile {
+    Profile::new(LayerGraph::new(spec.clone()), method, Precision::FP32, seq)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — FLOPs of fine-tuning techniques
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub model: String,
+    pub technique: String,
+    /// TFLOPs per mini-batch (16 × 128 tokens).
+    pub tflops: f64,
+    /// forward share of the total
+    pub fwd_share: f64,
+}
+
+pub fn fig3() -> Vec<Fig3Row> {
+    let wl = Workload::paper_default();
+    let mut rows = Vec::new();
+    for spec in ModelSpec::paper_models() {
+        let fwd = cost::flops_inference_per_token(&spec, wl.seq) * wl.tokens() as f64;
+        let entries: Vec<(&str, f64)> = vec![
+            ("Full", cost::flops_train_per_token(&spec, Method::FullFT, wl.seq)),
+            ("Adapters", cost::flops_train_per_token(&spec, Method::adapters_default(), wl.seq)),
+            ("LoRA", cost::flops_train_per_token(&spec, Method::lora_default(), wl.seq)),
+            ("P.A. (ours)", cost::flops_train_per_token(&spec, Method::pa(false), wl.seq)),
+            ("P.A.+cache", cost::flops_train_cached_per_token(&spec, Method::pa(true), wl.seq)),
+            ("Inference", cost::flops_inference_per_token(&spec, wl.seq)),
+        ];
+        for (name, per_token) in entries {
+            let total = per_token * wl.tokens() as f64;
+            rows.push(Fig3Row {
+                model: spec.name.clone(),
+                technique: name.into(),
+                tflops: total / 1e12,
+                fwd_share: (fwd / total).min(1.0),
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_fig3() {
+    println!("Fig. 3 — FLOPs per mini-batch (B=16, S=128)");
+    println!("{:<12} {:<14} {:>10} {:>10}", "model", "technique", "TFLOPs", "fwd%");
+    for r in fig3() {
+        println!(
+            "{:<12} {:<14} {:>10.2} {:>9.0}%",
+            r.model, r.technique, r.tflops, r.fwd_share * 100.0
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table I — memory breakdown
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub technique: String,
+    pub trainable_m: f64,
+    pub weights_gb: f64,
+    pub activations_gb: f64,
+    pub gradients_gb: f64,
+    pub total_gb: f64,
+}
+
+pub fn table1() -> Vec<Table1Row> {
+    let spec = ModelSpec::t5_large();
+    let wl = Workload::paper_default();
+    let mut rows = Vec::new();
+    for (name, method) in [
+        ("Full", Method::FullFT),
+        ("Adapters", Method::adapters_default()),
+        ("LoRA", Method::lora_default()),
+        ("P.A. (ours)", Method::pa(false)),
+        ("P.A.+cache", Method::pa(true)),
+    ] {
+        let m = cost::memory(&spec, method, Precision::FP32, wl);
+        rows.push(Table1Row {
+            technique: name.into(),
+            trainable_m: method.trainable_params(&spec) as f64 / 1e6,
+            weights_gb: cost::gb(m.weights),
+            activations_gb: cost::gb(m.activations),
+            gradients_gb: cost::gb(m.gradients),
+            total_gb: cost::gb(m.total()),
+        });
+    }
+    rows.push(Table1Row {
+        technique: "Inference".into(),
+        trainable_m: 0.0,
+        weights_gb: cost::gb(cost::memory_inference(&spec, Precision::FP32)),
+        activations_gb: 0.0,
+        gradients_gb: 0.0,
+        total_gb: cost::gb(cost::memory_inference(&spec, Precision::FP32)),
+    });
+    rows
+}
+
+pub fn print_table1() {
+    println!("Table I — memory breakdown, T5-Large, B=16, S=128 (GB)");
+    println!(
+        "{:<12} {:>10} {:>9} {:>12} {:>10} {:>8}",
+        "technique", "train(M)", "weights", "activations", "gradients", "total"
+    );
+    for r in table1() {
+        println!(
+            "{:<12} {:>10.1} {:>9.2} {:>12.2} {:>10.2} {:>8.2}",
+            r.technique, r.trainable_m, r.weights_gb, r.activations_gb, r.gradients_gb, r.total_gb
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table V — end-to-end fine-tuning durations, Env.A
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    pub model: String,
+    pub technique: String,
+    pub system: String,
+    /// hours per task, or None = OOM (Table V's "OOM" cells).
+    pub hours: Vec<Option<f64>>,
+}
+
+pub fn table5() -> Vec<Table5Row> {
+    let env = Env::env_a();
+    let tasks = Task::all();
+    let mut rows = Vec::new();
+    for spec in ModelSpec::paper_models() {
+        let combos: Vec<(&str, Method, System)> = vec![
+            ("Full", Method::FullFT, System::Standalone),
+            ("Full", Method::FullFT, System::PipelineParallel),
+            ("Full", Method::FullFT, System::DataParallel),
+            ("Adapters", Method::adapters_default(), System::Standalone),
+            ("Adapters", Method::adapters_default(), System::PipelineParallel),
+            ("Adapters", Method::adapters_default(), System::DataParallel),
+            ("LoRA", Method::lora_default(), System::Standalone),
+            ("LoRA", Method::lora_default(), System::PipelineParallel),
+            ("LoRA", Method::lora_default(), System::DataParallel),
+            ("ParallelAdapters", Method::pa(true), System::PacPlus),
+        ];
+        for (tech, method, system) in combos {
+            let prof = profile(&spec, method, TABLE_SEQ);
+            let hours: Vec<Option<f64>> = tasks
+                .iter()
+                .map(|t| {
+                    let job = TrainJob::new(t.train_samples(), t.epochs(), TABLE_SEQ, 16);
+                    match run_system(system, &prof, &env, job) {
+                        Ok(r) => Some(r.total / 3600.0),
+                        Err(PlanError::InsufficientMemory) => None,
+                        Err(_) => None,
+                    }
+                })
+                .collect();
+            rows.push(Table5Row {
+                model: spec.name.clone(),
+                technique: tech.into(),
+                system: system.name().into(),
+                hours,
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_table5() {
+    println!("Table V — fine-tuning durations in hours, Env.A (4x Nano-H)");
+    println!("  (3 epochs for MRPC/STS-B, 1 epoch for SST-2/QNLI; OOM = out of memory)");
+    println!(
+        "{:<12} {:<18} {:<14} {:>8} {:>8} {:>8} {:>8}",
+        "model", "technique", "system", "MRPC", "STS-B", "SST-2", "QNLI"
+    );
+    for r in table5() {
+        let cells: Vec<String> = r
+            .hours
+            .iter()
+            .map(|h| match h {
+                Some(v) => format!("{v:.2}"),
+                None => "OOM".into(),
+            })
+            .collect();
+        println!(
+            "{:<12} {:<18} {:<14} {:>8} {:>8} {:>8} {:>8}",
+            r.model, r.technique, r.system, cells[0], cells[1], cells[2], cells[3]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12 — existing systems under heterogeneity (Env.B)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig12Row {
+    pub model: String,
+    pub system: String,
+    pub epochs: usize,
+    pub hours: Option<f64>,
+}
+
+pub fn fig12() -> Vec<Fig12Row> {
+    let env = Env::env_b();
+    let mut rows = Vec::new();
+    for spec in ModelSpec::paper_models() {
+        for epochs in [1usize, 3] {
+            let systems: Vec<(System, Method)> = vec![
+                (System::HetPipe, Method::FullFT),
+                (System::Asteroid, Method::FullFT),
+                (System::PacHomo, Method::pa(true)),
+                (System::PacPlus, Method::pa(true)),
+            ];
+            for (system, method) in systems {
+                let prof = profile(&spec, method, TABLE_SEQ);
+                let job =
+                    TrainJob::new(Task::Mrpc.train_samples(), epochs, TABLE_SEQ, 16);
+                let hours = run_system(system, &prof, &env, job)
+                    .ok()
+                    .map(|r| r.total / 3600.0);
+                rows.push(Fig12Row {
+                    model: spec.name.clone(),
+                    system: system.name().into(),
+                    epochs,
+                    hours,
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn print_fig12() {
+    println!("Fig. 12 — total fine-tuning time on MRPC, Env.B (heterogeneous)");
+    println!(
+        "{:<12} {:<14} {:>7} {:>10} {:>14}",
+        "model", "system", "epochs", "hours", "vs PAC+ (x)"
+    );
+    let rows = fig12();
+    for spec in ModelSpec::paper_models() {
+        for epochs in [1usize, 3] {
+            let pac = rows
+                .iter()
+                .find(|r| r.model == spec.name && r.epochs == epochs && r.system == "PAC+")
+                .and_then(|r| r.hours)
+                .unwrap_or(f64::NAN);
+            for r in rows.iter().filter(|r| r.model == spec.name && r.epochs == epochs) {
+                match r.hours {
+                    Some(h) => println!(
+                        "{:<12} {:<14} {:>7} {:>10.2} {:>13.1}x",
+                        r.model, r.system, r.epochs, h, h / pac
+                    ),
+                    None => println!(
+                        "{:<12} {:<14} {:>7} {:>10} {:>14}",
+                        r.model, r.system, r.epochs, "OOM", "-"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 13 — per-sample time & memory breakdown (8 × Nano-H)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig13Row {
+    pub technique: String,
+    /// average per-sample training time (s) on the 8-Nano cluster
+    pub sample_time: Option<f64>,
+    /// peak per-device memory breakdown (bytes)
+    pub weights: u64,
+    pub activations: u64,
+    pub gradients: u64,
+}
+
+pub fn fig13() -> Vec<Fig13Row> {
+    let env = Env::nanos(8);
+    let spec = ModelSpec::t5_large();
+    let wl = Workload::paper_default();
+    let mut rows = Vec::new();
+    for (name, method) in [
+        ("Full", Method::FullFT),
+        ("Adapters", Method::adapters_default()),
+        ("LoRA", Method::lora_default()),
+        ("P.A.", Method::pa(false)),
+        ("P.A.+cache", Method::pa(true)),
+    ] {
+        let prof = profile(&spec, method, wl.seq);
+        let opts = PlannerOptions { microbatch: 4, n_microbatches: 4, ..Default::default() };
+        let sample_time = plan(&prof, &env, &opts).ok().map(|p| {
+            let t = if method.skips_backbone_with_cache() {
+                crate::sched::training::epoch_time_cached(&prof, &env, 16, 16) / 16.0
+            } else {
+                crate::sched::simulate_minibatch(&p, &prof, &env.network).minibatch_time
+                    / p.minibatch_samples() as f64
+            };
+            t
+        });
+        // single-device-equivalent memory breakdown (paper reports the
+        // per-device peak across the cluster; we report the cost-model
+        // breakdown scaled to the planned per-device share)
+        let m = cost::memory(&spec, method, Precision::FP32, wl);
+        let stages = plan(
+            &prof,
+            &env,
+            &PlannerOptions { microbatch: 4, n_microbatches: 4, ..Default::default() },
+        )
+        .map(|p| p.n_stages() as u64)
+        .unwrap_or(1);
+        rows.push(Fig13Row {
+            technique: name.into(),
+            sample_time,
+            weights: m.weights / stages,
+            activations: m.activations / stages,
+            gradients: m.gradients / stages,
+        });
+    }
+    rows
+}
+
+pub fn print_fig13() {
+    println!("Fig. 13 — per-sample time & per-device memory (8x Nano-H, T5-Large)");
+    println!(
+        "{:<12} {:>14} {:>12} {:>12} {:>12}",
+        "technique", "s/sample", "weights", "acts", "grads"
+    );
+    for r in fig13() {
+        println!(
+            "{:<12} {:>14} {:>12} {:>12} {:>12}",
+            r.technique,
+            r.sample_time.map(|t| format!("{t:.3}")).unwrap_or("OOM".into()),
+            fmt_bytes(r.weights),
+            fmt_bytes(r.activations),
+            fmt_bytes(r.gradients)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 15 — memory vs model size under quantization
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig15Row {
+    pub params_m: f64,
+    pub technique: String,
+    pub total_gb: f64,
+}
+
+pub fn fig15() -> Vec<Fig15Row> {
+    // a family of T5-style models of growing size (paper: varies hidden
+    // size / layers / heads)
+    let family: Vec<ModelSpec> = vec![
+        ModelSpec { name: "t5-60m".into(), enc_layers: 6, dec_layers: 6, d_model: 512, n_heads: 8, d_ff: 2048, vocab: 32128, reduction: 8 },
+        ModelSpec::t5_base(),
+        ModelSpec::bart_large(),
+        ModelSpec::t5_large(),
+        ModelSpec { name: "t5-1b".into(), enc_layers: 24, dec_layers: 24, d_model: 1280, n_heads: 20, d_ff: 5120, vocab: 32128, reduction: 8 },
+    ];
+    let wl = Workload::paper_default();
+    let mut rows = Vec::new();
+    for spec in &family {
+        let mut push = |tech: &str, method: Method, prec: Precision| {
+            let m = cost::memory(spec, method, prec, wl);
+            rows.push(Fig15Row {
+                params_m: spec.params_total() as f64 / 1e6,
+                technique: tech.into(),
+                total_gb: cost::gb(m.total()),
+            });
+        };
+        push("Full FP32", Method::FullFT, Precision::FP32);
+        push("LoRA FP32", Method::lora_default(), Precision::FP32);
+        push("Adapters FP32", Method::adapters_default(), Precision::FP32);
+        push("P.A. FP32", Method::pa(false), Precision::FP32);
+        push("P.A. INT8", Method::pa(false), Precision::INT8);
+        push("P.A. INT4", Method::pa(false), Precision::INT4);
+    }
+    rows
+}
+
+pub fn print_fig15() {
+    println!("Fig. 15 — fine-tuning memory vs model size (GB)");
+    println!("{:<10} {:<14} {:>10}", "params(M)", "technique", "total GB");
+    for r in fig15() {
+        println!("{:<10.0} {:<14} {:>10.2}", r.params_m, r.technique, r.total_gb);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 16 — scalability of DP / PP / PAC+ over 2–8 Nanos
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig16Row {
+    pub model: String,
+    pub n_devices: usize,
+    pub system: String,
+    /// samples/s, None = OOM
+    pub throughput: Option<f64>,
+    /// peak per-device weight bytes
+    pub weight_mem: Option<u64>,
+}
+
+pub fn fig16() -> Vec<Fig16Row> {
+    let mut rows = Vec::new();
+    for spec in ModelSpec::paper_models() {
+        for n in 2..=8usize {
+            let env = Env::nanos(n);
+            // batch size = number of devices (paper §VI-G), seq 128
+            let minibatch = n;
+            let prof = profile(&spec, Method::pa(false), 128);
+            for system in [System::DataParallel, System::PipelineParallel, System::PacPlus] {
+                let job = TrainJob::new(1000, 1, 128, minibatch);
+                let r = run_system(system, &prof, &env, job).ok();
+                let throughput = r.as_ref().map(|r| 1000.0 / r.epoch1);
+                let weight_mem = r.as_ref().map(|r| {
+                    r.plan
+                        .stages
+                        .iter()
+                        .map(|s| {
+                            prof.graph.span_weight_bytes(
+                                s.range.0,
+                                s.range.1,
+                                Precision::FP32,
+                            )
+                        })
+                        .max()
+                        .unwrap_or(0)
+                });
+                rows.push(Fig16Row {
+                    model: spec.name.clone(),
+                    n_devices: n,
+                    system: system.name().into(),
+                    throughput,
+                    weight_mem,
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn print_fig16() {
+    println!("Fig. 16 — throughput & weight memory, 2-8 Nano-H, Parallel Adapters");
+    println!(
+        "{:<12} {:>4} {:<14} {:>14} {:>12}",
+        "model", "n", "system", "samples/s", "w-mem/dev"
+    );
+    for r in fig16() {
+        println!(
+            "{:<12} {:>4} {:<14} {:>14} {:>12}",
+            r.model,
+            r.n_devices,
+            r.system,
+            r.throughput.map(|t| format!("{t:.2}")).unwrap_or("OOM".into()),
+            r.weight_mem.map(fmt_bytes).unwrap_or("-".into())
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 17 — planner grouping configurations
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig17Row {
+    pub model: String,
+    pub n_devices: usize,
+    pub grouping: String,
+    pub stages: usize,
+}
+
+pub fn fig17() -> Vec<Fig17Row> {
+    let mut rows = Vec::new();
+    for spec in ModelSpec::paper_models() {
+        for n in 2..=8usize {
+            let env = Env::nanos(n);
+            let prof = profile(&spec, Method::pa(false), 128);
+            let opts = PlannerOptions {
+                microbatch: n.max(4) / 2,
+                n_microbatches: 4,
+                ..Default::default()
+            };
+            if let Ok(p) = plan(&prof, &env, &opts) {
+                rows.push(Fig17Row {
+                    model: spec.name.clone(),
+                    n_devices: n,
+                    grouping: p.grouping(),
+                    stages: p.n_stages(),
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn print_fig17() {
+    println!("Fig. 17 — PAC+ device groupings (hybrid parallelism)");
+    println!("{:<12} {:>4} {:>7}  {}", "model", "n", "stages", "grouping");
+    for r in fig17() {
+        println!("{:<12} {:>4} {:>7}  {}", r.model, r.n_devices, r.stages, r.grouping);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 18 — activation-cache benefit vs epoch count
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig18Row {
+    pub model: String,
+    pub epochs: usize,
+    pub hours_no_cache: f64,
+    pub hours_cache: f64,
+    pub reduction: f64,
+}
+
+pub fn fig18() -> Vec<Fig18Row> {
+    let env = Env::env_a();
+    let mut rows = Vec::new();
+    for spec in ModelSpec::paper_models() {
+        for epochs in [1usize, 2, 3, 5, 10] {
+            let job = TrainJob::new(Task::Mrpc.train_samples(), epochs, TABLE_SEQ, 16);
+            let no_cache = run_system(
+                System::PacPlus,
+                &profile(&spec, Method::pa(false), TABLE_SEQ),
+                &env,
+                job,
+            );
+            let cache = run_system(
+                System::PacPlus,
+                &profile(&spec, Method::pa(true), TABLE_SEQ),
+                &env,
+                job,
+            );
+            if let (Ok(n), Ok(c)) = (no_cache, cache) {
+                rows.push(Fig18Row {
+                    model: spec.name.clone(),
+                    epochs,
+                    hours_no_cache: n.total / 3600.0,
+                    hours_cache: c.total / 3600.0,
+                    reduction: 1.0 - c.total / n.total,
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn print_fig18() {
+    println!("Fig. 18 — fine-tuning time with/without activation cache (MRPC, Env.A)");
+    println!(
+        "{:<12} {:>7} {:>12} {:>12} {:>11}",
+        "model", "epochs", "no-cache(h)", "cache(h)", "reduction"
+    );
+    for r in fig18() {
+        println!(
+            "{:<12} {:>7} {:>12.2} {:>12.2} {:>10.0}%",
+            r.model, r.epochs, r.hours_no_cache, r.hours_cache, r.reduction * 100.0
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_rows_complete() {
+        let rows = fig3();
+        assert_eq!(rows.len(), 3 * 6);
+        // inference < PA < LoRA < Full for every model
+        for spec in ModelSpec::paper_models() {
+            let get = |t: &str| {
+                rows.iter()
+                    .find(|r| r.model == spec.name && r.technique == t)
+                    .unwrap()
+                    .tflops
+            };
+            assert!(get("Inference") < get("P.A. (ours)"));
+            assert!(get("P.A. (ours)") < get("LoRA"));
+            assert!(get("LoRA") < get("Full"));
+            assert!(get("P.A.+cache") < get("Inference"));
+        }
+    }
+
+    #[test]
+    fn table1_totals() {
+        let rows = table1();
+        let full = rows.iter().find(|r| r.technique == "Full").unwrap();
+        assert!((full.total_gb - 10.83).abs() < 1.1);
+        let pa_cache = rows.iter().find(|r| r.technique == "P.A.+cache").unwrap();
+        assert!(pa_cache.total_gb < 0.3 * full.total_gb);
+    }
+
+    #[test]
+    fn table5_oom_pattern() {
+        let rows = table5();
+        let find = |model: &str, tech: &str, sys_prefix: &str| {
+            rows.iter()
+                .find(|r| r.model == model && r.technique == tech && r.system.starts_with(sys_prefix))
+                .unwrap()
+        };
+        // T5-Large full: OOM everywhere (Table V bottom-left block)
+        for sys in ["Standalone", "PP", "DP"] {
+            assert!(
+                find("T5-Large", "Full", sys).hours.iter().all(Option::is_none),
+                "T5-Large Full {sys} should OOM"
+            );
+        }
+        // PAC+ never OOMs and is the fastest entry per model/task
+        for spec in ModelSpec::paper_models() {
+            let pac = find(&spec.name, "ParallelAdapters", "PAC+");
+            for (i, h) in pac.hours.iter().enumerate() {
+                let pac_h = h.expect("PAC+ OOM");
+                for r in rows.iter().filter(|r| r.model == spec.name && r.system != "PAC+") {
+                    if let Some(other) = r.hours[i] {
+                        assert!(
+                            pac_h < other,
+                            "{} {} {} task{} beat PAC+",
+                            r.model,
+                            r.technique,
+                            r.system,
+                            i
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig12_speedup_band() {
+        let rows = fig12();
+        // PAC+ vs HetPipe speedups: paper reports 3.2-9.7x (1 ep) and
+        // 7.6-14.7x (3 ep); assert the shape (>2x, growing with epochs)
+        for spec in ModelSpec::paper_models() {
+            for epochs in [1usize, 3] {
+                let get = |sys: &str| {
+                    rows.iter()
+                        .find(|r| r.model == spec.name && r.epochs == epochs && r.system == sys)
+                        .and_then(|r| r.hours)
+                };
+                if let (Some(pac), Some(het)) = (get("PAC+"), get("HetPipe")) {
+                    let speedup = het / pac;
+                    assert!(speedup > 2.0, "{}: speedup {speedup}", spec.name);
+                }
+                if let (Some(pac), Some(ast)) = (get("PAC+"), get("Asteroid")) {
+                    assert!(ast / pac > 1.5, "{}: vs asteroid {}", spec.name, ast / pac);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig16_shapes() {
+        let rows = fig16();
+        // DP OOMs for T5-Large at every n: the full replica alone exceeds
+        // a Nano's budget (the paper additionally reports BART-Large DP
+        // OOM; our memory model puts BART-Large PA replicas just under
+        // the budget — see EXPERIMENTS.md deviations)
+        assert!(rows
+            .iter()
+            .filter(|r| r.model == "T5-Large" && r.system == "DP (EDDL)")
+            .all(|r| r.throughput.is_none()));
+        // PAC+ throughput >= PP throughput for every (model, n)
+        for spec in ModelSpec::paper_models() {
+            for n in 2..=8usize {
+                let get = |sys: &str| {
+                    rows.iter()
+                        .find(|r| r.model == spec.name && r.n_devices == n && r.system == sys)
+                        .and_then(|r| r.throughput)
+                };
+                if let (Some(pac), Some(pp)) = (get("PAC+"), get("PP (Eco-FL)")) {
+                    assert!(pac >= pp * 0.999, "{} n={n}: PAC+ {pac} < PP {pp}", spec.name);
+                }
+                // PP weight memory per device shrinks vs DP
+                let wm = |sys: &str| {
+                    rows.iter()
+                        .find(|r| r.model == spec.name && r.n_devices == n && r.system == sys)
+                        .and_then(|r| r.weight_mem)
+                };
+                if let (Some(pp), Some(dp)) = (wm("PP (Eco-FL)"), wm("DP (EDDL)")) {
+                    assert!(pp < dp);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig17_groupings_scale() {
+        let rows = fig17();
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.stages <= r.n_devices);
+        }
+        // larger models need more stages on the same devices
+        let stages_of = |model: &str, n: usize| {
+            rows.iter()
+                .find(|r| r.model == model && r.n_devices == n)
+                .map(|r| r.stages)
+        };
+        if let (Some(base), Some(large)) = (stages_of("T5-Base", 8), stages_of("T5-Large", 8)) {
+            assert!(large >= base);
+        }
+    }
+
+    #[test]
+    fn fig18_monotone_reduction() {
+        let rows = fig18();
+        for spec in ModelSpec::paper_models() {
+            let series: Vec<&Fig18Row> =
+                rows.iter().filter(|r| r.model == spec.name).collect();
+            for w in series.windows(2) {
+                assert!(
+                    w[1].reduction >= w[0].reduction - 1e-9,
+                    "{}: reduction not monotone",
+                    spec.name
+                );
+            }
+            let last = series.last().unwrap();
+            assert!(last.reduction > 0.5, "{}: 10-epoch reduction {}", spec.name, last.reduction);
+        }
+    }
+}

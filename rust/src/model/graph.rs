@@ -1,0 +1,196 @@
+//! The layer graph the planner partitions: a linear chain of blocks
+//! (embedding → encoder layers → decoder layers → head), as in the paper's
+//! Fig. 9/10 where an LLM is cut into consecutive stages.
+
+use super::config::ModelSpec;
+use super::cost;
+use super::peft::{Method, Precision};
+use crate::model::Workload;
+
+/// One partitionable unit of the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Block {
+    /// Token + positional embedding (attached to stage 0).
+    Embed,
+    /// One encoder transformer layer.
+    Enc,
+    /// One decoder transformer layer (cross-attention included).
+    Dec,
+    /// Final norm + LM/classification head (attached to the last stage).
+    Head,
+}
+
+/// Linear chain of blocks for a model, with per-block cost queries.
+#[derive(Debug, Clone)]
+pub struct LayerGraph {
+    pub spec: ModelSpec,
+    pub blocks: Vec<Block>,
+}
+
+impl LayerGraph {
+    pub fn new(spec: ModelSpec) -> LayerGraph {
+        let mut blocks = vec![Block::Embed];
+        blocks.extend(std::iter::repeat(Block::Enc).take(spec.enc_layers));
+        blocks.extend(std::iter::repeat(Block::Dec).take(spec.dec_layers));
+        blocks.push(Block::Head);
+        LayerGraph { spec, blocks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Parameter count of one block.
+    pub fn block_params(&self, i: usize) -> u64 {
+        match self.blocks[i] {
+            Block::Embed => self.spec.params_embedding(),
+            Block::Enc => self.spec.params_enc_layer(),
+            Block::Dec => self.spec.params_dec_layer(),
+            Block::Head => self.spec.d_model as u64, // final norm (head shares emb)
+        }
+    }
+
+    /// Weight bytes of blocks `[x, y)` at a given backbone precision.
+    pub fn span_weight_bytes(&self, x: usize, y: usize, precision: Precision) -> u64 {
+        (x..y)
+            .map(|i| (self.block_params(i) as f64 * precision.bytes_per_param()) as u64)
+            .sum()
+    }
+
+    /// Forward FLOPs of block `i` for `tokens` tokens at sequence `seq`.
+    pub fn block_flops_fwd(&self, i: usize, tokens: u64, seq: usize) -> f64 {
+        let t = tokens as f64;
+        match self.blocks[i] {
+            Block::Embed => 2.0 * t * self.spec.d_model as f64, // lookup + pos add
+            Block::Enc => t * cost::flops_fwd_enc_block(&self.spec, seq),
+            Block::Dec => t * cost::flops_fwd_dec_block(&self.spec, seq),
+            Block::Head => 2.0 * t * self.spec.d_model as f64,
+        }
+    }
+
+    /// Backward FLOPs of block `i` under `method` (epoch-1 semantics).
+    ///
+    /// * Full FT: 2× forward.
+    /// * Adapters/LoRA: the activation-gradient chain (≈1× fwd) plus the
+    ///   small trainable-weight gradients.
+    /// * Parallel Adapters: **zero** on backbone blocks — the paper's
+    ///   gradient highway; the adapter's own fwd+bwd is charged via
+    ///   [`Self::block_adapter_flops`].
+    pub fn block_flops_bwd(&self, i: usize, method: Method, tokens: u64, seq: usize) -> f64 {
+        let fwd = self.block_flops_fwd(i, tokens, seq);
+        match method {
+            Method::FullFT => 2.0 * fwd,
+            Method::Adapters { .. } | Method::LoRA { .. } => {
+                let frac = method.trainable_params(&self.spec) as f64
+                    / self.spec.params_total() as f64;
+                (1.0 + frac + 0.15) * fwd
+            }
+            Method::ParallelAdapters { .. } => 0.0,
+        }
+    }
+
+    /// Parallel-Adapter compute attached to block `i` (fwd + bwd of the
+    /// adapter slice riding alongside this backbone block).
+    pub fn block_adapter_flops(&self, i: usize, method: Method, tokens: u64, seq: usize) -> f64 {
+        if !matches!(method, Method::ParallelAdapters { .. }) {
+            return 0.0;
+        }
+        match self.blocks[i] {
+            Block::Embed | Block::Head => 0.0,
+            Block::Enc | Block::Dec => {
+                let per_token =
+                    cost::flops_fwd_adapter_per_token(&self.spec, seq) / self.spec.n_blocks() as f64;
+                3.0 * per_token * tokens as f64
+            }
+        }
+    }
+
+    /// Activation bytes block `i` must hold per in-flight micro-batch.
+    pub fn block_act_bytes(&self, i: usize, method: Method, wl: Workload) -> u64 {
+        match self.blocks[i] {
+            Block::Embed | Block::Head => {
+                (wl.tokens() * self.spec.d_model as u64) * 4
+            }
+            Block::Enc | Block::Dec => {
+                (cost::act_bytes_per_token_block(&self.spec, method) * wl.tokens() as f64) as u64
+            }
+        }
+    }
+
+    /// Trainable parameter bytes hosted by blocks `[x, y)` (what a stage
+    /// AllReduces after each mini-batch).
+    pub fn span_trainable_bytes(&self, x: usize, y: usize, method: Method) -> u64 {
+        let total = method.trainable_params(&self.spec) as f64 * 4.0;
+        let span_blocks = (x..y)
+            .filter(|&i| matches!(self.blocks[i], Block::Enc | Block::Dec))
+            .count() as f64;
+        (total * span_blocks / self.spec.n_blocks() as f64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_shape() {
+        let g = LayerGraph::new(ModelSpec::t5_base());
+        assert_eq!(g.len(), 1 + 12 + 12 + 1);
+        assert_eq!(g.blocks[0], Block::Embed);
+        assert_eq!(g.blocks[1], Block::Enc);
+        assert_eq!(g.blocks[13], Block::Dec);
+        assert_eq!(*g.blocks.last().unwrap(), Block::Head);
+    }
+
+    #[test]
+    fn block_params_sum_to_total() {
+        for spec in ModelSpec::paper_models() {
+            let g = LayerGraph::new(spec.clone());
+            let sum: u64 = (0..g.len()).map(|i| g.block_params(i)).sum();
+            // graph omits nothing but the final-norm rounding
+            let diff = (sum as i64 - spec.params_total() as i64).abs();
+            assert!(diff < 1_000_000, "{}: {diff}", spec.name);
+        }
+    }
+
+    #[test]
+    fn pa_has_no_backbone_bwd() {
+        let g = LayerGraph::new(ModelSpec::t5_base());
+        let tokens = 2048;
+        assert_eq!(g.block_flops_bwd(1, Method::pa(false), tokens, 128), 0.0);
+        assert!(g.block_flops_bwd(1, Method::FullFT, tokens, 128) > 0.0);
+        assert!(g.block_adapter_flops(1, Method::pa(false), tokens, 128) > 0.0);
+        assert_eq!(g.block_adapter_flops(1, Method::FullFT, tokens, 128), 0.0);
+    }
+
+    #[test]
+    fn bwd_cheaper_for_peft_than_full() {
+        let g = LayerGraph::new(ModelSpec::t5_large());
+        let full = g.block_flops_bwd(1, Method::FullFT, 2048, 128);
+        let lora = g.block_flops_bwd(1, Method::lora_default(), 2048, 128);
+        assert!(lora < 0.7 * full);
+    }
+
+    #[test]
+    fn span_weight_bytes_precision() {
+        let g = LayerGraph::new(ModelSpec::t5_base());
+        let f32b = g.span_weight_bytes(0, g.len(), Precision::FP32);
+        let i8b = g.span_weight_bytes(0, g.len(), Precision::INT8);
+        assert!(i8b * 3 < f32b, "int8 {i8b} vs f32 {f32b}");
+    }
+
+    #[test]
+    fn trainable_bytes_partition() {
+        let g = LayerGraph::new(ModelSpec::t5_base());
+        let m = Method::pa(false);
+        let whole = g.span_trainable_bytes(0, g.len(), m);
+        let a = g.span_trainable_bytes(0, 13, m);
+        let b = g.span_trainable_bytes(13, g.len(), m);
+        let diff = (whole as i64 - (a + b) as i64).abs();
+        assert!(diff < 16, "{a}+{b} vs {whole}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Transformer model descriptors, PEFT method definitions, the layer graph
+//! used by the planner, and the analytic FLOPs/memory cost model calibrated
+//! against the paper's Table I / Fig. 3.
+
+pub mod config;
+pub mod cost;
+pub mod graph;
+pub mod peft;
+
+pub use config::ModelSpec;
+pub use cost::{MemoryBreakdown, Workload};
+pub use graph::{Block, LayerGraph};
+pub use peft::{Method, Precision};

@@ -1,0 +1,156 @@
+//! Fine-tuning methods and storage precisions.
+//!
+//! The paper compares Full model fine-tuning, serial Adapters [10], LoRA
+//! [11], and its own Parallel Adapters (with/without the activation cache,
+//! with FP32/FP16/INT8/INT4 backbone storage).
+
+use super::config::ModelSpec;
+
+/// Backbone storage precision (paper §IV-D; compute is always FP32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    FP32,
+    FP16,
+    INT8,
+    INT4,
+}
+
+impl Precision {
+    /// Storage bytes per parameter, including the block-wise scale
+    /// overhead for the integer formats (one f32 scale per 64 values).
+    pub fn bytes_per_param(self) -> f64 {
+        match self {
+            Precision::FP32 => 4.0,
+            Precision::FP16 => 2.0,
+            Precision::INT8 => 1.0 + 4.0 / 64.0,
+            Precision::INT4 => 0.5 + 4.0 / 64.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::FP32 => "FP32",
+            Precision::FP16 => "FP16",
+            Precision::INT8 => "INT8",
+            Precision::INT4 => "INT4",
+        }
+    }
+
+    pub fn all() -> [Precision; 4] {
+        [Precision::FP32, Precision::FP16, Precision::INT8, Precision::INT4]
+    }
+}
+
+/// A fine-tuning algorithm, with its method-specific hyperparameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// Update every backbone parameter.
+    FullFT,
+    /// Serial (Houlsby) adapters: bottleneck width m inserted after each
+    /// transformer layer. Trainable modules sit *inside* the backbone, so
+    /// backprop traverses the whole model.
+    Adapters { bottleneck: usize },
+    /// LoRA on Wq/Wv of every attention block, rank r.
+    LoRA { rank: usize },
+    /// The paper's Parallel Adapters (reduction factor from the spec);
+    /// `cache` enables the activation cache for epochs >= 2.
+    ParallelAdapters { cache: bool },
+}
+
+impl Method {
+    /// The paper's default hyperparameters (calibrated so trainable-param
+    /// counts land on Table I's 12M Adapters / 9M LoRA for T5-Large).
+    pub fn adapters_default() -> Method {
+        Method::Adapters { bottleneck: 122 }
+    }
+
+    pub fn lora_default() -> Method {
+        Method::LoRA { rank: 31 }
+    }
+
+    pub fn pa(cache: bool) -> Method {
+        Method::ParallelAdapters { cache }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::FullFT => "Full".into(),
+            Method::Adapters { .. } => "Adapters".into(),
+            Method::LoRA { .. } => "LoRA".into(),
+            Method::ParallelAdapters { cache: false } => "ParallelAdapters".into(),
+            Method::ParallelAdapters { cache: true } => "ParallelAdapters+Cache".into(),
+        }
+    }
+
+    /// Number of trainable parameters for this method on `spec`.
+    pub fn trainable_params(&self, spec: &ModelSpec) -> u64 {
+        match *self {
+            Method::FullFT => spec.params_total(),
+            Method::Adapters { bottleneck } => {
+                // one bottleneck (down d->m, up m->d) per transformer block
+                (spec.n_blocks() * 2 * spec.d_model * bottleneck) as u64
+            }
+            Method::LoRA { rank } => {
+                // Wq and Wv of every attention block (decoder blocks have
+                // self- and cross-attention).
+                let attn_blocks = spec.enc_layers + 2 * spec.dec_layers;
+                (attn_blocks * 2 * 2 * spec.d_model * rank) as u64
+            }
+            Method::ParallelAdapters { .. } => spec.params_parallel_adapter(),
+        }
+    }
+
+    /// Whether backpropagation must traverse the backbone (the paper's
+    /// central inefficiency observation for Adapters/LoRA, §II/§IV-A).
+    pub fn backprop_through_backbone(&self) -> bool {
+        !matches!(self, Method::ParallelAdapters { .. })
+    }
+
+    /// Whether the backbone forward pass can be skipped entirely once the
+    /// activation cache is warm (PAC+ phase 2).
+    pub fn skips_backbone_with_cache(&self) -> bool {
+        matches!(self, Method::ParallelAdapters { cache: true })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I: T5-Large trainable params — Adapters 12M (1.70%),
+    /// LoRA 9M (1.26%).
+    #[test]
+    fn table1_trainable_params() {
+        let spec = ModelSpec::t5_large();
+        let ad = Method::adapters_default().trainable_params(&spec) as f64 / 1e6;
+        let lo = Method::lora_default().trainable_params(&spec) as f64 / 1e6;
+        assert!((ad - 12.0).abs() < 1.0, "adapters {ad}M");
+        assert!((lo - 9.0).abs() < 1.0, "lora {lo}M");
+        let full = Method::FullFT.trainable_params(&spec);
+        assert_eq!(full, spec.params_total());
+    }
+
+    #[test]
+    fn pa_parameter_fraction_small() {
+        let spec = ModelSpec::t5_large();
+        let pa = Method::pa(false).trainable_params(&spec) as f64;
+        assert!(pa / (spec.params_total() as f64) < 0.04);
+    }
+
+    #[test]
+    fn backprop_flags() {
+        assert!(Method::FullFT.backprop_through_backbone());
+        assert!(Method::lora_default().backprop_through_backbone());
+        assert!(!Method::pa(false).backprop_through_backbone());
+        assert!(!Method::pa(true).backprop_through_backbone());
+        assert!(Method::pa(true).skips_backbone_with_cache());
+        assert!(!Method::pa(false).skips_backbone_with_cache());
+    }
+
+    #[test]
+    fn precision_bytes_ordering() {
+        let b: Vec<f64> = Precision::all().iter().map(|p| p.bytes_per_param()).collect();
+        assert!(b.windows(2).all(|w| w[0] > w[1]), "{b:?}");
+        assert!(Precision::INT4.bytes_per_param() < 0.6);
+    }
+}

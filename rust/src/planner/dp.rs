@@ -1,0 +1,541 @@
+//! Dynamic-programming core of the planner (Eq. 3, Eq. 4, Eq. 5–7).
+
+use super::{Plan, StagePlan};
+use crate::cluster::{Device, Env};
+use crate::profiler::{Profile, SpanCosts};
+
+const INF: f64 = f64::INFINITY;
+
+/// Planner configuration.
+#[derive(Debug, Clone)]
+pub struct PlannerOptions {
+    /// Micro-batch size B.
+    pub microbatch: usize,
+    /// Micro-batches per mini-batch M.
+    pub n_microbatches: usize,
+    /// When false, ignore device heterogeneity: samples are dispatched
+    /// evenly and every group member is priced at the slowest member's
+    /// speed — the older "PAC" planner used as the Fig. 12 ablation
+    /// ("PAC+ (Homo)").
+    pub hetero_aware: bool,
+    /// Cap on the stage count explored (defaults to min(L, |D|)).
+    pub max_stages: Option<usize>,
+    /// Force exactly this stage count (pure-PP baselines fix it to |D|).
+    pub fixed_stages: Option<usize>,
+    /// Cap on the data-parallel group size per stage (pure-PP uses 1).
+    pub max_group: Option<usize>,
+}
+
+impl Default for PlannerOptions {
+    fn default() -> Self {
+        PlannerOptions {
+            microbatch: 4,
+            n_microbatches: 4,
+            hetero_aware: true,
+            max_stages: None,
+            fixed_stages: None,
+            max_group: None,
+        }
+    }
+}
+
+/// Planning failure modes.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PlanError {
+    #[error("cluster memory cannot accommodate the model under any explored configuration")]
+    InsufficientMemory,
+    #[error("no devices in environment")]
+    NoDevices,
+}
+
+/// Entry point: Algorithm 1. Returns the latency-optimal plan `W_σ`.
+pub fn plan(profile: &Profile, env: &Env, opts: &PlannerOptions) -> Result<Plan, PlanError> {
+    if env.devices.is_empty() {
+        return Err(PlanError::NoDevices);
+    }
+    let devices = env.devices_fastest_first();
+    let l = profile.graph.len();
+    let smax = opts
+        .max_stages
+        .unwrap_or(usize::MAX)
+        .min(l)
+        .min(devices.len());
+    let (s_lo, s_hi) = match opts.fixed_stages {
+        Some(s) => (s.min(smax), s.min(smax)),
+        None => (1, smax),
+    };
+
+    let nd = devices.len();
+    let if_max = opts.n_microbatches.min(smax).max(1);
+    let memo_len = (l + 1) * (l + 1) * (nd + 1) * (nd + 1) * (if_max + 1);
+    let mut best: Option<Plan> = None;
+    let mut ctx = Ctx {
+        profile,
+        env,
+        devices: &devices,
+        opts,
+        costs: profile.span_costs(),
+        // dense T(x->y, [gs,ge), in_flight) memo; NAN = not yet computed
+        t_memo: vec![f64::NAN; memo_len],
+        l,
+        nd,
+        if_max,
+    };
+
+    for s_total in s_lo..=s_hi {
+        if let Some(p) = ctx.plan_for_stage_count(s_total) {
+            let better = best
+                .as_ref()
+                .map(|b| p.minibatch_time < b.minibatch_time)
+                .unwrap_or(true);
+            if better {
+                best = Some(p);
+            }
+        }
+    }
+    best.ok_or(PlanError::InsufficientMemory)
+}
+
+struct Ctx<'a> {
+    profile: &'a Profile,
+    env: &'a Env,
+    devices: &'a [Device],
+    opts: &'a PlannerOptions,
+    /// O(1) span-cost tables (EXPERIMENTS.md §Perf).
+    costs: SpanCosts,
+    /// Dense T(x→y, group=[gs, ge), in_flight) time memo (NAN = unset).
+    t_memo: Vec<f64>,
+    l: usize,
+    nd: usize,
+    if_max: usize,
+}
+
+impl<'a> Ctx<'a> {
+    #[inline]
+    fn memo_idx(&self, x: usize, y: usize, gs: usize, ge: usize, inf: usize) -> usize {
+        ((((x * (self.l + 1)) + y) * (self.nd + 1) + gs) * (self.nd + 1) + ge)
+            * (self.if_max + 1)
+            + inf.min(self.if_max)
+    }
+
+    /// Eq. 3 DP for one candidate total stage count; reconstructs the plan.
+    fn plan_for_stage_count(&mut self, s_total: usize) -> Option<Plan> {
+        let l = self.profile.graph.len();
+        let nd = self.devices.len();
+        let m_batches = self.opts.n_microbatches;
+
+        // w[k][y][n] = slowest-stage time of the best k-stage sub-pipeline
+        // covering blocks [0, y) with the first n devices; stage depth k
+        // has 1F1B in-flight = min(M, s_total - k + 1).
+        // parent[k][y][n] = (q, m): last stage covers [q, y) on devices
+        // [n-m, n).
+        let mut w = vec![vec![vec![INF; nd + 1]; l + 1]; s_total + 1];
+        let mut parent = vec![vec![vec![(0usize, 0usize); nd + 1]; l + 1]; s_total + 1];
+
+        let max_group = self.opts.max_group.unwrap_or(nd);
+        for k in 1..=s_total {
+            let in_flight = (s_total - k + 1).min(m_batches);
+            for y in 1..=l {
+                for n in 1..=nd {
+                    if k == 1 {
+                        // single stage covering [0, y) on all n devices
+                        if n > max_group {
+                            continue;
+                        }
+                        let t = self.stage_time(0, y, 0, n, in_flight);
+                        w[1][y][n] = t;
+                        parent[1][y][n] = (0, n);
+                        continue;
+                    }
+                    // Eq. 3: split at q, give the last stage m devices.
+                    let mut best = INF;
+                    let mut arg = (0usize, 0usize);
+                    for q in (k - 1)..y {
+                        for m in 1..n.min(max_group.saturating_add(1)) {
+                            let prefix = w[k - 1][q][n - m];
+                            if prefix >= best {
+                                continue;
+                            }
+                            let t = self.stage_time(q, y, n - m, n, in_flight);
+                            let cand = prefix.max(t);
+                            if cand < best {
+                                best = cand;
+                                arg = (q, m);
+                            }
+                        }
+                    }
+                    w[k][y][n] = best;
+                    parent[k][y][n] = arg;
+                }
+            }
+        }
+
+        if !w[s_total][l][nd].is_finite() {
+            return None;
+        }
+
+        // Reconstruct stages right-to-left.
+        let mut ranges = Vec::new(); // (x, y, g_start, g_end)
+        let (mut y, mut n) = (l, nd);
+        for k in (1..=s_total).rev() {
+            let (q, m) = parent[k][y][n];
+            if k == 1 {
+                ranges.push((0, y, 0, n));
+            } else {
+                ranges.push((q, y, n - m, n));
+                y = q;
+                n -= m;
+            }
+        }
+        ranges.reverse();
+
+        self.finalize(ranges, s_total)
+    }
+
+    /// Eq. 4 wrapper: best max-member FP+BP time of a stage [x, y) run by
+    /// devices [gs, ge) of the fastest-first order, with `in_flight`
+    /// resident micro-batches for the OOM check. Time only — the DP inner
+    /// loops never materialize dispatch vectors; `dispatch_of` recomputes
+    /// them for the handful of stages in the final plan.
+    fn stage_time(&mut self, x: usize, y: usize, gs: usize, ge: usize, in_flight: usize) -> f64 {
+        let idx = self.memo_idx(x, y, gs, ge, in_flight);
+        let cached = self.t_memo[idx];
+        if !cached.is_nan() {
+            return cached;
+        }
+        let t = self.dispatch_of(x, y, gs, ge, in_flight).0;
+        self.t_memo[idx] = t;
+        t
+    }
+
+    /// Full Eq. 4 solve returning (time, dispatch).
+    fn dispatch_of(
+        &self,
+        x: usize,
+        y: usize,
+        gs: usize,
+        ge: usize,
+        in_flight: usize,
+    ) -> (f64, Vec<usize>) {
+        if self.opts.hetero_aware {
+            self.dispatch_dp(x, y, gs, ge, in_flight)
+        } else {
+            self.dispatch_even(x, y, gs, ge, in_flight)
+        }
+    }
+
+    /// Eq. 4: H_{x→y}(b, G_n) sample-dispatch DP over the group.
+    fn dispatch_dp(
+        &self,
+        x: usize,
+        y: usize,
+        gs: usize,
+        ge: usize,
+        in_flight: usize,
+    ) -> (f64, Vec<usize>) {
+        let b = self.opts.microbatch;
+        let group = &self.devices[gs..ge];
+        let n = group.len();
+
+        // member_time[j][i] = FP+BP time of member j processing i samples
+        // (INF if it would OOM at this in-flight depth).
+        let member_time: Vec<Vec<f64>> = group
+            .iter()
+            .map(|d| {
+                (0..=b)
+                    .map(|i| {
+                        if i == 0 {
+                            return 0.0;
+                        }
+                        let mem = self.costs.span_mem(x, y, i, in_flight);
+                        if mem > d.mem_budget() {
+                            INF
+                        } else {
+                            self.costs.span_time(d, x, y, i)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // h[j][i] = best max-time dispatching i samples to the first j members.
+        let mut h = vec![vec![INF; b + 1]; n + 1];
+        let mut choice = vec![vec![0usize; b + 1]; n + 1];
+        h[0][0] = 0.0;
+        for j in 1..=n {
+            for i in 0..=b {
+                for give in 0..=i {
+                    let prev = h[j - 1][i - give];
+                    if !prev.is_finite() {
+                        continue;
+                    }
+                    let t = member_time[j - 1][give];
+                    let cand = prev.max(t);
+                    if cand < h[j][i] {
+                        h[j][i] = cand;
+                        choice[j][i] = give;
+                    }
+                }
+            }
+        }
+        if !h[n][b].is_finite() {
+            return (INF, vec![0; n]);
+        }
+        let mut dispatch = vec![0usize; n];
+        let mut rem = b;
+        for j in (1..=n).rev() {
+            dispatch[j - 1] = choice[j][rem];
+            rem -= dispatch[j - 1];
+        }
+        (h[n][b], dispatch)
+    }
+
+    /// Heterogeneity-blind dispatch (the PAC ablation): equal shares,
+    /// priced at the slowest member.
+    fn dispatch_even(
+        &self,
+        x: usize,
+        y: usize,
+        gs: usize,
+        ge: usize,
+        in_flight: usize,
+    ) -> (f64, Vec<usize>) {
+        let b = self.opts.microbatch;
+        let group = &self.devices[gs..ge];
+        let n = group.len();
+        let mut dispatch = vec![b / n; n];
+        for d in dispatch.iter_mut().take(b % n) {
+            *d += 1;
+        }
+        let mut worst: f64 = 0.0;
+        for (d, &share) in group.iter().zip(&dispatch) {
+            if share == 0 {
+                continue;
+            }
+            let mem = self.costs.span_mem(x, y, share, in_flight);
+            if mem > d.mem_budget() {
+                return (INF, dispatch);
+            }
+            worst = worst.max(self.costs.span_time(d, x, y, share));
+        }
+        (worst, dispatch)
+    }
+
+    /// Eq. 5–7: assemble the plan, compute phase latencies.
+    fn finalize(
+        &mut self,
+        ranges: Vec<(usize, usize, usize, usize)>,
+        s_total: usize,
+    ) -> Option<Plan> {
+        let m_batches = self.opts.n_microbatches;
+        let net = &self.env.network;
+        let mut stages = Vec::with_capacity(ranges.len());
+
+        for (idx, &(x, y, gs, ge)) in ranges.iter().enumerate() {
+            let in_flight = (s_total - idx).min(m_batches);
+            let (_, dispatch) = self.dispatch_of(x, y, gs, ge, in_flight);
+            let group = &self.devices[gs..ge];
+            let mut e_f: f64 = 0.0;
+            let mut e_b: f64 = 0.0;
+            let mut peak_mem: u64 = 0;
+            for (d, &share) in group.iter().zip(&dispatch) {
+                if share == 0 {
+                    continue;
+                }
+                let tf = self.costs.t_f(d, x, y, share);
+                let tb = self.costs.t_b(d, x, y, share);
+                e_f = e_f.max(tf);
+                e_b = e_b.max(tb);
+                peak_mem = peak_mem.max(self.costs.span_mem(x, y, share, in_flight));
+            }
+            let allreduce =
+                net.allreduce_time(self.profile.allreduce_bytes(x, y), group.len());
+            stages.push(StagePlan {
+                range: (x, y),
+                devices: group.to_vec(),
+                dispatch,
+                e_f,
+                e_b,
+                peak_mem,
+                allreduce,
+            });
+        }
+
+        // Communication between consecutive stages.
+        let b = self.opts.microbatch;
+        let c_f: Vec<f64> = (0..stages.len().saturating_sub(1))
+            .map(|_| net.transfer_time(self.profile.boundary_bytes_fwd(b)))
+            .collect();
+        let c_b: Vec<f64> = c_f
+            .iter()
+            .map(|_| net.transfer_time(self.profile.boundary_bytes_bwd(b)))
+            .collect();
+
+        // Eq. 5: beginning phase — the first micro-batch filling the pipe.
+        let s = stages.len();
+        let l_b: f64 = (0..s - 1).map(|i| stages[i].e_f + c_f[i]).sum();
+        // Eq. 5: execution phase — the last stage's M (fwd+bwd) slots.
+        let l_e = m_batches as f64 * (stages[s - 1].e_f + stages[s - 1].e_b);
+        // Eq. 6: ending phase — drain + AllReduce overlap.
+        let l_n = (0..s)
+            .map(|i| {
+                stages[i].allreduce
+                    + (i..s - 1).map(|j| stages[j].e_b + c_b[j]).sum::<f64>()
+            })
+            .fold(0.0f64, f64::max);
+
+        let total = l_b + l_e + l_n;
+        if !total.is_finite() {
+            return None;
+        }
+        Some(Plan {
+            stages,
+            microbatches: m_batches,
+            microbatch_size: b,
+            phase_latency: (l_b, l_e, l_n),
+            minibatch_time: total,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeviceKind;
+    use crate::model::graph::LayerGraph;
+    use crate::model::{Method, ModelSpec, Precision};
+
+    fn profile(spec: ModelSpec, method: Method) -> Profile {
+        Profile::new(LayerGraph::new(spec), method, Precision::FP32, 128)
+    }
+
+    fn opts(b: usize, m: usize) -> PlannerOptions {
+        PlannerOptions { microbatch: b, n_microbatches: m, ..Default::default() }
+    }
+
+    #[test]
+    fn plan_valid_on_env_a() {
+        let p = profile(ModelSpec::t5_base(), Method::pa(false));
+        let env = Env::env_a();
+        let plan = plan(&p, &env, &opts(4, 4)).unwrap();
+        plan.validate(p.graph.len(), env.n()).unwrap();
+        assert!(plan.minibatch_time > 0.0);
+    }
+
+    #[test]
+    fn plan_valid_on_hetero_env_b() {
+        let p = profile(ModelSpec::t5_base(), Method::pa(false));
+        let env = Env::env_b();
+        let plan = plan(&p, &env, &opts(4, 4)).unwrap();
+        plan.validate(p.graph.len(), env.n()).unwrap();
+        // heterogeneity-aware dispatch gives the TX2s more samples than
+        // the Nanos whenever they share a group
+        for s in &plan.stages {
+            for (a, b_) in s.devices.iter().zip(s.devices.iter().skip(1)) {
+                let ia = s.dispatch[s.devices.iter().position(|d| d.id == a.id).unwrap()];
+                let ib = s.dispatch[s.devices.iter().position(|d| d.id == b_.id).unwrap()];
+                if a.kind.effective_flops() > b_.kind.effective_flops() {
+                    assert!(ia >= ib, "faster device got fewer samples");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_beats_homo_on_env_b() {
+        let p = profile(ModelSpec::t5_base(), Method::pa(false));
+        let env = Env::env_b();
+        let hetero = plan(&p, &env, &opts(8, 4)).unwrap();
+        let homo = plan(
+            &p,
+            &env,
+            &PlannerOptions { hetero_aware: false, ..opts(8, 4) },
+        )
+        .unwrap();
+        assert!(
+            hetero.minibatch_time <= homo.minibatch_time * 1.001,
+            "hetero {} vs homo {}",
+            hetero.minibatch_time,
+            homo.minibatch_time
+        );
+    }
+
+    #[test]
+    fn t5_large_full_ft_ooms_on_nanos() {
+        // Table V: Full+DP/Standalone OOM on 4GB Nanos for T5-Large; even
+        // the hybrid planner cannot fit full-FT T5-Large on 4 Nanos.
+        let p = profile(ModelSpec::t5_large(), Method::FullFT);
+        let env = Env::env_a();
+        let r = plan(&p, &env, &opts(16, 4));
+        assert_eq!(r.unwrap_err(), PlanError::InsufficientMemory);
+    }
+
+    #[test]
+    fn t5_large_pa_fits_on_nanos() {
+        let p = profile(ModelSpec::t5_large(), Method::pa(false));
+        let env = Env::env_a();
+        let plan = plan(&p, &env, &opts(4, 4)).unwrap();
+        plan.validate(p.graph.len(), env.n()).unwrap();
+        assert!(plan.n_stages() >= 2, "T5-Large needs pipelining on Nanos");
+    }
+
+    #[test]
+    fn more_devices_never_slower() {
+        let p = profile(ModelSpec::t5_base(), Method::pa(false));
+        let t4 = plan(&p, &Env::nanos(4), &opts(4, 4)).unwrap().minibatch_time;
+        let t8 = plan(&p, &Env::nanos(8), &opts(4, 4)).unwrap().minibatch_time;
+        assert!(t8 <= t4 * 1.05, "8 devices ({t8}) slower than 4 ({t4})");
+    }
+
+    #[test]
+    fn single_device_is_one_stage() {
+        let p = profile(ModelSpec::tiny(), Method::pa(false));
+        let env = Env::standalone(DeviceKind::Tx2H);
+        let plan = plan(&p, &env, &opts(2, 2)).unwrap();
+        assert_eq!(plan.n_stages(), 1);
+        assert_eq!(plan.stages[0].devices.len(), 1);
+    }
+
+    #[test]
+    fn no_devices_errors() {
+        let p = profile(ModelSpec::tiny(), Method::pa(false));
+        let env = Env { name: "empty".into(), devices: vec![], network: crate::cluster::Network::lan_1gbps() };
+        assert_eq!(plan(&p, &env, &opts(2, 2)).unwrap_err(), PlanError::NoDevices);
+    }
+
+    #[test]
+    fn planner_invariants_property() {
+        use crate::util::prop::{check, forall};
+        forall(
+            13,
+            12,
+            |g| {
+                let n_dev = g.int(1, 6) + 1;
+                let b = g.int(1, 8) + 1;
+                let m = g.int(1, 4) + 1;
+                (n_dev, b, m)
+            },
+            |&(n_dev, b, m)| {
+                let p = profile(ModelSpec::t5_base(), Method::pa(false));
+                let env = Env::nanos(n_dev);
+                match plan(&p, &env, &opts(b, m)) {
+                    Ok(pl) => {
+                        pl.validate(p.graph.len(), env.n()).map_err(|e| e)?;
+                        check(pl.minibatch_time.is_finite(), "infinite time")?;
+                        // no stage may exceed its members' memory budgets
+                        for s in &pl.stages {
+                            for d in &s.devices {
+                                check(
+                                    s.peak_mem <= d.mem_budget(),
+                                    format!("stage peak {} over budget", s.peak_mem),
+                                )?;
+                            }
+                        }
+                        Ok(())
+                    }
+                    Err(_) => Ok(()), // OOM is legal for adversarial configs
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,138 @@
+//! The PAC+ hybrid-parallelism planner (paper §V-A, Eq. 3–7, Algorithm 1).
+//!
+//! Given a profiled model and an ordered device set `D` (fastest first),
+//! the planner jointly decides:
+//!
+//! * how many pipeline stages `σ` to use (Eq. 5–7),
+//! * where to cut the layer chain (Eq. 3's balanced-sub-pipeline DP),
+//! * which contiguous run of devices forms each stage's data-parallel
+//!   group, and
+//! * how many samples of each micro-batch every group member processes
+//!   (Eq. 4's heterogeneity-aware sample-dispatch DP), excluding
+//!   out-of-memory assignments by pricing them at +∞.
+//!
+//! Memory accounting is 1F1B-aware: stage `k` of an `s`-stage pipeline
+//! holds up to `min(M, s−k+1)` in-flight micro-batches, so the DP tables
+//! are computed per candidate total stage count.
+
+pub mod dp;
+
+pub use dp::{plan, PlanError, PlannerOptions};
+
+use crate::cluster::Device;
+
+/// One pipeline stage of a finalized plan.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    /// Blocks `[x, y)` of the layer graph hosted by this stage.
+    pub range: (usize, usize),
+    /// The data-parallel device group replicating this stage.
+    pub devices: Vec<Device>,
+    /// Samples of each micro-batch dispatched to each group member
+    /// (aligned with `devices`; sums to the micro-batch size).
+    pub dispatch: Vec<usize>,
+    /// Per-micro-batch forward / backward time of the slowest member.
+    pub e_f: f64,
+    pub e_b: f64,
+    /// Peak memory bytes of the most loaded member under 1F1B.
+    pub peak_mem: u64,
+    /// AllReduce time of this stage's trainable parameters.
+    pub allreduce: f64,
+}
+
+/// A complete hybrid-parallel execution plan.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub stages: Vec<StagePlan>,
+    /// Micro-batches per mini-batch (M).
+    pub microbatches: usize,
+    /// Micro-batch size (B).
+    pub microbatch_size: usize,
+    /// Eq. 5–6 phase latencies (beginning, execution, ending).
+    pub phase_latency: (f64, f64, f64),
+    /// Estimated per-mini-batch latency (Eq. 7 objective).
+    pub minibatch_time: f64,
+}
+
+impl Plan {
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total devices used by the plan.
+    pub fn n_devices(&self) -> usize {
+        self.stages.iter().map(|s| s.devices.len()).sum()
+    }
+
+    /// Samples processed per mini-batch.
+    pub fn minibatch_samples(&self) -> usize {
+        self.microbatches * self.microbatch_size
+    }
+
+    /// Estimated steady-state throughput in samples/s.
+    pub fn throughput(&self) -> f64 {
+        self.minibatch_samples() as f64 / self.minibatch_time
+    }
+
+    /// Peak per-device memory across the cluster (Fig. 13(b)/16(b)).
+    pub fn peak_mem(&self) -> u64 {
+        self.stages.iter().map(|s| s.peak_mem).max().unwrap_or(0)
+    }
+
+    /// Human-readable grouping, e.g. `"[2 dev x 7 blk | 2 dev x 7 blk]"`
+    /// (the paper's Fig. 17 presentation).
+    pub fn grouping(&self) -> String {
+        let parts: Vec<String> = self
+            .stages
+            .iter()
+            .map(|s| format!("{} dev x {} blk", s.devices.len(), s.range.1 - s.range.0))
+            .collect();
+        format!("[{}]", parts.join(" | "))
+    }
+
+    /// Invariant check: stages cover the whole graph contiguously, device
+    /// groups are disjoint, dispatches sum to B.
+    pub fn validate(&self, n_blocks: usize, n_devices: usize) -> Result<(), String> {
+        let mut cur = 0;
+        for s in &self.stages {
+            if s.range.0 != cur {
+                return Err(format!("gap before block {}", s.range.0));
+            }
+            if s.range.1 <= s.range.0 {
+                return Err("empty stage".into());
+            }
+            cur = s.range.1;
+            if s.devices.is_empty() {
+                return Err("stage with no devices".into());
+            }
+            if s.dispatch.len() != s.devices.len() {
+                return Err("dispatch length mismatch".into());
+            }
+            if s.dispatch.iter().sum::<usize>() != self.microbatch_size {
+                return Err(format!(
+                    "dispatch sums to {} != B={}",
+                    s.dispatch.iter().sum::<usize>(),
+                    self.microbatch_size
+                ));
+            }
+        }
+        if cur != n_blocks {
+            return Err(format!("stages cover {cur}/{n_blocks} blocks"));
+        }
+        let mut ids: Vec<usize> = self
+            .stages
+            .iter()
+            .flat_map(|s| s.devices.iter().map(|d| d.id))
+            .collect();
+        let total = ids.len();
+        ids.sort();
+        ids.dedup();
+        if ids.len() != total {
+            return Err("device used by two stages".into());
+        }
+        if total > n_devices {
+            return Err("plan uses more devices than available".into());
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,337 @@
+//! The PAC+ profiler (paper §V-A "Profiling", workflow Step 3).
+//!
+//! Produces the per-(device, layer, batch) FP/BP time tables
+//! `t_f^{d,l}(β)` / `t_b^{d,l}(β)` and the memory terms the planner
+//! consumes. On the paper's testbed these come from running a calibration
+//! dataset on the physical boards; here they come from the calibrated
+//! device performance models (DESIGN.md §2) — the planner is agnostic to
+//! the source, and [`Profile::from_measurements`] lets the real runtime
+//! substitute measured times.
+
+use crate::cluster::Device;
+use crate::model::graph::LayerGraph;
+use crate::model::{Method, Precision, Workload};
+
+/// FP/BP time tables + memory model for one (model, method, precision).
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub graph: LayerGraph,
+    pub method: Method,
+    pub precision: Precision,
+    pub seq: usize,
+    /// Dequantization overhead on compute when the backbone is stored in
+    /// an integer format (dequant-to-f32 on the fly, §IV-D).
+    pub dequant_overhead: f64,
+    /// Optional measured per-(device-id, block) forward/backward times at
+    /// batch 1, overriding the analytic model (filled by the runtime).
+    measured: Option<MeasuredTimes>,
+}
+
+#[derive(Debug, Clone)]
+struct MeasuredTimes {
+    /// t_f[device_id][block] at batch 1, seconds.
+    fwd: Vec<Vec<f64>>,
+    bwd: Vec<Vec<f64>>,
+}
+
+impl Profile {
+    pub fn new(graph: LayerGraph, method: Method, precision: Precision, seq: usize) -> Profile {
+        let dequant_overhead = match precision {
+            Precision::FP32 | Precision::FP16 => 1.0,
+            Precision::INT8 | Precision::INT4 => 1.05,
+        };
+        Profile { graph, method, precision, seq, dequant_overhead, measured: None }
+    }
+
+    /// Build a profile from real measured per-block batch-1 times
+    /// (device-id indexed). Times for batch β scale linearly.
+    pub fn from_measurements(
+        graph: LayerGraph,
+        method: Method,
+        precision: Precision,
+        seq: usize,
+        fwd: Vec<Vec<f64>>,
+        bwd: Vec<Vec<f64>>,
+    ) -> Profile {
+        let mut p = Profile::new(graph, method, precision, seq);
+        p.measured = Some(MeasuredTimes { fwd, bwd });
+        p
+    }
+
+    /// Forward time of block `l` on device `d` with micro-batch β
+    /// (the paper's `t_f^{d,l}(β)`).
+    pub fn t_f(&self, d: &Device, l: usize, beta: usize) -> f64 {
+        if beta == 0 {
+            return 0.0;
+        }
+        if let Some(m) = &self.measured {
+            return m.fwd[d.id][l] * beta as f64;
+        }
+        let tokens = (beta * self.seq) as u64;
+        let flops = self.graph.block_flops_fwd(l, tokens, self.seq)
+            + self.graph.block_adapter_flops(l, self.method, tokens, self.seq) / 3.0;
+        d.compute_time(flops * self.dequant_overhead)
+    }
+
+    /// Backward time of block `l` on device `d` with micro-batch β
+    /// (`t_b^{d,l}(β)`). Zero backbone backward for Parallel Adapters.
+    pub fn t_b(&self, d: &Device, l: usize, beta: usize) -> f64 {
+        if beta == 0 {
+            return 0.0;
+        }
+        if let Some(m) = &self.measured {
+            return m.bwd[d.id][l] * beta as f64;
+        }
+        let tokens = (beta * self.seq) as u64;
+        let flops = self.graph.block_flops_bwd(l, self.method, tokens, self.seq)
+            + self.graph.block_adapter_flops(l, self.method, tokens, self.seq) * 2.0 / 3.0;
+        if flops == 0.0 {
+            return 0.0;
+        }
+        d.compute_time(flops * self.dequant_overhead)
+    }
+
+    /// Combined FP+BP time of a span of blocks (used by Eq. 4's inner term).
+    pub fn span_time(&self, d: &Device, x: usize, y: usize, beta: usize) -> f64 {
+        (x..y).map(|l| self.t_f(d, l, beta) + self.t_b(d, l, beta)).sum()
+    }
+
+    /// Peak memory of a device hosting blocks `[x, y)` with `in_flight`
+    /// micro-batches of size β resident (1F1B holds several) — the
+    /// paper's `m_d` = parameters + gradients (+opt) + activations.
+    pub fn span_mem_bytes(&self, x: usize, y: usize, beta: usize, in_flight: usize) -> u64 {
+        let weights = self.graph.span_weight_bytes(x, y, self.precision);
+        let trainable = self.graph.span_trainable_bytes(x, y, self.method);
+        // Full FT: gradient buffers only (plain SGD — Table I calibration);
+        // PEFT: fp32 trainable copy + grads + 2 Adam states.
+        let train_state = match self.method {
+            Method::FullFT => trainable,
+            _ => 4 * trainable,
+        };
+        let wl = Workload::new(beta, self.seq);
+        let act: u64 = (x..y)
+            .map(|l| self.graph.block_act_bytes(l, self.method, wl))
+            .sum::<u64>()
+            * in_flight.max(1) as u64;
+        weights + train_state + act
+    }
+
+    /// Forward-direction bytes crossing the boundary after block `y-1`.
+    pub fn boundary_bytes_fwd(&self, beta: usize) -> u64 {
+        crate::model::cost::stage_boundary_bytes(
+            &self.graph.spec,
+            self.method,
+            Workload::new(beta, self.seq),
+        )
+    }
+
+    /// Backward-direction boundary bytes (activation gradients). Zero for
+    /// Parallel Adapters backbone boundaries except the adapter state
+    /// gradient (width d/r).
+    pub fn boundary_bytes_bwd(&self, beta: usize) -> u64 {
+        let tokens = (beta * self.seq) as u64;
+        match self.method {
+            Method::ParallelAdapters { .. } => {
+                tokens * self.graph.spec.d_adapter() as u64 * 4
+            }
+            _ => tokens * self.graph.spec.d_model as u64 * 4,
+        }
+    }
+
+    /// Bytes AllReduced by a stage hosting `[x, y)` after each mini-batch.
+    pub fn allreduce_bytes(&self, x: usize, y: usize) -> u64 {
+        self.graph.span_trainable_bytes(x, y, self.method)
+    }
+
+    /// Build O(1) span-query tables for the planner's inner loops
+    /// (EXPERIMENTS.md §Perf: this turned the Eq. 3/Eq. 4 DPs from O(L)
+    /// per span probe into prefix-sum lookups).
+    pub fn span_costs(&self) -> SpanCosts {
+        let l = self.graph.len();
+        let mut fwd = vec![0.0f64; l + 1]; // per-sample fwd FLOPs (w/ adapter share)
+        let mut bwd = vec![0.0f64; l + 1];
+        let mut weights = vec![0u64; l + 1];
+        let mut train_state = vec![0u64; l + 1];
+        let mut act1 = vec![0u64; l + 1]; // act bytes per sample
+        let wl1 = Workload::new(1, self.seq);
+        let tokens1 = self.seq as u64;
+        for i in 0..l {
+            let adapter = self.graph.block_adapter_flops(i, self.method, tokens1, self.seq);
+            fwd[i + 1] = fwd[i]
+                + (self.graph.block_flops_fwd(i, tokens1, self.seq) + adapter / 3.0)
+                    * self.dequant_overhead;
+            bwd[i + 1] = bwd[i]
+                + (self.graph.block_flops_bwd(i, self.method, tokens1, self.seq)
+                    + adapter * 2.0 / 3.0)
+                    * self.dequant_overhead;
+            weights[i + 1] = weights[i] + self.graph.span_weight_bytes(i, i + 1, self.precision);
+            let t = self.graph.span_trainable_bytes(i, i + 1, self.method);
+            train_state[i + 1] = train_state[i]
+                + match self.method {
+                    Method::FullFT => t,
+                    _ => 4 * t,
+                };
+            act1[i + 1] = act1[i] + self.graph.block_act_bytes(i, self.method, wl1);
+        }
+        let measured = self.measured.as_ref().map(|m| {
+            let pref = |rows: &Vec<Vec<f64>>| {
+                rows.iter()
+                    .map(|r| {
+                        let mut p = vec![0.0; r.len() + 1];
+                        for (i, v) in r.iter().enumerate() {
+                            p[i + 1] = p[i] + v;
+                        }
+                        p
+                    })
+                    .collect::<Vec<_>>()
+            };
+            (pref(&m.fwd), pref(&m.bwd))
+        });
+        SpanCosts { fwd, bwd, weights, train_state, act1, measured }
+    }
+}
+
+/// Prefix-sum span cost tables (see [`Profile::span_costs`]).
+#[derive(Debug, Clone)]
+pub struct SpanCosts {
+    fwd: Vec<f64>,
+    bwd: Vec<f64>,
+    weights: Vec<u64>,
+    train_state: Vec<u64>,
+    act1: Vec<u64>,
+    measured: Option<(Vec<Vec<f64>>, Vec<Vec<f64>>)>,
+}
+
+impl SpanCosts {
+    const LAUNCH_OVERHEAD: f64 = 150e-6;
+
+    /// Forward time of blocks [x, y) on `d` with micro-batch β.
+    pub fn t_f(&self, d: &Device, x: usize, y: usize, beta: usize) -> f64 {
+        if beta == 0 || y <= x {
+            return 0.0;
+        }
+        if let Some((fwd, _)) = &self.measured {
+            return (fwd[d.id][y] - fwd[d.id][x]) * beta as f64;
+        }
+        (self.fwd[y] - self.fwd[x]) * beta as f64 / d.kind.effective_flops()
+            + (y - x) as f64 * Self::LAUNCH_OVERHEAD
+    }
+
+    /// Backward time of blocks [x, y) on `d` with micro-batch β.
+    pub fn t_b(&self, d: &Device, x: usize, y: usize, beta: usize) -> f64 {
+        if beta == 0 || y <= x {
+            return 0.0;
+        }
+        if let Some((_, bwd)) = &self.measured {
+            return (bwd[d.id][y] - bwd[d.id][x]) * beta as f64;
+        }
+        let flops = (self.bwd[y] - self.bwd[x]) * beta as f64;
+        if flops == 0.0 {
+            return 0.0;
+        }
+        flops / d.kind.effective_flops() + (y - x) as f64 * Self::LAUNCH_OVERHEAD
+    }
+
+    pub fn span_time(&self, d: &Device, x: usize, y: usize, beta: usize) -> f64 {
+        self.t_f(d, x, y, beta) + self.t_b(d, x, y, beta)
+    }
+
+    pub fn span_mem(&self, x: usize, y: usize, beta: usize, in_flight: usize) -> u64 {
+        self.weights[y] - self.weights[x] + (self.train_state[y] - self.train_state[x])
+            + (self.act1[y] - self.act1[x]) * beta as u64 * in_flight.max(1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeviceKind;
+    use crate::model::ModelSpec;
+
+    fn profile(method: Method) -> Profile {
+        Profile::new(
+            LayerGraph::new(ModelSpec::t5_base()),
+            method,
+            Precision::FP32,
+            128,
+        )
+    }
+
+    #[test]
+    fn times_scale_with_batch() {
+        let p = profile(Method::FullFT);
+        let d = Device::new(0, DeviceKind::NanoH);
+        let t1 = p.t_f(&d, 1, 1);
+        let t4 = p.t_f(&d, 1, 4);
+        assert!(t4 > 3.0 * t1 && t4 < 4.5 * t1, "{t1} {t4}");
+    }
+
+    #[test]
+    fn faster_device_is_faster() {
+        let p = profile(Method::FullFT);
+        let nano = Device::new(0, DeviceKind::NanoH);
+        let tx2 = Device::new(1, DeviceKind::Tx2H);
+        assert!(p.t_f(&tx2, 1, 4) < p.t_f(&nano, 1, 4));
+    }
+
+    #[test]
+    fn pa_backbone_bwd_is_adapter_only() {
+        let p = profile(Method::pa(false));
+        let d = Device::new(0, DeviceKind::NanoH);
+        let full = profile(Method::FullFT);
+        assert!(p.t_b(&d, 1, 4) < 0.3 * full.t_b(&d, 1, 4));
+    }
+
+    #[test]
+    fn zero_batch_zero_time() {
+        let p = profile(Method::FullFT);
+        let d = Device::new(0, DeviceKind::NanoH);
+        assert_eq!(p.t_f(&d, 1, 0), 0.0);
+        assert_eq!(p.t_b(&d, 1, 0), 0.0);
+    }
+
+    #[test]
+    fn memory_grows_with_inflight() {
+        let p = profile(Method::FullFT);
+        let m1 = p.span_mem_bytes(0, 5, 4, 1);
+        let m4 = p.span_mem_bytes(0, 5, 4, 4);
+        assert!(m4 > m1);
+    }
+
+    #[test]
+    fn t5_large_full_oversubscribes_nano() {
+        // the root cause of Table V's OOM column: even one device's share
+        // of T5-Large full-FT exceeds a Nano's budget when hosting the
+        // whole model
+        let p = Profile::new(
+            LayerGraph::new(ModelSpec::t5_large()),
+            Method::FullFT,
+            Precision::FP32,
+            128,
+        );
+        let whole = p.span_mem_bytes(0, p.graph.len(), 16, 1);
+        assert!(whole > DeviceKind::NanoH.mem_budget());
+    }
+
+    #[test]
+    fn measured_profile_overrides() {
+        let g = LayerGraph::new(ModelSpec::tiny());
+        let n = g.len();
+        let fwd = vec![vec![0.5; n]];
+        let bwd = vec![vec![1.0; n]];
+        let p = Profile::from_measurements(
+            g, Method::pa(false), Precision::FP32, 16, fwd, bwd);
+        let d = Device::new(0, DeviceKind::NanoH);
+        assert_eq!(p.t_f(&d, 0, 2), 1.0);
+        assert_eq!(p.t_b(&d, 3, 1), 1.0);
+    }
+
+    #[test]
+    fn int8_adds_dequant_overhead() {
+        let g = LayerGraph::new(ModelSpec::t5_base());
+        let f32p = Profile::new(g.clone(), Method::pa(false), Precision::FP32, 128);
+        let i8p = Profile::new(g, Method::pa(false), Precision::INT8, 128);
+        let d = Device::new(0, DeviceKind::NanoH);
+        assert!(i8p.t_f(&d, 1, 4) > f32p.t_f(&d, 1, 4));
+    }
+}

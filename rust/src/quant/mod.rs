@@ -1,0 +1,271 @@
+//! Block-wise absmax quantization (paper §IV-D, Eq. 1–2) — the Rust twin
+//! of `python/compile/quantize.py`, byte-compatible with the AOT parameter
+//! dumps (`params_backbone_int8.bin` etc.).
+//!
+//! Layout: a `[K, N]` f32 weight becomes `w_q: i8 [K, N]` (values in
+//! `[-qmax, qmax]`) plus `scales: f32 [ceil(K/B), N]` — one absmax per
+//! (64-row block, column). INT4 values occupy one i8 each on the compute
+//! path; [`pack_int4`]/[`unpack_int4`] provide the 2-per-byte storage form.
+
+/// Default quantization block (rows per scale).
+pub const BLOCK: usize = 64;
+
+/// Integer range limit per format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bits {
+    Int8,
+    Int4,
+}
+
+impl Bits {
+    pub fn qmax(self) -> f32 {
+        match self {
+            Bits::Int8 => 127.0,
+            Bits::Int4 => 7.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Bits::Int8 => "int8",
+            Bits::Int4 => "int4",
+        }
+    }
+}
+
+/// A block-wise-quantized 2-D tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub k: usize,
+    pub n: usize,
+    pub block: usize,
+    pub bits: Bits,
+    /// Row-major [k, n] quantized values.
+    pub values: Vec<i8>,
+    /// Row-major [ceil(k/block), n] per-block absmax scales.
+    pub scales: Vec<f32>,
+}
+
+impl QTensor {
+    pub fn nblocks(&self) -> usize {
+        self.k.div_ceil(self.block)
+    }
+
+    /// Storage bytes in packed form (INT4 packs 2 values/byte).
+    pub fn storage_bytes(&self) -> usize {
+        let vals = match self.bits {
+            Bits::Int8 => self.k * self.n,
+            Bits::Int4 => (self.k * self.n).div_ceil(2),
+        };
+        vals + self.nblocks() * self.n * 4
+    }
+}
+
+/// Quantize a row-major `[k, n]` f32 matrix (Eq. 1).
+///
+/// Perf notes (EXPERIMENTS.md §Perf): absmax accumulates row-major
+/// (streaming reads, no stride-n hops) and the per-element division is
+/// hoisted into a per-(block, column) reciprocal.
+pub fn quantize(w: &[f32], k: usize, n: usize, bits: Bits, block: usize) -> QTensor {
+    assert_eq!(w.len(), k * n, "shape mismatch");
+    assert!(block > 0);
+    let qmax = bits.qmax();
+    let nblocks = k.div_ceil(block);
+
+    // pass 1: per-(block, column) absmax, accumulated row-major
+    let mut scales = vec![0.0f32; nblocks * n];
+    for r in 0..k {
+        let b = r / block;
+        let row = &w[r * n..(r + 1) * n];
+        let srow = &mut scales[b * n..(b + 1) * n];
+        for (s, &v) in srow.iter_mut().zip(row) {
+            *s = s.max(v.abs());
+        }
+    }
+    // zero blocks get scale 1.0; precompute qmax / scale
+    let mut inv = vec![0.0f32; nblocks * n];
+    for (s, iv) in scales.iter_mut().zip(inv.iter_mut()) {
+        if *s == 0.0 {
+            *s = 1.0;
+        }
+        *iv = qmax / *s;
+    }
+
+    // pass 2: quantize, row-major with the per-block reciprocal row
+    let mut values = vec![0i8; k * n];
+    for r in 0..k {
+        let b = r / block;
+        let row = &w[r * n..(r + 1) * n];
+        let irow = &inv[b * n..(b + 1) * n];
+        let vrow = &mut values[r * n..(r + 1) * n];
+        for ((v, &x), &iv) in vrow.iter_mut().zip(row).zip(irow) {
+            *v = (x * iv).round().clamp(-qmax, qmax) as i8;
+        }
+    }
+    QTensor { k, n, block, bits, values, scales }
+}
+
+/// Dequantize back to f32 (Eq. 2).
+pub fn dequantize(q: &QTensor) -> Vec<f32> {
+    let qmax = q.bits.qmax();
+    let mut out = vec![0.0f32; q.k * q.n];
+    for r in 0..q.k {
+        let b = r / q.block;
+        for c in 0..q.n {
+            out[r * q.n + c] =
+                q.values[r * q.n + c] as f32 * (q.scales[b * q.n + c] / qmax);
+        }
+    }
+    out
+}
+
+/// Max |w - dequant(quant(w))| over the matrix.
+pub fn roundtrip_error(w: &[f32], k: usize, n: usize, bits: Bits, block: usize) -> f32 {
+    let q = quantize(w, k, n, bits, block);
+    let w2 = dequantize(&q);
+    w.iter().zip(&w2).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+}
+
+/// Pack INT4 values (each in [-7, 7]) two per byte: low nibble first.
+pub fn pack_int4(values: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len().div_ceil(2));
+    for pair in values.chunks(2) {
+        let lo = (pair[0] as u8) & 0x0F;
+        let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0F } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Inverse of [`pack_int4`]; `len` is the original value count.
+pub fn unpack_int4(packed: &[u8], len: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(len);
+    for (i, &b) in packed.iter().enumerate() {
+        let lo = ((b & 0x0F) as i8) << 4 >> 4; // sign-extend nibble
+        out.push(lo);
+        if out.len() == len {
+            break;
+        }
+        if 2 * i + 1 < len {
+            let hi = ((b >> 4) as i8) << 4 >> 4;
+            out.push(hi);
+        }
+    }
+    out.truncate(len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, forall};
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn roundtrip_bound_property() {
+        // |err| <= scale / (2*qmax) per entry, for random shapes/content
+        forall(
+            7,
+            60,
+            |g| {
+                let k = g.int(1, 100);
+                let n = g.int(1, 12);
+                let w = g.vec_f32(k * n);
+                let bits = if g.bool() { Bits::Int8 } else { Bits::Int4 };
+                (k, n, w, bits)
+            },
+            |(k, n, w, bits)| {
+                let q = quantize(w, *k, *n, *bits, 16);
+                let w2 = dequantize(&q);
+                for r in 0..*k {
+                    for c in 0..*n {
+                        let s = q.scales[(r / 16) * *n + c];
+                        let bound = s / (2.0 * bits.qmax()) + 1e-6;
+                        let err = (w[r * *n + c] - w2[r * *n + c]).abs();
+                        check(err <= bound, format!("err {err} > bound {bound}"))?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn scales_are_absmax() {
+        let mut rng = Rng::new(2);
+        let w = randn(&mut rng, 128 * 4);
+        let q = quantize(&w, 128, 4, Bits::Int8, 64);
+        for b in 0..2 {
+            for c in 0..4 {
+                let want = (b * 64..(b + 1) * 64)
+                    .map(|r| w[r * 4 + c].abs())
+                    .fold(0.0f32, f32::max);
+                assert!((q.scales[b * 4 + c] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_python_semantics() {
+        // mirror of python test: zeros quantize to zeros with scale 1
+        let q = quantize(&vec![0.0; 64 * 3], 64, 3, Bits::Int8, 64);
+        assert!(q.values.iter().all(|&v| v == 0));
+        assert!(q.scales.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn outlier_contained_to_block() {
+        let mut rng = Rng::new(3);
+        let mut w = randn(&mut rng, 128 * 2);
+        for v in w.iter_mut() {
+            *v *= 0.1;
+        }
+        w[0] = 50.0; // block 0 outlier
+        let q = quantize(&w, 128, 2, Bits::Int8, 64);
+        let w2 = dequantize(&q);
+        let max_err_block1: f32 = (64..128)
+            .flat_map(|r| (0..2).map(move |c| r * 2 + c))
+            .map(|i| (w[i] - w2[i]).abs())
+            .fold(0.0, f32::max);
+        assert!(max_err_block1 < 0.01, "outlier leaked: {max_err_block1}");
+    }
+
+    #[test]
+    fn int4_pack_roundtrip_property() {
+        forall(
+            11,
+            80,
+            |g| {
+                let n = g.int(0, 50);
+                (0..n).map(|_| (g.int(0, 15) as i8) - 7).collect::<Vec<i8>>()
+            },
+            |vals| {
+                let packed = pack_int4(vals);
+                let un = unpack_int4(&packed, vals.len());
+                check(&un == vals, format!("{un:?} != {vals:?}"))
+            },
+        );
+    }
+
+    #[test]
+    fn storage_bytes_counts_packing() {
+        let w = vec![1.0f32; 128 * 8];
+        let q8 = quantize(&w, 128, 8, Bits::Int8, 64);
+        let q4 = quantize(&w, 128, 8, Bits::Int4, 64);
+        assert_eq!(q8.storage_bytes(), 128 * 8 + 2 * 8 * 4);
+        assert_eq!(q4.storage_bytes(), 128 * 8 / 2 + 2 * 8 * 4);
+    }
+
+    #[test]
+    fn int8_more_accurate_than_int4() {
+        let mut rng = Rng::new(5);
+        let w = randn(&mut rng, 256 * 8);
+        let e8 = roundtrip_error(&w, 256, 8, Bits::Int8, 64);
+        let e4 = roundtrip_error(&w, 256, 8, Bits::Int4, 64);
+        assert!(e8 < e4);
+    }
+}

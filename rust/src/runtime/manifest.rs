@@ -1,0 +1,319 @@
+//! AOT manifest parsing — the contract between `python/compile/aot.py`
+//! and the Rust runtime (artifact IO specs + parameter-dump layouts).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor dtypes crossing the AOT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    /// f16 storage (Table VII's FP16 backbone row). Host-side it is kept
+    /// as raw u16 bits — compute always happens in f32 inside the HLO.
+    F16,
+    I32,
+    I8,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "f16" => Ok(Dtype::F16),
+            "i32" => Ok(Dtype::I32),
+            "i8" => Ok(Dtype::I8),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F16 => 2,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+/// One tensor's shape/dtype (manifest "inputs"/"outputs" entries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype.bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            j.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One HLO artifact's IO contract.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One entry in a binary parameter dump.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// A parameter dump file (`params_<tag>.bin`).
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub file: String,
+    pub entries: Vec<ParamEntry>,
+    pub total_bytes: usize,
+}
+
+/// The model configuration the artifacts were lowered with.
+#[derive(Debug, Clone)]
+pub struct AotConfig {
+    pub name: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub reduction: usize,
+    pub n_classes: usize,
+    pub params_backbone: u64,
+    pub params_adapter: u64,
+}
+
+/// Parsed `manifest.json` + artifact directory handle.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: AotConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub params: BTreeMap<String, ParamSet>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let c = j.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let u = |k: &str| -> Result<usize> {
+            c.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        let config = AotConfig {
+            name: c.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+            layers: u("layers")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            vocab: u("vocab")?,
+            seq_len: u("seq_len")?,
+            batch: u("batch")?,
+            reduction: u("reduction")?,
+            n_classes: u("n_classes")?,
+            params_backbone: c.get("params_backbone").and_then(Json::as_u64).unwrap_or(0),
+            params_adapter: c.get("params_adapter").and_then(Json::as_u64).unwrap_or(0),
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { file, inputs: parse_list("inputs")?, outputs: parse_list("outputs")? },
+            );
+        }
+
+        let mut params = BTreeMap::new();
+        if let Some(psets) = j.get("params").and_then(Json::as_obj) {
+            for (tag, p) in psets {
+                let file = p
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("param set {tag} missing file"))?
+                    .to_string();
+                let entries = p
+                    .get("entries")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("param set {tag} missing entries"))?
+                    .iter()
+                    .map(|e| {
+                        let t = TensorSpec::from_json(e)?;
+                        Ok(ParamEntry {
+                            name: t.name,
+                            shape: t.shape,
+                            dtype: t.dtype,
+                            offset: e
+                                .get("offset")
+                                .and_then(Json::as_usize)
+                                .ok_or_else(|| anyhow!("missing offset"))?,
+                            nbytes: e
+                                .get("nbytes")
+                                .and_then(Json::as_usize)
+                                .ok_or_else(|| anyhow!("missing nbytes"))?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let total_bytes =
+                    p.get("total_bytes").and_then(Json::as_usize).unwrap_or(0);
+                params.insert(tag.clone(), ParamSet { file, entries, total_bytes });
+            }
+        }
+
+        Ok(Manifest { dir, config, artifacts, params })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn param_set(&self, tag: &str) -> Result<&ParamSet> {
+        self.params
+            .get(tag)
+            .ok_or_else(|| anyhow!("param set {tag:?} not in manifest"))
+    }
+
+    /// Read a parameter dump into raw per-entry byte buffers.
+    pub fn read_param_bytes(&self, tag: &str) -> Result<Vec<Vec<u8>>> {
+        let set = self.param_set(tag)?;
+        let raw = fs::read(self.dir.join(&set.file))
+            .with_context(|| format!("reading {}", set.file))?;
+        if set.total_bytes != 0 && raw.len() != set.total_bytes {
+            bail!("{}: file is {} bytes, manifest says {}", set.file, raw.len(), set.total_bytes);
+        }
+        set.entries
+            .iter()
+            .map(|e| {
+                if e.offset + e.nbytes > raw.len() {
+                    bail!("{}: entry {} overruns file", set.file, e.name);
+                }
+                Ok(raw[e.offset..e.offset + e.nbytes].to_vec())
+            })
+            .collect()
+    }
+
+    /// Available stage sizes (`stage_fwd_k<K>` artifacts).
+    pub fn stage_sizes(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|n| n.strip_prefix("stage_fwd_k").and_then(|k| k.parse().ok()))
+            .collect();
+        ks.sort();
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let m = Manifest::load(tiny_dir()).expect("run `make artifacts` first");
+        assert_eq!(m.config.layers, 2);
+        assert_eq!(m.config.d_model, 32);
+        assert!(m.artifacts.contains_key("backbone_fwd"));
+        assert!(m.artifacts.contains_key("adapter_step"));
+        assert_eq!(m.stage_sizes(), vec![1, 2]);
+    }
+
+    #[test]
+    fn artifact_specs_consistent() {
+        let m = Manifest::load(tiny_dir()).unwrap();
+        let a = m.artifact("adapter_step").unwrap();
+        // inputs: 24 adapter params + acts + labels + lr
+        assert_eq!(a.inputs.len(), 27);
+        // outputs: 24 updated params + loss
+        assert_eq!(a.outputs.len(), 25);
+        let acts = &a.inputs[24];
+        assert_eq!(acts.name, "acts");
+        assert_eq!(acts.shape, vec![3, 4, 16, 32]);
+        assert_eq!(acts.dtype, Dtype::F32);
+    }
+
+    #[test]
+    fn param_bytes_roundtrip() {
+        let m = Manifest::load(tiny_dir()).unwrap();
+        let bytes = m.read_param_bytes("backbone").unwrap();
+        let set = m.param_set("backbone").unwrap();
+        assert_eq!(bytes.len(), set.entries.len());
+        for (b, e) in bytes.iter().zip(&set.entries) {
+            assert_eq!(b.len(), e.nbytes);
+            assert_eq!(e.nbytes, e.shape.iter().product::<usize>() * e.dtype.bytes());
+        }
+    }
+
+    #[test]
+    fn quantized_params_have_i8() {
+        let m = Manifest::load(tiny_dir()).unwrap();
+        let set = m.param_set("backbone_int8").unwrap();
+        assert!(set.entries.iter().any(|e| e.dtype == Dtype::I8));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::load(tiny_dir()).unwrap();
+        assert!(m.artifact("nonexistent").is_err());
+        assert!(m.param_set("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,376 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile them once on the
+//! CPU PJRT client, and execute them from the coordinator's hot path.
+//!
+//! The interchange format is HLO **text** (`HloModuleProto::from_text_file`)
+//! — see `/opt/xla-example/README.md`: jax ≥ 0.5 emits serialized protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. All artifacts are lowered with
+//! `return_tuple=True`, so outputs arrive as one tuple literal that we
+//! unpack.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, Dtype, Manifest, ParamEntry, ParamSet, TensorSpec};
+
+/// A host-side tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    /// f16 storage as raw bit patterns (upload-only: reduced-precision
+    /// parameter sets; all artifact *outputs* are f32/i32).
+    F16(Vec<u16>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    I8(Vec<i8>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::F16(_, s) | Tensor::I32(_, s) | Tensor::I8(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32(..) => Dtype::F32,
+            Tensor::F16(..) => Dtype::F16,
+            Tensor::I32(..) => Dtype::I32,
+            Tensor::I8(..) => Dtype::I8,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// Build from a raw little-endian byte buffer (parameter dumps).
+    pub fn from_bytes(dtype: Dtype, shape: Vec<usize>, bytes: &[u8]) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if bytes.len() != numel * dtype.bytes() {
+            bail!("byte length {} != {} x {:?}", bytes.len(), numel, dtype);
+        }
+        Ok(match dtype {
+            Dtype::F32 => Tensor::F32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+                shape,
+            ),
+            Dtype::F16 => Tensor::F16(
+                bytes
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                    .collect(),
+                shape,
+            ),
+            Dtype::I32 => Tensor::I32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+                shape,
+            ),
+            Dtype::I8 => Tensor::I8(bytes.iter().map(|&b| b as i8).collect(), shape),
+        })
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match self {
+            Tensor::F32(v, _) => (xla::ElementType::F32, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            }),
+            Tensor::F16(v, _) => (xla::ElementType::F16, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 2)
+            }),
+            Tensor::I32(v, _) => (xla::ElementType::S32, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            }),
+            Tensor::I8(v, _) => (xla::ElementType::S8, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len())
+            }),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, self.shape(), bytes)
+            .map_err(|e| anyhow!("literal creation failed: {e}"))
+    }
+
+    fn from_literal(lit: &xla::Literal, spec_shape: &[usize]) -> Result<Tensor> {
+        let ty = lit.ty().map_err(|e| anyhow!("literal ty: {e}"))?;
+        Ok(match ty {
+            xla::ElementType::F32 => {
+                Tensor::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?, spec_shape.to_vec())
+            }
+            xla::ElementType::S32 => {
+                Tensor::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?, spec_shape.to_vec())
+            }
+            xla::ElementType::S8 => {
+                Tensor::I8(lit.to_vec::<i8>().map_err(|e| anyhow!("{e}"))?, spec_shape.to_vec())
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        })
+    }
+}
+
+/// A compiled executable, shareable across worker threads.
+///
+/// SAFETY: the `xla` crate wraps raw PJRT pointers without `Send`/`Sync`
+/// markers, but the PJRT C API contract makes `Execute` thread-safe, and
+/// the CPU client (TFRT) supports concurrent execution. The only
+/// non-thread-safe part of the wrapper is the internal `Rc` refcount on
+/// the client, which we only touch under the `Runtime::executables`
+/// mutex (compilation) or at single-threaded drop time.
+pub struct Executable(xla::PjRtLoadedExecutable);
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    pub fn execute_literals(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .0
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))
+    }
+}
+
+/// The PJRT runtime: one CPU client + compiled executables by name.
+///
+/// Executables are compiled lazily on first use and cached. `execute` is
+/// `&self` (internally synchronized) so worker threads can share one
+/// runtime behind an `Arc`.
+pub struct Runtime {
+    client: Mutex<xla::PjRtClient>,
+    pub manifest: Manifest,
+    executables: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+// SAFETY: see `Executable`. The client is only used under its mutex.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open an artifact directory produced by `python -m compile.aot`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client: Mutex::new(client),
+            manifest,
+            executables: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.lock().unwrap().platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        let mut cache = self.executables.lock().unwrap();
+        if let Some(e) = cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .lock()
+            .unwrap()
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let exe = std::sync::Arc::new(Executable(exe));
+        cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors; validates shapes/dtypes
+    /// against the manifest and unpacks the output tuple.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, manifest expects {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            if t.shape() != s.shape.as_slice() || t.dtype() != s.dtype {
+                bail!(
+                    "{name}: input {} shape/dtype mismatch: got {:?}/{:?}, want {:?}/{:?}",
+                    s.name,
+                    t.shape(),
+                    t.dtype(),
+                    s.shape,
+                    s.dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let tuple = exe
+            .execute_literals(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest expects {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, os)| Tensor::from_literal(lit, &os.shape))
+            .collect()
+    }
+
+    /// Load a parameter set as tensors (order = manifest order).
+    pub fn load_params(&self, tag: &str) -> Result<Vec<Tensor>> {
+        let set = self.manifest.param_set(tag)?.clone();
+        let bytes = self.manifest.read_param_bytes(tag)?;
+        set.entries
+            .iter()
+            .zip(bytes)
+            .map(|(e, b)| {
+                Tensor::from_bytes(e.dtype, e.shape.clone(), &b)
+                    .with_context(|| format!("param {}", e.name))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tiny() -> Runtime {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        Runtime::load(dir).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn tensor_from_bytes_roundtrip() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let t = Tensor::from_bytes(Dtype::F32, vec![3], &bytes).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &vals);
+        assert!(Tensor::from_bytes(Dtype::F32, vec![4], &bytes).is_err());
+    }
+
+    #[test]
+    fn loads_and_compiles_backbone() {
+        let rt = tiny();
+        assert!(rt.platform().to_lowercase().contains("cpu")
+            || rt.platform().to_lowercase().contains("host"));
+        rt.executable("backbone_fwd").unwrap();
+        // cached second fetch
+        rt.executable("backbone_fwd").unwrap();
+    }
+
+    #[test]
+    fn executes_backbone_and_matches_golden() {
+        let rt = tiny();
+        let cfg = rt.manifest.config.clone();
+        let golden_text = std::fs::read_to_string(rt.manifest.dir.join("golden.json")).unwrap();
+        let golden = crate::util::json::Json::parse(&golden_text).unwrap();
+
+        let mut inputs = rt.load_params("backbone").unwrap();
+        let tokens: Vec<i32> = golden
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        inputs.push(Tensor::I32(tokens, vec![cfg.batch, cfg.seq_len]));
+        let out = rt.execute("backbone_fwd", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let acts = out[0].as_f32().unwrap();
+        let acts_sum: f64 = acts.iter().map(|&x| x as f64).sum();
+        let want = golden.get("acts_sum").unwrap().as_f64().unwrap();
+        assert!(
+            (acts_sum - want).abs() < 1e-2 * want.abs().max(1.0),
+            "acts_sum {acts_sum} vs golden {want}"
+        );
+        // spot-check the first 8 values
+        let slice = golden.get("acts_slice").unwrap().as_arr().unwrap();
+        for (i, g) in slice.iter().enumerate() {
+            let got = acts[i] as f64;
+            let want = g.as_f64().unwrap();
+            assert!((got - want).abs() < 1e-4, "acts[{i}] {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn adapter_step_matches_golden_loss() {
+        let rt = tiny();
+        let cfg = rt.manifest.config.clone();
+        let golden_text = std::fs::read_to_string(rt.manifest.dir.join("golden.json")).unwrap();
+        let golden = crate::util::json::Json::parse(&golden_text).unwrap();
+        let tokens: Vec<i32> = golden.get("tokens").unwrap().as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap() as i32).collect();
+        let labels: Vec<i32> = golden.get("labels").unwrap().as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap() as i32).collect();
+        let lr = golden.get("lr").unwrap().as_f64().unwrap() as f32;
+
+        // backbone fwd -> acts
+        let mut binputs = rt.load_params("backbone").unwrap();
+        binputs.push(Tensor::I32(tokens, vec![cfg.batch, cfg.seq_len]));
+        let acts = rt.execute("backbone_fwd", &binputs).unwrap().remove(0);
+
+        // adapter step on cached acts
+        let mut ainputs = rt.load_params("adapter_gaussian").unwrap();
+        ainputs.push(acts);
+        ainputs.push(Tensor::I32(labels, vec![cfg.batch]));
+        ainputs.push(Tensor::F32(vec![lr], vec![]));
+        let out = rt.execute("adapter_step", &ainputs).unwrap();
+        let loss = out.last().unwrap().scalar_f32().unwrap();
+        let want = golden.get("adapter_step_loss").unwrap().as_f64().unwrap();
+        assert!(
+            (loss as f64 - want).abs() < 1e-3,
+            "loss {loss} vs golden {want}"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let rt = tiny();
+        assert!(rt.execute("backbone_fwd", &[]).is_err());
+        let mut inputs = rt.load_params("backbone").unwrap();
+        inputs.push(Tensor::I32(vec![0; 10], vec![10])); // wrong shape
+        assert!(rt.execute("backbone_fwd", &inputs).is_err());
+    }
+}

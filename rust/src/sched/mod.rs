@@ -1,0 +1,301 @@
+//! Hybrid-parallel execution schedule: 1F1B micro-batch ordering (paper
+//! §V-A, Fig. 10(b)) and a discrete-event simulator that replays a plan
+//! over the device/network models to produce mini-batch latency, bubble
+//! fraction, and peak in-flight memory.
+//!
+//! The simulator is also the timing backend for every baseline system
+//! (pure DP = 1 stage × n devices; pure PP = n stages × 1 device), so all
+//! Table V / Fig. 12 / Fig. 16 comparisons run through the same machinery.
+
+pub mod timeline;
+pub mod training;
+
+use crate::planner::Plan;
+use crate::profiler::Profile;
+use crate::cluster::Network;
+
+/// One operation in a stage's 1F1B order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Forward pass of micro-batch `m`.
+    F(usize),
+    /// Backward pass of micro-batch `m`.
+    B(usize),
+}
+
+/// Construct the 1F1B order for stage `i` of `s` stages with `m` micro-
+/// batches: warmup forwards, steady 1F1B pairs, cooldown backwards
+/// (PipeDream-Flush schedule [40]).
+pub fn one_f_one_b(i: usize, s: usize, m: usize) -> Vec<Op> {
+    let warmup = (s - i - 1).min(m);
+    let mut ops = Vec::with_capacity(2 * m);
+    for mb in 0..warmup {
+        ops.push(Op::F(mb));
+    }
+    let steady = m - warmup;
+    for k in 0..steady {
+        ops.push(Op::F(warmup + k));
+        ops.push(Op::B(k));
+    }
+    for mb in steady..m {
+        ops.push(Op::B(mb));
+    }
+    ops
+}
+
+/// A simulated timeline entry (for reporting / debugging).
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub stage: usize,
+    pub op: Op,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Result of simulating one mini-batch through the pipeline.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Wall-clock of the mini-batch including the final AllReduce.
+    pub minibatch_time: f64,
+    /// Makespan of compute only (before AllReduce).
+    pub compute_span: f64,
+    /// Fraction of device-time idle inside the compute span (pipeline
+    /// bubbles + communication stalls).
+    pub bubble_fraction: f64,
+    /// Peak number of in-flight (forwarded, not yet backwarded) micro-
+    /// batches per stage — validates the planner's 1F1B memory model.
+    pub peak_in_flight: Vec<usize>,
+    pub timeline: Vec<Slot>,
+}
+
+/// Discrete-event simulation of `plan` for one mini-batch.
+///
+/// Dependencies: `F(i, m)` needs `F(i-1, m)` + forward transfer;
+/// `B(i, m)` needs `B(i+1, m)` + backward transfer (for stage `s-1`,
+/// `B` follows its own `F`). Each stage executes its 1F1B op list in
+/// order. AllReduce of every stage's trainable parameters happens after
+/// its last backward; the mini-batch completes when the slowest stage's
+/// AllReduce finishes (Fig. 10(b)).
+pub fn simulate_minibatch(plan: &Plan, profile: &Profile, net: &Network) -> SimResult {
+    let s = plan.n_stages();
+    let m = plan.microbatches;
+    let orders: Vec<Vec<Op>> = (0..s).map(|i| one_f_one_b(i, s, m)).collect();
+
+    let c_f = net.transfer_time(profile.boundary_bytes_fwd(plan.microbatch_size));
+    let c_b = net.transfer_time(profile.boundary_bytes_bwd(plan.microbatch_size));
+
+    let mut f_done = vec![vec![f64::NAN; m]; s];
+    let mut b_done = vec![vec![f64::NAN; m]; s];
+    let mut next_op = vec![0usize; s];
+    let mut stage_free = vec![0.0f64; s];
+    let mut timeline = Vec::with_capacity(2 * s * m);
+
+    let ready = |op: Op, i: usize, f_done: &Vec<Vec<f64>>, b_done: &Vec<Vec<f64>>| -> Option<f64> {
+        match op {
+            Op::F(mb) => {
+                if i == 0 {
+                    Some(0.0)
+                } else {
+                    let d = f_done[i - 1][mb];
+                    if d.is_nan() {
+                        None
+                    } else {
+                        Some(d + c_f)
+                    }
+                }
+            }
+            Op::B(mb) => {
+                if i == s - 1 {
+                    let d = f_done[i][mb];
+                    if d.is_nan() {
+                        None
+                    } else {
+                        Some(d)
+                    }
+                } else {
+                    let d = b_done[i + 1][mb];
+                    if d.is_nan() {
+                        None
+                    } else {
+                        Some(d + c_b)
+                    }
+                }
+            }
+        }
+    };
+
+    let total_ops: usize = orders.iter().map(|o| o.len()).sum();
+    let mut executed = 0;
+    while executed < total_ops {
+        // pick the stage whose head op can start earliest
+        let mut best: Option<(f64, usize)> = None;
+        for i in 0..s {
+            if next_op[i] >= orders[i].len() {
+                continue;
+            }
+            if let Some(r) = ready(orders[i][next_op[i]], i, &f_done, &b_done) {
+                let start = r.max(stage_free[i]);
+                if best.map(|(t, _)| start < t).unwrap_or(true) {
+                    best = Some((start, i));
+                }
+            }
+        }
+        let (start, i) = best.expect("deadlock in 1F1B simulation");
+        let op = orders[i][next_op[i]];
+        let dur = match op {
+            Op::F(_) => plan.stages[i].e_f,
+            Op::B(_) => plan.stages[i].e_b,
+        };
+        let end = start + dur;
+        match op {
+            Op::F(mb) => f_done[i][mb] = end,
+            Op::B(mb) => b_done[i][mb] = end,
+        }
+        stage_free[i] = end;
+        next_op[i] += 1;
+        executed += 1;
+        timeline.push(Slot { stage: i, op, start, end });
+    }
+
+    let compute_span = stage_free.iter().cloned().fold(0.0, f64::max);
+
+    // AllReduce after each stage's last backward (overlappable across stages).
+    let minibatch_time = (0..s)
+        .map(|i| stage_free[i] + plan.stages[i].allreduce)
+        .fold(0.0, f64::max);
+
+    // busy time / (span × stages) → bubbles
+    let busy: f64 = timeline.iter().map(|t| t.end - t.start).sum();
+    let bubble_fraction = 1.0 - busy / (compute_span * s as f64);
+
+    // peak in-flight per stage
+    let mut peak_in_flight = vec![0usize; s];
+    for i in 0..s {
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for mb in 0..m {
+            events.push((f_done[i][mb], 1));
+            events.push((b_done[i][mb], -1));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)));
+        let mut cur = 0i32;
+        for (_, delta) in events {
+            cur += delta;
+            peak_in_flight[i] = peak_in_flight[i].max(cur.max(0) as usize);
+        }
+    }
+
+    SimResult { minibatch_time, compute_span, bubble_fraction, peak_in_flight, timeline }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Env;
+    use crate::model::graph::LayerGraph;
+    use crate::model::{Method, ModelSpec, Precision};
+    use crate::planner::{plan, PlannerOptions};
+
+    fn setup(n_dev: usize, method: Method) -> (Profile, Plan, Env) {
+        let profile = Profile::new(
+            LayerGraph::new(ModelSpec::t5_base()),
+            method,
+            Precision::FP32,
+            128,
+        );
+        let env = Env::nanos(n_dev);
+        let opts = PlannerOptions { microbatch: 4, n_microbatches: 4, ..Default::default() };
+        let p = plan(&profile, &env, &opts).unwrap();
+        (profile, p, env)
+    }
+
+    #[test]
+    fn schedule_shape() {
+        // stage 0 of 4 stages, 6 microbatches: 3 warmup F, then 1F1B
+        let ops = one_f_one_b(0, 4, 6);
+        assert_eq!(ops.len(), 12);
+        assert_eq!(&ops[..3], &[Op::F(0), Op::F(1), Op::F(2)]);
+        assert_eq!(ops[3], Op::F(3));
+        assert_eq!(ops[4], Op::B(0));
+        // last stage alternates immediately
+        let last = one_f_one_b(3, 4, 6);
+        assert_eq!(&last[..2], &[Op::F(0), Op::B(0)]);
+    }
+
+    #[test]
+    fn schedule_covers_all_microbatches() {
+        for s in 1..5 {
+            for i in 0..s {
+                for m in 1..8 {
+                    let ops = one_f_one_b(i, s, m);
+                    let fs: Vec<usize> = ops.iter().filter_map(|o| match o {
+                        Op::F(x) => Some(*x),
+                        _ => None,
+                    }).collect();
+                    let bs: Vec<usize> = ops.iter().filter_map(|o| match o {
+                        Op::B(x) => Some(*x),
+                        _ => None,
+                    }).collect();
+                    assert_eq!(fs, (0..m).collect::<Vec<_>>());
+                    assert_eq!(bs, (0..m).collect::<Vec<_>>());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simulation_legal_and_finite() {
+        let (profile, p, env) = setup(4, Method::pa(false));
+        let r = simulate_minibatch(&p, &profile, &env.network);
+        assert!(r.minibatch_time.is_finite() && r.minibatch_time > 0.0);
+        assert!(r.compute_span <= r.minibatch_time);
+        assert!((0.0..1.0).contains(&r.bubble_fraction), "{}", r.bubble_fraction);
+        // per-stage ops never overlap
+        for i in 0..p.n_stages() {
+            let mut slots: Vec<&Slot> = r.timeline.iter().filter(|t| t.stage == i).collect();
+            slots.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            for w in slots.windows(2) {
+                assert!(w[1].start >= w[0].end - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn in_flight_bounded_by_1f1b() {
+        let (profile, p, env) = setup(4, Method::pa(false));
+        let r = simulate_minibatch(&p, &profile, &env.network);
+        let s = p.n_stages();
+        for (i, &peak) in r.peak_in_flight.iter().enumerate() {
+            assert!(
+                peak <= (s - i).min(p.microbatches),
+                "stage {i}: in-flight {peak} exceeds 1F1B bound {}",
+                (s - i).min(p.microbatches)
+            );
+        }
+    }
+
+    #[test]
+    fn sim_close_to_planner_estimate() {
+        let (profile, p, env) = setup(4, Method::pa(false));
+        let r = simulate_minibatch(&p, &profile, &env.network);
+        let est = p.minibatch_time;
+        let ratio = r.minibatch_time / est;
+        assert!(
+            (0.5..1.6).contains(&ratio),
+            "simulated {} vs planned {est}",
+            r.minibatch_time
+        );
+    }
+
+    #[test]
+    fn fwd_precedes_bwd_per_microbatch() {
+        let (profile, p, env) = setup(4, Method::FullFT);
+        let r = simulate_minibatch(&p, &profile, &env.network);
+        for i in 0..p.n_stages() {
+            for mb in 0..p.microbatches {
+                let f = r.timeline.iter().find(|t| t.stage == i && t.op == Op::F(mb)).unwrap();
+                let b = r.timeline.iter().find(|t| t.stage == i && t.op == Op::B(mb)).unwrap();
+                assert!(b.start >= f.end - 1e-12);
+            }
+        }
+    }
+}

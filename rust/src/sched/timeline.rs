@@ -1,0 +1,116 @@
+//! ASCII rendering of a simulated 1F1B pipeline timeline — the textual
+//! equivalent of the paper's Fig. 10(b), used by `pacpp timeline` and
+//! the planning examples to make schedules inspectable.
+//!
+//! ```text
+//! stage 0 |F0|F1|F2|F3|B0|F4|B1|...        |AR|
+//! stage 1    |F0|F1|B0|F2|B1|...        |AR|
+//! ```
+
+use super::{Op, SimResult};
+
+/// Render a simulated mini-batch as fixed-width ASCII art.
+///
+/// `width` is the target character width of the time axis; each slot is
+/// labeled `F<mb>`/`B<mb>` and positioned proportionally to its start
+/// time. Overlapping labels degrade to `#` fill.
+pub fn render(sim: &SimResult, n_stages: usize, width: usize) -> String {
+    let span = sim
+        .timeline
+        .iter()
+        .map(|s| s.end)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let scale = (width.max(20) as f64 - 1.0) / span;
+
+    let mut rows: Vec<Vec<char>> = vec![vec![' '; width.max(20)]; n_stages];
+    for slot in &sim.timeline {
+        let row = &mut rows[slot.stage];
+        let a = (slot.start * scale) as usize;
+        let b = ((slot.end * scale) as usize).max(a + 1).min(row.len());
+        let label = match slot.op {
+            Op::F(mb) => format!("F{mb}"),
+            Op::B(mb) => format!("B{mb}"),
+        };
+        let chars: Vec<char> = label.chars().collect();
+        for (i, cell) in row[a..b].iter_mut().enumerate() {
+            let fill = if i < chars.len() { chars[i] } else { '·' };
+            *cell = if *cell == ' ' { fill } else { '#' };
+        }
+        if b - a >= 1 {
+            row[b - 1] = '|';
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "1F1B timeline ({} stages, {:.3}s span, {:.0}% bubbles)\n",
+        n_stages,
+        span,
+        sim.bubble_fraction * 100.0
+    ));
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str(&format!("stage {i} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Env;
+    use crate::model::graph::LayerGraph;
+    use crate::model::{Method, ModelSpec, Precision};
+    use crate::planner::{plan, PlannerOptions};
+    use crate::profiler::Profile;
+    use crate::sched::simulate_minibatch;
+
+    fn sim() -> (SimResult, usize) {
+        let profile = Profile::new(
+            LayerGraph::new(ModelSpec::t5_base()),
+            Method::pa(false),
+            Precision::FP32,
+            128,
+        );
+        let env = Env::nanos(4);
+        let opts = PlannerOptions {
+            microbatch: 2,
+            n_microbatches: 4,
+            ..Default::default()
+        };
+        let p = plan(&profile, &env, &opts).unwrap();
+        (simulate_minibatch(&p, &profile, &env.network), p.n_stages())
+    }
+
+    #[test]
+    fn renders_all_stages() {
+        let (s, n) = sim();
+        let art = render(&s, n, 100);
+        assert_eq!(art.lines().count(), n + 1);
+        for i in 0..n {
+            assert!(art.contains(&format!("stage {i}")));
+        }
+    }
+
+    #[test]
+    fn labels_present() {
+        let (s, n) = sim();
+        let art = render(&s, n, 160);
+        assert!(art.contains('F'), "{art}");
+        assert!(art.contains('B'), "{art}");
+        assert!(art.contains("bubbles"));
+    }
+
+    #[test]
+    fn width_respected() {
+        let (s, n) = sim();
+        for w in [40usize, 80, 200] {
+            let art = render(&s, n, w);
+            for line in art.lines().skip(1) {
+                assert!(line.chars().count() <= w + 10, "line too wide for {w}");
+            }
+        }
+    }
+}

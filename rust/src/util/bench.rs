@@ -1,0 +1,146 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use [`Bench`] with `harness = false`. It performs
+//! warmup, adaptively picks an iteration count targeting a measurement
+//! window, and reports mean/p50/p99.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One registered benchmark's result line.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<48} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            crate::util::fmt_secs(s.mean),
+            crate::util::fmt_secs(s.p50),
+            crate::util::fmt_secs(s.p99),
+            self.iters,
+        )
+    }
+}
+
+/// Bench runner: `Bench::new("suite").run("case", || work())`.
+pub struct Bench {
+    suite: String,
+    target: Duration,
+    warmup: Duration,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        // `cargo bench -- <filter>` filters by substring.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        println!("\n== bench suite: {suite} ==");
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}",
+            "case", "mean", "p50", "p99"
+        );
+        Bench {
+            suite: suite.to_string(),
+            target: Duration::from_millis(
+                std::env::var("BENCH_TARGET_MS")
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(300),
+            ),
+            warmup: Duration::from_millis(50),
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Whether a case name passes the CLI filter.
+    pub fn enabled(&self, name: &str) -> bool {
+        self.filter
+            .as_ref()
+            .map(|f| name.contains(f.as_str()) || self.suite.contains(f.as_str()))
+            .unwrap_or(true)
+    }
+
+    /// Time `f` repeatedly; prints and records a result line.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Option<&BenchResult> {
+        if !self.enabled(name) {
+            return None;
+        }
+        // Warmup + calibration.
+        let start = Instant::now();
+        let mut calib_iters = 0usize;
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = start.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.target.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(5, 10_000);
+
+        // Measure in batches of up to 20 samples.
+        let samples = iters.min(20);
+        let per_sample = (iters / samples).max(1);
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                std::hint::black_box(f());
+            }
+            times.push(t.elapsed().as_secs_f64() / per_sample as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples * per_sample,
+            summary: Summary::of(&times),
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last()
+    }
+
+    /// Run a harness that prints a full table (used for the paper-table
+    /// regeneration targets, which are reports rather than timings).
+    pub fn table<F: FnOnce()>(&mut self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        println!("\n-- {name} --");
+        f();
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("BENCH_TARGET_MS", "20");
+        let mut b = Bench::new("test");
+        let r = b
+            .run("spin", || {
+                let mut s = 0u64;
+                for i in 0..1000 {
+                    s = s.wrapping_add(i);
+                }
+                s
+            })
+            .cloned();
+        let r = r.unwrap();
+        assert!(r.summary.mean > 0.0);
+        assert!(r.iters >= 5);
+    }
+}

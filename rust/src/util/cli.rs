@@ -1,0 +1,110 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Supports `pacpp <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positional args, and --options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(raw: Vec<String>) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("plan env_a t5-large");
+        assert_eq!(a.subcommand.as_deref(), Some("plan"));
+        assert_eq!(a.positional, vec!["env_a", "t5-large"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("train --epochs 3 --lr=0.1 --verbose --model base100m");
+        assert_eq!(a.get_usize("epochs", 0), 3);
+        assert!((a.get_f64("lr", 0.0) - 0.1).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("model"), Some("base100m"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench --quick");
+        assert!(a.flag("quick"));
+        assert!(a.get("quick").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+}

@@ -1,0 +1,117 @@
+//! Property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, check)` runs `check` on `cases` random inputs
+//! from `gen`; on failure it performs a simple halving shrink via the
+//! generator's size parameter and reports the smallest failing case found.
+
+use super::rng::Rng;
+
+/// Generator context handed to the input generator: RNG + a size hint that
+/// the shrinker reduces on failure.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in [lo, min(hi, lo+size)) — respects the shrink size.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = hi.min(lo + self.size.max(1));
+        self.rng.range(lo, hi_eff.max(lo + 1))
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal() as f32).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+}
+
+/// Run a property over `cases` generated inputs. Panics with the smallest
+/// failing case's debug representation on failure.
+pub fn forall<T: std::fmt::Debug, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let size = 4 + case * 4; // grow inputs over the run
+        let input = gen(&mut Gen { rng: &mut rng, size });
+        if let Err(msg) = prop(&input) {
+            // shrink: regenerate with smaller sizes from fresh sub-seeds
+            let mut smallest = (format!("{input:?}"), msg.clone());
+            let mut shrink_size = size / 2;
+            while shrink_size >= 1 {
+                let mut found = false;
+                for attempt in 0..20 {
+                    let mut r2 = Rng::new(seed ^ (attempt + 1) ^ (shrink_size as u64) << 32);
+                    let cand = gen(&mut Gen { rng: &mut r2, size: shrink_size });
+                    if let Err(m2) = prop(&cand) {
+                        smallest = (format!("{cand:?}"), m2);
+                        found = true;
+                        break;
+                    }
+                }
+                if !found {
+                    break;
+                }
+                shrink_size /= 2;
+            }
+            panic!(
+                "property failed (case {case}/{cases}):\n  input: {}\n  error: {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+pub fn check(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |g| g.int(0, 100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(2, 100, |g| g.int(0, 1000), |&x| check(x < 3, format!("x={x}")));
+    }
+
+    #[test]
+    fn generators_respect_size() {
+        let mut rng = Rng::new(3);
+        let mut g = Gen { rng: &mut rng, size: 2 };
+        for _ in 0..100 {
+            assert!(g.int(5, 100) < 7);
+        }
+    }
+}
