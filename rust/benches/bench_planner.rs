@@ -2,6 +2,10 @@
 //! L=50 blocks, |D|=8, B=16 — the paper reports "several minutes on an
 //! edge device" for the same O(B·L²·|D|³) DP).
 //!
+//! Includes `bench_strategy_search`: serial vs threaded evaluation of
+//! the σ (stage-count) candidates (`PlannerOptions::search_threads`) —
+//! the two must return bit-identical plans, so only wall-clock differs.
+//!
 //! Run: `cargo bench --bench bench_planner`
 
 use pacpp::cluster::Env;
@@ -56,6 +60,39 @@ fn main() {
             b.run(&format!("plan/t5-large/env_b/B{bsz}"), || {
                 plan(&profile, &env, &opts).unwrap()
             });
+        }
+    }
+
+    // bench_strategy_search: serial vs threaded σ-candidate evaluation.
+    // Eight devices give eight candidate stage counts — enough to keep a
+    // small worker pool busy; the selected plan is identical either way.
+    {
+        let profile = Profile::new(
+            LayerGraph::new(ModelSpec::t5_large()),
+            Method::pa(false),
+            Precision::FP32,
+            128,
+        );
+        let env = Env::nanos(8);
+        let base = PlannerOptions { microbatch: 4, n_microbatches: 4, ..Default::default() };
+        let serial_opts = PlannerOptions { search_threads: Some(1), ..base.clone() };
+        let threaded_opts = PlannerOptions { search_threads: None, ..base };
+        let serial = b
+            .run("bench_strategy_search/serial/t5-large/8dev", || {
+                plan(&profile, &env, &serial_opts).unwrap()
+            })
+            .map(|r| r.summary.mean);
+        let threaded = b
+            .run("bench_strategy_search/threaded/t5-large/8dev", || {
+                plan(&profile, &env, &threaded_opts).unwrap()
+            })
+            .map(|r| r.summary.mean);
+        if let (Some(s), Some(t)) = (serial, threaded) {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            println!(
+                "\nsigma-search speedup (serial/threaded): {:.2}x on {cores} cores",
+                s / t
+            );
         }
     }
 

@@ -16,7 +16,18 @@ use pacpp::util::rng::Rng;
 fn main() {
     let mut b = Bench::new("runtime");
     let dir = std::env::var("PACPP_ARTIFACTS").unwrap_or("artifacts/small".into());
-    let rt = Arc::new(Runtime::load(&dir).expect("run `make artifacts` first"));
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            println!("skipping runtime benches ({e:#}); run `make artifacts` first");
+            return;
+        }
+    };
+    if let Err(e) = rt.executable("backbone_fwd") {
+        // artifacts exist but no PJRT backend (built without `pjrt`)
+        println!("skipping runtime benches: {e:#}");
+        return;
+    }
     let cfg = rt.manifest.config.clone();
     println!(
         "artifacts: {} (L={} d={} B={} S={})",

@@ -10,7 +10,11 @@
 //!
 //! The real-training targets (table6/table7/fig14) execute actual PJRT
 //! training on `artifacts/small` and are gated behind `PACPP_REAL=1`
-//! (they take minutes, not milliseconds).
+//! (they take minutes, not milliseconds) plus the `pjrt` cargo feature.
+//!
+//! The simulated tables resolve systems through the strategy registry
+//! and evaluate their cells on worker threads (`util::par_map`), so this
+//! whole suite regenerates at core-count speed.
 
 use std::sync::Arc;
 

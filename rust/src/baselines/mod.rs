@@ -1,32 +1,41 @@
-//! The collaborative edge training systems PAC+ is compared against
-//! (paper §VI-A "Baseline Methods" and §VI-C):
+//! Compatibility adapters over the [`crate::strategy`] layer.
 //!
-//! * **Standalone** — one edge device hosting the whole model.
-//! * **DP (EDDL [38])** — classic data parallelism: every device holds a
-//!   full replica; the mini-batch is split across devices; gradients are
-//!   AllReduced. Mini-batch granularity (no micro-batching).
-//! * **PP (Eco-FL [39])** — pure pipeline parallelism: |D| stages, one
-//!   device each, 4 micro-batches per mini-batch.
-//! * **PAC+** — the paper's hybrid planner (this repo's `planner`).
-//! * **PAC (Homo)** — PAC+ without heterogeneity awareness (ablation).
-//! * **Asteroid [48]** — hybrid pipeline parallelism like PAC+, but
-//!   designed for full-parameter fine-tuning (no PEFT co-design, no
-//!   activation cache).
-//! * **HetPipe [49]** — virtual workers (intra-worker PP) + asynchronous
-//!   inter-worker DP through a parameter server; the async PS traffic of
-//!   full-model gradients is its bottleneck on a LAN.
+//! The collaborative edge training systems PAC+ is compared against
+//! (paper §VI-A "Baseline Methods" and §VI-C) used to be hand-rolled
+//! inside a closed match ladder here; they now live as
+//! [`ParallelismStrategy`] implementations in [`crate::strategy`] and
+//! are resolved by name through a
+//! [`StrategyRegistry`](crate::strategy::StrategyRegistry).
+//!
+//! This module keeps the old entry points stable:
+//!
+//! * [`System`] — **deprecated alias** retained for CLI/JSON
+//!   compatibility; new code should look strategies up by name in the
+//!   registry. Each variant maps 1:1 onto a registered strategy via
+//!   [`System::strategy`].
+//! * [`run_system`] — thin forwarder to
+//!   [`ParallelismStrategy::run`].
+//! * [`TrainJob`] — re-exported from `strategy` (its new home).
 //!
 //! All systems share the same profile/cost substrate and the same 1F1B
 //! event simulator, so differences come purely from architecture.
 
-use crate::cluster::{DeviceKind, Env};
-#[cfg(test)]
-use crate::model::{Method, Precision};
-use crate::planner::{PlanError, PlannerOptions};
+use crate::cluster::Env;
+use crate::planner::PlanError;
 use crate::profiler::Profile;
-use crate::sched::training::{self, RunReport};
+use crate::sched::training::RunReport;
+use crate::strategy::{
+    Asteroid, DataParallel, HetPipe, PacHomo, PacPlus, ParallelismStrategy, PipelineParallel,
+    Standalone,
+};
+
+pub use crate::strategy::TrainJob;
 
 /// A collaborative training system under evaluation.
+///
+/// Deprecated alias over the strategy layer: prefer
+/// `StrategyRegistry::with_defaults().get(name)`. Kept because the CLI
+/// flags and recorded experiment JSON address systems by these variants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum System {
     Standalone,
@@ -39,282 +48,52 @@ pub enum System {
 }
 
 impl System {
-    pub fn name(self) -> &'static str {
+    /// Every variant, in Table V / Fig. 12 order.
+    pub const ALL: [System; 7] = [
+        System::Standalone,
+        System::DataParallel,
+        System::PipelineParallel,
+        System::PacPlus,
+        System::PacHomo,
+        System::Asteroid,
+        System::HetPipe,
+    ];
+
+    /// The strategy this variant aliases.
+    pub fn strategy(self) -> &'static dyn ParallelismStrategy {
         match self {
-            System::Standalone => "Standalone",
-            System::DataParallel => "DP (EDDL)",
-            System::PipelineParallel => "PP (Eco-FL)",
-            System::PacPlus => "PAC+",
-            System::PacHomo => "PAC+ (Homo)",
-            System::Asteroid => "Asteroid",
-            System::HetPipe => "HetPipe",
+            System::Standalone => &Standalone,
+            System::DataParallel => &DataParallel,
+            System::PipelineParallel => &PipelineParallel,
+            System::PacPlus => &PacPlus,
+            System::PacHomo => &PacHomo,
+            System::Asteroid => &Asteroid,
+            System::HetPipe => &HetPipe,
         }
     }
-}
 
-/// Shared experiment shape: GLUE-style task on an edge cluster.
-#[derive(Debug, Clone, Copy)]
-pub struct TrainJob {
-    pub samples: usize,
-    pub epochs: usize,
-    pub seq: usize,
-    pub minibatch: usize,
-}
-
-impl TrainJob {
-    pub fn new(samples: usize, epochs: usize, seq: usize, minibatch: usize) -> TrainJob {
-        TrainJob { samples, epochs, seq, minibatch }
+    pub fn name(self) -> &'static str {
+        self.strategy().name()
     }
 }
 
-/// Run (simulate) `system` fine-tuning `spec`+`method` on `env`.
-/// Returns the total wall-clock in seconds, or the OOM error.
+/// Run (simulate) `system` fine-tuning on `env`: forwards to the
+/// aliased strategy. Returns the run report, or the planning error.
 pub fn run_system(
     system: System,
     profile: &Profile,
     env: &Env,
     job: TrainJob,
 ) -> Result<RunReport, PlanError> {
-    match system {
-        System::Standalone => replicated_dp(profile, env, job, 1),
-        // EDDL: every device hosts the full model and processes whole
-        // mini-batches ("fine-tuned strictly at the mini-batch
-        // granularity", §VI-B) — throughput scales with devices, memory
-        // per device does not.
-        System::DataParallel => replicated_dp(profile, env, job, env.n()),
-        System::PipelineParallel => pure_pp(profile, env, job),
-        System::PacPlus | System::PacHomo | System::Asteroid => {
-            let m = 4;
-            let opts = PlannerOptions {
-                microbatch: (job.minibatch / m).max(1),
-                n_microbatches: m,
-                hetero_aware: system != System::PacHomo,
-                ..Default::default()
-            };
-            training::finetune(profile, env, &opts, job.samples, job.epochs)
-        }
-        System::HetPipe => hetpipe(profile, env, job),
-    }
-}
-
-/// Eco-FL-style pure pipeline parallelism: the block chain is split into
-/// |D| **even** contiguous stages (Eco-FL balances layer counts, not
-/// profiled times), one device per stage, 4 micro-batches per mini-batch,
-/// 1F1B scheduling. OOM if any stage exceeds its device's budget at its
-/// 1F1B in-flight depth.
-fn pure_pp(profile: &Profile, env: &Env, job: TrainJob) -> Result<RunReport, PlanError> {
-    use crate::planner::{Plan, StagePlan};
-    let l = profile.graph.len();
-    let n = env.n().min(l);
-    let m = 4usize; // micro-batches (paper §VI-B)
-    let beta = (job.minibatch / m).max(1);
-
-    // even split: base blocks per stage, remainder spread from the front
-    let base = l / n;
-    let rem = l % n;
-    let mut stages = Vec::with_capacity(n);
-    let mut cur = 0usize;
-    for (i, d) in env.devices.iter().take(n).enumerate() {
-        let k = base + usize::from(i < rem);
-        let (x, y) = (cur, cur + k);
-        cur = y;
-        let in_flight = (n - i).min(m);
-        let mem = profile.span_mem_bytes(x, y, beta, in_flight);
-        if mem > d.mem_budget() {
-            return Err(PlanError::InsufficientMemory);
-        }
-        let e_f: f64 = (x..y).map(|b| profile.t_f(d, b, beta)).sum();
-        let e_b: f64 = (x..y).map(|b| profile.t_b(d, b, beta)).sum();
-        let allreduce = 0.0; // single device per stage: nothing to reduce
-        stages.push(StagePlan {
-            range: (x, y),
-            devices: vec![d.clone()],
-            dispatch: vec![beta],
-            e_f,
-            e_b,
-            peak_mem: mem,
-            allreduce,
-        });
-    }
-    let plan = Plan {
-        stages,
-        microbatches: m,
-        microbatch_size: beta,
-        phase_latency: (0.0, 0.0, 0.0),
-        minibatch_time: 0.0,
-    };
-    let per_mb = crate::sched::simulate_minibatch(&plan, profile, &env.network).minibatch_time;
-    let minibatches = job.samples.div_ceil(m * beta);
-    let epoch1 = per_mb * minibatches as f64;
-
-    let (redistribution, epoch_cached) =
-        if profile.method.skips_backbone_with_cache() && job.epochs > 1 {
-            (
-                training::redistribution_time(profile, env, job.samples),
-                training::epoch_time_cached(profile, env, job.samples, m * beta),
-            )
-        } else {
-            (0.0, epoch1)
-        };
-    let mut plan = plan;
-    plan.minibatch_time = per_mb;
-    Ok(RunReport {
-        plan,
-        epoch1,
-        redistribution,
-        epoch_cached,
-        epochs: job.epochs,
-        total: epoch1 + redistribution + epoch_cached * (job.epochs - 1) as f64,
-    })
-}
-
-/// Standalone / EDDL-DP execution model: the first `n` devices each host
-/// the **entire** model and process whole mini-batches independently;
-/// adapter/trainable gradients are AllReduced after every round. A plan
-/// with one single-device stage per replica is synthesized for reporting.
-fn replicated_dp(
-    profile: &Profile,
-    env: &Env,
-    job: TrainJob,
-    n: usize,
-) -> Result<RunReport, PlanError> {
-    use crate::planner::{Plan, StagePlan};
-    let l = profile.graph.len();
-    let devices: Vec<_> = env.devices.iter().take(n).cloned().collect();
-    // OOM check: every replica hosts all blocks with a full mini-batch.
-    let mem = profile.span_mem_bytes(0, l, job.minibatch, 1);
-    for d in &devices {
-        if mem > d.mem_budget() {
-            return Err(PlanError::InsufficientMemory);
-        }
-    }
-    // per-replica mini-batch compute time; the round is paced by the
-    // slowest replica (synchronous DP).
-    let slowest = devices
-        .iter()
-        .map(|d| profile.span_time(d, 0, l, job.minibatch))
-        .fold(0.0f64, f64::max);
-    let trainable = profile.graph.span_trainable_bytes(0, l, profile.method);
-    let allreduce = env.network.allreduce_time(trainable, n);
-    let rounds =
-        (job.samples as f64 / (n * job.minibatch) as f64).ceil();
-    let epoch1 = rounds * (slowest + allreduce);
-
-    let (redistribution, epoch_cached) = if profile.method.skips_backbone_with_cache()
-        && job.epochs > 1
-    {
-        let redis = training::redistribution_time(profile, env, job.samples);
-        let cached = training::epoch_time_cached(profile, env, job.samples, job.minibatch);
-        (redis, cached)
-    } else {
-        (0.0, epoch1)
-    };
-
-    let stages = devices
-        .iter()
-        .map(|d| StagePlan {
-            range: (0, l),
-            devices: vec![d.clone()],
-            dispatch: vec![job.minibatch],
-            e_f: slowest,
-            e_b: slowest,
-            peak_mem: mem,
-            allreduce,
-        })
-        .take(1)
-        .collect();
-    Ok(RunReport {
-        plan: Plan {
-            stages,
-            microbatches: 1,
-            microbatch_size: job.minibatch,
-            phase_latency: (0.0, slowest, allreduce),
-            minibatch_time: slowest + allreduce,
-        },
-        epoch1,
-        redistribution,
-        epoch_cached,
-        epochs: job.epochs,
-        total: epoch1 + redistribution + epoch_cached * (job.epochs - 1) as f64,
-    })
-}
-
-/// HetPipe model: devices are grouped by kind into virtual workers; each
-/// worker runs pure PP internally; workers train asynchronously against a
-/// parameter server that serializes full trainable-gradient push/pull on
-/// the LAN. Wave-based staleness costs a utilization factor.
-fn hetpipe(profile: &Profile, env: &Env, job: TrainJob) -> Result<RunReport, PlanError> {
-    const STALENESS_UTILIZATION: f64 = 0.85;
-
-    // virtual workers: group devices of the same kind (max 4 per worker)
-    let mut groups: Vec<Vec<crate::cluster::Device>> = Vec::new();
-    for kind in [DeviceKind::Tx2H, DeviceKind::Tx2L, DeviceKind::NanoH, DeviceKind::NanoL] {
-        let ds: Vec<_> = env.devices.iter().filter(|d| d.kind == kind).cloned().collect();
-        for chunk in ds.chunks(4) {
-            if !chunk.is_empty() {
-                groups.push(chunk.to_vec());
-            }
-        }
-    }
-
-    let mut agg_throughput = 0.0; // samples/s across workers
-    let mut any_plan: Option<RunReport> = None;
-    for g in &groups {
-        let sub = Env {
-            name: format!("hetpipe-worker-{}", g[0].kind.name()),
-            devices: g.iter().cloned().enumerate().map(|(i, mut d)| {
-                d.id = i;
-                d
-            }).collect(),
-            network: env.network,
-        };
-        let m = 4;
-        let opts = PlannerOptions {
-            microbatch: (job.minibatch / m).max(1),
-            n_microbatches: m,
-            fixed_stages: Some(sub.n()),
-            max_group: Some(1),
-            ..Default::default()
-        };
-        match training::finetune(profile, &sub, &opts, job.samples, 1) {
-            Ok(r) => {
-                let mb_samples = r.plan.minibatch_samples() as f64;
-                let mb_time = r.epoch1 / (job.samples as f64 / mb_samples).ceil();
-                agg_throughput += mb_samples / mb_time;
-                if any_plan.is_none() {
-                    any_plan = Some(r);
-                }
-            }
-            Err(_) => continue, // this worker cannot host the model
-        }
-    }
-    let template = any_plan.ok_or(PlanError::InsufficientMemory)?;
-
-    // parameter-server traffic: push grads + pull params per worker
-    // mini-batch. HetPipe shards the PS across the cluster, so each
-    // link carries 2 x trainable / n bytes per sync.
-    let trainable_bytes = profile.method.trainable_params(&profile.graph.spec) * 4;
-    let minibatches_per_epoch = (job.samples as f64 / job.minibatch as f64).ceil();
-    let ps_epoch = minibatches_per_epoch * groups.len() as f64
-        * (2.0 * trainable_bytes as f64 / env.n().max(1) as f64 / env.network.bandwidth);
-
-    let compute_epoch = job.samples as f64 / (agg_throughput * STALENESS_UTILIZATION);
-    let epoch = compute_epoch.max(ps_epoch);
-    Ok(RunReport {
-        plan: template.plan,
-        epoch1: epoch,
-        redistribution: 0.0,
-        epoch_cached: epoch,
-        epochs: job.epochs,
-        total: epoch * job.epochs as f64,
-    })
+    system.strategy().run(profile, env, job)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::graph::LayerGraph;
-    use crate::model::ModelSpec;
+    use crate::model::{Method, ModelSpec, Precision};
+    use crate::strategy::StrategyRegistry;
 
     fn profile(spec: ModelSpec, method: Method, seq: usize) -> Profile {
         Profile::new(LayerGraph::new(spec), method, Precision::FP32, seq)
@@ -402,18 +181,51 @@ mod tests {
 
     #[test]
     fn names_unique() {
-        let all = [
-            System::Standalone,
-            System::DataParallel,
-            System::PipelineParallel,
-            System::PacPlus,
-            System::PacHomo,
-            System::Asteroid,
-            System::HetPipe,
-        ];
-        let mut names: Vec<_> = all.iter().map(|s| s.name()).collect();
+        let mut names: Vec<_> = System::ALL.iter().map(|s| s.name()).collect();
         names.sort();
         names.dedup();
-        assert_eq!(names.len(), all.len());
+        assert_eq!(names.len(), System::ALL.len());
+    }
+
+    /// Golden: the enum adapter and a by-name registry lookup must
+    /// resolve to the same strategy and produce bit-identical reports.
+    #[test]
+    fn registry_matches_enum_dispatch() {
+        let reg = StrategyRegistry::with_defaults();
+        let env = Env::env_b();
+        let pa = profile(ModelSpec::t5_base(), Method::pa(true), 128);
+        let j = TrainJob::new(500, 2, 128, 16);
+        for sys in System::ALL {
+            let strat = reg.get(sys.name()).unwrap_or_else(|| {
+                panic!("{} not registered", sys.name())
+            });
+            assert_eq!(strat.name(), sys.name());
+            match (run_system(sys, &pa, &env, j), strat.run(&pa, &env, j)) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.total.to_bits(), b.total.to_bits(), "{}", sys.name());
+                    assert_eq!(a.epoch1.to_bits(), b.epoch1.to_bits(), "{}", sys.name());
+                    assert_eq!(
+                        a.redistribution.to_bits(),
+                        b.redistribution.to_bits(),
+                        "{}",
+                        sys.name()
+                    );
+                    assert_eq!(a.plan.grouping(), b.plan.grouping(), "{}", sys.name());
+                    for (x, y) in a.plan.stages.iter().zip(&b.plan.stages) {
+                        assert_eq!(x.range, y.range);
+                        assert_eq!(x.dispatch, y.dispatch);
+                        assert_eq!(x.e_f.to_bits(), y.e_f.to_bits());
+                        assert_eq!(x.peak_mem, y.peak_mem);
+                    }
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b, "{}", sys.name()),
+                (a, b) => panic!(
+                    "{}: enum {:?} vs registry {:?}",
+                    sys.name(),
+                    a.map(|r| r.total),
+                    b.map(|r| r.total)
+                ),
+            }
+        }
     }
 }

@@ -1,9 +1,11 @@
 //! Real execution engine: multi-threaded PAC+ training over the AOT
-//! artifacts (no Python anywhere on this path).
+//! artifacts (no Python anywhere on this path; requires the `pjrt`
+//! runtime feature at run time).
 //!
 //! Worker threads stand in for edge devices (DESIGN.md §2 — the network
-//! timing is studied separately through the simulator; this path proves
-//! the three layers compose and produces real loss curves).
+//! timing is studied separately through the simulator and the
+//! [`crate::strategy`] layer; this path proves the three layers compose
+//! and produces real loss curves).
 //!
 //! Two engines are provided:
 //!

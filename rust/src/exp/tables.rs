@@ -1,4 +1,10 @@
 //! Simulator-backed experiment harnesses (timing/memory tables & figures).
+//!
+//! Systems are resolved through the strategy layer (`run_system` is a
+//! thin adapter over the registry), and the multi-system comparisons
+//! (Table V, Fig. 12, Fig. 16) evaluate their cells on worker threads
+//! via [`crate::util::par_map`] — every cell is an independent
+//! plan+simulate, so the tables regenerate at core-count speed.
 
 use crate::baselines::{run_system, System, TrainJob};
 use crate::cluster::Env;
@@ -146,9 +152,11 @@ pub struct Table5Row {
 pub fn table5() -> Vec<Table5Row> {
     let env = Env::env_a();
     let tasks = Task::all();
-    let mut rows = Vec::new();
+    // flatten every (model, technique, system) row, then evaluate the
+    // rows on worker threads — each cell is an independent plan+simulate
+    let mut combos: Vec<(ModelSpec, &str, Method, System)> = Vec::new();
     for spec in ModelSpec::paper_models() {
-        let combos: Vec<(&str, Method, System)> = vec![
+        let entries: Vec<(&str, Method, System)> = vec![
             ("Full", Method::FullFT, System::Standalone),
             ("Full", Method::FullFT, System::PipelineParallel),
             ("Full", Method::FullFT, System::DataParallel),
@@ -160,28 +168,31 @@ pub fn table5() -> Vec<Table5Row> {
             ("LoRA", Method::lora_default(), System::DataParallel),
             ("ParallelAdapters", Method::pa(true), System::PacPlus),
         ];
-        for (tech, method, system) in combos {
-            let prof = profile(&spec, method, TABLE_SEQ);
-            let hours: Vec<Option<f64>> = tasks
-                .iter()
-                .map(|t| {
-                    let job = TrainJob::new(t.train_samples(), t.epochs(), TABLE_SEQ, 16);
-                    match run_system(system, &prof, &env, job) {
-                        Ok(r) => Some(r.total / 3600.0),
-                        Err(PlanError::InsufficientMemory) => None,
-                        Err(_) => None,
-                    }
-                })
-                .collect();
-            rows.push(Table5Row {
-                model: spec.name.clone(),
-                technique: tech.into(),
-                system: system.name().into(),
-                hours,
-            });
+        for (tech, method, system) in entries {
+            combos.push((spec.clone(), tech, method, system));
         }
     }
-    rows
+    crate::util::par_map(combos.len(), |i| {
+        let (spec, tech, method, system) = &combos[i];
+        let prof = profile(spec, *method, TABLE_SEQ);
+        let hours: Vec<Option<f64>> = tasks
+            .iter()
+            .map(|t| {
+                let job = TrainJob::new(t.train_samples(), t.epochs(), TABLE_SEQ, 16);
+                match run_system(*system, &prof, &env, job) {
+                    Ok(r) => Some(r.total / 3600.0),
+                    Err(PlanError::InsufficientMemory) => None,
+                    Err(_) => None,
+                }
+            })
+            .collect();
+        Table5Row {
+            model: spec.name.clone(),
+            technique: (*tech).into(),
+            system: system.name().into(),
+            hours,
+        }
+    })
 }
 
 pub fn print_table5() {
@@ -221,32 +232,33 @@ pub struct Fig12Row {
 
 pub fn fig12() -> Vec<Fig12Row> {
     let env = Env::env_b();
-    let mut rows = Vec::new();
+    let mut combos: Vec<(ModelSpec, usize, System, Method)> = Vec::new();
     for spec in ModelSpec::paper_models() {
         for epochs in [1usize, 3] {
-            let systems: Vec<(System, Method)> = vec![
+            for (system, method) in [
                 (System::HetPipe, Method::FullFT),
                 (System::Asteroid, Method::FullFT),
                 (System::PacHomo, Method::pa(true)),
                 (System::PacPlus, Method::pa(true)),
-            ];
-            for (system, method) in systems {
-                let prof = profile(&spec, method, TABLE_SEQ);
-                let job =
-                    TrainJob::new(Task::Mrpc.train_samples(), epochs, TABLE_SEQ, 16);
-                let hours = run_system(system, &prof, &env, job)
-                    .ok()
-                    .map(|r| r.total / 3600.0);
-                rows.push(Fig12Row {
-                    model: spec.name.clone(),
-                    system: system.name().into(),
-                    epochs,
-                    hours,
-                });
+            ] {
+                combos.push((spec.clone(), epochs, system, method));
             }
         }
     }
-    rows
+    crate::util::par_map(combos.len(), |i| {
+        let (spec, epochs, system, method) = &combos[i];
+        let prof = profile(spec, *method, TABLE_SEQ);
+        let job = TrainJob::new(Task::Mrpc.train_samples(), *epochs, TABLE_SEQ, 16);
+        let hours = run_system(*system, &prof, &env, job)
+            .ok()
+            .map(|r| r.total / 3600.0);
+        Fig12Row {
+            model: spec.name.clone(),
+            system: system.name().into(),
+            epochs: *epochs,
+            hours,
+        }
+    })
 }
 
 pub fn print_fig12() {
@@ -423,42 +435,41 @@ pub struct Fig16Row {
 }
 
 pub fn fig16() -> Vec<Fig16Row> {
-    let mut rows = Vec::new();
+    let mut combos: Vec<(ModelSpec, usize, System)> = Vec::new();
     for spec in ModelSpec::paper_models() {
         for n in 2..=8usize {
-            let env = Env::nanos(n);
-            // batch size = number of devices (paper §VI-G), seq 128
-            let minibatch = n;
-            let prof = profile(&spec, Method::pa(false), 128);
             for system in [System::DataParallel, System::PipelineParallel, System::PacPlus] {
-                let job = TrainJob::new(1000, 1, 128, minibatch);
-                let r = run_system(system, &prof, &env, job).ok();
-                let throughput = r.as_ref().map(|r| 1000.0 / r.epoch1);
-                let weight_mem = r.as_ref().map(|r| {
-                    r.plan
-                        .stages
-                        .iter()
-                        .map(|s| {
-                            prof.graph.span_weight_bytes(
-                                s.range.0,
-                                s.range.1,
-                                Precision::FP32,
-                            )
-                        })
-                        .max()
-                        .unwrap_or(0)
-                });
-                rows.push(Fig16Row {
-                    model: spec.name.clone(),
-                    n_devices: n,
-                    system: system.name().into(),
-                    throughput,
-                    weight_mem,
-                });
+                combos.push((spec.clone(), n, system));
             }
         }
     }
-    rows
+    crate::util::par_map(combos.len(), |i| {
+        let (spec, n, system) = &combos[i];
+        let env = Env::nanos(*n);
+        // batch size = number of devices (paper §VI-G), seq 128
+        let minibatch = *n;
+        let prof = profile(spec, Method::pa(false), 128);
+        let job = TrainJob::new(1000, 1, 128, minibatch);
+        let r = run_system(*system, &prof, &env, job).ok();
+        let throughput = r.as_ref().map(|r| 1000.0 / r.epoch1);
+        let weight_mem = r.as_ref().map(|r| {
+            r.plan
+                .stages
+                .iter()
+                .map(|s| {
+                    prof.graph.span_weight_bytes(s.range.0, s.range.1, Precision::FP32)
+                })
+                .max()
+                .unwrap_or(0)
+        });
+        Fig16Row {
+            model: spec.name.clone(),
+            n_devices: *n,
+            system: system.name().into(),
+            throughput,
+            weight_mem,
+        }
+    })
 }
 
 pub fn print_fig16() {

@@ -24,16 +24,41 @@
 //! | [`model`]   | transformer layer graph + analytic FLOPs/memory cost model |
 //! | [`cluster`] | edge-device performance models, network, environment presets |
 //! | [`profiler`]| per-(device, layer, batch) FP/BP time tables |
-//! | [`planner`] | the paper's DP planner (Eq. 3–7, Alg. 1) |
+//! | [`planner`] | the paper's DP planner (Eq. 3–7, Alg. 1), threaded σ-search |
+//! | [`strategy`]| the `ParallelismStrategy` trait + name-addressed registry of all systems |
 //! | [`sched`]   | 1F1B hybrid-parallel schedule construction + event simulation |
 //! | [`cache`]   | the PAC+ activation cache |
-//! | [`baselines`]| Standalone / EDDL-DP / Eco-FL-PP / Asteroid / HetPipe |
-//! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts |
+//! | [`baselines`]| compatibility adapters (`System` enum) over the strategy registry |
+//! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts (`pjrt` feature) |
 //! | [`exec`]    | real multi-threaded hybrid-parallel training engine |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
 //! | [`data`]    | synthetic GLUE-like workload generators |
 //! | [`exp`]     | harnesses regenerating every paper table and figure |
 //! | [`util`]    | JSON, RNG, CLI, bench, property-testing (offline-image stand-ins) |
+//!
+//! ## Adding a new parallelism strategy
+//!
+//! Planning is open: every system — PAC+ itself included — goes through
+//! the [`strategy::ParallelismStrategy`] trait. To add one (say, a
+//! split-placement scheme in the PrivateLoRA direction):
+//!
+//! 1. implement the trait — [`name`](strategy::ParallelismStrategy::name)
+//!    (stable display name), [`options`](strategy::ParallelismStrategy::options)
+//!    (how a `TrainJob` maps to planner knobs) and
+//!    [`plan`](strategy::ParallelismStrategy::plan); override
+//!    [`run`](strategy::ParallelismStrategy::run) only when the epoch
+//!    model differs from plan-then-simulate (see `strategy::HetPipe`);
+//! 2. register it: `StrategyRegistry::with_defaults()` for the paper
+//!    line-up plus yours via [`strategy::StrategyRegistry::register`] —
+//!    or add it to `with_defaults` if it should ship by default;
+//! 3. run `cargo test`: the conformance suite
+//!    (`tests/strategy_conformance.rs`) automatically checks every
+//!    registered strategy's plans for feasibility (coverage, dispatch
+//!    sums, memory budgets) on the paper's environment presets.
+//!
+//! The CLI (`pacpp simulate --system <name>`, `pacpp strategies`) and the
+//! experiment tables resolve strategies by registry name, so a registered
+//! strategy is immediately addressable everywhere.
 
 pub mod baselines;
 pub mod cache;
@@ -47,6 +72,7 @@ pub mod profiler;
 pub mod quant;
 pub mod runtime;
 pub mod sched;
+pub mod strategy;
 pub mod util;
 
 /// Crate-wide result type.

@@ -1,8 +1,12 @@
 //! `pacpp` — the PAC+ coordinator CLI.
 //!
 //! ```text
-//! pacpp plan     --env env_b --model t5-large [--method pa|full|lora|adapters] [--homo]
+//! pacpp plan     --env env_b --model t5-large [--method pa|full|lora|adapters]
+//!                [--strategy pac+] [--minibatch 16] [--microbatch B] [--m M]
+//!                [--homo] [--threads N]
 //! pacpp simulate --env env_a --model t5-base --samples 3668 --epochs 3
+//!                [--system pac+|dp|pp|standalone|asteroid|hetpipe|pac-homo]
+//! pacpp strategies                 (list the registered strategies)
 //! pacpp table    1|5|6|7           (regenerate a paper table)
 //! pacpp fig      3|12|13|15|16|17|18
 //! pacpp train    --artifacts artifacts/small --epochs 4 [--pipeline N] [--quant int8]
@@ -11,7 +15,6 @@
 
 use std::sync::Arc;
 
-use pacpp::baselines::{run_system, System, TrainJob};
 use pacpp::cluster::Env;
 use pacpp::data::SyntheticTask;
 use pacpp::exec::{self, TrainOptions};
@@ -21,6 +24,7 @@ use pacpp::model::{Method, ModelSpec, Precision};
 use pacpp::planner::{plan, PlannerOptions};
 use pacpp::profiler::Profile;
 use pacpp::runtime::Runtime;
+use pacpp::strategy::{ParallelismStrategy, StrategyRegistry, TrainJob};
 use pacpp::util::cli::Args;
 use pacpp::util::{fmt_bytes, fmt_secs};
 
@@ -40,33 +44,71 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("plan") => cmd_plan(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("strategies") => cmd_strategies(),
         Some("table") => cmd_table(&args),
         Some("fig") => cmd_fig(&args),
         Some("train") => cmd_train(&args),
         Some("timeline") => cmd_timeline(&args),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: pacpp <plan|simulate|table|fig|train|info> [options]");
+            eprintln!("usage: pacpp <plan|simulate|strategies|table|fig|train|info> [options]");
             eprintln!("see rust/src/main.rs docs for options");
             Ok(())
         }
     }
 }
 
+/// List the registered parallelism strategies (names, aliases, roles).
+fn cmd_strategies() -> anyhow::Result<()> {
+    let registry = StrategyRegistry::with_defaults();
+    println!("registered parallelism strategies:");
+    for s in registry.iter() {
+        let aliases = s.aliases().join(", ");
+        println!("  {:<14} [{aliases}]", s.name());
+        if !s.description().is_empty() {
+            println!("  {:<14} {}", "", s.description());
+        }
+    }
+    Ok(())
+}
+
 fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let env = Env::by_name(args.get_or("env", "env_a")).expect("unknown env");
     let spec = ModelSpec::by_name(args.get_or("model", "t5-base")).expect("unknown model");
     let method = parse_method(args.get_or("method", "pa"));
-    let profile = Profile::new(LayerGraph::new(spec.clone()), method, Precision::FP32, 128);
-    let opts = PlannerOptions {
-        microbatch: args.get_usize("microbatch", 4),
-        n_microbatches: args.get_usize("m", 4),
-        hetero_aware: !args.flag("homo"),
-        ..Default::default()
+    let registry = StrategyRegistry::with_defaults();
+    let strategy_name = args.get_or("strategy", "pac+");
+    let Some(strategy) = registry.get(strategy_name) else {
+        anyhow::bail!(
+            "unknown strategy {strategy_name:?}; registered: {}",
+            registry.names().join(", ")
+        );
     };
-    match plan(&profile, &env, &opts) {
+    let profile = Profile::new(LayerGraph::new(spec.clone()), method, Precision::FP32, 128);
+    // start from the strategy's own job mapping (PAC-Homo turns off
+    // heterogeneity awareness, Standalone/DP use mini-batch granularity,
+    // ...), then apply explicit CLI overrides on top
+    let job = TrainJob::new(0, 1, 128, args.get_usize("minibatch", 16));
+    let mut opts = strategy.options(&env, &job);
+    if let Some(b) = args.get_usize_opt("microbatch") {
+        opts.microbatch = b;
+    }
+    if let Some(m) = args.get_usize_opt("m") {
+        opts.n_microbatches = m;
+    }
+    if args.flag("homo") {
+        opts.hetero_aware = false;
+    }
+    opts.search_threads = args.get_usize_opt("threads");
+    match strategy.plan(&profile, &env, &opts) {
         Ok(p) => {
-            println!("plan for {} ({}) on {}:", spec.name, method.name(), env.name);
+            println!(
+                "{} plan for {} ({}) on {}:",
+                strategy.name(),
+                spec.name,
+                method.name(),
+                env.name
+            );
             println!("  stages: {}  grouping: {}", p.n_stages(), p.grouping());
             for (i, s) in p.stages.iter().enumerate() {
                 let devs: Vec<String> =
@@ -99,14 +141,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let env = Env::by_name(args.get_or("env", "env_a")).expect("unknown env");
     let spec = ModelSpec::by_name(args.get_or("model", "t5-base")).expect("unknown model");
     let method = parse_method(args.get_or("method", "pa+cache"));
-    let system = match args.get_or("system", "pac+") {
-        "standalone" => System::Standalone,
-        "dp" => System::DataParallel,
-        "pp" => System::PipelineParallel,
-        "asteroid" => System::Asteroid,
-        "hetpipe" => System::HetPipe,
-        "pac-homo" => System::PacHomo,
-        _ => System::PacPlus,
+    let registry = StrategyRegistry::with_defaults();
+    let system_name = args.get_or("system", "pac+");
+    let Some(strategy) = registry.get(system_name) else {
+        anyhow::bail!(
+            "unknown system {system_name:?}; registered: {}",
+            registry.names().join(", ")
+        );
     };
     let profile = Profile::new(
         LayerGraph::new(spec.clone()),
@@ -120,11 +161,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         args.get_usize("seq", exp::TABLE_SEQ),
         args.get_usize("minibatch", 16),
     );
-    match run_system(system, &profile, &env, job) {
+    match strategy.run(&profile, &env, job) {
         Ok(r) => {
             println!(
                 "{} fine-tuning {} ({}) on {}: {} samples x {} epochs",
-                system.name(),
+                strategy.name(),
                 spec.name,
                 method.name(),
                 env.name,
@@ -138,7 +179,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             }
             println!("  total:          {}", fmt_secs(r.total));
         }
-        Err(e) => println!("{}: {e}", system.name()),
+        Err(e) => println!("{}: {e}", strategy.name()),
     }
     Ok(())
 }

@@ -1,4 +1,14 @@
 //! Dynamic-programming core of the planner (Eq. 3, Eq. 4, Eq. 5–7).
+//!
+//! Candidate stage counts σ are independent sub-problems: each gets its
+//! own Eq. 3 table (1F1B in-flight depths depend on σ), all reading one
+//! immutable [`SpanCosts`] profile view shared behind an `Arc`. The
+//! search therefore fans σ candidates out over scoped worker threads
+//! ([`PlannerOptions::search_threads`]); results are folded in ascending
+//! σ order with strict `<` improvement, so the selected plan is
+//! bit-identical to the serial search.
+
+use std::sync::Arc;
 
 use super::{Plan, StagePlan};
 use crate::cluster::{Device, Env};
@@ -24,6 +34,10 @@ pub struct PlannerOptions {
     pub fixed_stages: Option<usize>,
     /// Cap on the data-parallel group size per stage (pure-PP uses 1).
     pub max_group: Option<usize>,
+    /// Worker threads for the σ (stage-count) search: `None` = one per
+    /// available core, `Some(1)` = serial, `Some(n)` = exactly `n`.
+    /// The result is identical either way; only wall-clock changes.
+    pub search_threads: Option<usize>,
 }
 
 impl Default for PlannerOptions {
@@ -35,6 +49,7 @@ impl Default for PlannerOptions {
             max_stages: None,
             fixed_stages: None,
             max_group: None,
+            search_threads: None,
         }
     }
 }
@@ -49,6 +64,10 @@ pub enum PlanError {
 }
 
 /// Entry point: Algorithm 1. Returns the latency-optimal plan `W_σ`.
+///
+/// Candidate stage counts are evaluated on scoped worker threads (see
+/// the module docs); pass `search_threads: Some(1)` to force the serial
+/// search. The selected plan is identical either way.
 pub fn plan(profile: &Profile, env: &Env, opts: &PlannerOptions) -> Result<Plan, PlanError> {
     if env.devices.is_empty() {
         return Err(PlanError::NoDevices);
@@ -65,32 +84,60 @@ pub fn plan(profile: &Profile, env: &Env, opts: &PlannerOptions) -> Result<Plan,
         None => (1, smax),
     };
 
-    let nd = devices.len();
     let if_max = opts.n_microbatches.min(smax).max(1);
-    let memo_len = (l + 1) * (l + 1) * (nd + 1) * (nd + 1) * (if_max + 1);
-    let mut best: Option<Plan> = None;
-    let mut ctx = Ctx {
-        profile,
-        env,
-        devices: &devices,
-        opts,
-        costs: profile.span_costs(),
-        // dense T(x->y, [gs,ge), in_flight) memo; NAN = not yet computed
-        t_memo: vec![f64::NAN; memo_len],
-        l,
-        nd,
-        if_max,
+    let costs = Arc::new(profile.span_costs());
+    let candidates: Vec<usize> = (s_lo..=s_hi).collect();
+    let threads = opts
+        .search_threads
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .min(candidates.len())
+        .max(1);
+
+    let results: Vec<Option<Plan>> = if threads <= 1 {
+        // serial: one context, its span-time memo shared across σ
+        let mut ctx = Ctx::new(profile, env, &devices, opts, Arc::clone(&costs), if_max);
+        candidates.iter().map(|&s| ctx.plan_for_stage_count(s)).collect()
+    } else {
+        let devices_ref: &[Device] = &devices;
+        let cands: &[usize] = &candidates;
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..threads)
+                .map(|w| {
+                    let costs = Arc::clone(&costs);
+                    sc.spawn(move || {
+                        let mut ctx =
+                            Ctx::new(profile, env, devices_ref, opts, costs, if_max);
+                        cands
+                            .iter()
+                            .enumerate()
+                            .skip(w)
+                            .step_by(threads)
+                            .map(|(i, &s)| (i, ctx.plan_for_stage_count(s)))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            let mut slots: Vec<Option<Plan>> = vec![None; candidates.len()];
+            for h in handles {
+                for (i, p) in h.join().expect("planner search worker panicked") {
+                    slots[i] = p;
+                }
+            }
+            slots
+        })
     };
 
-    for s_total in s_lo..=s_hi {
-        if let Some(p) = ctx.plan_for_stage_count(s_total) {
-            let better = best
-                .as_ref()
-                .map(|b| p.minibatch_time < b.minibatch_time)
-                .unwrap_or(true);
-            if better {
-                best = Some(p);
-            }
+    // fold in ascending σ with strict improvement — the serial tie-break
+    let mut best: Option<Plan> = None;
+    for p in results.into_iter().flatten() {
+        let better = best
+            .as_ref()
+            .map(|b| p.minibatch_time < b.minibatch_time)
+            .unwrap_or(true);
+        if better {
+            best = Some(p);
         }
     }
     best.ok_or(PlanError::InsufficientMemory)
@@ -101,8 +148,9 @@ struct Ctx<'a> {
     env: &'a Env,
     devices: &'a [Device],
     opts: &'a PlannerOptions,
-    /// O(1) span-cost tables (EXPERIMENTS.md §Perf).
-    costs: SpanCosts,
+    /// O(1) span-cost tables (EXPERIMENTS.md §Perf), shared read-only
+    /// across search workers.
+    costs: Arc<SpanCosts>,
     /// Dense T(x→y, group=[gs, ge), in_flight) time memo (NAN = unset).
     t_memo: Vec<f64>,
     l: usize,
@@ -111,6 +159,31 @@ struct Ctx<'a> {
 }
 
 impl<'a> Ctx<'a> {
+    fn new(
+        profile: &'a Profile,
+        env: &'a Env,
+        devices: &'a [Device],
+        opts: &'a PlannerOptions,
+        costs: Arc<SpanCosts>,
+        if_max: usize,
+    ) -> Ctx<'a> {
+        let l = profile.graph.len();
+        let nd = devices.len();
+        let memo_len = (l + 1) * (l + 1) * (nd + 1) * (nd + 1) * (if_max + 1);
+        Ctx {
+            profile,
+            env,
+            devices,
+            opts,
+            costs,
+            // dense T(x->y, [gs,ge), in_flight) memo; NAN = not yet computed
+            t_memo: vec![f64::NAN; memo_len],
+            l,
+            nd,
+            if_max,
+        }
+    }
+
     #[inline]
     fn memo_idx(&self, x: usize, y: usize, gs: usize, ge: usize, inf: usize) -> usize {
         ((((x * (self.l + 1)) + y) * (self.nd + 1) + gs) * (self.nd + 1) + ge)
@@ -494,6 +567,52 @@ mod tests {
         let plan = plan(&p, &env, &opts(2, 2)).unwrap();
         assert_eq!(plan.n_stages(), 1);
         assert_eq!(plan.stages[0].devices.len(), 1);
+    }
+
+    /// Golden: the threaded σ-search must select a plan bit-identical to
+    /// the serial search on the paper's default environments.
+    #[test]
+    fn threaded_search_matches_serial_bitwise() {
+        for env in [Env::env_a(), Env::env_b(), Env::nanos(6)] {
+            for method in [Method::pa(false), Method::FullFT] {
+                let p = profile(ModelSpec::t5_base(), method);
+                let serial = plan(
+                    &p,
+                    &env,
+                    &PlannerOptions { search_threads: Some(1), ..opts(4, 4) },
+                );
+                let threaded = plan(
+                    &p,
+                    &env,
+                    &PlannerOptions { search_threads: Some(4), ..opts(4, 4) },
+                );
+                let (Ok(serial), Ok(threaded)) = (serial, threaded) else {
+                    panic!("planning failed on {}", env.name);
+                };
+                assert_eq!(
+                    serial.minibatch_time.to_bits(),
+                    threaded.minibatch_time.to_bits(),
+                    "{}: {} vs {}",
+                    env.name,
+                    serial.minibatch_time,
+                    threaded.minibatch_time
+                );
+                assert_eq!(serial.grouping(), threaded.grouping(), "{}", env.name);
+                assert_eq!(serial.n_stages(), threaded.n_stages());
+                for (a, b) in serial.stages.iter().zip(&threaded.stages) {
+                    assert_eq!(a.range, b.range);
+                    assert_eq!(a.dispatch, b.dispatch);
+                    assert_eq!(a.e_f.to_bits(), b.e_f.to_bits());
+                    assert_eq!(a.e_b.to_bits(), b.e_b.to_bits());
+                    assert_eq!(a.allreduce.to_bits(), b.allreduce.to_bits());
+                    assert_eq!(a.peak_mem, b.peak_mem);
+                    assert_eq!(
+                        a.devices.iter().map(|d| d.id).collect::<Vec<_>>(),
+                        b.devices.iter().map(|d| d.id).collect::<Vec<_>>()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,14 @@
 //!
 //! Memory accounting is 1F1B-aware: stage `k` of an `s`-stage pipeline
 //! holds up to `min(M, s−k+1)` in-flight micro-batches, so the DP tables
-//! are computed per candidate total stage count.
+//! are computed per candidate total stage count — which also makes the σ
+//! candidates independent: [`dp::plan`] searches them on worker threads
+//! over one shared immutable cost view (see
+//! [`PlannerOptions::search_threads`]).
+//!
+//! This module is the engine behind the [`crate::strategy::PacPlus`]
+//! family; the other [`crate::strategy`] implementations construct their
+//! plans directly but share the same [`Plan`] vocabulary and validator.
 
 pub mod dp;
 

@@ -3,9 +3,11 @@
 //! over the device/network models to produce mini-batch latency, bubble
 //! fraction, and peak in-flight memory.
 //!
-//! The simulator is also the timing backend for every baseline system
-//! (pure DP = 1 stage × n devices; pure PP = n stages × 1 device), so all
-//! Table V / Fig. 12 / Fig. 16 comparisons run through the same machinery.
+//! The simulator is the timing backend for every registered
+//! [`crate::strategy`] implementation (pure DP = 1 stage × n devices;
+//! pure PP = n stages × 1 device), so all Table V / Fig. 12 / Fig. 16
+//! comparisons run through the same machinery; [`training`] turns a
+//! simulated mini-batch into epoch- and run-level reports for any plan.
 
 pub mod timeline;
 pub mod training;

@@ -2,6 +2,12 @@
 //! the cache redistribution step, and the data-parallel cached epochs
 //! (paper §V, Fig. 11) — the timing backend for Table V, Fig. 12 and
 //! Fig. 18.
+//!
+//! This module is strategy-agnostic: any [`crate::strategy`]
+//! implementation can turn a finished [`Plan`] into a [`RunReport`]
+//! through [`report_from_plan`] (the default
+//! `ParallelismStrategy::run`), while [`finetune`] remains the
+//! plan-then-report shorthand used by the PAC planner family.
 
 use super::simulate_minibatch;
 use crate::cluster::Env;
@@ -89,20 +95,19 @@ pub fn redistribution_time(profile: &Profile, env: &Env, samples: usize) -> f64 
         + env.network.broadcast_time(adapter_bytes, env.n())
 }
 
-/// Plan + simulate a complete PAC+ fine-tuning run of `epochs` epochs.
-///
-/// With `Method::ParallelAdapters{cache: true}`, epochs ≥ 2 run the
-/// cached data-parallel phase; any other method repeats epoch 1.
-pub fn finetune(
+/// Extend an already-constructed plan to a full `epochs`-epoch run:
+/// simulated hybrid epoch 1, then — with
+/// `Method::ParallelAdapters{cache: true}` — the one-time redistribution
+/// and the cached data-parallel epochs; any other method repeats epoch 1.
+pub fn report_from_plan(
+    plan: Plan,
     profile: &Profile,
     env: &Env,
-    opts: &PlannerOptions,
     samples: usize,
     epochs: usize,
-) -> Result<RunReport, PlanError> {
-    let p = plan(profile, env, opts)?;
-    let epoch1 = epoch_time_hybrid(&p, profile, env, samples);
-    let minibatch = p.minibatch_samples();
+) -> RunReport {
+    let epoch1 = epoch_time_hybrid(&plan, profile, env, samples);
+    let minibatch = plan.minibatch_samples();
 
     let (redistribution, epoch_cached) = if profile.method.skips_backbone_with_cache()
         && epochs > 1
@@ -116,7 +121,18 @@ pub fn finetune(
     };
 
     let total = epoch1 + redistribution + epoch_cached * (epochs - 1) as f64;
-    Ok(RunReport { plan: p, epoch1, redistribution, epoch_cached, epochs, total })
+    RunReport { plan, epoch1, redistribution, epoch_cached, epochs, total }
+}
+
+/// Plan + simulate a complete PAC+ fine-tuning run of `epochs` epochs.
+pub fn finetune(
+    profile: &Profile,
+    env: &Env,
+    opts: &PlannerOptions,
+    samples: usize,
+    epochs: usize,
+) -> Result<RunReport, PlanError> {
+    Ok(report_from_plan(plan(profile, env, opts)?, profile, env, samples, epochs))
 }
 
 #[cfg(test)]

@@ -1,0 +1,101 @@
+//! The open planning layer: every parallelisation scheme — the paper's
+//! PAC+ hybrid data+pipeline planner and all the baseline systems it is
+//! compared against — implements the [`ParallelismStrategy`] trait and is
+//! looked up by name through a [`StrategyRegistry`].
+//!
+//! Before this layer existed, PAC+ planning lived in a free function
+//! (`planner::dp::plan`) while every baseline's plan construction was
+//! hand-rolled inside a closed `System` enum match ladder in `baselines`.
+//! Adding a scenario (device churn, multi-tenant adapters, split
+//! placement à la PrivateLoRA — see PAPERS.md) meant editing that ladder.
+//! Now a scheme is one trait impl plus one `register` call; the
+//! conformance suite (`tests/strategy_conformance.rs`) and the experiment
+//! harnesses pick registered strategies up automatically.
+//!
+//! A strategy answers three questions:
+//!
+//! 1. **[`options`](ParallelismStrategy::options)** — how a [`TrainJob`]
+//!    maps onto planner knobs (micro-batching policy, stage/group
+//!    constraints);
+//! 2. **[`plan`](ParallelismStrategy::plan)** — how to place the model on
+//!    the cluster for one mini-batch (a [`Plan`]);
+//! 3. **[`run`](ParallelismStrategy::run)** — how a whole fine-tuning run
+//!    unfolds (default: plan once, then the shared epoch/cache timing
+//!    model in [`sched::training`](crate::sched::training)).
+//!
+//! All strategies share one profile/cost substrate and the same 1F1B
+//! event simulator, so measured differences come purely from
+//! architecture — the property the paper's §VI comparisons rely on.
+
+mod registry;
+mod systems;
+
+pub use registry::StrategyRegistry;
+pub use systems::{
+    Asteroid, DataParallel, HetPipe, PacHomo, PacPlus, PipelineParallel, Standalone,
+};
+
+use crate::cluster::Env;
+use crate::planner::{Plan, PlanError, PlannerOptions};
+use crate::profiler::Profile;
+use crate::sched::training::{self, RunReport};
+
+/// Shared experiment shape: GLUE-style task on an edge cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainJob {
+    pub samples: usize,
+    pub epochs: usize,
+    pub seq: usize,
+    pub minibatch: usize,
+}
+
+impl TrainJob {
+    pub fn new(samples: usize, epochs: usize, seq: usize, minibatch: usize) -> TrainJob {
+        TrainJob { samples, epochs, seq, minibatch }
+    }
+}
+
+/// A pluggable parallel fine-tuning scheme.
+///
+/// Implementations must be stateless (or internally synchronized):
+/// the registry hands out shared references and the experiment harnesses
+/// call strategies from worker threads.
+pub trait ParallelismStrategy: Send + Sync {
+    /// Canonical display name (stable: used in tables, JSON and the CLI).
+    fn name(&self) -> &str;
+
+    /// Lowercase lookup aliases accepted by [`StrategyRegistry::get`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for `pacpp strategies` and docs.
+    fn description(&self) -> &str {
+        ""
+    }
+
+    /// The planner configuration this strategy uses for `job` on `env`
+    /// (micro-batching policy, stage/group constraints).
+    fn options(&self, env: &Env, job: &TrainJob) -> PlannerOptions;
+
+    /// Construct the per-mini-batch execution plan.
+    fn plan(
+        &self,
+        profile: &Profile,
+        env: &Env,
+        opts: &PlannerOptions,
+    ) -> Result<Plan, PlanError>;
+
+    /// Simulate a complete fine-tuning run of `job` on `env`.
+    ///
+    /// The default implementation plans once and extends to epochs with
+    /// the shared timing model (hybrid epoch 1, then the cached
+    /// data-parallel phase when the method supports it). Strategies whose
+    /// run-level semantics differ from their plan (replicated DP,
+    /// asynchronous parameter servers) override this.
+    fn run(&self, profile: &Profile, env: &Env, job: TrainJob) -> Result<RunReport, PlanError> {
+        let opts = self.options(env, &job);
+        let plan = self.plan(profile, env, &opts)?;
+        Ok(training::report_from_plan(plan, profile, env, job.samples, job.epochs))
+    }
+}

@@ -1,0 +1,166 @@
+//! Lookup-by-name registry of [`ParallelismStrategy`] implementations.
+
+use std::sync::Arc;
+
+use super::{
+    Asteroid, DataParallel, HetPipe, PacHomo, PacPlus, ParallelismStrategy, PipelineParallel,
+    Standalone,
+};
+
+/// An ordered, name-addressed collection of strategies.
+///
+/// Registration order is preserved (it is the column order of the
+/// experiment tables). Canonical names are matched case-insensitively;
+/// each strategy may additionally expose lowercase
+/// [`aliases`](ParallelismStrategy::aliases) for CLI ergonomics
+/// (`"dp"`, `"eddl"`, `"pac-homo"`, ...).
+pub struct StrategyRegistry {
+    strategies: Vec<Arc<dyn ParallelismStrategy>>,
+}
+
+impl StrategyRegistry {
+    /// An empty registry (build-your-own experiment line-ups).
+    pub fn empty() -> StrategyRegistry {
+        StrategyRegistry { strategies: Vec::new() }
+    }
+
+    /// All seven systems of the paper's evaluation, in Table V / Fig. 12
+    /// order: Standalone, DP (EDDL), PP (Eco-FL), PAC+, PAC+ (Homo),
+    /// Asteroid, HetPipe.
+    pub fn with_defaults() -> StrategyRegistry {
+        let mut r = StrategyRegistry::empty();
+        r.register(Arc::new(Standalone));
+        r.register(Arc::new(DataParallel));
+        r.register(Arc::new(PipelineParallel));
+        r.register(Arc::new(PacPlus));
+        r.register(Arc::new(PacHomo));
+        r.register(Arc::new(Asteroid));
+        r.register(Arc::new(HetPipe));
+        r
+    }
+
+    /// Add a strategy; replaces an existing entry with the same
+    /// canonical name (so callers can shadow a built-in).
+    pub fn register(&mut self, s: Arc<dyn ParallelismStrategy>) {
+        if let Some(slot) = self.strategies.iter_mut().find(|e| e.name() == s.name()) {
+            *slot = s;
+        } else {
+            self.strategies.push(s);
+        }
+    }
+
+    /// Look up by canonical name (case-insensitive) or alias.
+    pub fn get(&self, name: &str) -> Option<&Arc<dyn ParallelismStrategy>> {
+        let q = name.to_ascii_lowercase();
+        self.strategies
+            .iter()
+            .find(|s| s.name().to_ascii_lowercase() == q || s.aliases().contains(&q.as_str()))
+    }
+
+    /// Canonical names in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.strategies.iter().map(|s| s.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn ParallelismStrategy>> {
+        self.strategies.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.strategies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.strategies.is_empty()
+    }
+}
+
+impl Default for StrategyRegistry {
+    fn default() -> Self {
+        StrategyRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Env;
+    use crate::planner::{Plan, PlanError, PlannerOptions};
+    use crate::profiler::Profile;
+    use crate::strategy::TrainJob;
+
+    #[test]
+    fn defaults_cover_the_paper_lineup() {
+        let r = StrategyRegistry::with_defaults();
+        assert_eq!(
+            r.names(),
+            vec![
+                "Standalone",
+                "DP (EDDL)",
+                "PP (Eco-FL)",
+                "PAC+",
+                "PAC+ (Homo)",
+                "Asteroid",
+                "HetPipe"
+            ]
+        );
+    }
+
+    #[test]
+    fn lookup_by_name_and_alias() {
+        let r = StrategyRegistry::with_defaults();
+        for (query, want) in [
+            ("pac+", "PAC+"),
+            ("PAC+", "PAC+"),
+            ("pacplus", "PAC+"),
+            ("dp", "DP (EDDL)"),
+            ("eddl", "DP (EDDL)"),
+            ("pp", "PP (Eco-FL)"),
+            ("eco-fl", "PP (Eco-FL)"),
+            ("standalone", "Standalone"),
+            ("pac-homo", "PAC+ (Homo)"),
+            ("asteroid", "Asteroid"),
+            ("HetPipe", "HetPipe"),
+        ] {
+            assert_eq!(r.get(query).map(|s| s.name()), Some(want), "query {query:?}");
+        }
+        assert!(r.get("zero-3").is_none());
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        struct Shadow;
+        impl crate::strategy::ParallelismStrategy for Shadow {
+            fn name(&self) -> &str {
+                "PAC+"
+            }
+            fn options(&self, _env: &Env, _job: &TrainJob) -> PlannerOptions {
+                PlannerOptions::default()
+            }
+            fn plan(
+                &self,
+                _profile: &Profile,
+                _env: &Env,
+                _opts: &PlannerOptions,
+            ) -> Result<Plan, PlanError> {
+                Err(PlanError::NoDevices)
+            }
+        }
+        let mut r = StrategyRegistry::with_defaults();
+        let n = r.len();
+        r.register(Arc::new(Shadow));
+        assert_eq!(r.len(), n, "replace, not append");
+        let p = Profile::new(
+            crate::model::graph::LayerGraph::new(crate::model::ModelSpec::tiny()),
+            crate::model::Method::pa(false),
+            crate::model::Precision::FP32,
+            16,
+        );
+        let err = r
+            .get("pac+")
+            .unwrap()
+            .plan(&p, &Env::env_a(), &PlannerOptions::default())
+            .unwrap_err();
+        assert_eq!(err, PlanError::NoDevices);
+    }
+}

@@ -1,0 +1,552 @@
+//! The seven built-in strategies (paper §VI-A "Baseline Methods" and
+//! §VI-C), ported from the former closed `System` match ladder in
+//! `baselines`:
+//!
+//! * [`Standalone`] — one edge device hosting the whole model.
+//! * [`DataParallel`] (EDDL \[38\]) — classic data parallelism: every
+//!   device holds a full replica; the mini-batch is split across devices;
+//!   gradients are AllReduced. Mini-batch granularity (no
+//!   micro-batching).
+//! * [`PipelineParallel`] (Eco-FL \[39\]) — pure pipeline parallelism:
+//!   |D| stages, one device each, 4 micro-batches per mini-batch.
+//! * [`PacPlus`] — the paper's hybrid planner (this repo's `planner`).
+//! * [`PacHomo`] — PAC+ without heterogeneity awareness (ablation).
+//! * [`Asteroid`] \[48\] — hybrid pipeline parallelism like PAC+, but
+//!   designed for full-parameter fine-tuning (no PEFT co-design, no
+//!   activation cache).
+//! * [`HetPipe`] \[49\] — virtual workers (intra-worker PP) +
+//!   asynchronous inter-worker DP through a parameter server; the async
+//!   PS traffic of full-model gradients is its bottleneck on a LAN.
+//!
+//! The plan/run arithmetic is moved, not rewritten — the port preserved
+//! each system's numbers by carrying the code over verbatim. What the
+//! tests enforce continuously: enum-adapter and registry lookups
+//! dispatch to the same strategy (`baselines` golden test), the σ-search
+//! is bitwise threading-invariant (`planner::dp` golden test), and the
+//! paper-shape orderings / OOM patterns hold (`baselines`, `exp`
+//! tests). Absolute pre-refactor outputs are not pinned.
+
+use crate::cluster::{Device, DeviceKind, Env};
+use crate::planner::{self, Plan, PlanError, PlannerOptions, StagePlan};
+use crate::profiler::Profile;
+use crate::sched::simulate_minibatch;
+use crate::sched::training::{self, RunReport};
+
+use super::{ParallelismStrategy, TrainJob};
+
+/// Micro-batches per mini-batch used by every pipelined system (§VI-B).
+const MICROBATCHES: usize = 4;
+
+fn pipelined_options(job: &TrainJob, hetero_aware: bool) -> PlannerOptions {
+    PlannerOptions {
+        microbatch: (job.minibatch / MICROBATCHES).max(1),
+        n_microbatches: MICROBATCHES,
+        hetero_aware,
+        // strategy-driven runs are fanned out at the cell level by the
+        // experiment harnesses (util::par_map), so the inner σ-search
+        // stays serial to avoid cores × σ thread oversubscription (and
+        // one t_memo allocation per worker); callers wanting a threaded
+        // search for a single plan override search_threads explicitly
+        // (the CLI's --threads, the planner benches)
+        search_threads: Some(1),
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replicated execution (Standalone / EDDL-DP)
+// ---------------------------------------------------------------------------
+
+/// Synthesize the replicated (whole-model-per-device) plan: the first `n`
+/// devices each host the **entire** model and process whole mini-batches
+/// independently. Returns the single-replica reporting plan plus the
+/// numbers the epoch model needs: (plan, slowest replica time, AllReduce
+/// time).
+fn replicated_plan(
+    profile: &Profile,
+    env: &Env,
+    minibatch: usize,
+    n: usize,
+) -> Result<(Plan, f64, f64), PlanError> {
+    if env.devices.is_empty() || n == 0 {
+        return Err(PlanError::NoDevices);
+    }
+    let l = profile.graph.len();
+    let devices: Vec<_> = env.devices.iter().take(n).cloned().collect();
+    // OOM check: every replica hosts all blocks with a full mini-batch.
+    let mem = profile.span_mem_bytes(0, l, minibatch, 1);
+    for d in &devices {
+        if mem > d.mem_budget() {
+            return Err(PlanError::InsufficientMemory);
+        }
+    }
+    // per-replica mini-batch compute time; the round is paced by the
+    // slowest replica (synchronous DP).
+    let slowest = devices
+        .iter()
+        .map(|d| profile.span_time(d, 0, l, minibatch))
+        .fold(0.0f64, f64::max);
+    let trainable = profile.graph.span_trainable_bytes(0, l, profile.method);
+    let allreduce = env.network.allreduce_time(trainable, n);
+
+    let stages = devices
+        .iter()
+        .map(|d| StagePlan {
+            range: (0, l),
+            devices: vec![d.clone()],
+            dispatch: vec![minibatch],
+            e_f: slowest,
+            e_b: slowest,
+            peak_mem: mem,
+            allreduce,
+        })
+        .take(1)
+        .collect();
+    let plan = Plan {
+        stages,
+        microbatches: 1,
+        microbatch_size: minibatch,
+        phase_latency: (0.0, slowest, allreduce),
+        minibatch_time: slowest + allreduce,
+    };
+    Ok((plan, slowest, allreduce))
+}
+
+/// Standalone / EDDL-DP run model: adapter/trainable gradients are
+/// AllReduced after every round; throughput scales with replicas, memory
+/// per device does not.
+fn replicated_run(
+    profile: &Profile,
+    env: &Env,
+    job: TrainJob,
+    n: usize,
+) -> Result<RunReport, PlanError> {
+    let (plan, slowest, allreduce) = replicated_plan(profile, env, job.minibatch, n)?;
+    let rounds = (job.samples as f64 / (n * job.minibatch) as f64).ceil();
+    let epoch1 = rounds * (slowest + allreduce);
+
+    let (redistribution, epoch_cached) = if profile.method.skips_backbone_with_cache()
+        && job.epochs > 1
+    {
+        let redis = training::redistribution_time(profile, env, job.samples);
+        let cached = training::epoch_time_cached(profile, env, job.samples, job.minibatch);
+        (redis, cached)
+    } else {
+        (0.0, epoch1)
+    };
+
+    Ok(RunReport {
+        plan,
+        epoch1,
+        redistribution,
+        epoch_cached,
+        epochs: job.epochs,
+        total: epoch1 + redistribution + epoch_cached * (job.epochs - 1) as f64,
+    })
+}
+
+/// One edge device hosting the whole model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Standalone;
+
+impl ParallelismStrategy for Standalone {
+    fn name(&self) -> &str {
+        "Standalone"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["standalone", "solo", "single"]
+    }
+
+    fn description(&self) -> &str {
+        "one edge device hosts and fine-tunes the whole model"
+    }
+
+    fn options(&self, _env: &Env, job: &TrainJob) -> PlannerOptions {
+        PlannerOptions { microbatch: job.minibatch, n_microbatches: 1, ..Default::default() }
+    }
+
+    fn plan(
+        &self,
+        profile: &Profile,
+        env: &Env,
+        opts: &PlannerOptions,
+    ) -> Result<Plan, PlanError> {
+        replicated_plan(profile, env, opts.microbatch, 1).map(|(p, _, _)| p)
+    }
+
+    fn run(&self, profile: &Profile, env: &Env, job: TrainJob) -> Result<RunReport, PlanError> {
+        replicated_run(profile, env, job, 1)
+    }
+}
+
+/// EDDL-style data parallelism: full replica per device, mini-batch
+/// granularity ("fine-tuned strictly at the mini-batch granularity",
+/// §VI-B).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DataParallel;
+
+impl ParallelismStrategy for DataParallel {
+    fn name(&self) -> &str {
+        "DP (EDDL)"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["dp", "eddl", "data-parallel"]
+    }
+
+    fn description(&self) -> &str {
+        "full replica per device, gradients AllReduced every mini-batch (EDDL [38])"
+    }
+
+    fn options(&self, _env: &Env, job: &TrainJob) -> PlannerOptions {
+        PlannerOptions { microbatch: job.minibatch, n_microbatches: 1, ..Default::default() }
+    }
+
+    fn plan(
+        &self,
+        profile: &Profile,
+        env: &Env,
+        opts: &PlannerOptions,
+    ) -> Result<Plan, PlanError> {
+        replicated_plan(profile, env, opts.microbatch, env.n()).map(|(p, _, _)| p)
+    }
+
+    fn run(&self, profile: &Profile, env: &Env, job: TrainJob) -> Result<RunReport, PlanError> {
+        replicated_run(profile, env, job, env.n())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pure pipeline parallelism (Eco-FL)
+// ---------------------------------------------------------------------------
+
+/// Eco-FL-style even split: the block chain is cut into |D| **even**
+/// contiguous stages (Eco-FL balances layer counts, not profiled times),
+/// one device per stage. OOM if any stage exceeds its device's budget at
+/// its 1F1B in-flight depth.
+fn even_pp_plan(
+    profile: &Profile,
+    env: &Env,
+    beta: usize,
+    m: usize,
+) -> Result<Plan, PlanError> {
+    if env.devices.is_empty() {
+        return Err(PlanError::NoDevices);
+    }
+    let l = profile.graph.len();
+    let n = env.n().min(l);
+
+    // even split: base blocks per stage, remainder spread from the front
+    let base = l / n;
+    let rem = l % n;
+    let mut stages = Vec::with_capacity(n);
+    let mut cur = 0usize;
+    for (i, d) in env.devices.iter().take(n).enumerate() {
+        let k = base + usize::from(i < rem);
+        let (x, y) = (cur, cur + k);
+        cur = y;
+        let in_flight = (n - i).min(m);
+        let mem = profile.span_mem_bytes(x, y, beta, in_flight);
+        if mem > d.mem_budget() {
+            return Err(PlanError::InsufficientMemory);
+        }
+        let e_f: f64 = (x..y).map(|b| profile.t_f(d, b, beta)).sum();
+        let e_b: f64 = (x..y).map(|b| profile.t_b(d, b, beta)).sum();
+        let allreduce = 0.0; // single device per stage: nothing to reduce
+        stages.push(StagePlan {
+            range: (x, y),
+            devices: vec![d.clone()],
+            dispatch: vec![beta],
+            e_f,
+            e_b,
+            peak_mem: mem,
+            allreduce,
+        });
+    }
+    Ok(Plan {
+        stages,
+        microbatches: m,
+        microbatch_size: beta,
+        phase_latency: (0.0, 0.0, 0.0),
+        minibatch_time: 0.0,
+    })
+}
+
+/// Pure pipeline parallelism with 1F1B scheduling (Eco-FL \[39\]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineParallel;
+
+impl ParallelismStrategy for PipelineParallel {
+    fn name(&self) -> &str {
+        "PP (Eco-FL)"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["pp", "eco-fl", "pipeline-parallel"]
+    }
+
+    fn description(&self) -> &str {
+        "even layer split, one device per stage, 4 micro-batches, 1F1B (Eco-FL [39])"
+    }
+
+    fn options(&self, _env: &Env, job: &TrainJob) -> PlannerOptions {
+        pipelined_options(job, true)
+    }
+
+    /// The run model is the trait default (plan + shared epoch/cache
+    /// report): `even_pp_plan` already prices the even split, and the
+    /// simulated mini-batch time recorded here is exactly what
+    /// `report_from_plan`'s hybrid epoch model re-derives.
+    fn plan(
+        &self,
+        profile: &Profile,
+        env: &Env,
+        opts: &PlannerOptions,
+    ) -> Result<Plan, PlanError> {
+        let mut plan = even_pp_plan(profile, env, opts.microbatch, opts.n_microbatches)?;
+        plan.minibatch_time = simulate_minibatch(&plan, profile, &env.network).minibatch_time;
+        Ok(plan)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the PAC planner family
+// ---------------------------------------------------------------------------
+
+/// The paper's hybrid data+pipeline planner (Eq. 3–7, Algorithm 1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PacPlus;
+
+impl ParallelismStrategy for PacPlus {
+    fn name(&self) -> &str {
+        "PAC+"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["pac+", "pac", "pacplus", "pac-plus", "hybrid"]
+    }
+
+    fn description(&self) -> &str {
+        "hybrid data+pipeline DP planner with heterogeneity-aware dispatch (this paper)"
+    }
+
+    fn options(&self, _env: &Env, job: &TrainJob) -> PlannerOptions {
+        pipelined_options(job, true)
+    }
+
+    fn plan(
+        &self,
+        profile: &Profile,
+        env: &Env,
+        opts: &PlannerOptions,
+    ) -> Result<Plan, PlanError> {
+        planner::plan(profile, env, opts)
+    }
+}
+
+/// PAC+ without heterogeneity awareness (the Fig. 12 ablation): samples
+/// are dispatched evenly and every group member is priced at the slowest
+/// member's speed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PacHomo;
+
+impl ParallelismStrategy for PacHomo {
+    fn name(&self) -> &str {
+        "PAC+ (Homo)"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["pac-homo", "pac+homo", "homo"]
+    }
+
+    fn description(&self) -> &str {
+        "PAC+ with heterogeneity-blind even dispatch (ablation)"
+    }
+
+    fn options(&self, _env: &Env, job: &TrainJob) -> PlannerOptions {
+        pipelined_options(job, false)
+    }
+
+    fn plan(
+        &self,
+        profile: &Profile,
+        env: &Env,
+        opts: &PlannerOptions,
+    ) -> Result<Plan, PlanError> {
+        planner::plan(profile, env, opts)
+    }
+}
+
+/// Asteroid \[48\]: hybrid pipeline parallelism like PAC+, but designed
+/// for full-parameter fine-tuning — callers pair it with a
+/// `Method::FullFT` profile (no PEFT co-design, no activation cache).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Asteroid;
+
+impl ParallelismStrategy for Asteroid {
+    fn name(&self) -> &str {
+        "Asteroid"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["asteroid"]
+    }
+
+    fn description(&self) -> &str {
+        "hybrid pipeline planner for full-parameter fine-tuning (Asteroid [48])"
+    }
+
+    fn options(&self, _env: &Env, job: &TrainJob) -> PlannerOptions {
+        pipelined_options(job, true)
+    }
+
+    fn plan(
+        &self,
+        profile: &Profile,
+        env: &Env,
+        opts: &PlannerOptions,
+    ) -> Result<Plan, PlanError> {
+        planner::plan(profile, env, opts)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HetPipe
+// ---------------------------------------------------------------------------
+
+/// Group `env`'s devices by kind into virtual workers (max 4 per worker),
+/// preserving HetPipe's evaluation grouping order.
+fn hetpipe_groups(env: &Env) -> Vec<Vec<Device>> {
+    let mut groups: Vec<Vec<Device>> = Vec::new();
+    for kind in [DeviceKind::Tx2H, DeviceKind::Tx2L, DeviceKind::NanoH, DeviceKind::NanoL] {
+        let ds: Vec<_> = env.devices.iter().filter(|d| d.kind == kind).cloned().collect();
+        for chunk in ds.chunks(4) {
+            if !chunk.is_empty() {
+                groups.push(chunk.to_vec());
+            }
+        }
+    }
+    groups
+}
+
+fn hetpipe_worker_env(env: &Env, group: &[Device]) -> Env {
+    Env {
+        name: format!("hetpipe-worker-{}", group[0].kind.name()),
+        devices: group
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, mut d)| {
+                d.id = i;
+                d
+            })
+            .collect(),
+        network: env.network,
+    }
+}
+
+/// HetPipe \[49\]: virtual workers run pure PP internally; workers train
+/// asynchronously against a parameter server that serializes full
+/// trainable-gradient push/pull on the LAN. Wave-based staleness costs a
+/// utilization factor.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HetPipe;
+
+impl HetPipe {
+    const STALENESS_UTILIZATION: f64 = 0.85;
+
+    fn worker_options(base: &PlannerOptions, worker: &Env) -> PlannerOptions {
+        PlannerOptions {
+            fixed_stages: Some(worker.n()),
+            max_group: Some(1),
+            ..base.clone()
+        }
+    }
+}
+
+impl ParallelismStrategy for HetPipe {
+    fn name(&self) -> &str {
+        "HetPipe"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["hetpipe"]
+    }
+
+    fn description(&self) -> &str {
+        "virtual-worker PP + async parameter-server DP with staleness (HetPipe [49])"
+    }
+
+    /// Per-worker stage/group constraints are applied internally (each
+    /// virtual worker plans over its own sub-environment).
+    fn options(&self, _env: &Env, job: &TrainJob) -> PlannerOptions {
+        pipelined_options(job, true)
+    }
+
+    /// The reporting plan of the first virtual worker able to host the
+    /// model (the run model aggregates all workers' throughput).
+    fn plan(
+        &self,
+        profile: &Profile,
+        env: &Env,
+        opts: &PlannerOptions,
+    ) -> Result<Plan, PlanError> {
+        if env.devices.is_empty() {
+            return Err(PlanError::NoDevices);
+        }
+        for g in hetpipe_groups(env) {
+            let sub = hetpipe_worker_env(env, &g);
+            if let Ok(p) = planner::plan(profile, &sub, &Self::worker_options(opts, &sub)) {
+                return Ok(p);
+            }
+        }
+        Err(PlanError::InsufficientMemory)
+    }
+
+    fn run(&self, profile: &Profile, env: &Env, job: TrainJob) -> Result<RunReport, PlanError> {
+        if env.devices.is_empty() {
+            return Err(PlanError::NoDevices);
+        }
+        let groups = hetpipe_groups(env);
+
+        let mut agg_throughput = 0.0; // samples/s across workers
+        let mut any_plan: Option<RunReport> = None;
+        for g in &groups {
+            let sub = hetpipe_worker_env(env, g);
+            let opts = Self::worker_options(&pipelined_options(&job, true), &sub);
+            match training::finetune(profile, &sub, &opts, job.samples, 1) {
+                Ok(r) => {
+                    let mb_samples = r.plan.minibatch_samples() as f64;
+                    let mb_time = r.epoch1 / (job.samples as f64 / mb_samples).ceil();
+                    agg_throughput += mb_samples / mb_time;
+                    if any_plan.is_none() {
+                        any_plan = Some(r);
+                    }
+                }
+                Err(_) => continue, // this worker cannot host the model
+            }
+        }
+        let template = any_plan.ok_or(PlanError::InsufficientMemory)?;
+
+        // parameter-server traffic: push grads + pull params per worker
+        // mini-batch. HetPipe shards the PS across the cluster, so each
+        // link carries 2 x trainable / n bytes per sync.
+        let trainable_bytes = profile.method.trainable_params(&profile.graph.spec) * 4;
+        let minibatches_per_epoch = (job.samples as f64 / job.minibatch as f64).ceil();
+        let ps_epoch = minibatches_per_epoch * groups.len() as f64
+            * (2.0 * trainable_bytes as f64 / env.n().max(1) as f64 / env.network.bandwidth);
+
+        let compute_epoch =
+            job.samples as f64 / (agg_throughput * Self::STALENESS_UTILIZATION);
+        let epoch = compute_epoch.max(ps_epoch);
+        Ok(RunReport {
+            plan: template.plan,
+            epoch1: epoch,
+            redistribution: 0.0,
+            epoch_cached: epoch,
+            epochs: job.epochs,
+            total: epoch * job.epochs as f64,
+        })
+    }
+}

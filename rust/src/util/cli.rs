@@ -58,9 +58,16 @@ impl Args {
     }
 
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        self.get_usize_opt(name).unwrap_or(default)
+    }
+
+    /// Like [`Args::get_usize`] but `None` when the option is absent
+    /// (for knobs whose default is computed, e.g. planner threads).
+    pub fn get_usize_opt(&self, name: &str) -> Option<usize> {
+        self.get(name).map(|v| {
+            v.parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}"))
+        })
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
@@ -106,5 +113,13 @@ mod tests {
         let a = parse("x");
         assert_eq!(a.get_or("missing", "d"), "d");
         assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_usize_opt("missing"), None);
+    }
+
+    #[test]
+    fn optional_usize() {
+        let a = parse("plan --threads 3");
+        assert_eq!(a.get_usize_opt("threads"), Some(3));
+        assert_eq!(a.get_usize("threads", 1), 3);
     }
 }

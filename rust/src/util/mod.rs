@@ -24,6 +24,44 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+/// Map `f` over `0..n` on scoped worker threads (one per available
+/// core, capped at `n`), preserving index order in the returned vector.
+///
+/// The experiment harnesses use this to evaluate candidate strategies /
+/// table cells concurrently — each cell is an independent plan+simulate.
+/// Falls back to a plain serial map when only one core is available.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1)
+        .min(n)
+        .max(1);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|sc| {
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                sc.spawn(move || {
+                    (w..n).step_by(threads).map(|i| (i, f(i))).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("par_map worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("par_map: unfilled slot")).collect()
+}
+
 /// Format a duration in seconds adaptively (µs → hours).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -56,5 +94,14 @@ mod tests {
         assert_eq!(fmt_secs(0.25), "250.00 ms");
         assert_eq!(fmt_secs(3.0), "3.00 s");
         assert_eq!(fmt_secs(7200.0), "2.00 h");
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let got = par_map(37, |i| i * i);
+        let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+        assert_eq!(got, want);
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, |i| i + 1), vec![1]);
     }
 }

@@ -2,7 +2,11 @@
 //! → execution engines → cache → evaluation, plus cross-layer numeric
 //! checks against the Python-generated golden vectors.
 //!
-//! Requires `make artifacts` (the `tiny` and `small` sets).
+//! Requires `make artifacts` (the `tiny` and `small` sets) and the
+//! `pjrt` cargo feature (the whole file is compiled out without it —
+//! there is no runtime to integrate against).
+
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 

@@ -1,0 +1,148 @@
+//! Conformance suite for the strategy layer: every strategy registered
+//! in `StrategyRegistry::with_defaults()` is exercised over the paper's
+//! default environment presets, and every `Plan` it returns must be
+//! feasible — stages cover all blocks contiguously, each stage's sample
+//! dispatch sums to the micro-batch size, and peak memory fits every
+//! assigned device's budget. Running out of memory is a legal answer
+//! (Table V's "OOM" cells); returning an infeasible plan is not.
+//!
+//! New strategies added to the default registry are picked up here
+//! automatically — no per-strategy test code needed.
+
+use pacpp::cluster::Env;
+use pacpp::model::graph::LayerGraph;
+use pacpp::model::{Method, ModelSpec, Precision};
+use pacpp::profiler::Profile;
+use pacpp::strategy::{ParallelismStrategy, StrategyRegistry, TrainJob};
+
+fn profile(spec: ModelSpec, method: Method) -> Profile {
+    Profile::new(LayerGraph::new(spec), method, Precision::FP32, 128)
+}
+
+/// The paper's evaluation presets: homogeneous Env.A, heterogeneous
+/// Env.B, and the 8-device scalability cluster (§VI-A, §VI-G).
+fn preset_envs() -> Vec<Env> {
+    vec![Env::env_a(), Env::env_b(), Env::nanos(8)]
+}
+
+#[test]
+fn every_strategy_yields_feasible_plans_on_presets() {
+    let reg = StrategyRegistry::with_defaults();
+    assert!(reg.len() >= 7, "default line-up incomplete: {:?}", reg.names());
+    let job = TrainJob::new(256, 1, 128, 16);
+
+    for (spec, method, min_feasible) in [
+        (ModelSpec::t5_base(), Method::pa(false), 4),
+        (ModelSpec::t5_base(), Method::adapters_default(), 4),
+        // T5-Large legitimately OOMs the replicated (and sometimes the
+        // even-split) systems on 4GB Nanos; the hybrid planners must fit
+        (ModelSpec::t5_large(), Method::pa(false), 2),
+    ] {
+        let prof = profile(spec, method);
+        for env in preset_envs() {
+            let mut feasible = 0usize;
+            for s in reg.iter() {
+                let opts = s.options(&env, &job);
+                let plan = match s.plan(&prof, &env, &opts) {
+                    Ok(p) => p,
+                    // OOM (or an empty worker set) is a legal outcome
+                    Err(_) => continue,
+                };
+                feasible += 1;
+                plan.validate(prof.graph.len(), env.n()).unwrap_or_else(|e| {
+                    panic!("{} on {}: invalid plan: {e}", s.name(), env.name)
+                });
+                assert!(plan.microbatch_size > 0, "{} on {}", s.name(), env.name);
+                assert!(plan.microbatches > 0, "{} on {}", s.name(), env.name);
+                for (i, st) in plan.stages.iter().enumerate() {
+                    assert_eq!(
+                        st.dispatch.iter().sum::<usize>(),
+                        plan.microbatch_size,
+                        "{} on {}: stage {i} dispatch does not cover the micro-batch",
+                        s.name(),
+                        env.name
+                    );
+                    for d in &st.devices {
+                        assert!(
+                            st.peak_mem <= d.mem_budget(),
+                            "{} on {}: stage {i} peak {} exceeds {} budget {}",
+                            s.name(),
+                            env.name,
+                            st.peak_mem,
+                            d.kind.name(),
+                            d.mem_budget()
+                        );
+                    }
+                }
+            }
+            // the pipelined strategies must always find a placement for
+            // these model/method combinations (Table V has no all-OOM row)
+            assert!(
+                feasible >= min_feasible,
+                "only {feasible} strategies feasible for {} on {}",
+                prof.graph.spec.name,
+                env.name
+            );
+        }
+    }
+}
+
+#[test]
+fn every_strategy_runs_end_to_end_on_env_b() {
+    let reg = StrategyRegistry::with_defaults();
+    let prof = profile(ModelSpec::t5_base(), Method::pa(true));
+    let job = TrainJob::new(512, 3, 128, 16);
+    let env = Env::env_b();
+    let mut ran = 0usize;
+    for s in reg.iter() {
+        let r = match s.run(&prof, &env, job) {
+            Ok(r) => r,
+            Err(_) => continue,
+        };
+        ran += 1;
+        assert!(
+            r.epoch1.is_finite() && r.epoch1 > 0.0,
+            "{}: epoch1 {}",
+            s.name(),
+            r.epoch1
+        );
+        assert!(r.total.is_finite() && r.total > 0.0, "{}: total {}", s.name(), r.total);
+        assert_eq!(r.epochs, job.epochs, "{}", s.name());
+        let expect = r.epoch1 + r.redistribution + r.epoch_cached * (job.epochs - 1) as f64;
+        assert!(
+            (r.total - expect).abs() <= 1e-9 * expect.max(1.0),
+            "{}: total {} != breakdown {}",
+            s.name(),
+            r.total,
+            expect
+        );
+        r.plan.validate(prof.graph.len(), env.n()).unwrap_or_else(|e| {
+            panic!("{}: run-report plan invalid: {e}", s.name())
+        });
+    }
+    assert!(ran >= 5, "only {ran} strategies produced a run report");
+}
+
+#[test]
+fn options_cover_the_job_minibatch() {
+    // every strategy's planner options must cover the mini-batch: the
+    // micro-batch size times the pipelining depth processes at least
+    // job.minibatch samples per mini-batch
+    let reg = StrategyRegistry::with_defaults();
+    let env = Env::env_a();
+    for minibatch in [4usize, 16, 64] {
+        let job = TrainJob::new(100, 1, 128, minibatch);
+        for s in reg.iter() {
+            let opts = s.options(&env, &job);
+            assert!(opts.microbatch > 0, "{}", s.name());
+            assert!(
+                opts.microbatch * opts.n_microbatches >= minibatch,
+                "{}: B={} M={} does not cover minibatch {}",
+                s.name(),
+                opts.microbatch,
+                opts.n_microbatches,
+                minibatch
+            );
+        }
+    }
+}
