@@ -1,10 +1,10 @@
-//! Paper table/figure regeneration harness — one target per table AND
-//! figure of the evaluation section (§VI). Usage:
+//! Paper table/figure regeneration harness over the experiment
+//! registry — one target per registered experiment. Usage:
 //!
 //! ```bash
 //! cargo bench --bench bench_tables              # everything simulated
-//! cargo bench --bench bench_tables -- table5    # one table
-//! cargo bench --bench bench_tables -- fig16
+//! cargo bench --bench bench_tables -- table5    # one experiment
+//! cargo bench --bench bench_tables -- render    # Report rendering micro-bench
 //! PACPP_REAL=1 cargo bench --bench bench_tables -- table6   # real runs
 //! ```
 //!
@@ -12,51 +12,107 @@
 //! training on `artifacts/small` and are gated behind `PACPP_REAL=1`
 //! (they take minutes, not milliseconds) plus the `pjrt` cargo feature.
 //!
-//! The simulated tables resolve systems through the strategy registry
-//! and evaluate their cells on worker threads (`util::par_map`), so this
-//! whole suite regenerates at core-count speed.
+//! The simulated experiments resolve systems through the strategy
+//! registry and evaluate their cells on worker threads
+//! (`util::par_map`), so this whole suite regenerates at core-count
+//! speed. The `render_*` targets time text vs JSON vs CSV rendering of
+//! a large sweep-shaped Report (the formats the `--out` pipeline pays
+//! for).
 
-use std::sync::Arc;
-
-use pacpp::exp;
-use pacpp::runtime::Runtime;
+use pacpp::exp::{Cell, ExpContext, ExperimentRegistry, Format, Report};
 use pacpp::util::bench::Bench;
+
+/// The real sweep schema (`exp::sweep_schema`) filled with `n`
+/// synthetic rows, for rendering benches.
+fn synthetic_sweep(n: usize) -> Report {
+    let mut r = pacpp::exp::sweep_schema().meta("rows", n);
+    for i in 0..n {
+        let f = i as f64;
+        if i % 7 == 0 {
+            r.push(vec![
+                Cell::Str(format!("env_{}", i % 5)),
+                Cell::Str(format!("model_{}", i % 11)),
+                Cell::Str(format!("strategy_{}", i % 3)),
+                Cell::Str("insufficient memory".into()),
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+            ]);
+        } else {
+            r.push(vec![
+                Cell::Str(format!("env_{}", i % 5)),
+                Cell::Str(format!("model_{}", i % 11)),
+                Cell::Str(format!("strategy_{}", i % 3)),
+                Cell::Str("ok".into()),
+                Cell::Secs(1.0 + f * 0.37),
+                Cell::Secs(3.0 + f * 1.11),
+                Cell::Float((3.0 + f * 1.11) / 3600.0),
+                Cell::Float(1000.0 / (1.0 + f * 0.37)),
+                Cell::Bytes(1_000_000 + (i as u64) * 4096),
+                Cell::Int((i % 8) as i64 + 1),
+                Cell::Str(format!("[{}|{}]", i % 8, 8 - i % 8)),
+            ]);
+        }
+    }
+    r
+}
 
 fn main() {
     let mut b = Bench::new("paper-tables");
+    let registry = ExperimentRegistry::with_defaults();
 
-    b.table("fig3", exp::print_fig3);
-    b.table("table1", exp::print_table1);
-    b.table("table5", exp::print_table5);
-    b.table("fig12", exp::print_fig12);
-    b.table("fig13", exp::print_fig13);
-    b.table("fig15", exp::print_fig15);
-    b.table("fig16", exp::print_fig16);
-    b.table("fig17", exp::print_fig17);
-    b.table("fig18", exp::print_fig18);
+    let dir = std::env::var("PACPP_ARTIFACTS").unwrap_or("artifacts/small".into());
+    let ctx = ExpContext::with_artifacts(dir);
 
-    // design-choice ablations (DESIGN.md §5)
-    b.table("ablate_schedule", exp::ablations::print_ablate_schedule);
-    b.table("ablate_bandwidth", exp::ablations::print_ablate_bandwidth);
-    b.table("ablate_microbatches", exp::ablations::print_ablate_microbatches);
-
+    // The line-up comes from the registry itself, so a newly registered
+    // experiment is benched without touching this file; the ones that
+    // need the AOT artifact set are gated behind PACPP_REAL.
     let real = std::env::var("PACPP_REAL").is_ok();
-    if real {
-        let dir = std::env::var("PACPP_ARTIFACTS").unwrap_or("artifacts/small".into());
-        let rt = Arc::new(Runtime::load(&dir).expect("run `make artifacts` first"));
-        let budget = exp::accuracy::Budget::default();
-        b.table("table6", || {
-            exp::accuracy::print_table6(&rt, budget).unwrap();
+    let mut skipped_real: Vec<&str> = Vec::new();
+    for e in registry.iter() {
+        let name = e.name();
+        if e.requires_artifacts() && !real {
+            if b.enabled(name) {
+                skipped_real.push(name);
+            }
+            continue;
+        }
+        b.table(name, || {
+            match e.run(&ctx) {
+                Ok(report) => print!("{}", report.to_text()),
+                Err(err) => println!("{name}: {err:#}"),
+            }
         });
-        b.table("table7", || {
-            exp::accuracy::print_table7(&rt, budget).unwrap();
-        });
-        b.table("fig14", || {
-            exp::accuracy::print_fig14(&rt, budget).unwrap();
-        });
-    } else if b.enabled("table6") || b.enabled("table7") || b.enabled("fig14") {
+    }
+    if !skipped_real.is_empty() {
         println!(
-            "\n(table6/table7/fig14 run real PJRT training; set PACPP_REAL=1 to include them)"
+            "\n({} run real PJRT training; set PACPP_REAL=1 to include them)",
+            skipped_real.join("/")
         );
+    }
+
+    // Report rendering: text vs JSON vs CSV on a 10k-row sweep Report.
+    // (Don't build the 10k-row report when a filter excludes these.)
+    let render_benches = [
+        "render_text_10k_rows",
+        "render_json_10k_rows",
+        "render_csv_10k_rows",
+        "json_parse_roundtrip_10k_rows",
+    ];
+    if render_benches.iter().any(|n| b.enabled(n)) {
+        let big = synthetic_sweep(10_000);
+        b.run("render_text_10k_rows", || big.render(Format::Text));
+        b.run("render_json_10k_rows", || big.render(Format::Json));
+        b.run("render_csv_10k_rows", || big.render(Format::Csv));
+        if b.enabled("json_parse_roundtrip_10k_rows") {
+            let json = big.render(Format::Json);
+            b.run("json_parse_roundtrip_10k_rows", move || {
+                pacpp::util::json::Json::parse(&json).expect("parses")
+            });
+        }
     }
 }

@@ -1,23 +1,30 @@
 //! Design-choice ablations beyond the paper's figures (DESIGN.md §5):
 //!
-//! * [`ablate_schedule`] — 1F1B vs GPipe-style all-forward-then-backward
+//! * [`schedule_report`] — 1F1B vs GPipe-style all-forward-then-backward
 //!   (the paper adopts 1F1B [40] "to release the activation memory
 //!   produced by FP for reuse"; this quantifies both the memory and the
 //!   latency effect).
-//! * [`ablate_bandwidth`] — sensitivity of every system to LAN bandwidth
+//! * [`bandwidth_report`] — sensitivity of every system to LAN bandwidth
 //!   (1 Gbps LAN vs 100 Mbps Wi-Fi class).
-//! * [`ablate_microbatches`] — mini-batch pipelining depth M sweep.
+//! * [`microbatches_report`] — mini-batch pipelining depth M sweep.
+//!
+//! Like the tables, each ablation is a private `*_rows()` kernel plus a
+//! `*_report()`; the legacy typed-row and `print_*` surfaces are
+//! deprecated wrappers kept for one release.
 
+use super::report::{Cell, ColType, Report};
+use super::tables::profile as table_profile;
 use crate::baselines::{run_system, System, TrainJob};
 use crate::cluster::{Env, Network};
-use crate::model::graph::LayerGraph;
-use crate::model::{Method, ModelSpec, Precision};
+use crate::model::{Method, ModelSpec};
 use crate::planner::{plan, PlannerOptions};
 use crate::profiler::Profile;
 use crate::sched::{simulate_minibatch, Op};
 
+/// All ablations use the tables' shared profile constructor at the
+/// tables' sequence length, so they cannot diverge from the figures.
 fn profile(spec: &ModelSpec, method: Method) -> Profile {
-    Profile::new(LayerGraph::new(spec.clone()), method, Precision::FP32, 128)
+    table_profile(spec, method, 128)
 }
 
 // ---------------------------------------------------------------------------
@@ -39,7 +46,7 @@ pub struct ScheduleAblation {
     pub in_flight_gpipe: usize,
 }
 
-pub fn ablate_schedule() -> Vec<ScheduleAblation> {
+fn schedule_rows() -> Vec<ScheduleAblation> {
     let env = Env::nanos(4);
     let mut rows = Vec::new();
     for spec in ModelSpec::paper_models() {
@@ -74,19 +81,41 @@ pub fn ablate_schedule() -> Vec<ScheduleAblation> {
     rows
 }
 
-pub fn print_ablate_schedule() {
-    println!("Ablation — 1F1B vs GPipe scheduling (4x Nano-H, M=8, Parallel Adapters)");
-    println!(
-        "{:<12} {:>12} {:>12} {:>14} {:>14}",
-        "model", "1F1B (s)", "GPipe (s)", "acts in-flight", "GPipe in-flight"
-    );
-    for r in ablate_schedule() {
-        println!(
-            "{:<12} {:>12.2} {:>12.2} {:>14} {:>15}",
-            r.model, r.minibatch_time_1f1b, r.minibatch_time_gpipe, r.in_flight_1f1b,
-            r.in_flight_gpipe
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn ablate_schedule() -> Vec<ScheduleAblation> {
+    schedule_rows()
+}
+
+/// The 1F1B-vs-GPipe ablation as a typed [`Report`].
+pub fn schedule_report() -> Report {
+    let mut r = Report::new(
+        "ablate_schedule",
+        "Ablation — 1F1B vs GPipe scheduling (4x Nano-H, M=8, Parallel Adapters)",
+    )
+    .column("model", ColType::Str)
+    .column("minibatch_1f1b", ColType::Secs)
+    .column("minibatch_gpipe", ColType::Secs)
+    .column("in_flight_1f1b", ColType::Int)
+    .column("in_flight_gpipe", ColType::Int)
+    .meta("env", "4xNano-H")
+    .meta("microbatches", 8);
+    for row in schedule_rows() {
+        r.push(vec![
+            Cell::Str(row.model),
+            Cell::Secs(row.minibatch_time_1f1b),
+            Cell::Secs(row.minibatch_time_gpipe),
+            Cell::Int(row.in_flight_1f1b as i64),
+            Cell::Int(row.in_flight_gpipe as i64),
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_ablate_schedule() {
+    print!("{}", schedule_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -100,7 +129,7 @@ pub struct BandwidthAblation {
     pub hours_wifi: Option<f64>,
 }
 
-pub fn ablate_bandwidth() -> Vec<BandwidthAblation> {
+fn bandwidth_rows() -> Vec<BandwidthAblation> {
     let spec = ModelSpec::t5_base();
     let job = TrainJob::new(3668, 1, 128, 16);
     let mut rows = Vec::new();
@@ -125,23 +154,44 @@ pub fn ablate_bandwidth() -> Vec<BandwidthAblation> {
     rows
 }
 
-pub fn print_ablate_bandwidth() {
-    println!("Ablation — network sensitivity (T5-Base, MRPC-sized, Env.A devices)");
-    println!("{:<14} {:>12} {:>14} {:>10}", "system", "1Gbps (h)", "100Mbps (h)", "slowdown");
-    for r in ablate_bandwidth() {
-        let fmt = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or("OOM".into());
-        let slow = match (r.hours_lan, r.hours_wifi) {
-            (Some(a), Some(b)) => format!("{:.2}x", b / a),
-            _ => "-".into(),
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn ablate_bandwidth() -> Vec<BandwidthAblation> {
+    bandwidth_rows()
+}
+
+/// The bandwidth-sensitivity ablation as a typed [`Report`], with the
+/// derived `slowdown` [`ColType::Speedup`] column (Wi-Fi over LAN).
+pub fn bandwidth_report() -> Report {
+    let mut r = Report::new(
+        "ablate_bandwidth",
+        "Ablation — network sensitivity (T5-Base, MRPC-sized, Env.A devices)",
+    )
+    .column("system", ColType::Str)
+    .column("hours_lan", ColType::Float)
+    .column("hours_wifi", ColType::Float)
+    .column("slowdown", ColType::Speedup)
+    .meta("model", "T5-Base")
+    .meta("samples", 3668);
+    for row in bandwidth_rows() {
+        let slowdown = match (row.hours_lan, row.hours_wifi) {
+            (Some(lan), Some(wifi)) if lan > 0.0 => Cell::Speedup(wifi / lan),
+            _ => Cell::Missing,
         };
-        println!(
-            "{:<14} {:>12} {:>14} {:>10}",
-            r.system,
-            fmt(r.hours_lan),
-            fmt(r.hours_wifi),
-            slow
-        );
+        r.push(vec![
+            Cell::Str(row.system),
+            Cell::opt(row.hours_lan, Cell::Float),
+            Cell::opt(row.hours_wifi, Cell::Float),
+            slowdown,
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_ablate_bandwidth() {
+    print!("{}", bandwidth_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -156,7 +206,7 @@ pub struct MicrobatchAblation {
     pub peak_mem_gb: f64,
 }
 
-pub fn ablate_microbatches() -> Vec<MicrobatchAblation> {
+fn microbatch_rows() -> Vec<MicrobatchAblation> {
     let env = Env::nanos(4);
     let prof = profile(&ModelSpec::t5_large(), Method::pa(false));
     let mut rows = Vec::new();
@@ -178,18 +228,39 @@ pub fn ablate_microbatches() -> Vec<MicrobatchAblation> {
     rows
 }
 
-pub fn print_ablate_microbatches() {
-    println!("Ablation — pipelining depth M (T5-Large, 4x Nano-H, per-microbatch cost)");
-    println!("{:<6} {:>16} {:>10} {:>12}", "M", "s/microbatch", "bubbles", "peak mem");
-    for r in ablate_microbatches() {
-        println!(
-            "{:<6} {:>16.3} {:>9.0}% {:>10.2}GB",
-            r.m,
-            r.minibatch_time,
-            r.bubble_fraction * 100.0,
-            r.peak_mem_gb
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn ablate_microbatches() -> Vec<MicrobatchAblation> {
+    microbatch_rows()
+}
+
+/// The pipelining-depth ablation as a typed [`Report`].
+pub fn microbatches_report() -> Report {
+    let mut r = Report::new(
+        "ablate_microbatches",
+        "Ablation — pipelining depth M (T5-Large, 4x Nano-H, per-microbatch cost)",
+    )
+    .column("m", ColType::Int)
+    .column("s_per_microbatch", ColType::Secs)
+    .column("bubble_fraction", ColType::Float)
+    .column("peak_mem_gb", ColType::Float)
+    .meta("env", "4xNano-H")
+    .meta("model", "T5-Large");
+    for row in microbatch_rows() {
+        r.push(vec![
+            Cell::Int(row.m as i64),
+            Cell::Secs(row.minibatch_time),
+            Cell::Float(row.bubble_fraction),
+            Cell::Float(row.peak_mem_gb),
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_ablate_microbatches() {
+    print!("{}", microbatches_report().to_text());
 }
 
 #[cfg(test)]
@@ -204,7 +275,7 @@ mod tests {
 
     #[test]
     fn one_f_one_b_saves_memory_vs_gpipe() {
-        for r in ablate_schedule() {
+        for r in schedule_rows() {
             assert!(
                 r.in_flight_1f1b <= r.in_flight_gpipe,
                 "{}: 1F1B {} vs GPipe {}",
@@ -218,7 +289,7 @@ mod tests {
 
     #[test]
     fn wifi_hurts_communication_heavy_systems_most() {
-        let rows = ablate_bandwidth();
+        let rows = bandwidth_rows();
         let slow = |sys: &str| {
             rows.iter()
                 .find(|r| r.system == sys)
@@ -232,7 +303,7 @@ mod tests {
 
     #[test]
     fn deeper_pipelining_amortizes_bubbles() {
-        let rows = ablate_microbatches();
+        let rows = microbatch_rows();
         assert!(rows.len() >= 3);
         let first = rows.first().unwrap();
         let last = rows.last().unwrap();
@@ -240,5 +311,21 @@ mod tests {
         assert!(last.minibatch_time < first.minibatch_time);
         // ...but peak memory grows (more in-flight activations)
         assert!(last.peak_mem_gb >= first.peak_mem_gb);
+    }
+
+    #[test]
+    fn bandwidth_report_slowdown_matches_hours() {
+        let rep = bandwidth_report();
+        for i in 0..rep.n_rows() {
+            let lan = rep.cell(i, "hours_lan").unwrap().as_f64();
+            let wifi = rep.cell(i, "hours_wifi").unwrap().as_f64();
+            let slow = rep.cell(i, "slowdown").unwrap().as_f64();
+            match (lan, wifi) {
+                (Some(l), Some(w)) => {
+                    assert!((slow.unwrap() - w / l).abs() < 1e-12);
+                }
+                _ => assert!(slow.is_none()),
+            }
+        }
     }
 }

@@ -5,11 +5,18 @@
 //! is the paper's *shape* — Parallel Adapters matching the baselines'
 //! final quality, quantized backbones costing little accuracy, informed
 //! initialization converging faster — on models this testbed can train.
+//!
+//! Each experiment is a private `*_rows()` kernel plus a `*_report()`;
+//! the registry entries (`table6`/`table7`/`fig14`) are marked
+//! non-parallel-safe because the trainer keeps process-global adapter
+//! state. Legacy typed-row and `print_*` surfaces are deprecated
+//! wrappers kept for one release.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use super::report::{Cell, ColType, Report};
 use crate::data::SyntheticTask;
 use crate::exec::{self, TrainOptions};
 use crate::runtime::{Runtime, Tensor};
@@ -34,6 +41,17 @@ fn dataset(rt: &Runtime, n: usize, seed: u64) -> SyntheticTask {
     // parity rule needs far more steps at d=128 — data/mod.rs docs)
     SyntheticTask::generate_rule(
         n, cfg.seq_len, cfg.vocab, 0.02, seed, crate::data::Rule::HalfMajority)
+}
+
+
+/// Real training can diverge to NaN/inf losses; a report cell must then
+/// be Missing, not a panic in Report::push's finiteness check.
+fn float_cell(v: f64) -> Cell {
+    if v.is_finite() {
+        Cell::Float(v)
+    } else {
+        Cell::Missing
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -115,7 +133,7 @@ pub struct Table6Row {
     pub accuracy: Option<f64>,
 }
 
-pub fn table6(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table6Row>> {
+fn table6_rows(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table6Row>> {
     let full = dataset(rt, budget.train_samples + 64, 11);
     let (train, eval) = full.split(64.0 / (budget.train_samples + 64) as f64);
     let mut rows = Vec::new();
@@ -167,21 +185,40 @@ pub fn table6(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table6Row>> {
     Ok(rows)
 }
 
-pub fn print_table6(rt: &Arc<Runtime>, budget: Budget) -> Result<()> {
-    println!("Table VI (shape) — fine-tuned quality parity on a synthetic task");
-    println!(
-        "{:<26} {:>12} {:>12} {:>10}",
-        "technique", "train loss", "eval loss", "accuracy"
-    );
-    for r in table6(rt, budget)? {
-        println!(
-            "{:<26} {:>12.4} {:>12.4} {:>10}",
-            r.technique,
-            r.final_train_loss,
-            r.heldout_loss,
-            r.accuracy.map(|a| format!("{:.1}%", a * 100.0)).unwrap_or("-".into())
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn table6(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table6Row>> {
+    table6_rows(rt, budget)
+}
+
+/// Table VI as a typed [`Report`].
+pub fn table6_report(rt: &Arc<Runtime>, budget: Budget) -> Result<Report> {
+    let mut r = Report::new(
+        "table6",
+        "Table VI (shape) — fine-tuned quality parity on a synthetic task",
+    )
+    .column("technique", ColType::Str)
+    .column("train_loss", ColType::Float)
+    .column("eval_loss", ColType::Float)
+    .column("accuracy", ColType::Float)
+    .meta("train_samples", budget.train_samples)
+    .meta("epochs", budget.epochs)
+    .meta("lr", budget.lr);
+    for row in table6_rows(rt, budget)? {
+        r.push(vec![
+            Cell::Str(row.technique),
+            float_cell(row.final_train_loss),
+            float_cell(row.heldout_loss),
+            row.accuracy.map(float_cell).unwrap_or(Cell::Missing),
+        ]);
     }
+    Ok(r)
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_table6(rt: &Arc<Runtime>, budget: Budget) -> Result<()> {
+    print!("{}", table6_report(rt, budget)?.to_text());
     Ok(())
 }
 
@@ -197,7 +234,7 @@ pub struct Table7Row {
     pub accuracy: f64,
 }
 
-pub fn table7(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table7Row>> {
+fn table7_rows(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table7Row>> {
     let full = dataset(rt, budget.train_samples + 64, 12);
     let (train, eval) = full.split(64.0 / (budget.train_samples + 64) as f64);
     let mut rows = Vec::new();
@@ -226,18 +263,40 @@ pub fn table7(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table7Row>> {
     Ok(rows)
 }
 
-pub fn print_table7(rt: &Arc<Runtime>, budget: Budget) -> Result<()> {
-    println!("Table VII (shape) — Parallel Adapters with quantized backbone");
-    println!(
-        "{:<8} {:>12} {:>12} {:>10}",
-        "prec", "train loss", "eval loss", "accuracy"
-    );
-    for r in table7(rt, budget)? {
-        println!(
-            "{:<8} {:>12.4} {:>12.4} {:>9.1}%",
-            r.precision, r.final_train_loss, r.heldout_loss, r.accuracy * 100.0
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn table7(rt: &Arc<Runtime>, budget: Budget) -> Result<Vec<Table7Row>> {
+    table7_rows(rt, budget)
+}
+
+/// Table VII as a typed [`Report`].
+pub fn table7_report(rt: &Arc<Runtime>, budget: Budget) -> Result<Report> {
+    let mut r = Report::new(
+        "table7",
+        "Table VII (shape) — Parallel Adapters with quantized backbone",
+    )
+    .column("precision", ColType::Str)
+    .column("train_loss", ColType::Float)
+    .column("eval_loss", ColType::Float)
+    .column("accuracy", ColType::Float)
+    .meta("train_samples", budget.train_samples)
+    .meta("epochs", budget.epochs)
+    .meta("lr", budget.lr);
+    for row in table7_rows(rt, budget)? {
+        r.push(vec![
+            Cell::Str(row.precision),
+            float_cell(row.final_train_loss),
+            float_cell(row.heldout_loss),
+            float_cell(row.accuracy),
+        ]);
     }
+    Ok(r)
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_table7(rt: &Arc<Runtime>, budget: Budget) -> Result<()> {
+    print!("{}", table7_report(rt, budget)?.to_text());
     Ok(())
 }
 
@@ -253,7 +312,10 @@ pub struct Fig14Row {
     pub final_loss: f32,
 }
 
-pub fn fig14(rt: &Arc<Runtime>, budget: Budget, target_loss: f32) -> Result<Vec<Fig14Row>> {
+/// Loss threshold the Fig. 14 convergence race is measured against.
+pub const FIG14_TARGET_LOSS: f32 = 0.55;
+
+fn fig14_rows(rt: &Arc<Runtime>, budget: Budget, target_loss: f32) -> Result<Vec<Fig14Row>> {
     let train = dataset(rt, budget.train_samples, 13);
     let mut rows = Vec::new();
     for strat in ["distill", "prune", "gaussian", "zero"] {
@@ -280,16 +342,37 @@ pub fn fig14(rt: &Arc<Runtime>, budget: Budget, target_loss: f32) -> Result<Vec<
     Ok(rows)
 }
 
-pub fn print_fig14(rt: &Arc<Runtime>, budget: Budget) -> Result<()> {
-    println!("Fig. 14 (shape) — adapter init strategies, steps to loss<=0.55");
-    println!("{:<10} {:>16} {:>12}", "init", "steps to target", "final loss");
-    for r in fig14(rt, budget, 0.55)? {
-        println!(
-            "{:<10} {:>16} {:>12.4}",
-            r.strategy,
-            r.steps_to_target.map(|s| s.to_string()).unwrap_or(">budget".into()),
-            r.final_loss
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn fig14(rt: &Arc<Runtime>, budget: Budget, target_loss: f32) -> Result<Vec<Fig14Row>> {
+    fig14_rows(rt, budget, target_loss)
+}
+
+/// Fig. 14 as a typed [`Report`] (uses [`FIG14_TARGET_LOSS`]).
+pub fn fig14_report(rt: &Arc<Runtime>, budget: Budget) -> Result<Report> {
+    let mut r = Report::new(
+        "fig14",
+        format!("Fig. 14 (shape) — adapter init strategies, steps to loss<={FIG14_TARGET_LOSS}"),
+    )
+    .column("init", ColType::Str)
+    .column("steps_to_target", ColType::Int)
+    .column("final_loss", ColType::Float)
+    .meta("target_loss", FIG14_TARGET_LOSS)
+    .meta("train_samples", budget.train_samples)
+    .meta("epochs", budget.epochs);
+    for row in fig14_rows(rt, budget, FIG14_TARGET_LOSS)? {
+        r.push(vec![
+            Cell::Str(row.strategy),
+            Cell::opt(row.steps_to_target, |s| Cell::Int(s as i64)),
+            float_cell(row.final_loss as f64),
+        ]);
     }
+    Ok(r)
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_fig14(rt: &Arc<Runtime>, budget: Budget) -> Result<()> {
+    print!("{}", fig14_report(rt, budget)?.to_text());
     Ok(())
 }

@@ -1,24 +1,48 @@
-//! Experiment harnesses regenerating every table and figure of the
-//! paper's evaluation (§VI). Each function prints the corresponding
-//! table/series and returns the rows for programmatic checks.
+//! The experiment layer: a typed `Experiment`/`Report` API over every
+//! table, figure and ablation of the paper's evaluation (§VI).
 //!
-//! | fn            | reproduces |
-//! |---------------|------------|
-//! | [`fig3`]      | Fig. 3 — FLOPs of fine-tuning techniques |
-//! | [`table1`]    | Table I — memory breakdown (T5-Large) |
-//! | [`table5`]    | Table V — end-to-end fine-tuning hours, Env.A |
-//! | [`fig12`]     | Fig. 12 — PAC+ vs Asteroid/HetPipe, Env.B |
-//! | [`fig13`]     | Fig. 13 — per-sample time + memory breakdown |
-//! | [`fig15`]     | Fig. 15 — memory vs model size × precision |
-//! | [`fig16`]     | Fig. 16 — scalability 2–8 devices |
-//! | [`fig17`]     | Fig. 17 — planner device groupings |
-//! | [`fig18`]     | Fig. 18 — cache benefit vs epochs |
+//! Experiments are addressed **by name** through an
+//! [`ExperimentRegistry`] (same open design as
+//! [`crate::strategy::StrategyRegistry`]), each producing a [`Report`] —
+//! a named table with typed columns ([`ColType`]), rows of [`Cell`]s and
+//! provenance metadata — renderable as aligned text, JSON (round-trips
+//! through [`crate::util::json`]) and CSV. Independent experiments run
+//! concurrently ([`ExperimentRegistry::run_all`]).
 //!
-//! The accuracy-side experiments (Table VI, Table VII, Fig. 14) run real
-//! training through the PJRT engine and live in `exp::accuracy`.
+//! | name                  | reproduces |
+//! |-----------------------|------------|
+//! | `fig3`                | Fig. 3 — FLOPs of fine-tuning techniques |
+//! | `table1`              | Table I — memory breakdown (T5-Large) |
+//! | `table5`              | Table V — end-to-end fine-tuning hours, Env.A |
+//! | `table6`              | Table VI — quality parity (real training) |
+//! | `table7`              | Table VII — quantized backbone (real training) |
+//! | `fig12`               | Fig. 12 — PAC+ vs Asteroid/HetPipe, Env.B |
+//! | `fig13`               | Fig. 13 — per-sample time + memory breakdown |
+//! | `fig14`               | Fig. 14 — adapter weight-init (real training) |
+//! | `fig15`               | Fig. 15 — memory vs model size × precision |
+//! | `fig16`               | Fig. 16 — scalability 2–8 devices |
+//! | `fig17`               | Fig. 17 — planner device groupings |
+//! | `fig18`               | Fig. 18 — cache benefit vs epochs |
+//! | `ablate_schedule`     | 1F1B vs GPipe ablation (DESIGN.md §5) |
+//! | `ablate_bandwidth`    | LAN vs Wi-Fi sensitivity ablation |
+//! | `ablate_microbatches` | pipelining depth M sweep |
+//! | `sweep`               | registry-only env × model × strategy grid |
+//!
+//! CLI: `pacpp exp list`, `pacpp exp run <name> [--format text|json|csv]
+//! [--out FILE]`, `pacpp exp all`. See the crate docs ("Adding a new
+//! experiment") for how to register your own.
+//!
+//! The pre-registry surfaces — typed-row functions (`table5()`, ...) and
+//! `print_*` — are deprecated wrappers kept for one release; the golden
+//! tests (`tests/exp_golden.rs`) pin them value-identical to the
+//! registry Reports.
 
 pub mod ablations;
 pub mod accuracy;
+pub mod registry;
+pub mod report;
 pub mod tables;
 
+pub use registry::{sweep_report, sweep_schema, ExpContext, Experiment, ExperimentRegistry};
+pub use report::{Cell, ColType, Column, Format, Report};
 pub use tables::*;

@@ -1,0 +1,639 @@
+//! The [`Experiment`] trait and its name-addressed registry.
+//!
+//! Mirrors the strategy layer's open design
+//! ([`crate::strategy::StrategyRegistry`]): every paper table, figure
+//! and design ablation is an [`Experiment`] resolved by name (or alias)
+//! through [`ExperimentRegistry::with_defaults`], producing a typed
+//! [`Report`] that renders as text, JSON or CSV. The CLI
+//! (`pacpp exp <list|run|all>`) and the bench harness address
+//! experiments exclusively through this registry, so a registered
+//! experiment is immediately reachable everywhere.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::accuracy::Budget;
+use super::report::{Cell, ColType, Report};
+use super::tables::TABLE_SEQ;
+use crate::cluster::Env;
+use crate::data::Task;
+use crate::model::{Method, ModelSpec};
+use crate::runtime::Runtime;
+use crate::strategy::{StrategyRegistry, TrainJob};
+
+/// Shared inputs an experiment may draw on.
+///
+/// The simulator-backed experiments need nothing; the real-training
+/// experiments (`table6`/`table7`/`fig14`) lazily load the PJRT
+/// [`Runtime`] from [`artifacts`](ExpContext::artifacts) on first use
+/// (the handle is cached, so `exp all` loads it once).
+pub struct ExpContext {
+    /// AOT artifact directory for the real-training experiments.
+    pub artifacts: String,
+    /// Training budget for the real-training experiments.
+    pub budget: Budget,
+    runtime: Mutex<Option<Arc<Runtime>>>,
+}
+
+impl ExpContext {
+    pub fn new() -> ExpContext {
+        ExpContext::with_artifacts("artifacts/small")
+    }
+
+    pub fn with_artifacts(dir: impl Into<String>) -> ExpContext {
+        ExpContext {
+            artifacts: dir.into(),
+            budget: Budget::default(),
+            runtime: Mutex::new(None),
+        }
+    }
+
+    /// The shared runtime handle, loading artifacts on first call.
+    pub fn runtime(&self) -> Result<Arc<Runtime>> {
+        let mut slot = self.runtime.lock().expect("runtime lock poisoned");
+        if let Some(rt) = &*slot {
+            return Ok(rt.clone());
+        }
+        let rt = Arc::new(Runtime::load(&self.artifacts)?);
+        *slot = Some(rt.clone());
+        Ok(rt)
+    }
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext::new()
+    }
+}
+
+/// One reproducible experiment: a named producer of a [`Report`].
+pub trait Experiment: Send + Sync {
+    /// Canonical registry name (stable: used by the CLI and in JSON).
+    fn name(&self) -> &str;
+
+    /// Lowercase lookup aliases accepted by [`ExperimentRegistry::get`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for `pacpp exp list` and docs.
+    fn description(&self) -> &str {
+        ""
+    }
+
+    /// Whether the experiment only reads shared state. Experiments that
+    /// drive real training mutate process-global trainer state and are
+    /// run serially by [`ExperimentRegistry::run_all`].
+    fn parallel_safe(&self) -> bool {
+        true
+    }
+
+    /// Whether the experiment needs the AOT artifact set (real PJRT
+    /// training). Orthogonal to [`parallel_safe`](Experiment::parallel_safe):
+    /// callers use this to gate or soft-skip experiments on checkouts
+    /// without artifacts.
+    fn requires_artifacts(&self) -> bool {
+        false
+    }
+
+    /// Produce the report.
+    fn run(&self, ctx: &ExpContext) -> Result<Report>;
+}
+
+/// Plain-function experiment: how every built-in is registered.
+struct FnExperiment {
+    name: &'static str,
+    aliases: &'static [&'static str],
+    description: &'static str,
+    parallel_safe: bool,
+    requires_artifacts: bool,
+    run: fn(&ExpContext) -> Result<Report>,
+}
+
+impl Experiment for FnExperiment {
+    fn name(&self) -> &str {
+        self.name
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        self.aliases
+    }
+    fn description(&self) -> &str {
+        self.description
+    }
+    fn parallel_safe(&self) -> bool {
+        self.parallel_safe
+    }
+    fn requires_artifacts(&self) -> bool {
+        self.requires_artifacts
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Report> {
+        (self.run)(ctx)
+    }
+}
+
+/// An ordered, name-addressed collection of experiments.
+///
+/// Registration order is preserved (it is the `exp list` / `exp all`
+/// order). Canonical names are matched case-insensitively; aliases are
+/// lowercase.
+pub struct ExperimentRegistry {
+    experiments: Vec<Arc<dyn Experiment>>,
+}
+
+impl ExperimentRegistry {
+    /// An empty registry (build-your-own experiment line-ups).
+    pub fn empty() -> ExperimentRegistry {
+        ExperimentRegistry { experiments: Vec::new() }
+    }
+
+    /// Every table, figure and ablation of the evaluation, plus the
+    /// registry-only `sweep` grid.
+    pub fn with_defaults() -> ExperimentRegistry {
+        let mut r = ExperimentRegistry::empty();
+        let defaults: Vec<FnExperiment> = vec![
+            FnExperiment {
+                name: "fig3",
+                aliases: &["flops"],
+                description: "Fig. 3 — FLOPs of fine-tuning techniques per mini-batch",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::tables::fig3_report()),
+            },
+            FnExperiment {
+                name: "table1",
+                aliases: &["memory"],
+                description: "Table I — memory breakdown, T5-Large",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::tables::table1_report()),
+            },
+            FnExperiment {
+                name: "table5",
+                aliases: &["hours"],
+                description: "Table V — end-to-end fine-tuning hours, Env.A",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::tables::table5_report()),
+            },
+            FnExperiment {
+                name: "table6",
+                aliases: &["quality"],
+                description: "Table VI (shape) — fine-tuned quality parity (real training)",
+                parallel_safe: false,
+                requires_artifacts: true,
+                run: |ctx| super::accuracy::table6_report(&ctx.runtime()?, ctx.budget),
+            },
+            FnExperiment {
+                name: "table7",
+                aliases: &["quantized"],
+                description: "Table VII (shape) — quantized-backbone quality (real training)",
+                parallel_safe: false,
+                requires_artifacts: true,
+                run: |ctx| super::accuracy::table7_report(&ctx.runtime()?, ctx.budget),
+            },
+            FnExperiment {
+                name: "fig12",
+                aliases: &["hetero"],
+                description: "Fig. 12 — PAC+ vs Asteroid/HetPipe under heterogeneity, Env.B",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::tables::fig12_report()),
+            },
+            FnExperiment {
+                name: "fig13",
+                aliases: &["breakdown"],
+                description: "Fig. 13 — per-sample time + memory breakdown, 8x Nano-H",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::tables::fig13_report()),
+            },
+            FnExperiment {
+                name: "fig14",
+                aliases: &["init"],
+                description: "Fig. 14 (shape) — adapter weight-init strategies (real training)",
+                parallel_safe: false,
+                requires_artifacts: true,
+                run: |ctx| super::accuracy::fig14_report(&ctx.runtime()?, ctx.budget),
+            },
+            FnExperiment {
+                name: "fig15",
+                aliases: &["quant-mem"],
+                description: "Fig. 15 — memory vs model size x precision",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::tables::fig15_report()),
+            },
+            FnExperiment {
+                name: "fig16",
+                aliases: &["scalability"],
+                description: "Fig. 16 — scalability of DP/PP/PAC+ over 2-8 devices",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::tables::fig16_report()),
+            },
+            FnExperiment {
+                name: "fig17",
+                aliases: &["groupings"],
+                description: "Fig. 17 — planner device groupings",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::tables::fig17_report()),
+            },
+            FnExperiment {
+                name: "fig18",
+                aliases: &["cache"],
+                description: "Fig. 18 — activation-cache benefit vs epoch count",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::tables::fig18_report()),
+            },
+            FnExperiment {
+                name: "ablate_schedule",
+                aliases: &["schedule"],
+                description: "Ablation — 1F1B vs GPipe-style scheduling",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::ablations::schedule_report()),
+            },
+            FnExperiment {
+                name: "ablate_bandwidth",
+                aliases: &["bandwidth"],
+                description: "Ablation — LAN vs Wi-Fi bandwidth sensitivity per system",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::ablations::bandwidth_report()),
+            },
+            FnExperiment {
+                name: "ablate_microbatches",
+                aliases: &["microbatches"],
+                description: "Ablation — pipelining depth M sweep",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::ablations::microbatches_report()),
+            },
+            FnExperiment {
+                name: "sweep",
+                aliases: &["grid"],
+                description:
+                    "Sweep — long-form env x model x strategy grid (registry-only)",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(sweep_report()),
+            },
+        ];
+        for e in defaults {
+            r.register(Arc::new(e));
+        }
+        r
+    }
+
+    /// Add an experiment; replaces an existing entry with the same
+    /// canonical name (so callers can shadow a built-in). Matching is
+    /// case-insensitive, like [`get`](ExperimentRegistry::get) — a
+    /// differently-cased registration must shadow, not append an
+    /// unreachable twin.
+    pub fn register(&mut self, e: Arc<dyn Experiment>) {
+        let name = e.name().to_ascii_lowercase();
+        if let Some(slot) = self
+            .experiments
+            .iter_mut()
+            .find(|x| x.name().to_ascii_lowercase() == name)
+        {
+            *slot = e;
+        } else {
+            self.experiments.push(e);
+        }
+    }
+
+    /// Look up by canonical name (case-insensitive) or alias. Canonical
+    /// names win over aliases, so an experiment registered under a name
+    /// that collides with an earlier entry's alias is still reachable.
+    pub fn get(&self, name: &str) -> Option<&Arc<dyn Experiment>> {
+        let q = name.to_ascii_lowercase();
+        self.experiments
+            .iter()
+            .find(|e| e.name().to_ascii_lowercase() == q)
+            .or_else(|| self.experiments.iter().find(|e| e.aliases().contains(&q.as_str())))
+    }
+
+    /// Like [`get`](ExperimentRegistry::get), but an unknown name is an
+    /// error listing the registered alternatives (the one diagnostic the
+    /// CLI and library both show).
+    pub fn get_or_err(&self, name: &str) -> Result<&Arc<dyn Experiment>> {
+        match self.get(name) {
+            Some(e) => Ok(e),
+            None => bail!(
+                "unknown experiment {name:?}; registered: {}",
+                self.names().join(", ")
+            ),
+        }
+    }
+
+    /// Run one experiment by name or alias.
+    pub fn run(&self, name: &str, ctx: &ExpContext) -> Result<Report> {
+        self.get_or_err(name)?.run(ctx)
+    }
+
+    /// Run every registered experiment, the parallel-safe ones on worker
+    /// threads ([`crate::util::par_map`]) and the rest serially.
+    /// Results come back in registration order, failures included (a
+    /// missing artifact set fails `table6` without aborting the rest).
+    ///
+    /// Experiments that fan out internally (Table V, Figs. 12/16, the
+    /// sweep) briefly nest scoped `par_map` workers under the outer
+    /// ones; the oversubscription is transient and keeps the API free
+    /// of a "how parallel am I inside" knob.
+    pub fn run_all(&self, ctx: &ExpContext) -> Vec<(String, Result<Report>)> {
+        let experiments: Vec<&Arc<dyn Experiment>> = self.experiments.iter().collect();
+        let results = Self::run_set(&experiments, ctx);
+        self.experiments
+            .iter()
+            .zip(results)
+            .map(|(e, res)| (e.name().to_string(), res))
+            .collect()
+    }
+
+    /// Run a set of experiments — the parallel-safe ones on worker
+    /// threads, the rest serially — returning results in input order.
+    /// The CLI's multi-name `exp run` shares this with
+    /// [`run_all`](ExperimentRegistry::run_all).
+    pub fn run_set(
+        experiments: &[&Arc<dyn Experiment>],
+        ctx: &ExpContext,
+    ) -> Vec<Result<Report>> {
+        let par_idx: Vec<usize> = (0..experiments.len())
+            .filter(|&i| experiments[i].parallel_safe())
+            .collect();
+        let mut slots: Vec<Option<Result<Report>>> =
+            (0..experiments.len()).map(|_| None).collect();
+        let par_results =
+            crate::util::par_map(par_idx.len(), |k| experiments[par_idx[k]].run(ctx));
+        for (k, res) in par_results.into_iter().enumerate() {
+            slots[par_idx[k]] = Some(res);
+        }
+        for (i, e) in experiments.iter().enumerate() {
+            if !e.parallel_safe() {
+                slots[i] = Some(e.run(ctx));
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("run_set: unfilled slot"))
+            .collect()
+    }
+
+    /// Canonical names in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.experiments.iter().map(|e| e.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn Experiment>> {
+        self.experiments.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.experiments.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.experiments.is_empty()
+    }
+}
+
+impl Default for ExperimentRegistry {
+    fn default() -> Self {
+        ExperimentRegistry::with_defaults()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sweep — the registry-only scenario grid
+// ---------------------------------------------------------------------------
+
+/// The sweep Report's empty shell (name, title, typed columns). Shared
+/// with the rendering benches so they measure the real sweep shape —
+/// a schema change here changes what they time, by construction.
+pub fn sweep_schema() -> Report {
+    Report::new(
+        "sweep",
+        "Sweep — fine-tuning across env × model × strategy (MRPC, P.A.+cache)",
+    )
+    .column("env", ColType::Str)
+    .column("model", ColType::Str)
+    .column("strategy", ColType::Str)
+    .column("status", ColType::Str)
+    .column("epoch1", ColType::Secs)
+    .column("total", ColType::Secs)
+    .column("hours", ColType::Float)
+    .column("throughput", ColType::Float)
+    .column("peak_mem", ColType::Bytes)
+    .column("stages", ColType::Int)
+    .column("grouping", ColType::Str)
+}
+
+/// Long-form grid over env × model × strategy, one row per cell — the
+/// kind of cross-scenario comparison the per-figure surface could not
+/// express (every figure hard-wired one environment). Strategies are
+/// resolved by name through the [`StrategyRegistry`], so shadowing a
+/// strategy changes the sweep too. Cells evaluate concurrently.
+pub fn sweep_report() -> Report {
+    let envs = [Env::env_a(), Env::env_b()];
+    let models = [ModelSpec::t5_base(), ModelSpec::t5_large()];
+    let strategy_names = ["dp", "pp", "pac+"];
+    let registry = StrategyRegistry::with_defaults();
+    let samples = Task::Mrpc.train_samples();
+    let epochs = 3usize;
+
+    let mut combos: Vec<(&Env, &ModelSpec, &str)> = Vec::new();
+    for env in &envs {
+        for spec in &models {
+            for name in strategy_names {
+                combos.push((env, spec, name));
+            }
+        }
+    }
+    let results = crate::util::par_map(combos.len(), |i| {
+        let (env, spec, name) = combos[i];
+        let strategy = registry.get(name).expect("sweep strategy registered");
+        let profile = super::tables::profile(spec, Method::pa(true), TABLE_SEQ);
+        let job = TrainJob::new(samples, epochs, TABLE_SEQ, 16);
+        (strategy.name().to_string(), strategy.run(&profile, env, job))
+    });
+
+    let mut report = sweep_schema()
+        .meta("task", "MRPC")
+        .meta("samples", samples)
+        .meta("epochs", epochs)
+        .meta("seq", TABLE_SEQ)
+        .meta("minibatch", 16)
+        .meta("method", "pa+cache");
+
+    for ((env, spec, _), (strategy_name, res)) in combos.iter().zip(results) {
+        match res {
+            Ok(r) => report.push(vec![
+                Cell::Str(env.name.clone()),
+                Cell::Str(spec.name.clone()),
+                Cell::Str(strategy_name),
+                Cell::Str("ok".into()),
+                Cell::Secs(r.epoch1),
+                Cell::Secs(r.total),
+                Cell::Float(r.total / 3600.0),
+                Cell::Float(samples as f64 / r.epoch1),
+                Cell::Bytes(r.plan.peak_mem()),
+                Cell::Int(r.plan.n_stages() as i64),
+                Cell::Str(r.plan.grouping()),
+            ]),
+            Err(e) => report.push(vec![
+                Cell::Str(env.name.clone()),
+                Cell::Str(spec.name.clone()),
+                Cell::Str(strategy_name),
+                Cell::Str(e.to_string()),
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+                Cell::Missing,
+            ]),
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_cover_every_table_and_figure() {
+        let r = ExperimentRegistry::with_defaults();
+        assert_eq!(
+            r.names(),
+            vec![
+                "fig3",
+                "table1",
+                "table5",
+                "table6",
+                "table7",
+                "fig12",
+                "fig13",
+                "fig14",
+                "fig15",
+                "fig16",
+                "fig17",
+                "fig18",
+                "ablate_schedule",
+                "ablate_bandwidth",
+                "ablate_microbatches",
+                "sweep",
+            ]
+        );
+    }
+
+    #[test]
+    fn lookup_by_name_and_alias() {
+        let r = ExperimentRegistry::with_defaults();
+        for (query, want) in [
+            ("table5", "table5"),
+            ("TABLE5", "table5"),
+            ("hours", "table5"),
+            ("fig16", "fig16"),
+            ("scalability", "fig16"),
+            ("schedule", "ablate_schedule"),
+            ("grid", "sweep"),
+        ] {
+            assert_eq!(r.get(query).map(|e| e.name()), Some(want), "query {query:?}");
+        }
+        assert!(r.get("table9").is_none());
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        struct Shadow;
+        impl Experiment for Shadow {
+            fn name(&self) -> &str {
+                "fig3"
+            }
+            fn run(&self, _ctx: &ExpContext) -> Result<Report> {
+                Ok(Report::new("fig3", "shadowed"))
+            }
+        }
+        let mut r = ExperimentRegistry::with_defaults();
+        let n = r.len();
+        r.register(Arc::new(Shadow));
+        assert_eq!(r.len(), n, "replace, not append");
+        let rep = r.run("fig3", &ExpContext::new()).unwrap();
+        assert_eq!(rep.title, "shadowed");
+    }
+
+    #[test]
+    fn register_replaces_case_insensitively() {
+        struct Shadow;
+        impl Experiment for Shadow {
+            fn name(&self) -> &str {
+                "FIG3"
+            }
+            fn run(&self, _ctx: &ExpContext) -> Result<Report> {
+                Ok(Report::new("FIG3", "shadowed-upper"))
+            }
+        }
+        let mut r = ExperimentRegistry::with_defaults();
+        let n = r.len();
+        r.register(Arc::new(Shadow));
+        assert_eq!(r.len(), n, "case-insensitive replace, not an unreachable twin");
+        assert_eq!(r.run("fig3", &ExpContext::new()).unwrap().title, "shadowed-upper");
+    }
+
+    #[test]
+    fn run_unknown_names_the_alternatives() {
+        let r = ExperimentRegistry::with_defaults();
+        let err = r.run("fig99", &ExpContext::new()).unwrap_err().to_string();
+        assert!(err.contains("unknown experiment"), "{err}");
+        assert!(err.contains("table5"), "{err}");
+    }
+
+    #[test]
+    fn real_training_experiments_are_serial_and_need_artifacts() {
+        let r = ExperimentRegistry::with_defaults();
+        for name in ["table6", "table7", "fig14"] {
+            let e = r.get(name).unwrap();
+            assert!(!e.parallel_safe(), "{name}");
+            assert!(e.requires_artifacts(), "{name}");
+        }
+        let table5 = r.get("table5").unwrap();
+        assert!(table5.parallel_safe());
+        assert!(!table5.requires_artifacts());
+    }
+
+    #[test]
+    fn sweep_covers_the_grid() {
+        let rep = sweep_report();
+        // 2 envs x 2 models x 3 strategies, one long-form row per cell
+        assert_eq!(rep.n_rows(), 12);
+        for (col, want) in [
+            ("env", vec!["Env.A", "Env.B"]),
+            ("model", vec!["T5-Base", "T5-Large"]),
+            ("strategy", vec!["DP (EDDL)", "PP (Eco-FL)", "PAC+"]),
+        ] {
+            for w in want {
+                assert!(
+                    (0..rep.n_rows()).any(|i| rep
+                        .cell(i, col)
+                        .and_then(Cell::as_str)
+                        .map(|s| s == w)
+                        .unwrap_or(false)),
+                    "missing {col}={w}"
+                );
+            }
+        }
+        // PAC+ rows always plan (the paper's core claim)
+        for i in 0..rep.n_rows() {
+            if rep.cell(i, "strategy").and_then(Cell::as_str) == Some("PAC+") {
+                assert_eq!(rep.cell(i, "status").and_then(Cell::as_str), Some("ok"));
+                assert!(rep.cell(i, "hours").unwrap().as_f64().unwrap() > 0.0);
+            }
+        }
+    }
+}

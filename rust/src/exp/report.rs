@@ -1,0 +1,738 @@
+//! The [`Report`] type — the common, typed output of every experiment.
+//!
+//! A report is a named table: typed columns ([`ColType`]), rows of
+//! [`Cell`]s, and free-form metadata (env, model, strategy, ...). One
+//! report renders in three formats:
+//!
+//! * **text** — aligned columns ([`Report::to_text`]; this *replaces*
+//!   the legacy `print_*` layouts — same values, uniform rendering:
+//!   missing cells print `-`, ratios print as raw fractions);
+//! * **JSON** — via [`crate::util::json`], round-trippable through
+//!   [`Report::from_json`] (numbers travel as f64, so integer cells
+//!   are exact up to 2^53 — far above anything a report holds);
+//! * **CSV** — RFC-4180-style quoting ([`Report::to_csv`]).
+//!
+//! Typing lives in the columns: every cell pushed into a report is
+//! checked against its column's [`ColType`], and [`Cell::Missing`]
+//! (an OOM cell, a never-reached target, ...) is legal in any column.
+//! The distinction between `Float`, `Bytes`, `Secs` and `Speedup` is a
+//! *rendering* contract — JSON and CSV always carry the raw number, so
+//! downstream tooling (perf trajectories, diffing) never has to parse
+//! `"3.42 GB"` back apart.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::{fmt_bytes, fmt_secs};
+
+/// Output format for rendering a [`Report`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Text,
+    Json,
+    Csv,
+}
+
+impl Format {
+    /// Parse a CLI spelling (`text`/`txt`, `json`, `csv`).
+    pub fn parse(s: &str) -> Option<Format> {
+        match s.to_ascii_lowercase().as_str() {
+            "text" | "txt" => Some(Format::Text),
+            "json" => Some(Format::Json),
+            "csv" => Some(Format::Csv),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Text => "text",
+            Format::Json => "json",
+            Format::Csv => "csv",
+        }
+    }
+}
+
+/// The declared type of a report column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColType {
+    /// Free-form label (model, technique, grouping, ...).
+    Str,
+    /// Integer count (devices, epochs, stages, ...).
+    Int,
+    /// Dimensionless number (hours, GB, losses — caller-chosen unit).
+    Float,
+    /// Byte count; text renders via [`fmt_bytes`].
+    Bytes,
+    /// Duration in seconds; text renders via [`fmt_secs`].
+    Secs,
+    /// Ratio vs a baseline; text renders as `N.NNx`.
+    Speedup,
+}
+
+impl ColType {
+    pub fn name(self) -> &'static str {
+        match self {
+            ColType::Str => "str",
+            ColType::Int => "int",
+            ColType::Float => "float",
+            ColType::Bytes => "bytes",
+            ColType::Secs => "secs",
+            ColType::Speedup => "speedup",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ColType> {
+        match s {
+            "str" => Some(ColType::Str),
+            "int" => Some(ColType::Int),
+            "float" => Some(ColType::Float),
+            "bytes" => Some(ColType::Bytes),
+            "secs" => Some(ColType::Secs),
+            "speedup" => Some(ColType::Speedup),
+            _ => None,
+        }
+    }
+
+    /// Str columns left-align in text output, numeric columns right-align.
+    fn left_aligned(self) -> bool {
+        matches!(self, ColType::Str)
+    }
+}
+
+/// A typed column header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Column {
+    pub name: String,
+    pub ty: ColType,
+}
+
+/// One value of a report row.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bytes(u64),
+    Secs(f64),
+    Speedup(f64),
+    /// Absent value (OOM, unplannable, target never reached). Legal in
+    /// any column; renders as `-` in text, `null` in JSON, empty in CSV.
+    Missing,
+}
+
+impl Cell {
+    /// Lift an `Option` into a cell, `None` becoming [`Cell::Missing`].
+    pub fn opt<T>(v: Option<T>, f: impl FnOnce(T) -> Cell) -> Cell {
+        v.map(f).unwrap_or(Cell::Missing)
+    }
+
+    fn matches(&self, ty: ColType) -> bool {
+        matches!(
+            (self, ty),
+            (Cell::Missing, _)
+                | (Cell::Str(_), ColType::Str)
+                | (Cell::Int(_), ColType::Int)
+                | (Cell::Float(_), ColType::Float)
+                | (Cell::Bytes(_), ColType::Bytes)
+                | (Cell::Secs(_), ColType::Secs)
+                | (Cell::Speedup(_), ColType::Speedup)
+        )
+    }
+
+    /// The raw numeric value, when there is one.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Cell::Int(v) => Some(*v as f64),
+            Cell::Float(v) | Cell::Secs(v) | Cell::Speedup(v) => Some(*v),
+            Cell::Bytes(v) => Some(*v as f64),
+            Cell::Str(_) | Cell::Missing => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Cell::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_missing(&self) -> bool {
+        matches!(self, Cell::Missing)
+    }
+
+    /// Human rendering for the text format.
+    fn text(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Int(v) => v.to_string(),
+            Cell::Float(v) => fmt_float(*v),
+            Cell::Bytes(v) => fmt_bytes(*v),
+            Cell::Secs(v) => fmt_secs(*v),
+            Cell::Speedup(v) => format!("{v:.2}x"),
+            Cell::Missing => "-".into(),
+        }
+    }
+
+    /// Raw rendering for CSV (numbers unformatted, missing empty).
+    fn csv(&self) -> String {
+        match self {
+            Cell::Str(s) => csv_quote(s),
+            Cell::Int(v) => v.to_string(),
+            Cell::Float(v) | Cell::Secs(v) | Cell::Speedup(v) => fmt_f64_raw(*v),
+            Cell::Bytes(v) => v.to_string(),
+            Cell::Missing => String::new(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Cell::Str(s) => Json::Str(s.clone()),
+            // exact: push() rejects integers beyond the f64-exact range
+            Cell::Int(v) => Json::from(*v),
+            Cell::Bytes(v) => Json::from(*v),
+            // push() rejects non-finite values, so Num is always valid JSON
+            Cell::Float(v) | Cell::Secs(v) | Cell::Speedup(v) => Json::Num(*v),
+            Cell::Missing => Json::Null,
+        }
+    }
+
+    fn from_json(v: &Json, ty: ColType) -> Result<Cell> {
+        // integral columns are validated, not coerced: a fractional or
+        // out-of-range number is a corrupt file, not a value to truncate
+        let int = |n: f64| -> Result<i64> {
+            if n.fract() == 0.0 && n.abs() < 9e15 {
+                Ok(n as i64)
+            } else {
+                bail!("{n} is not an integer cell value")
+            }
+        };
+        // non-finite floats could not have been written by to_json (push
+        // rejects them) and would not re-serialize as valid JSON
+        let finite = |n: f64| -> Result<f64> {
+            if n.is_finite() {
+                Ok(n)
+            } else {
+                bail!("{n} is not a finite cell value")
+            }
+        };
+        Ok(match (v, ty) {
+            (Json::Null, _) => Cell::Missing,
+            (Json::Str(s), ColType::Str) => Cell::Str(s.clone()),
+            (Json::Num(n), ColType::Int) => Cell::Int(int(*n)?),
+            (Json::Num(n), ColType::Float) => Cell::Float(finite(*n)?),
+            (Json::Num(n), ColType::Bytes) => {
+                if *n < 0.0 {
+                    bail!("{n} is not a byte count");
+                }
+                Cell::Bytes(int(*n)? as u64)
+            }
+            (Json::Num(n), ColType::Secs) => Cell::Secs(finite(*n)?),
+            (Json::Num(n), ColType::Speedup) => Cell::Speedup(finite(*n)?),
+            (v, ty) => bail!("cell {v} does not fit column type {}", ty.name()),
+        })
+    }
+}
+
+/// Shortest float rendering for text cells: fixed 3 decimals with the
+/// trailing zeros trimmed (`1.500` → `1.5`, `2.000` → `2`); values the
+/// 3-decimal rendering would collapse to 0 fall back to scientific so
+/// a tiny nonzero measurement stays distinguishable from zero.
+fn fmt_float(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let s = format!("{v:.3}");
+    let s = s.trim_end_matches('0').trim_end_matches('.');
+    if (s == "0" || s == "-0") && v != 0.0 {
+        return format!("{v:e}");
+    }
+    s.to_string()
+}
+
+/// Raw float for CSV: Rust's shortest round-trip `Display`.
+fn fmt_f64_raw(v: f64) -> String {
+    format!("{v}")
+}
+
+fn csv_quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// A named, typed table of experiment results.
+///
+/// `columns` and `rows` are private so every row enters through the
+/// checked [`Report::push`] — the renderers rely on its arity, type and
+/// finiteness invariants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    /// Registry name of the producing experiment (`table5`, `sweep`, ...).
+    pub name: String,
+    /// Human title — the text format's first line.
+    pub title: String,
+    columns: Vec<Column>,
+    rows: Vec<Vec<Cell>>,
+    /// Free-form provenance: env, model, strategy, seq, minibatch, ...
+    /// Deliberately string-valued — it labels a report; measurements
+    /// belong in typed columns. (`from_json` also accepts scalar JSON
+    /// meta values, stringifying them.)
+    pub meta: BTreeMap<String, String>,
+}
+
+impl Report {
+    pub fn new(name: impl Into<String>, title: impl Into<String>) -> Report {
+        Report {
+            name: name.into(),
+            title: title.into(),
+            columns: Vec::new(),
+            rows: Vec::new(),
+            meta: BTreeMap::new(),
+        }
+    }
+
+    /// Append a typed column (builder-style; declare all columns before
+    /// pushing rows).
+    pub fn column(mut self, name: impl Into<String>, ty: ColType) -> Report {
+        assert!(self.rows.is_empty(), "declare columns before pushing rows");
+        self.columns.push(Column { name: name.into(), ty });
+        self
+    }
+
+    /// Attach a metadata entry (builder-style).
+    pub fn meta(mut self, key: impl Into<String>, value: impl ToString) -> Report {
+        self.meta.insert(key.into(), value.to_string());
+        self
+    }
+
+    /// Append a row.
+    ///
+    /// Panics on arity or type mismatch — a report schema violation is a
+    /// programming error in the producing experiment, not a runtime
+    /// condition.
+    pub fn push(&mut self, row: Vec<Cell>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "report {:?}: row arity {} != {} columns",
+            self.name,
+            row.len(),
+            self.columns.len()
+        );
+        for (cell, col) in row.iter().zip(&self.columns) {
+            assert!(
+                cell.matches(col.ty),
+                "report {:?}: cell {:?} does not fit column {:?} ({})",
+                self.name,
+                cell,
+                col.name,
+                col.ty.name()
+            );
+            // values that could not survive the JSON round-trip are
+            // rejected at the producer, not discovered by the loader:
+            // JSON has no NaN/inf (push Cell::Missing instead), and
+            // integral cells travel as f64, exact only below ~9e15
+            match cell {
+                Cell::Float(v) | Cell::Secs(v) | Cell::Speedup(v) => assert!(
+                    v.is_finite(),
+                    "report {:?}: non-finite {:?} in column {:?}; use Cell::Missing",
+                    self.name,
+                    cell,
+                    col.name
+                ),
+                Cell::Int(v) => assert!(
+                    v.unsigned_abs() < 9_000_000_000_000_000,
+                    "report {:?}: {v} in column {:?} exceeds the f64-exact integer range",
+                    self.name,
+                    col.name
+                ),
+                Cell::Bytes(v) => assert!(
+                    *v < 9_000_000_000_000_000,
+                    "report {:?}: {v} in column {:?} exceeds the f64-exact integer range",
+                    self.name,
+                    col.name
+                ),
+                Cell::Str(_) | Cell::Missing => {}
+            }
+        }
+        self.rows.push(row);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    pub fn rows(&self) -> &[Vec<Cell>] {
+        &self.rows
+    }
+
+    /// The cell at `(row, column-name)`, if both exist.
+    pub fn cell(&self, row: usize, col: &str) -> Option<&Cell> {
+        let c = self.columns.iter().position(|c| c.name == col)?;
+        self.rows.get(row)?.get(c)
+    }
+
+    /// Render in `format`.
+    pub fn render(&self, format: Format) -> String {
+        match format {
+            Format::Text => self.to_text(),
+            Format::Json => {
+                let mut s = self.to_json().to_string_pretty();
+                s.push('\n');
+                s
+            }
+            Format::Csv => self.to_csv(),
+        }
+    }
+
+    // -- text ---------------------------------------------------------------
+
+    /// Aligned fixed-width text (title, metadata line, header, rows).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.title);
+        out.push('\n');
+        if !self.meta.is_empty() {
+            let pairs: Vec<String> =
+                self.meta.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            out.push_str(&format!("  [{}]\n", pairs.join(", ")));
+        }
+        // column widths over header + every rendered cell, in chars —
+        // format! pads by char count, and cells like "250.0 µs" hold
+        // multi-byte glyphs
+        let rendered: Vec<Vec<String>> =
+            self.rows.iter().map(|r| r.iter().map(Cell::text).collect()).collect();
+        let chars = |s: &str| s.chars().count();
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                rendered
+                    .iter()
+                    .map(|r| chars(&r[i]))
+                    .chain(std::iter::once(chars(&c.name)))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let mut line = |cells: &[String]| {
+            let fields: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    if self.columns[i].ty.left_aligned() {
+                        format!("{:<w$}", s, w = widths[i])
+                    } else {
+                        format!("{:>w$}", s, w = widths[i])
+                    }
+                })
+                .collect();
+            out.push_str(fields.join("  ").trim_end());
+            out.push('\n');
+        };
+        let header: Vec<String> = self.columns.iter().map(|c| c.name.clone()).collect();
+        line(&header);
+        for r in &rendered {
+            line(r);
+        }
+        out
+    }
+
+    // -- csv ----------------------------------------------------------------
+
+    /// CSV: header of column names, then raw (unformatted) values.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let header: Vec<String> =
+            self.columns.iter().map(|c| csv_quote(&c.name)).collect();
+        out.push_str(&header.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            let fields: Vec<String> = row.iter().map(Cell::csv).collect();
+            out.push_str(&fields.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    // -- json ---------------------------------------------------------------
+
+    /// Structured JSON: name/title/meta, typed column schema, row arrays.
+    pub fn to_json(&self) -> Json {
+        let columns: Json = self
+            .columns
+            .iter()
+            .map(|c| {
+                crate::util::json::obj(vec![
+                    ("name", Json::Str(c.name.clone())),
+                    ("type", Json::Str(c.ty.name().into())),
+                ])
+            })
+            .collect();
+        let rows: Json = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(Cell::to_json).collect::<Json>())
+            .collect();
+        let meta = Json::Obj(
+            self.meta.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        crate::util::json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("title", Json::Str(self.title.clone())),
+            ("meta", meta),
+            ("columns", columns),
+            ("rows", rows),
+        ])
+    }
+
+    /// Rebuild a report from [`Report::to_json`] output (the golden tests
+    /// assert `from_json(parse(to_json)) == self`).
+    pub fn from_json(v: &Json) -> Result<Report> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .context("report json: missing name")?;
+        let title = v
+            .get("title")
+            .and_then(Json::as_str)
+            .context("report json: missing title")?;
+        let mut report = Report::new(name, title);
+        if let Some(meta) = v.get("meta").and_then(Json::as_obj) {
+            for (k, val) in meta {
+                // meta is string-valued provenance; accept scalar JSON
+                // too so files from a future typed-meta writer still load
+                let s = match val {
+                    Json::Str(s) => s.clone(),
+                    Json::Num(_) | Json::Bool(_) => val.to_string_compact(),
+                    _ => anyhow::bail!("report json: non-scalar meta value for {k:?}"),
+                };
+                report.meta.insert(k.clone(), s);
+            }
+        }
+        for c in v
+            .get("columns")
+            .and_then(Json::as_arr)
+            .context("report json: missing columns")?
+        {
+            let cname = c
+                .get("name")
+                .and_then(Json::as_str)
+                .context("report json: column missing name")?;
+            let ty = c
+                .get("type")
+                .and_then(Json::as_str)
+                .and_then(ColType::parse)
+                .context("report json: bad column type")?;
+            report.columns.push(Column { name: cname.into(), ty });
+        }
+        for row in v
+            .get("rows")
+            .and_then(Json::as_arr)
+            .context("report json: missing rows")?
+        {
+            let cells = row.as_arr().context("report json: row is not an array")?;
+            if cells.len() != report.columns.len() {
+                bail!(
+                    "report json: row arity {} != {} columns",
+                    cells.len(),
+                    report.columns.len()
+                );
+            }
+            let mut parsed = Vec::with_capacity(cells.len());
+            for (c, col) in cells.iter().zip(&report.columns) {
+                parsed.push(Cell::from_json(c, col.ty)?);
+            }
+            report.rows.push(parsed);
+        }
+        Ok(report)
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_text())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::new("sample", "Sample — a demo report")
+            .column("model", ColType::Str)
+            .column("n", ColType::Int)
+            .column("hours", ColType::Float)
+            .column("mem", ColType::Bytes)
+            .column("latency", ColType::Secs)
+            .column("vs_base", ColType::Speedup)
+            .meta("env", "env_a")
+            .meta("seq", 128);
+        r.push(vec![
+            Cell::Str("t5-base".into()),
+            Cell::Int(4),
+            Cell::Float(1.25),
+            Cell::Bytes(3 * 1024 * 1024),
+            Cell::Secs(0.25),
+            Cell::Speedup(3.5),
+        ]);
+        r.push(vec![
+            Cell::Str("t5-large".into()),
+            Cell::Int(8),
+            Cell::Missing,
+            Cell::Missing,
+            Cell::Missing,
+            Cell::Missing,
+        ]);
+        r
+    }
+
+    #[test]
+    fn text_renders_aligned() {
+        let t = sample().to_text();
+        assert!(t.starts_with("Sample — a demo report\n"));
+        assert!(t.contains("env=env_a"));
+        assert!(t.contains("seq=128"));
+        assert!(t.contains("t5-base"));
+        assert!(t.contains("3.00 MB"));
+        assert!(t.contains("250.00 ms"));
+        assert!(t.contains("3.50x"));
+        assert!(t.contains('-'), "missing cells render as -");
+        // header and rows align on the first column
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 2 + 1 + 2, "title, meta, header, two rows");
+    }
+
+    #[test]
+    fn csv_has_raw_values() {
+        let c = sample().to_csv();
+        let lines: Vec<&str> = c.lines().collect();
+        assert_eq!(lines[0], "model,n,hours,mem,latency,vs_base");
+        assert_eq!(lines[1], "t5-base,4,1.25,3145728,0.25,3.5");
+        assert_eq!(lines[2], "t5-large,8,,,,");
+    }
+
+    #[test]
+    fn csv_quotes_commas_and_quotes() {
+        assert_eq!(csv_quote("plain"), "plain");
+        assert_eq!(csv_quote("a,b"), "\"a,b\"");
+        assert_eq!(csv_quote("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn json_roundtrips_exactly() {
+        let r = sample();
+        let s = r.render(Format::Json);
+        let parsed = Json::parse(&s).expect("valid json");
+        let back = Report::from_json(&parsed).expect("report shape");
+        assert_eq!(back, r);
+        // compact form round-trips too
+        let compact = Json::parse(&r.to_json().to_string_compact()).unwrap();
+        assert_eq!(Report::from_json(&compact).unwrap(), r);
+    }
+
+    #[test]
+    fn json_missing_is_null() {
+        let j = sample().to_json();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[1].as_arr().unwrap()[2], Json::Null);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn push_checks_arity() {
+        let mut r = Report::new("x", "x").column("a", ColType::Int);
+        r.push(vec![Cell::Int(1), Cell::Int(2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit column")]
+    fn push_checks_types() {
+        let mut r = Report::new("x", "x").column("a", ColType::Int);
+        r.push(vec![Cell::Str("not an int".into())]);
+    }
+
+    #[test]
+    #[should_panic(expected = "use Cell::Missing")]
+    fn push_rejects_non_finite_floats() {
+        let mut r = Report::new("x", "x").column("ratio", ColType::Speedup);
+        r.push(vec![Cell::Speedup(f64::NAN)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "f64-exact integer range")]
+    fn push_rejects_unrepresentable_ints() {
+        let mut r = Report::new("x", "x").column("n", ColType::Int);
+        r.push(vec![Cell::Int(10_000_000_000_000_000)]);
+    }
+
+    #[test]
+    fn missing_fits_any_column() {
+        let mut r = Report::new("x", "x")
+            .column("a", ColType::Int)
+            .column("b", ColType::Str);
+        r.push(vec![Cell::Missing, Cell::Missing]);
+        assert_eq!(r.n_rows(), 1);
+    }
+
+    #[test]
+    fn cell_lookup_by_name() {
+        let r = sample();
+        assert_eq!(r.cell(0, "n"), Some(&Cell::Int(4)));
+        assert_eq!(r.cell(1, "hours"), Some(&Cell::Missing));
+        assert!(r.cell(0, "absent").is_none());
+        assert!(r.cell(9, "n").is_none());
+    }
+
+    #[test]
+    fn from_json_rejects_corrupt_integral_cells() {
+        let cell = |ty: ColType, v: Json| Cell::from_json(&v, ty);
+        assert!(cell(ColType::Int, Json::Num(3.7)).is_err(), "fractional int");
+        assert!(cell(ColType::Bytes, Json::Num(-1.0)).is_err(), "negative bytes");
+        assert!(cell(ColType::Bytes, Json::Num(2.5)).is_err(), "fractional bytes");
+        assert!(cell(ColType::Int, Json::Str("7".into())).is_err(), "string in int");
+        assert_eq!(cell(ColType::Int, Json::Num(-3.0)).unwrap(), Cell::Int(-3));
+        assert_eq!(cell(ColType::Bytes, Json::Num(4096.0)).unwrap(), Cell::Bytes(4096));
+    }
+
+    #[test]
+    fn format_parsing() {
+        assert_eq!(Format::parse("json"), Some(Format::Json));
+        assert_eq!(Format::parse("TEXT"), Some(Format::Text));
+        assert_eq!(Format::parse("csv"), Some(Format::Csv));
+        assert_eq!(Format::parse("yaml"), None);
+    }
+
+    #[test]
+    fn float_text_trimming() {
+        assert_eq!(fmt_float(1.5), "1.5");
+        assert_eq!(fmt_float(2.0), "2");
+        assert_eq!(fmt_float(0.125), "0.125");
+        assert_eq!(fmt_float(1.23456), "1.235");
+        assert_eq!(fmt_float(0.0), "0");
+        // tiny nonzero values stay distinguishable from zero
+        assert_eq!(fmt_float(0.0004), "4e-4");
+        assert_eq!(fmt_float(-0.0004), "-4e-4");
+    }
+
+    #[test]
+    fn from_json_rejects_non_finite_numbers() {
+        // 1e999 is valid JSON but parses to f64 infinity
+        let v = Json::parse("1e999").unwrap();
+        assert!(Cell::from_json(&v, ColType::Float).is_err());
+        assert!(Cell::from_json(&v, ColType::Secs).is_err());
+        assert!(Cell::from_json(&v, ColType::Speedup).is_err());
+    }
+}

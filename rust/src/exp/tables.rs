@@ -1,11 +1,23 @@
 //! Simulator-backed experiment harnesses (timing/memory tables & figures).
 //!
+//! Each experiment is a private `*_rows()` computation kernel plus a
+//! public `*_report()` that types the rows into a [`Report`] — the form
+//! the [`ExperimentRegistry`](super::registry::ExperimentRegistry)
+//! serves. The legacy typed-row functions (`table5()`, ...) and the
+//! `print_*` functions remain as thin **deprecated** wrappers for one
+//! release; the golden tests (`tests/exp_golden.rs`) pin the typed-row
+//! values and the Report cells to be identical. The `print_*` wrappers
+//! now emit the Report's uniform text layout — same values, not the
+//! byte-identical legacy formatting (missing cells print `-` rather
+//! than `OOM`, ratios print as raw fractions).
+//!
 //! Systems are resolved through the strategy layer (`run_system` is a
 //! thin adapter over the registry), and the multi-system comparisons
 //! (Table V, Fig. 12, Fig. 16) evaluate their cells on worker threads
 //! via [`crate::util::par_map`] — every cell is an independent
 //! plan+simulate, so the tables regenerate at core-count speed.
 
+use super::report::{Cell, ColType, Report};
 use crate::baselines::{run_system, System, TrainJob};
 use crate::cluster::Env;
 use crate::data::Task;
@@ -13,7 +25,6 @@ use crate::model::graph::LayerGraph;
 use crate::model::{cost, Method, ModelSpec, Precision, Workload};
 use crate::planner::{plan, PlanError, PlannerOptions};
 use crate::profiler::Profile;
-use crate::util::fmt_bytes;
 
 /// Sequence length used by the timing tables — the paper's stated 128.
 /// (Absolute hours come out ~2–3× the paper's Table V, whose timings
@@ -21,7 +32,9 @@ use crate::util::fmt_bytes;
 /// reproduction target — see EXPERIMENTS.md.)
 pub const TABLE_SEQ: usize = 128;
 
-fn profile(spec: &ModelSpec, method: Method, seq: usize) -> Profile {
+/// Shared FP32 profile constructor — the sweep (`exp::registry`) and
+/// every table/figure here must build profiles the same way.
+pub(super) fn profile(spec: &ModelSpec, method: Method, seq: usize) -> Profile {
     Profile::new(LayerGraph::new(spec.clone()), method, Precision::FP32, seq)
 }
 
@@ -39,7 +52,7 @@ pub struct Fig3Row {
     pub fwd_share: f64,
 }
 
-pub fn fig3() -> Vec<Fig3Row> {
+fn fig3_rows() -> Vec<Fig3Row> {
     let wl = Workload::paper_default();
     let mut rows = Vec::new();
     for spec in ModelSpec::paper_models() {
@@ -65,15 +78,36 @@ pub fn fig3() -> Vec<Fig3Row> {
     rows
 }
 
-pub fn print_fig3() {
-    println!("Fig. 3 — FLOPs per mini-batch (B=16, S=128)");
-    println!("{:<12} {:<14} {:>10} {:>10}", "model", "technique", "TFLOPs", "fwd%");
-    for r in fig3() {
-        println!(
-            "{:<12} {:<14} {:>10.2} {:>9.0}%",
-            r.model, r.technique, r.tflops, r.fwd_share * 100.0
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn fig3() -> Vec<Fig3Row> {
+    fig3_rows()
+}
+
+/// Fig. 3 as a typed [`Report`].
+pub fn fig3_report() -> Report {
+    let mut r = Report::new("fig3", "Fig. 3 — FLOPs per mini-batch (B=16, S=128)")
+        .column("model", ColType::Str)
+        .column("technique", ColType::Str)
+        .column("tflops", ColType::Float)
+        .column("fwd_share", ColType::Float)
+        .meta("seq", 128)
+        .meta("minibatch", 16);
+    for row in fig3_rows() {
+        r.push(vec![
+            Cell::Str(row.model),
+            Cell::Str(row.technique),
+            Cell::Float(row.tflops),
+            Cell::Float(row.fwd_share),
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_fig3() {
+    print!("{}", fig3_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -90,7 +124,7 @@ pub struct Table1Row {
     pub total_gb: f64,
 }
 
-pub fn table1() -> Vec<Table1Row> {
+fn table1_rows() -> Vec<Table1Row> {
     let spec = ModelSpec::t5_large();
     let wl = Workload::paper_default();
     let mut rows = Vec::new();
@@ -122,18 +156,41 @@ pub fn table1() -> Vec<Table1Row> {
     rows
 }
 
-pub fn print_table1() {
-    println!("Table I — memory breakdown, T5-Large, B=16, S=128 (GB)");
-    println!(
-        "{:<12} {:>10} {:>9} {:>12} {:>10} {:>8}",
-        "technique", "train(M)", "weights", "activations", "gradients", "total"
-    );
-    for r in table1() {
-        println!(
-            "{:<12} {:>10.1} {:>9.2} {:>12.2} {:>10.2} {:>8.2}",
-            r.technique, r.trainable_m, r.weights_gb, r.activations_gb, r.gradients_gb, r.total_gb
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn table1() -> Vec<Table1Row> {
+    table1_rows()
+}
+
+/// Table I as a typed [`Report`].
+pub fn table1_report() -> Report {
+    let mut r = Report::new("table1", "Table I — memory breakdown, T5-Large, B=16, S=128 (GB)")
+        .column("technique", ColType::Str)
+        .column("trainable_m", ColType::Float)
+        .column("weights_gb", ColType::Float)
+        .column("activations_gb", ColType::Float)
+        .column("gradients_gb", ColType::Float)
+        .column("total_gb", ColType::Float)
+        .meta("model", "T5-Large")
+        .meta("seq", 128)
+        .meta("minibatch", 16);
+    for row in table1_rows() {
+        r.push(vec![
+            Cell::Str(row.technique),
+            Cell::Float(row.trainable_m),
+            Cell::Float(row.weights_gb),
+            Cell::Float(row.activations_gb),
+            Cell::Float(row.gradients_gb),
+            Cell::Float(row.total_gb),
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_table1() {
+    print!("{}", table1_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -149,7 +206,7 @@ pub struct Table5Row {
     pub hours: Vec<Option<f64>>,
 }
 
-pub fn table5() -> Vec<Table5Row> {
+fn table5_rows() -> Vec<Table5Row> {
     let env = Env::env_a();
     let tasks = Task::all();
     // flatten every (model, technique, system) row, then evaluate the
@@ -195,27 +252,42 @@ pub fn table5() -> Vec<Table5Row> {
     })
 }
 
-pub fn print_table5() {
-    println!("Table V — fine-tuning durations in hours, Env.A (4x Nano-H)");
-    println!("  (3 epochs for MRPC/STS-B, 1 epoch for SST-2/QNLI; OOM = out of memory)");
-    println!(
-        "{:<12} {:<18} {:<14} {:>8} {:>8} {:>8} {:>8}",
-        "model", "technique", "system", "MRPC", "STS-B", "SST-2", "QNLI"
-    );
-    for r in table5() {
-        let cells: Vec<String> = r
-            .hours
-            .iter()
-            .map(|h| match h {
-                Some(v) => format!("{v:.2}"),
-                None => "OOM".into(),
-            })
-            .collect();
-        println!(
-            "{:<12} {:<18} {:<14} {:>8} {:>8} {:>8} {:>8}",
-            r.model, r.technique, r.system, cells[0], cells[1], cells[2], cells[3]
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn table5() -> Vec<Table5Row> {
+    table5_rows()
+}
+
+/// Table V as a typed [`Report`] — one `Float` hours column per GLUE
+/// task, `Missing` for the paper's OOM cells.
+pub fn table5_report() -> Report {
+    let mut r = Report::new("table5", "Table V — fine-tuning durations in hours, Env.A (4x Nano-H)")
+        .column("model", ColType::Str)
+        .column("technique", ColType::Str)
+        .column("system", ColType::Str)
+        .meta("env", "Env.A")
+        .meta("seq", TABLE_SEQ)
+        .meta("minibatch", 16)
+        .meta("epochs", "3 for MRPC/STS-B, 1 for SST-2/QNLI");
+    for task in Task::all() {
+        r = r.column(task.name(), ColType::Float);
     }
+    for row in table5_rows() {
+        let mut cells = vec![
+            Cell::Str(row.model),
+            Cell::Str(row.technique),
+            Cell::Str(row.system),
+        ];
+        cells.extend(row.hours.into_iter().map(|h| Cell::opt(h, Cell::Float)));
+        r.push(cells);
+    }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_table5() {
+    print!("{}", table5_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -230,7 +302,7 @@ pub struct Fig12Row {
     pub hours: Option<f64>,
 }
 
-pub fn fig12() -> Vec<Fig12Row> {
+fn fig12_rows() -> Vec<Fig12Row> {
     let env = Env::env_b();
     let mut combos: Vec<(ModelSpec, usize, System, Method)> = Vec::new();
     for spec in ModelSpec::paper_models() {
@@ -261,34 +333,53 @@ pub fn fig12() -> Vec<Fig12Row> {
     })
 }
 
-pub fn print_fig12() {
-    println!("Fig. 12 — total fine-tuning time on MRPC, Env.B (heterogeneous)");
-    println!(
-        "{:<12} {:<14} {:>7} {:>10} {:>14}",
-        "model", "system", "epochs", "hours", "vs PAC+ (x)"
-    );
-    let rows = fig12();
-    for spec in ModelSpec::paper_models() {
-        for epochs in [1usize, 3] {
-            let pac = rows
-                .iter()
-                .find(|r| r.model == spec.name && r.epochs == epochs && r.system == "PAC+")
-                .and_then(|r| r.hours)
-                .unwrap_or(f64::NAN);
-            for r in rows.iter().filter(|r| r.model == spec.name && r.epochs == epochs) {
-                match r.hours {
-                    Some(h) => println!(
-                        "{:<12} {:<14} {:>7} {:>10.2} {:>13.1}x",
-                        r.model, r.system, r.epochs, h, h / pac
-                    ),
-                    None => println!(
-                        "{:<12} {:<14} {:>7} {:>10} {:>14}",
-                        r.model, r.system, r.epochs, "OOM", "-"
-                    ),
-                }
-            }
-        }
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn fig12() -> Vec<Fig12Row> {
+    fig12_rows()
+}
+
+/// Fig. 12 as a typed [`Report`], with the derived `vs_pacplus`
+/// [`ColType::Speedup`] column (PAC+ rows read `1.00x`).
+pub fn fig12_report() -> Report {
+    let rows = fig12_rows();
+    let mut r = Report::new(
+        "fig12",
+        "Fig. 12 — total fine-tuning time on MRPC, Env.B (heterogeneous)",
+    )
+    .column("model", ColType::Str)
+    .column("system", ColType::Str)
+    .column("epochs", ColType::Int)
+    .column("hours", ColType::Float)
+    .column("vs_pacplus", ColType::Speedup)
+    .meta("env", "Env.B")
+    .meta("task", "MRPC")
+    .meta("seq", TABLE_SEQ)
+    .meta("minibatch", 16);
+    for row in &rows {
+        let pac = rows
+            .iter()
+            .find(|p| p.model == row.model && p.epochs == row.epochs && p.system == "PAC+")
+            .and_then(|p| p.hours);
+        let speedup = match (row.hours, pac) {
+            (Some(h), Some(p)) if p > 0.0 => Cell::Speedup(h / p),
+            _ => Cell::Missing,
+        };
+        r.push(vec![
+            Cell::Str(row.model.clone()),
+            Cell::Str(row.system.clone()),
+            Cell::Int(row.epochs as i64),
+            Cell::opt(row.hours, Cell::Float),
+            speedup,
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_fig12() {
+    print!("{}", fig12_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -306,7 +397,7 @@ pub struct Fig13Row {
     pub gradients: u64,
 }
 
-pub fn fig13() -> Vec<Fig13Row> {
+fn fig13_rows() -> Vec<Fig13Row> {
     let env = Env::nanos(8);
     let spec = ModelSpec::t5_large();
     let wl = Workload::paper_default();
@@ -321,13 +412,12 @@ pub fn fig13() -> Vec<Fig13Row> {
         let prof = profile(&spec, method, wl.seq);
         let opts = PlannerOptions { microbatch: 4, n_microbatches: 4, ..Default::default() };
         let sample_time = plan(&prof, &env, &opts).ok().map(|p| {
-            let t = if method.skips_backbone_with_cache() {
+            if method.skips_backbone_with_cache() {
                 crate::sched::training::epoch_time_cached(&prof, &env, 16, 16) / 16.0
             } else {
                 crate::sched::simulate_minibatch(&p, &prof, &env.network).minibatch_time
                     / p.minibatch_samples() as f64
-            };
-            t
+            }
         });
         // single-device-equivalent memory breakdown (paper reports the
         // per-device peak across the cluster; we report the cost-model
@@ -351,22 +441,41 @@ pub fn fig13() -> Vec<Fig13Row> {
     rows
 }
 
-pub fn print_fig13() {
-    println!("Fig. 13 — per-sample time & per-device memory (8x Nano-H, T5-Large)");
-    println!(
-        "{:<12} {:>14} {:>12} {:>12} {:>12}",
-        "technique", "s/sample", "weights", "acts", "grads"
-    );
-    for r in fig13() {
-        println!(
-            "{:<12} {:>14} {:>12} {:>12} {:>12}",
-            r.technique,
-            r.sample_time.map(|t| format!("{t:.3}")).unwrap_or("OOM".into()),
-            fmt_bytes(r.weights),
-            fmt_bytes(r.activations),
-            fmt_bytes(r.gradients)
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn fig13() -> Vec<Fig13Row> {
+    fig13_rows()
+}
+
+/// Fig. 13 as a typed [`Report`].
+pub fn fig13_report() -> Report {
+    let mut r = Report::new(
+        "fig13",
+        "Fig. 13 — per-sample time & per-device memory (8x Nano-H, T5-Large)",
+    )
+    .column("technique", ColType::Str)
+    .column("sample_time", ColType::Secs)
+    .column("weights", ColType::Bytes)
+    .column("activations", ColType::Bytes)
+    .column("gradients", ColType::Bytes)
+    .meta("env", "8xNano-H")
+    .meta("model", "T5-Large");
+    for row in fig13_rows() {
+        r.push(vec![
+            Cell::Str(row.technique),
+            Cell::opt(row.sample_time, Cell::Secs),
+            Cell::Bytes(row.weights),
+            Cell::Bytes(row.activations),
+            Cell::Bytes(row.gradients),
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_fig13() {
+    print!("{}", fig13_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -380,7 +489,7 @@ pub struct Fig15Row {
     pub total_gb: f64,
 }
 
-pub fn fig15() -> Vec<Fig15Row> {
+fn fig15_rows() -> Vec<Fig15Row> {
     // a family of T5-style models of growing size (paper: varies hidden
     // size / layers / heads)
     let family: Vec<ModelSpec> = vec![
@@ -411,12 +520,34 @@ pub fn fig15() -> Vec<Fig15Row> {
     rows
 }
 
-pub fn print_fig15() {
-    println!("Fig. 15 — fine-tuning memory vs model size (GB)");
-    println!("{:<10} {:<14} {:>10}", "params(M)", "technique", "total GB");
-    for r in fig15() {
-        println!("{:<10.0} {:<14} {:>10.2}", r.params_m, r.technique, r.total_gb);
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn fig15() -> Vec<Fig15Row> {
+    fig15_rows()
+}
+
+/// Fig. 15 as a typed [`Report`].
+pub fn fig15_report() -> Report {
+    let mut r = Report::new("fig15", "Fig. 15 — fine-tuning memory vs model size (GB)")
+        .column("params_m", ColType::Float)
+        .column("technique", ColType::Str)
+        .column("total_gb", ColType::Float)
+        .meta("seq", 128)
+        .meta("minibatch", 16);
+    for row in fig15_rows() {
+        r.push(vec![
+            Cell::Float(row.params_m),
+            Cell::Str(row.technique),
+            Cell::Float(row.total_gb),
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_fig15() {
+    print!("{}", fig15_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -434,7 +565,7 @@ pub struct Fig16Row {
     pub weight_mem: Option<u64>,
 }
 
-pub fn fig16() -> Vec<Fig16Row> {
+fn fig16_rows() -> Vec<Fig16Row> {
     let mut combos: Vec<(ModelSpec, usize, System)> = Vec::new();
     for spec in ModelSpec::paper_models() {
         for n in 2..=8usize {
@@ -472,22 +603,41 @@ pub fn fig16() -> Vec<Fig16Row> {
     })
 }
 
-pub fn print_fig16() {
-    println!("Fig. 16 — throughput & weight memory, 2-8 Nano-H, Parallel Adapters");
-    println!(
-        "{:<12} {:>4} {:<14} {:>14} {:>12}",
-        "model", "n", "system", "samples/s", "w-mem/dev"
-    );
-    for r in fig16() {
-        println!(
-            "{:<12} {:>4} {:<14} {:>14} {:>12}",
-            r.model,
-            r.n_devices,
-            r.system,
-            r.throughput.map(|t| format!("{t:.2}")).unwrap_or("OOM".into()),
-            r.weight_mem.map(fmt_bytes).unwrap_or("-".into())
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn fig16() -> Vec<Fig16Row> {
+    fig16_rows()
+}
+
+/// Fig. 16 as a typed [`Report`].
+pub fn fig16_report() -> Report {
+    let mut r = Report::new(
+        "fig16",
+        "Fig. 16 — throughput & weight memory, 2-8 Nano-H, Parallel Adapters",
+    )
+    .column("model", ColType::Str)
+    .column("n_devices", ColType::Int)
+    .column("system", ColType::Str)
+    .column("throughput", ColType::Float)
+    .column("weight_mem", ColType::Bytes)
+    .meta("envs", "2-8 x Nano-H")
+    .meta("seq", 128);
+    for row in fig16_rows() {
+        r.push(vec![
+            Cell::Str(row.model),
+            Cell::Int(row.n_devices as i64),
+            Cell::Str(row.system),
+            Cell::opt(row.throughput, Cell::Float),
+            Cell::opt(row.weight_mem, Cell::Bytes),
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_fig16() {
+    print!("{}", fig16_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -502,7 +652,7 @@ pub struct Fig17Row {
     pub stages: usize,
 }
 
-pub fn fig17() -> Vec<Fig17Row> {
+fn fig17_rows() -> Vec<Fig17Row> {
     let mut rows = Vec::new();
     for spec in ModelSpec::paper_models() {
         for n in 2..=8usize {
@@ -526,12 +676,35 @@ pub fn fig17() -> Vec<Fig17Row> {
     rows
 }
 
-pub fn print_fig17() {
-    println!("Fig. 17 — PAC+ device groupings (hybrid parallelism)");
-    println!("{:<12} {:>4} {:>7}  {}", "model", "n", "stages", "grouping");
-    for r in fig17() {
-        println!("{:<12} {:>4} {:>7}  {}", r.model, r.n_devices, r.stages, r.grouping);
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn fig17() -> Vec<Fig17Row> {
+    fig17_rows()
+}
+
+/// Fig. 17 as a typed [`Report`].
+pub fn fig17_report() -> Report {
+    let mut r = Report::new("fig17", "Fig. 17 — PAC+ device groupings (hybrid parallelism)")
+        .column("model", ColType::Str)
+        .column("n_devices", ColType::Int)
+        .column("stages", ColType::Int)
+        .column("grouping", ColType::Str)
+        .meta("envs", "2-8 x Nano-H");
+    for row in fig17_rows() {
+        r.push(vec![
+            Cell::Str(row.model),
+            Cell::Int(row.n_devices as i64),
+            Cell::Int(row.stages as i64),
+            Cell::Str(row.grouping),
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_fig17() {
+    print!("{}", fig17_report().to_text());
 }
 
 // ---------------------------------------------------------------------------
@@ -547,7 +720,7 @@ pub struct Fig18Row {
     pub reduction: f64,
 }
 
-pub fn fig18() -> Vec<Fig18Row> {
+fn fig18_rows() -> Vec<Fig18Row> {
     let env = Env::env_a();
     let mut rows = Vec::new();
     for spec in ModelSpec::paper_models() {
@@ -579,18 +752,41 @@ pub fn fig18() -> Vec<Fig18Row> {
     rows
 }
 
-pub fn print_fig18() {
-    println!("Fig. 18 — fine-tuning time with/without activation cache (MRPC, Env.A)");
-    println!(
-        "{:<12} {:>7} {:>12} {:>12} {:>11}",
-        "model", "epochs", "no-cache(h)", "cache(h)", "reduction"
-    );
-    for r in fig18() {
-        println!(
-            "{:<12} {:>7} {:>12.2} {:>12.2} {:>10.0}%",
-            r.model, r.epochs, r.hours_no_cache, r.hours_cache, r.reduction * 100.0
-        );
+#[deprecated(note = "typed-row surface kept for one release: resolve the experiment \
+                     by name through exp::ExperimentRegistry and consume the Report")]
+pub fn fig18() -> Vec<Fig18Row> {
+    fig18_rows()
+}
+
+/// Fig. 18 as a typed [`Report`].
+pub fn fig18_report() -> Report {
+    let mut r = Report::new(
+        "fig18",
+        "Fig. 18 — fine-tuning time with/without activation cache (MRPC, Env.A)",
+    )
+    .column("model", ColType::Str)
+    .column("epochs", ColType::Int)
+    .column("hours_no_cache", ColType::Float)
+    .column("hours_cache", ColType::Float)
+    .column("reduction", ColType::Float)
+    .meta("env", "Env.A")
+    .meta("task", "MRPC");
+    for row in fig18_rows() {
+        r.push(vec![
+            Cell::Str(row.model),
+            Cell::Int(row.epochs as i64),
+            Cell::Float(row.hours_no_cache),
+            Cell::Float(row.hours_cache),
+            Cell::Float(row.reduction),
+        ]);
     }
+    r
+}
+
+#[deprecated(note = "print surface kept for one release: render the registry Report \
+                     instead (`pacpp exp run <name>`)")]
+pub fn print_fig18() {
+    print!("{}", fig18_report().to_text());
 }
 
 #[cfg(test)]
@@ -599,7 +795,7 @@ mod tests {
 
     #[test]
     fn fig3_rows_complete() {
-        let rows = fig3();
+        let rows = fig3_rows();
         assert_eq!(rows.len(), 3 * 6);
         // inference < PA < LoRA < Full for every model
         for spec in ModelSpec::paper_models() {
@@ -618,7 +814,7 @@ mod tests {
 
     #[test]
     fn table1_totals() {
-        let rows = table1();
+        let rows = table1_rows();
         let full = rows.iter().find(|r| r.technique == "Full").unwrap();
         assert!((full.total_gb - 10.83).abs() < 1.1);
         let pa_cache = rows.iter().find(|r| r.technique == "P.A.+cache").unwrap();
@@ -627,7 +823,7 @@ mod tests {
 
     #[test]
     fn table5_oom_pattern() {
-        let rows = table5();
+        let rows = table5_rows();
         let find = |model: &str, tech: &str, sys_prefix: &str| {
             rows.iter()
                 .find(|r| r.model == model && r.technique == tech && r.system.starts_with(sys_prefix))
@@ -663,7 +859,7 @@ mod tests {
 
     #[test]
     fn fig12_speedup_band() {
-        let rows = fig12();
+        let rows = fig12_rows();
         // PAC+ vs HetPipe speedups: paper reports 3.2-9.7x (1 ep) and
         // 7.6-14.7x (3 ep); assert the shape (>2x, growing with epochs)
         for spec in ModelSpec::paper_models() {
@@ -685,8 +881,25 @@ mod tests {
     }
 
     #[test]
+    fn fig12_report_speedup_column_matches_hours() {
+        let rep = fig12_report();
+        for i in 0..rep.n_rows() {
+            let (hours, speedup) =
+                (rep.cell(i, "hours").unwrap(), rep.cell(i, "vs_pacplus").unwrap());
+            if rep.cell(i, "system").and_then(Cell::as_str) == Some("PAC+") {
+                if let Some(s) = speedup.as_f64() {
+                    assert!((s - 1.0).abs() < 1e-12, "PAC+ speedup vs itself is 1.0");
+                }
+            }
+            if hours.is_missing() {
+                assert!(speedup.is_missing(), "row {i}: no hours => no speedup");
+            }
+        }
+    }
+
+    #[test]
     fn fig16_shapes() {
-        let rows = fig16();
+        let rows = fig16_rows();
         // DP OOMs for T5-Large at every n: the full replica alone exceeds
         // a Nano's budget (the paper additionally reports BART-Large DP
         // OOM; our memory model puts BART-Large PA replicas just under
@@ -721,7 +934,7 @@ mod tests {
 
     #[test]
     fn fig17_groupings_scale() {
-        let rows = fig17();
+        let rows = fig17_rows();
         assert!(!rows.is_empty());
         for r in &rows {
             assert!(r.stages <= r.n_devices);
@@ -739,7 +952,7 @@ mod tests {
 
     #[test]
     fn fig18_monotone_reduction() {
-        let rows = fig18();
+        let rows = fig18_rows();
         for spec in ModelSpec::paper_models() {
             let series: Vec<&Fig18Row> =
                 rows.iter().filter(|r| r.model == spec.name).collect();

@@ -33,7 +33,7 @@
 //! | [`exec`]    | real multi-threaded hybrid-parallel training engine |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
 //! | [`data`]    | synthetic GLUE-like workload generators |
-//! | [`exp`]     | harnesses regenerating every paper table and figure |
+//! | [`exp`]     | typed `Experiment`/`Report` API + name-addressed registry of every paper table/figure |
 //! | [`util`]    | JSON, RNG, CLI, bench, property-testing (offline-image stand-ins) |
 //!
 //! ## Adding a new parallelism strategy
@@ -59,6 +59,34 @@
 //! The CLI (`pacpp simulate --system <name>`, `pacpp strategies`) and the
 //! experiment tables resolve strategies by registry name, so a registered
 //! strategy is immediately addressable everywhere.
+//!
+//! ## Adding a new experiment
+//!
+//! The evaluation surface is open the same way: every table, figure and
+//! ablation is an [`exp::Experiment`] producing a typed [`exp::Report`]
+//! (named columns — `Str`/`Int`/`Float`/`Bytes`/`Secs`/`Speedup` — rows
+//! of cells, and env/model/strategy metadata) that renders as text, JSON
+//! or CSV. To add one (say, a new scenario grid):
+//!
+//! 1. implement the trait — [`name`](exp::Experiment::name) (stable
+//!    registry name), optional [`aliases`](exp::Experiment::aliases) /
+//!    [`description`](exp::Experiment::description), and
+//!    [`run`](exp::Experiment::run), which builds a [`exp::Report`]
+//!    (`Report::new(..).column(..)` then `push` typed rows — arity and
+//!    types are checked). Draw shared inputs (artifact runtime, training
+//!    budget) from the [`exp::ExpContext`]. Set
+//!    [`parallel_safe`](exp::Experiment::parallel_safe) to `false` only
+//!    if the experiment mutates process-global state (real training);
+//! 2. register it: [`exp::ExperimentRegistry::register`] on top of
+//!    [`with_defaults`](exp::ExperimentRegistry::with_defaults) — or add
+//!    it to `with_defaults` if it should ship by default;
+//! 3. run `cargo test`: the registry tests pin the default line-up, and
+//!    `tests/exp_golden.rs` shows how to golden-test a report (JSON
+//!    round-trip via [`exp::Report::from_json`] included).
+//!
+//! A registered experiment is immediately listed by `pacpp exp list`,
+//! runs by name (`pacpp exp run <name> --format json --out FILE`), and
+//! participates in `pacpp exp all` and the bench harness.
 
 pub mod baselines;
 pub mod cache;

@@ -7,8 +7,11 @@
 //! pacpp simulate --env env_a --model t5-base --samples 3668 --epochs 3
 //!                [--system pac+|dp|pp|standalone|asteroid|hetpipe|pac-homo]
 //! pacpp strategies                 (list the registered strategies)
-//! pacpp table    1|5|6|7           (regenerate a paper table)
-//! pacpp fig      3|12|13|15|16|17|18
+//! pacpp exp      list              (list the registered experiments)
+//! pacpp exp      run <name> [--format text|json|csv] [--out FILE]
+//! pacpp exp      all        [--format text|json|csv] [--out FILE]
+//! pacpp table    1|5|6|7           (deprecated alias for `exp run table<N>`)
+//! pacpp fig      3|12|...|18       (deprecated alias for `exp run fig<N>`)
 //! pacpp train    --artifacts artifacts/small --epochs 4 [--pipeline N] [--quant int8]
 //! pacpp info     --artifacts artifacts/tiny  (dump manifest summary)
 //! ```
@@ -18,7 +21,7 @@ use std::sync::Arc;
 use pacpp::cluster::Env;
 use pacpp::data::SyntheticTask;
 use pacpp::exec::{self, TrainOptions};
-use pacpp::exp;
+use pacpp::exp::{self, ExpContext, ExperimentRegistry, Format, Report};
 use pacpp::model::graph::LayerGraph;
 use pacpp::model::{Method, ModelSpec, Precision};
 use pacpp::planner::{plan, PlannerOptions};
@@ -45,13 +48,14 @@ fn main() -> anyhow::Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("strategies") => cmd_strategies(),
+        Some("exp") => cmd_exp(&args),
         Some("table") => cmd_table(&args),
         Some("fig") => cmd_fig(&args),
         Some("train") => cmd_train(&args),
         Some("timeline") => cmd_timeline(&args),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: pacpp <plan|simulate|strategies|table|fig|train|info> [options]");
+            eprintln!("usage: pacpp <plan|simulate|strategies|exp|table|fig|train|info> [options]");
             eprintln!("see rust/src/main.rs docs for options");
             Ok(())
         }
@@ -184,55 +188,245 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_table(args: &Args) -> anyhow::Result<()> {
-    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
-    match which {
-        "1" => exp::print_table1(),
-        "5" => exp::print_table5(),
-        "6" | "7" => {
-            let rt = Arc::new(Runtime::load(args.get_or("artifacts", "artifacts/small"))?);
-            let budget = exp::accuracy::Budget::default();
-            if which == "6" {
-                exp::accuracy::print_table6(&rt, budget)?;
-            } else {
-                exp::accuracy::print_table7(&rt, budget)?;
+/// The experiment registry: `pacpp exp <list|run <name>|all>`.
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let registry = ExperimentRegistry::with_defaults();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => {
+            println!("registered experiments:");
+            for e in registry.iter() {
+                let aliases = e.aliases().join(", ");
+                println!("  {:<20} [{aliases}]", e.name());
+                if !e.description().is_empty() {
+                    println!("  {:<20} {}", "", e.description());
+                }
             }
+            Ok(())
         }
-        "all" => {
-            exp::print_table1();
-            exp::print_table5();
+        Some("run") => {
+            let names = &args.positional[1..];
+            if names.is_empty() {
+                anyhow::bail!(
+                    "usage: pacpp exp run <name...> [--format text|json|csv] [--out FILE]"
+                );
+            }
+            run_experiments(&registry, names, args)
         }
-        other => eprintln!("unknown table {other} (1|5|6|7|all)"),
+        Some("all") => {
+            let format = parse_format(args)?;
+            ensure_csv_single(format, registry.len())?;
+            validate_out(args)?;
+            let ctx = exp_context(args);
+            // only a genuinely absent artifact set downgrades a
+            // requires-artifacts failure to a skip; when artifacts are
+            // present, a table6/7/fig14 error is a real regression
+            let artifacts_missing = !std::path::Path::new(&ctx.artifacts).exists();
+            let mut reports = Vec::new();
+            let mut failed = Vec::new();
+            for (name, res) in registry.run_all(&ctx) {
+                match res {
+                    Ok(r) => reports.push(r),
+                    Err(e) => {
+                        let skippable = artifacts_missing
+                            && registry
+                                .get(&name)
+                                .map(|x| x.requires_artifacts())
+                                .unwrap_or(false);
+                        if skippable {
+                            eprintln!("{name}: skipped, no artifacts at {} ({e:#})", ctx.artifacts);
+                        } else {
+                            eprintln!("{name}: {e:#}");
+                            failed.push(name);
+                        }
+                    }
+                }
+            }
+            // failure tally counts only attempted experiments (skips
+            // excluded), but `exp all` always emits a JSON array so the
+            // document shape never depends on runtime outcomes
+            let attempted = reports.len() + failed.len();
+            emit_outcome(reports, failed, attempted, true, format, args)
+        }
+        other => anyhow::bail!(
+            "unknown exp subcommand {:?}; usage: pacpp exp <list|run <name>|all> \
+             [--format text|json|csv] [--out FILE]",
+            other.unwrap_or("<none>")
+        ),
+    }
+}
+
+fn exp_context(args: &Args) -> ExpContext {
+    ExpContext::with_artifacts(args.get_or("artifacts", "artifacts/small"))
+}
+
+fn parse_format(args: &Args) -> anyhow::Result<Format> {
+    let spec = args.get_or("format", "text");
+    Format::parse(spec).ok_or_else(|| anyhow::anyhow!("unknown format {spec:?} (text|json|csv)"))
+}
+
+/// Concatenated CSV sections would not be machine-readable (differing
+/// headers per report); JSON handles many reports in one document, CSV
+/// does not. Checked before running and again before emitting.
+fn ensure_csv_single(format: Format, n_reports: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        format != Format::Csv || n_reports == 1,
+        "csv renders a single report; run experiments one at a time or use --format json"
+    );
+    Ok(())
+}
+
+/// The `--out` destination must be writable *before* experiments run —
+/// minutes of work must not be lost to a mistyped directory.
+fn validate_out(args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.get("out") {
+        let p = std::path::Path::new(path);
+        anyhow::ensure!(!p.is_dir(), "--out {path}: is a directory, expected a file path");
+        if let Some(dir) = p.parent() {
+            anyhow::ensure!(
+                dir.as_os_str().is_empty() || dir.is_dir(),
+                "--out {path}: directory {} does not exist",
+                dir.display()
+            );
+        }
     }
     Ok(())
 }
 
-fn cmd_fig(args: &Args) -> anyhow::Result<()> {
-    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
-    match which {
-        "3" => exp::print_fig3(),
-        "12" => exp::print_fig12(),
-        "13" => exp::print_fig13(),
-        "14" => {
-            let rt = Arc::new(Runtime::load(args.get_or("artifacts", "artifacts/small"))?);
-            exp::accuracy::print_fig14(&rt, exp::accuracy::Budget::default())?;
+/// Run registry experiments by name and render them. Names, the output
+/// format and the `--out` destination are validated *before* anything
+/// runs — a typo in the last name or in `--format` must not cost a
+/// full run of the first — and a mid-run failure (e.g. missing
+/// artifacts) still emits the reports that did succeed before exiting
+/// nonzero. A name and its alias resolve to one run, not two.
+fn run_experiments(
+    registry: &ExperimentRegistry,
+    names: &[impl AsRef<str>],
+    args: &Args,
+) -> anyhow::Result<()> {
+    let format = parse_format(args)?;
+    validate_out(args)?;
+    let mut experiments = Vec::new();
+    for name in names {
+        let e = registry.get_or_err(name.as_ref())?;
+        // dedup: `exp run table5 hours` runs table5 once
+        if !experiments.iter().any(|x| x.name() == e.name()) {
+            experiments.push(e);
         }
-        "15" => exp::print_fig15(),
-        "16" => exp::print_fig16(),
-        "17" => exp::print_fig17(),
-        "18" => exp::print_fig18(),
-        "all" => {
-            exp::print_fig3();
-            exp::print_fig12();
-            exp::print_fig13();
-            exp::print_fig15();
-            exp::print_fig16();
-            exp::print_fig17();
-            exp::print_fig18();
+    }
+    ensure_csv_single(format, experiments.len())?;
+    let ctx = exp_context(args);
+    let mut reports = Vec::new();
+    let mut failed = Vec::new();
+    // independent experiments run concurrently, like `exp all`
+    let results = ExperimentRegistry::run_set(&experiments, &ctx);
+    for (e, res) in experiments.iter().zip(results) {
+        match res {
+            Ok(r) => reports.push(r),
+            Err(err) => {
+                eprintln!("{}: {err:#}", e.name());
+                failed.push(e.name().to_string());
+            }
         }
-        other => eprintln!("unknown fig {other}"),
+    }
+    let n = experiments.len();
+    emit_outcome(reports, failed, n, n > 1, format, args)
+}
+
+/// Shared tail of `exp run`/`exp all`: emit what succeeded, and exit
+/// nonzero if anything failed. Nothing is written (no degenerate empty
+/// document) when every experiment failed. `as_array` follows how many
+/// experiments were REQUESTED, so partial failure cannot flip the JSON
+/// document shape between runs.
+fn emit_outcome(
+    reports: Vec<Report>,
+    failed: Vec<String>,
+    total: usize,
+    as_array: bool,
+    format: Format,
+    args: &Args,
+) -> anyhow::Result<()> {
+    if reports.is_empty() && !failed.is_empty() {
+        anyhow::bail!("every experiment failed: {}", failed.join(", "));
+    }
+    emit_reports(&reports, format, as_array, args)?;
+    anyhow::ensure!(
+        failed.is_empty(),
+        "{} of {} experiment(s) failed: {}",
+        failed.len(),
+        total,
+        failed.join(", ")
+    );
+    Ok(())
+}
+
+/// Render reports in `format` and write to `--out` or stdout. JSON is
+/// round-tripped through `util::json::parse` before it leaves the
+/// process, so a written report file is guaranteed machine-readable.
+fn emit_reports(
+    reports: &[Report],
+    format: Format,
+    as_array: bool,
+    args: &Args,
+) -> anyhow::Result<()> {
+    let rendered = match format {
+        Format::Text => {
+            let texts: Vec<String> = reports.iter().map(Report::to_text).collect();
+            texts.join("\n")
+        }
+        Format::Csv => {
+            ensure_csv_single(format, reports.len())?;
+            reports[0].to_csv()
+        }
+        Format::Json => {
+            let json = if as_array {
+                pacpp::util::json::Json::Arr(reports.iter().map(Report::to_json).collect())
+            } else {
+                reports[0].to_json()
+            };
+            let mut s = json.to_string_pretty();
+            let back = pacpp::util::json::Json::parse(&s)
+                .map_err(|e| anyhow::anyhow!("report json does not parse back: {e}"))?;
+            anyhow::ensure!(back == json, "report json round-trip mismatch");
+            s.push('\n');
+            s
+        }
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &rendered)?;
+            eprintln!("wrote {path} ({} bytes, {})", rendered.len(), format.name());
+        }
+        None => print!("{rendered}"),
     }
     Ok(())
+}
+
+/// Deprecated alias: `pacpp table N` forwards to `exp run tableN`.
+fn cmd_table(args: &Args) -> anyhow::Result<()> {
+    eprintln!("note: `pacpp table` is deprecated; use `pacpp exp run <name>`");
+    let registry = ExperimentRegistry::with_defaults();
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let names: Vec<String> = match which {
+        "all" => vec!["table1".into(), "table5".into()],
+        n => vec![format!("table{n}")],
+    };
+    run_experiments(&registry, &names, args)
+}
+
+/// Deprecated alias: `pacpp fig N` forwards to `exp run figN`.
+fn cmd_fig(args: &Args) -> anyhow::Result<()> {
+    eprintln!("note: `pacpp fig` is deprecated; use `pacpp exp run <name>`");
+    let registry = ExperimentRegistry::with_defaults();
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let names: Vec<String> = match which {
+        // the simulator-backed figures, legacy `fig all` line-up
+        "all" => ["fig3", "fig12", "fig13", "fig15", "fig16", "fig17", "fig18"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        n => vec![format!("fig{n}")],
+    };
+    run_experiments(&registry, &names, args)
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {

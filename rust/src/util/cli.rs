@@ -122,4 +122,60 @@ mod tests {
         assert_eq!(a.get_usize_opt("threads"), Some(3));
         assert_eq!(a.get_usize("threads", 1), 3);
     }
+
+    #[test]
+    fn empty_argv() {
+        let a = Args::parse(vec![]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.positional.is_empty());
+        assert!(a.options.is_empty());
+        assert!(a.flags.is_empty());
+    }
+
+    #[test]
+    fn equals_value_may_contain_equals() {
+        // only the first '=' splits: `--filter key=value` stays intact
+        let a = parse("run --filter a=b --empty=");
+        assert_eq!(a.get("filter"), Some("a=b"));
+        assert_eq!(a.get("empty"), Some(""));
+    }
+
+    #[test]
+    fn flag_followed_by_option_stays_a_flag() {
+        let a = parse("plan --homo --threads 3");
+        assert!(a.flag("homo"));
+        assert!(a.get("homo").is_none());
+        assert_eq!(a.get_usize_opt("threads"), Some(3));
+    }
+
+    #[test]
+    fn negative_number_is_a_value_not_a_flag() {
+        // single-dash tokens don't look like options, so they bind as
+        // the preceding key's value
+        let a = parse("train --lr -0.5");
+        assert!((a.get_f64("lr", 0.0) + 0.5).abs() < 1e-12);
+        assert!(!a.flag("lr"));
+    }
+
+    #[test]
+    fn positionals_interleave_with_options() {
+        let a = parse("exp run table5 --format json --out report.json");
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["run", "table5"]);
+        assert_eq!(a.get("format"), Some("json"));
+        assert_eq!(a.get("out"), Some("report.json"));
+    }
+
+    #[test]
+    fn repeated_option_last_wins() {
+        let a = parse("plan --m 2 --m 4");
+        assert_eq!(a.get_usize_opt("m"), Some(4));
+    }
+
+    #[test]
+    fn repeated_flag_still_answers_true() {
+        let a = parse("bench --quick --quick");
+        assert!(a.flag("quick"));
+        assert_eq!(a.flags.iter().filter(|f| *f == "quick").count(), 2);
+    }
 }

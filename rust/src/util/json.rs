@@ -216,6 +216,28 @@ impl From<bool> for Json {
         Json::Bool(b)
     }
 }
+// Integer conversions go through f64 (the only JSON number type here):
+// exact below ~9e15 (2^53); larger magnitudes silently lose precision.
+// Producers that must round-trip integers exactly (the experiment
+// reports) bound their values accordingly — see exp::report.
+impl From<i64> for Json {
+    fn from(n: i64) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(n: u64) -> Self {
+        Json::Num(n as f64)
+    }
+}
+
+/// Collect an iterator of values into a `Json::Arr` (the experiment
+/// reports serialize column schemas and rows this way).
+impl FromIterator<Json> for Json {
+    fn from_iter<I: IntoIterator<Item = Json>>(iter: I) -> Json {
+        Json::Arr(iter.into_iter().collect())
+    }
+}
 
 /// Build a `Json::Obj` from (key, value) pairs.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -444,5 +466,12 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(42.0).to_string_compact(), "42");
         assert_eq!(Json::Num(0.5).to_string_compact(), "0.5");
+    }
+
+    #[test]
+    fn collect_into_array_and_int_conversions() {
+        let a: Json = (0..3i64).map(Json::from).collect();
+        assert_eq!(a, Json::Arr(vec![Json::Num(0.0), Json::Num(1.0), Json::Num(2.0)]));
+        assert_eq!(Json::from(7u64), Json::Num(7.0));
     }
 }

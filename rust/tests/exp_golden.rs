@@ -1,0 +1,116 @@
+//! Golden tests for the experiment API redesign: the registry-run
+//! [`Report`]s must be **value-identical** to the legacy typed-row
+//! functions they replace (which are deprecated, kept for one release),
+//! and every report must survive a lossless JSON round-trip through
+//! `util::json`.
+//!
+//! The underlying computations are deterministic (the planner's
+//! threaded σ-search is bit-identical to serial — PR 1 golden tests), so
+//! cells are compared exactly, not within a tolerance.
+
+#![allow(deprecated)]
+
+use pacpp::exp::{self, Cell, ExpContext, ExperimentRegistry, Report};
+use pacpp::util::json::Json;
+
+fn run(name: &str) -> Report {
+    ExperimentRegistry::with_defaults()
+        .run(name, &ExpContext::new())
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+fn assert_roundtrips(report: &Report) {
+    let pretty = report.to_json().to_string_pretty();
+    let back = Report::from_json(&Json::parse(&pretty).expect("report json parses"))
+        .expect("report json has report shape");
+    assert_eq!(&back, report, "{}: JSON round-trip must be lossless", report.name);
+}
+
+fn str_cell<'a>(report: &'a Report, row: usize, col: &str) -> &'a str {
+    report
+        .cell(row, col)
+        .and_then(Cell::as_str)
+        .unwrap_or_else(|| panic!("{}: row {row} col {col} not a string", report.name))
+}
+
+#[test]
+fn table5_report_matches_legacy_rows() {
+    let report = run("table5");
+    let legacy = exp::table5();
+    assert_eq!(report.n_rows(), legacy.len());
+    let tasks = ["MRPC", "STS-B", "SST-2", "QNLI"];
+    for (i, row) in legacy.iter().enumerate() {
+        assert_eq!(str_cell(&report, i, "model"), row.model);
+        assert_eq!(str_cell(&report, i, "technique"), row.technique);
+        assert_eq!(str_cell(&report, i, "system"), row.system);
+        for (task, hours) in tasks.iter().zip(&row.hours) {
+            let cell = report.cell(i, task).unwrap();
+            match hours {
+                Some(h) => assert_eq!(cell, &Cell::Float(*h), "row {i} {task}"),
+                None => assert!(cell.is_missing(), "row {i} {task}: OOM maps to Missing"),
+            }
+        }
+    }
+    assert_roundtrips(&report);
+}
+
+#[test]
+fn fig12_report_matches_legacy_rows() {
+    let report = run("fig12");
+    let legacy = exp::fig12();
+    assert_eq!(report.n_rows(), legacy.len());
+    for (i, row) in legacy.iter().enumerate() {
+        assert_eq!(str_cell(&report, i, "model"), row.model);
+        assert_eq!(str_cell(&report, i, "system"), row.system);
+        assert_eq!(
+            report.cell(i, "epochs").unwrap(),
+            &Cell::Int(row.epochs as i64),
+            "row {i}"
+        );
+        match row.hours {
+            Some(h) => assert_eq!(report.cell(i, "hours").unwrap(), &Cell::Float(h), "row {i}"),
+            None => assert!(report.cell(i, "hours").unwrap().is_missing(), "row {i}"),
+        }
+    }
+    assert_roundtrips(&report);
+}
+
+#[test]
+fn fig16_report_matches_legacy_rows() {
+    let report = run("fig16");
+    let legacy = exp::fig16();
+    assert_eq!(report.n_rows(), legacy.len());
+    for (i, row) in legacy.iter().enumerate() {
+        assert_eq!(str_cell(&report, i, "model"), row.model);
+        assert_eq!(str_cell(&report, i, "system"), row.system);
+        assert_eq!(
+            report.cell(i, "n_devices").unwrap(),
+            &Cell::Int(row.n_devices as i64),
+            "row {i}"
+        );
+        match row.throughput {
+            Some(t) => {
+                assert_eq!(report.cell(i, "throughput").unwrap(), &Cell::Float(t), "row {i}")
+            }
+            None => assert!(report.cell(i, "throughput").unwrap().is_missing(), "row {i}"),
+        }
+        match row.weight_mem {
+            Some(w) => {
+                assert_eq!(report.cell(i, "weight_mem").unwrap(), &Cell::Bytes(w), "row {i}")
+            }
+            None => assert!(report.cell(i, "weight_mem").unwrap().is_missing(), "row {i}"),
+        }
+    }
+    assert_roundtrips(&report);
+}
+
+#[test]
+fn sweep_report_roundtrips_in_every_format() {
+    let report = run("sweep");
+    assert_roundtrips(&report);
+    // text and csv render without panicking and carry every row
+    let text = report.to_text();
+    let csv = report.to_csv();
+    assert!(text.lines().count() >= report.n_rows());
+    assert_eq!(csv.lines().count(), report.n_rows() + 1, "header + one line per row");
+}
