@@ -1,0 +1,85 @@
+//! Fleet event-loop throughput benches. Usage:
+//!
+//! ```bash
+//! cargo bench --bench bench_fleet            # all cases
+//! cargo bench --bench bench_fleet -- 10k     # just the 10k-job case
+//! ```
+//!
+//! The `fleet_event_loop_*` cases measure the discrete-event core
+//! (heap, dispatch, accounting) on a stream of uniform jobs — one
+//! planner call total thanks to the oracle's shape memo — and report
+//! derived events/sec and jobs/sec next to the wall-clock summary.
+//! The `_churn` case layers a churn trace on top, adding the
+//! replan/restart paths to the measured loop.
+
+use pacpp::cluster::Env;
+use pacpp::fleet::{
+    generate_churn, simulate_fleet, BestFit, FleetOptions, Job, PreemptReplan,
+};
+use pacpp::model::ModelSpec;
+use pacpp::util::bench::Bench;
+
+/// `n` identical small jobs, one arrival every 30 s: the oracle
+/// memoizes their shape once, so the bench times the event loop, not
+/// the planner.
+fn uniform_jobs(n: usize) -> Vec<Job> {
+    (0..n)
+        .map(|i| Job::new(i, i as f64 * 30.0, ModelSpec::t5_base(), 512, 2))
+        .collect()
+}
+
+/// Horizon long enough that every job in every case completes (the
+/// jobs/sec figure is then jobs-completed per wall-clock second).
+fn opts() -> FleetOptions {
+    FleetOptions { horizon: 1e9, ..Default::default() }
+}
+
+fn main() {
+    let mut b = Bench::new("fleet");
+    let env = Env::nanos(8);
+
+    for n in [1_000usize, 10_000] {
+        let name = format!("fleet_event_loop_{}k_jobs", n / 1_000);
+        if !b.enabled(&name) {
+            continue;
+        }
+        let jobs = uniform_jobs(n);
+        let m = simulate_fleet(&env, &jobs, &[], &BestFit, &opts()).unwrap();
+        assert_eq!(m.completed, n, "bench jobs must all complete");
+        let res = b
+            .run(&name, || simulate_fleet(&env, &jobs, &[], &BestFit, &opts()).unwrap())
+            .cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.0} events/sec, {:.0} jobs/sec ({} events, {} jobs)",
+                m.events as f64 / r.summary.mean,
+                m.completed as f64 / r.summary.mean,
+                m.events,
+                m.completed
+            );
+        }
+    }
+
+    if b.enabled("fleet_event_loop_churn_1k_jobs") {
+        let jobs = uniform_jobs(1_000);
+        // dense churn across the run's active window (arrivals end at
+        // 30 ks; the backlog drains within ~100 ks)
+        let churn = generate_churn(&env, 100_000.0, 20.0, 7);
+        let m = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts()).unwrap();
+        let res = b
+            .run("fleet_event_loop_churn_1k_jobs", || {
+                simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts()).unwrap()
+            })
+            .cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.0} events/sec ({} events, {} completed, {} replans, {} restarts)",
+                m.events as f64 / r.summary.mean,
+                m.events,
+                m.completed,
+                m.replans,
+                m.restarts
+            );
+        }
+    }
+}

@@ -61,6 +61,15 @@ impl DeviceKind {
         self.peak_flops() * self.efficiency()
     }
 
+    /// The same board's low-power mode (identity for the low modes) —
+    /// what a thermal/battery-saver downclock degrades a device to.
+    pub fn low_power(self) -> DeviceKind {
+        match self {
+            DeviceKind::NanoH | DeviceKind::NanoL => DeviceKind::NanoL,
+            DeviceKind::Tx2H | DeviceKind::Tx2L => DeviceKind::Tx2L,
+        }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             DeviceKind::NanoH => "Nano-H",
@@ -132,6 +141,14 @@ mod tests {
         assert!(DeviceKind::Tx2L.peak_flops() < DeviceKind::Tx2H.peak_flops());
         let r = DeviceKind::NanoL.peak_flops() / DeviceKind::NanoH.peak_flops();
         assert!((r - 640.0 / 921.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_power_pairs() {
+        assert_eq!(DeviceKind::NanoH.low_power(), DeviceKind::NanoL);
+        assert_eq!(DeviceKind::NanoL.low_power(), DeviceKind::NanoL);
+        assert_eq!(DeviceKind::Tx2H.low_power(), DeviceKind::Tx2L);
+        assert_eq!(DeviceKind::Tx2L.low_power(), DeviceKind::Tx2L);
     }
 
     #[test]

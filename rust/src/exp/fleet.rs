@@ -1,0 +1,201 @@
+//! The fleet experiments: multi-tenant scheduling grids over
+//! policy × arrival-trace × environment, with and without device churn.
+//!
+//! Each cell is one deterministic [`crate::fleet::simulate_fleet`] run
+//! (fixed seed, shared job count and horizon), so the reports are
+//! bit-identical across runs and machines — diffable with the
+//! `BENCH_*.json` workflow like every other report.
+
+use std::sync::Arc;
+
+use crate::cluster::Env;
+use crate::fleet::{
+    generate_churn, generate_jobs, simulate_fleet, ChurnEvent, FleetMetrics, FleetOptions,
+    PlacementPolicy, PolicyRegistry, TraceKind,
+};
+use crate::util::par_map;
+
+use super::report::{Cell, ColType, Report};
+
+/// Jobs per cell of the experiment grids.
+const GRID_JOBS: usize = 40;
+/// Seed shared by every grid cell (traces differ by kind, not seed).
+const GRID_SEED: u64 = 42;
+/// Churn intensity of the `fleet_churn` grid, events/hour.
+const GRID_CHURN_PER_HOUR: f64 = 2.0;
+
+/// The fleet Report's empty shell (name, title, typed columns). Shared
+/// by both grids, the CLI subcommand and `bench_fleet`, so every
+/// surface emits the same schema.
+pub fn fleet_schema(name: &str, title: &str) -> Report {
+    Report::new(name, title)
+        .column("env", ColType::Str)
+        .column("trace", ColType::Str)
+        .column("policy", ColType::Str)
+        .column("jobs", ColType::Int)
+        .column("completed", ColType::Int)
+        .column("failed", ColType::Int)
+        .column("throughput", ColType::Float) // jobs/hour
+        .column("p50", ColType::Secs)
+        .column("p95", ColType::Secs)
+        .column("p99", ColType::Secs)
+        .column("utilization", ColType::Float)
+        .column("replans", ColType::Int)
+        .column("restarts", ColType::Int)
+        .column("work_lost", ColType::Secs)
+        .column("migration", ColType::Secs)
+}
+
+/// One metrics row in the shared schema.
+pub fn fleet_row(env: &str, trace: &str, policy: &str, jobs: usize, m: &FleetMetrics) -> Vec<Cell> {
+    vec![
+        Cell::Str(env.into()),
+        Cell::Str(trace.into()),
+        Cell::Str(policy.into()),
+        Cell::Int(jobs as i64),
+        Cell::Int(m.completed as i64),
+        Cell::Int(m.failed as i64),
+        Cell::Float(m.jobs_per_hour),
+        Cell::opt(m.latency_p50, Cell::Secs),
+        Cell::opt(m.latency_p95, Cell::Secs),
+        Cell::opt(m.latency_p99, Cell::Secs),
+        Cell::Float(m.utilization),
+        Cell::Int(m.replans as i64),
+        Cell::Int(m.restarts as i64),
+        Cell::Secs(m.work_lost),
+        Cell::Secs(m.migration_overhead),
+    ]
+}
+
+fn grid_report(name: &str, title: &str, churn_per_hour: Option<f64>) -> Report {
+    let envs = [Env::env_a(), Env::env_b()];
+    let registry = PolicyRegistry::with_defaults();
+    let opts = FleetOptions::default();
+
+    // Every registered policy gets a row per env x trace, even when two
+    // policies happen to place identically on a given trace (on a
+    // stable pool Best-fit and Preempt-replan differ only in the
+    // never-invoked churn response): the grid reports what each named
+    // policy does, and guessing behavioral equality across arbitrary
+    // registered policies is not this layer's business.
+    let mut combos: Vec<(&Env, TraceKind, Arc<dyn PlacementPolicy>)> = Vec::new();
+    for env in &envs {
+        for trace in TraceKind::ALL {
+            for policy in registry.iter() {
+                combos.push((env, trace, policy.clone()));
+            }
+        }
+    }
+    let results = par_map(combos.len(), |i| {
+        let (env, trace, policy) = &combos[i];
+        let jobs = generate_jobs(*trace, GRID_JOBS, GRID_SEED);
+        let churn: Vec<ChurnEvent> = match churn_per_hour {
+            Some(rate) => generate_churn(env, opts.horizon, rate, GRID_SEED),
+            None => Vec::new(),
+        };
+        simulate_fleet(env, &jobs, &churn, policy.as_ref(), &opts)
+            .expect("default strategy is registered")
+    });
+
+    let mut report = fleet_schema(name, title)
+        .meta("jobs", GRID_JOBS)
+        .meta("seed", GRID_SEED)
+        .meta("horizon_h", opts.horizon / 3600.0)
+        .meta("strategy", &opts.strategy)
+        .meta(
+            "churn_per_hour",
+            churn_per_hour.map(|r| r.to_string()).unwrap_or_else(|| "0".into()),
+        );
+    for ((env, trace, policy), m) in combos.iter().zip(&results) {
+        report.push(fleet_row(&env.name, trace.name(), policy.name(), GRID_JOBS, m));
+    }
+    report
+}
+
+/// `fleet` — the stable-pool grid: policy × trace × env, no churn.
+pub fn fleet_report() -> Report {
+    grid_report(
+        "fleet",
+        "Fleet — multi-tenant scheduling, policy × trace × env (stable pool)",
+        None,
+    )
+}
+
+/// `fleet_churn` — the same grid under device churn (joins, leaves,
+/// degrades at ~2 events/hour): the replan/restart/work-lost columns
+/// become the story.
+pub fn fleet_churn_report() -> Report {
+    grid_report(
+        "fleet_churn",
+        "Fleet — multi-tenant scheduling under device churn, policy × trace × env",
+        Some(GRID_CHURN_PER_HOUR),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn str_values(rep: &Report, col: &str) -> Vec<String> {
+        (0..rep.n_rows())
+            .filter_map(|i| rep.cell(i, col).and_then(Cell::as_str).map(String::from))
+            .collect()
+    }
+
+    #[test]
+    fn fleet_grid_covers_policies_traces_envs() {
+        let rep = fleet_report();
+        // 2 envs x 3 traces x 3 policies
+        assert_eq!(rep.n_rows(), 18);
+        for (col, want) in [
+            ("env", vec!["Env.A", "Env.B"]),
+            ("trace", vec!["steady", "diurnal", "bursty"]),
+            ("policy", vec!["FIFO-exclusive", "Best-fit", "Preempt-replan"]),
+        ] {
+            let values = str_values(&rep, col);
+            for w in want {
+                assert!(values.iter().any(|v| v == w), "missing {col}={w}");
+            }
+        }
+        for col in ["throughput", "p50", "p95", "p99", "utilization"] {
+            assert!(
+                rep.columns().iter().any(|c| c.name == col),
+                "missing column {col}"
+            );
+        }
+        // a stable pool never replans or restarts
+        for i in 0..rep.n_rows() {
+            assert_eq!(rep.cell(i, "replans"), Some(&Cell::Int(0)), "row {i}");
+            assert_eq!(rep.cell(i, "restarts"), Some(&Cell::Int(0)), "row {i}");
+        }
+    }
+
+    #[test]
+    fn churn_grid_shows_churn_effects() {
+        let rep = fleet_churn_report();
+        assert_eq!(rep.n_rows(), 18);
+        // somewhere in the grid churn must have forced replans (preempt
+        // rows) and restarts (fifo/best-fit rows)
+        let col_sum = |col: &str| -> f64 {
+            (0..rep.n_rows())
+                .filter_map(|i| rep.cell(i, col).and_then(Cell::as_f64))
+                .sum()
+        };
+        assert!(col_sum("replans") > 0.0, "no replans anywhere under churn");
+        assert!(col_sum("restarts") > 0.0, "no restarts anywhere under churn");
+        assert!(col_sum("work_lost") > 0.0, "no work lost anywhere under churn");
+        // every replan pays its cache-migration cost
+        assert!(col_sum("migration") > 0.0, "replans must report migration seconds");
+    }
+
+    #[test]
+    fn reports_are_deterministic() {
+        let a = fleet_report();
+        let b = fleet_report();
+        assert_eq!(a, b);
+        assert_eq!(
+            a.render(crate::exp::Format::Json),
+            b.render(crate::exp::Format::Json)
+        );
+    }
+}

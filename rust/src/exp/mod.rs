@@ -27,6 +27,8 @@
 //! | `ablate_bandwidth`    | LAN vs Wi-Fi sensitivity ablation |
 //! | `ablate_microbatches` | pipelining depth M sweep |
 //! | `sweep`               | registry-only env × model × strategy grid |
+//! | `fleet`               | multi-tenant scheduling: policy × trace × env, stable pool |
+//! | `fleet_churn`         | the same grid under device churn (joins/leaves/degrades) |
 //!
 //! CLI: `pacpp exp list`, `pacpp exp run <name> [--format text|json|csv]
 //! [--out FILE]`, `pacpp exp all`. See the crate docs ("Adding a new
@@ -39,10 +41,12 @@
 
 pub mod ablations;
 pub mod accuracy;
+pub mod fleet;
 pub mod registry;
 pub mod report;
 pub mod tables;
 
+pub use fleet::{fleet_churn_report, fleet_report, fleet_row, fleet_schema};
 pub use registry::{sweep_report, sweep_schema, ExpContext, Experiment, ExperimentRegistry};
 pub use report::{Cell, ColType, Column, Format, Report};
 pub use tables::*;

@@ -281,6 +281,24 @@ impl ExperimentRegistry {
                 requires_artifacts: false,
                 run: |_| Ok(sweep_report()),
             },
+            FnExperiment {
+                name: "fleet",
+                aliases: &["multi-tenant"],
+                description:
+                    "Fleet — multi-tenant scheduling grid, policy x trace x env (stable pool)",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::fleet::fleet_report()),
+            },
+            FnExperiment {
+                name: "fleet_churn",
+                aliases: &["fleet-churn", "churn"],
+                description:
+                    "Fleet — the same grid under device churn (joins/leaves/degrades)",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::fleet::fleet_churn_report()),
+            },
         ];
         for e in defaults {
             r.register(Arc::new(e));
@@ -528,6 +546,8 @@ mod tests {
                 "ablate_bandwidth",
                 "ablate_microbatches",
                 "sweep",
+                "fleet",
+                "fleet_churn",
             ]
         );
     }
@@ -543,6 +563,9 @@ mod tests {
             ("scalability", "fig16"),
             ("schedule", "ablate_schedule"),
             ("grid", "sweep"),
+            ("fleet", "fleet"),
+            ("fleet-churn", "fleet_churn"),
+            ("churn", "fleet_churn"),
         ] {
             assert_eq!(r.get(query).map(|e| e.name()), Some(want), "query {query:?}");
         }

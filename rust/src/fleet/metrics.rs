@@ -1,0 +1,135 @@
+//! [`FleetMetrics`] — what one fleet simulation is judged by.
+
+use crate::util::stats::percentile;
+
+/// Aggregate outcome of one fleet run. All fields are deterministic
+/// functions of (pool, traces, policy, strategy, horizon): the
+/// determinism property test compares whole values with `==`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetMetrics {
+    /// Jobs that finished within the horizon.
+    pub completed: usize,
+    /// Jobs proven unplaceable (infeasible even on the full pool with
+    /// no joins pending).
+    pub failed: usize,
+    /// Jobs still queued or running when the horizon closed.
+    pub incomplete: usize,
+    /// Virtual time at which the simulation ended, seconds.
+    pub makespan: f64,
+    /// Completed jobs per hour of makespan.
+    pub jobs_per_hour: f64,
+    /// Completion-latency (finish − arrival) percentiles over the
+    /// completed jobs, seconds. Empty runs report `None`.
+    pub latency_p50: Option<f64>,
+    pub latency_p95: Option<f64>,
+    pub latency_p99: Option<f64>,
+    /// Mean busy fraction across devices, weighted by each device's
+    /// presence time in the pool.
+    pub utilization: f64,
+    /// Per-device (id, busy/presence) pairs, ascending id.
+    pub per_device_util: Vec<(usize, f64)>,
+    /// Replans triggered by churn (preempt-and-replan policies).
+    pub replans: usize,
+    /// Attempts aborted by churn (restart policies, or replans whose
+    /// survivors could not host the job).
+    pub restarts: usize,
+    /// Wall-clock seconds of job execution discarded by churn-forced
+    /// restarts (the whole placement chain, progress preserved by
+    /// intermediate replans included).
+    pub work_lost: f64,
+    /// Checkpoint/activation-cache migration seconds paid by replans.
+    pub migration_overhead: f64,
+    /// Events processed by the event loop (throughput denominator for
+    /// `bench_fleet`).
+    pub events: usize,
+}
+
+impl FleetMetrics {
+    /// Assemble the derived fields from the raw tallies the simulator
+    /// accumulated. `latencies` need not be sorted.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        mut latencies: Vec<f64>,
+        failed: usize,
+        incomplete: usize,
+        makespan: f64,
+        per_device_util: Vec<(usize, f64, f64)>, // (id, busy, presence)
+        replans: usize,
+        restarts: usize,
+        work_lost: f64,
+        migration_overhead: f64,
+        events: usize,
+    ) -> FleetMetrics {
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let completed = latencies.len();
+        let pct = |q: f64| (!latencies.is_empty()).then(|| percentile(&latencies, q));
+        let (busy, presence) = per_device_util
+            .iter()
+            .fold((0.0, 0.0), |(b, p), (_, db, dp)| (b + db, p + dp));
+        let per_device_util: Vec<(usize, f64)> = per_device_util
+            .into_iter()
+            .map(|(id, b, p)| (id, if p > 0.0 { b / p } else { 0.0 }))
+            .collect();
+        FleetMetrics {
+            completed,
+            failed,
+            incomplete,
+            makespan,
+            jobs_per_hour: if makespan > 0.0 {
+                completed as f64 / (makespan / 3600.0)
+            } else {
+                0.0
+            },
+            latency_p50: pct(0.50),
+            latency_p95: pct(0.95),
+            latency_p99: pct(0.99),
+            utilization: if presence > 0.0 { busy / presence } else { 0.0 },
+            per_device_util,
+            replans,
+            restarts,
+            work_lost,
+            migration_overhead,
+            events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_computes_percentiles_and_rates() {
+        let m = FleetMetrics::assemble(
+            vec![30.0, 10.0, 20.0, 40.0],
+            1,
+            2,
+            7200.0,
+            vec![(0, 3600.0, 7200.0), (1, 1800.0, 3600.0)],
+            3,
+            4,
+            55.0,
+            5.5,
+            99,
+        );
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.incomplete, 2);
+        assert!((m.jobs_per_hour - 2.0).abs() < 1e-12);
+        assert!((m.latency_p50.unwrap() - 25.0).abs() < 1e-9);
+        assert!(m.latency_p99.unwrap() <= 40.0);
+        // utilization is presence-weighted: (3600+1800)/(7200+3600)
+        assert!((m.utilization - 0.5).abs() < 1e-12);
+        assert_eq!(m.per_device_util, vec![(0, 0.5), (1, 0.5)]);
+        assert_eq!((m.replans, m.restarts, m.events), (3, 4, 99));
+    }
+
+    #[test]
+    fn empty_run_has_no_percentiles() {
+        let m = FleetMetrics::assemble(vec![], 0, 0, 0.0, vec![], 0, 0, 0.0, 0.0, 0);
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.latency_p50, None);
+        assert_eq!(m.jobs_per_hour, 0.0);
+        assert_eq!(m.utilization, 0.0);
+    }
+}

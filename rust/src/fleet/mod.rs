@@ -1,0 +1,47 @@
+//! `fleet` — a deterministic discrete-event **multi-tenant scheduler**:
+//! many personal fine-tuning jobs contending for one shared, churning
+//! pool of edge devices.
+//!
+//! The paper fine-tunes one personal LLM on one static pool. The
+//! production target (ROADMAP north star) is many concurrent users on
+//! shared, unreliable edge hardware — which adds exactly the dimensions
+//! this module models:
+//!
+//! * **time** — a virtual clock driven by a binary-heap event loop
+//!   ([`sim`]);
+//! * **arrival** — seeded job-stream generators ([`TraceKind`]:
+//!   steady / diurnal / bursty), each job carrying its own model size,
+//!   dataset size and epoch budget ([`trace`]);
+//! * **churn** — devices join, leave, or degrade to low-power modes
+//!   mid-run ([`ChurnEvent`]);
+//! * **contention** — a queue plus a pluggable [`PlacementPolicy`]
+//!   ([`policy`]): FIFO-exclusive, best-fit device-partitioning, and
+//!   preempt-and-replan-on-churn, resolved by name through a
+//!   [`PolicyRegistry`];
+//! * **accounting** — [`FleetMetrics`]: jobs/hour, p50/p95/p99
+//!   completion latency, per-device utilization, replans, work lost.
+//!
+//! Placement never re-derives timing: every candidate device subset is
+//! costed through the existing [`crate::strategy`] registry (the
+//! paper's DP planner, the 1F1B schedule simulator, and the cached-
+//! epoch model), so fleet-level comparisons inherit the same substrate
+//! as the single-job experiments.
+//!
+//! Entry points: [`simulate_fleet`] (library), the `fleet` /
+//! `fleet_churn` experiments in
+//! [`crate::exp::ExperimentRegistry::with_defaults`], and the
+//! `pacpp fleet` CLI subcommand. See the crate docs ("Adding a
+//! placement policy") for how to register your own policy.
+
+pub mod metrics;
+pub mod policy;
+pub mod sim;
+pub mod trace;
+
+pub use metrics::FleetMetrics;
+pub use policy::{
+    BestFit, ChurnResponse, FifoExclusive, Placement, PlacementCtx, PlacementPolicy,
+    PlanOracle, PolicyRegistry, PreemptReplan,
+};
+pub use sim::{simulate_fleet, FleetOptions, StrategyOracle};
+pub use trace::{generate_churn, generate_jobs, ChurnEvent, ChurnKind, Job, TraceKind};

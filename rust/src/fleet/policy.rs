@@ -1,0 +1,367 @@
+//! The open placement layer: how queued jobs claim devices from the
+//! shared pool, and how running jobs react to churn.
+//!
+//! Mirrors the strategy/experiment registries
+//! ([`crate::strategy::StrategyRegistry`],
+//! [`crate::exp::ExperimentRegistry`]): a scheme is one
+//! [`PlacementPolicy`] impl plus one [`PolicyRegistry::register`] call,
+//! and the fleet experiments and `pacpp fleet` CLI resolve policies by
+//! name. Policies never cost plans themselves — they ask the simulator's
+//! [`PlanOracle`], which routes every candidate subset through the
+//! existing strategy registry (planner + 1F1B simulation), so a policy
+//! is pure placement logic.
+
+use std::sync::Arc;
+
+use crate::cluster::Device;
+
+use super::trace::Job;
+
+/// Plan-costing service the simulator hands to policies: the estimated
+/// end-to-end service time of `job` on exactly `devices`, or `None`
+/// when no feasible plan exists (OOM on every explored configuration).
+pub trait PlanOracle {
+    fn service_time(&self, job: &Job, devices: &[Device]) -> Option<f64>;
+}
+
+/// What a placement decision sees.
+pub struct PlacementCtx<'a> {
+    pub job: &'a Job,
+    /// Idle devices, ascending id order.
+    pub free: &'a [Device],
+    /// Devices present in the pool (busy + free).
+    pub present: usize,
+    /// Jobs currently running.
+    pub running: usize,
+    pub oracle: &'a dyn PlanOracle,
+}
+
+/// A placement decision: the claimed devices and the service time the
+/// oracle quoted for them.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub devices: Vec<Device>,
+    pub service_time: f64,
+}
+
+/// How a policy reacts when churn removes or degrades a device assigned
+/// to a running job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnResponse {
+    /// Abort the attempt: progress is lost and the job re-queues at the
+    /// head of the queue.
+    Restart,
+    /// Keep progress: replan on the surviving devices, paying a
+    /// checkpoint/activation-cache migration cost.
+    Replan,
+}
+
+/// A pluggable multi-tenant placement scheme.
+///
+/// Implementations must be stateless (or internally synchronized): the
+/// registry hands out shared references and the fleet experiments call
+/// policies from worker threads.
+pub trait PlacementPolicy: Send + Sync {
+    /// Canonical display name (stable: used in tables, JSON and the CLI).
+    fn name(&self) -> &str;
+
+    /// Lowercase lookup aliases accepted by [`PolicyRegistry::get`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for `pacpp fleet` docs.
+    fn description(&self) -> &str {
+        ""
+    }
+
+    /// Claim devices for the queue-head job, or `None` to leave it
+    /// queued (the simulator retries at the next state change and
+    /// detects permanently unplaceable jobs itself).
+    fn place(&self, ctx: &PlacementCtx) -> Option<Placement>;
+
+    /// Reaction to churn hitting one of a running job's devices.
+    fn on_churn(&self) -> ChurnResponse {
+        ChurnResponse::Restart
+    }
+}
+
+/// Smallest feasible device subset, slowest-first: conserves the fast
+/// devices for the jobs that need them. Shared by [`BestFit`] and
+/// [`PreemptReplan`].
+fn best_fit_place(ctx: &PlacementCtx) -> Option<Placement> {
+    let mut by_speed: Vec<Device> = ctx.free.to_vec();
+    by_speed.sort_by(|a, b| {
+        a.kind
+            .effective_flops()
+            .partial_cmp(&b.kind.effective_flops())
+            .unwrap()
+            .then(a.id.cmp(&b.id))
+    });
+    for k in 1..=by_speed.len() {
+        let subset = &by_speed[..k];
+        if let Some(t) = ctx.oracle.service_time(ctx.job, subset) {
+            return Some(Placement { devices: subset.to_vec(), service_time: t });
+        }
+    }
+    None
+}
+
+/// One job at a time, FIFO order, exclusive use of the whole pool —
+/// the single-tenant baseline (the paper's own operating model).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FifoExclusive;
+
+impl PlacementPolicy for FifoExclusive {
+    fn name(&self) -> &str {
+        "FIFO-exclusive"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fifo", "fifo-exclusive", "exclusive"]
+    }
+
+    fn description(&self) -> &str {
+        "one job at a time takes every free device; churn restarts the job"
+    }
+
+    fn place(&self, ctx: &PlacementCtx) -> Option<Placement> {
+        if ctx.running > 0 {
+            return None;
+        }
+        let t = ctx.oracle.service_time(ctx.job, ctx.free)?;
+        Some(Placement { devices: ctx.free.to_vec(), service_time: t })
+    }
+}
+
+/// Multi-tenant best-fit partitioning: each job claims the smallest
+/// (slowest-first) feasible subset, so several jobs share the pool.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BestFit;
+
+impl PlacementPolicy for BestFit {
+    fn name(&self) -> &str {
+        "Best-fit"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["best-fit", "bestfit", "bf"]
+    }
+
+    fn description(&self) -> &str {
+        "smallest feasible device subset per job (multi-tenant); churn restarts the job"
+    }
+
+    fn place(&self, ctx: &PlacementCtx) -> Option<Placement> {
+        best_fit_place(ctx)
+    }
+}
+
+/// Best-fit placement + churn-aware execution: when a device is lost or
+/// degraded mid-job, replan on the survivors and keep the progress,
+/// charging the checkpoint/activation-cache migration cost.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PreemptReplan;
+
+impl PlacementPolicy for PreemptReplan {
+    fn name(&self) -> &str {
+        "Preempt-replan"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["preempt", "replan", "preempt-replan"]
+    }
+
+    fn description(&self) -> &str {
+        "best-fit placement; churn replans on survivors, migrating the cache"
+    }
+
+    fn place(&self, ctx: &PlacementCtx) -> Option<Placement> {
+        best_fit_place(ctx)
+    }
+
+    fn on_churn(&self) -> ChurnResponse {
+        ChurnResponse::Replan
+    }
+}
+
+/// An ordered, name-addressed collection of placement policies.
+///
+/// Registration order is preserved (it is the row order of the fleet
+/// experiment grids). Canonical names match case-insensitively; aliases
+/// are lowercase.
+pub struct PolicyRegistry {
+    policies: Vec<Arc<dyn PlacementPolicy>>,
+}
+
+impl PolicyRegistry {
+    /// An empty registry (build-your-own line-ups).
+    pub fn empty() -> PolicyRegistry {
+        PolicyRegistry { policies: Vec::new() }
+    }
+
+    /// The three built-in policies: FIFO-exclusive, Best-fit,
+    /// Preempt-replan.
+    pub fn with_defaults() -> PolicyRegistry {
+        let mut r = PolicyRegistry::empty();
+        r.register(Arc::new(FifoExclusive));
+        r.register(Arc::new(BestFit));
+        r.register(Arc::new(PreemptReplan));
+        r
+    }
+
+    /// Add a policy; replaces an existing entry with the same canonical
+    /// name (so callers can shadow a built-in).
+    pub fn register(&mut self, p: Arc<dyn PlacementPolicy>) {
+        let name = p.name().to_ascii_lowercase();
+        if let Some(slot) =
+            self.policies.iter_mut().find(|e| e.name().to_ascii_lowercase() == name)
+        {
+            *slot = p;
+        } else {
+            self.policies.push(p);
+        }
+    }
+
+    /// Look up by canonical name (case-insensitive) or alias.
+    pub fn get(&self, name: &str) -> Option<&Arc<dyn PlacementPolicy>> {
+        let q = name.to_ascii_lowercase();
+        self.policies
+            .iter()
+            .find(|p| p.name().to_ascii_lowercase() == q)
+            .or_else(|| self.policies.iter().find(|p| p.aliases().contains(&q.as_str())))
+    }
+
+    /// Canonical names in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.policies.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn PlacementPolicy>> {
+        self.policies.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.policies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> Self {
+        PolicyRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeviceKind;
+    use crate::model::ModelSpec;
+
+    /// Oracle pricing a subset feasible iff it has >= `need` devices.
+    struct NeedK {
+        need: usize,
+    }
+
+    impl PlanOracle for NeedK {
+        fn service_time(&self, _job: &Job, devices: &[Device]) -> Option<f64> {
+            if devices.len() >= self.need {
+                Some(100.0 / devices.len() as f64)
+            } else {
+                None
+            }
+        }
+    }
+
+    fn devices(n: usize) -> Vec<Device> {
+        (0..n)
+            .map(|i| {
+                Device::new(i, if i % 2 == 0 { DeviceKind::NanoH } else { DeviceKind::Tx2H })
+            })
+            .collect()
+    }
+
+    fn job() -> Job {
+        Job::new(0, 0.0, ModelSpec::tiny(), 512, 2)
+    }
+
+    #[test]
+    fn defaults_cover_the_lineup() {
+        let r = PolicyRegistry::with_defaults();
+        assert_eq!(r.names(), vec!["FIFO-exclusive", "Best-fit", "Preempt-replan"]);
+        for (query, want) in [
+            ("fifo", "FIFO-exclusive"),
+            ("FIFO-EXCLUSIVE", "FIFO-exclusive"),
+            ("best-fit", "Best-fit"),
+            ("bf", "Best-fit"),
+            ("preempt", "Preempt-replan"),
+            ("replan", "Preempt-replan"),
+        ] {
+            assert_eq!(r.get(query).map(|p| p.name()), Some(want), "query {query:?}");
+        }
+        assert!(r.get("round-robin").is_none());
+    }
+
+    #[test]
+    fn fifo_is_exclusive() {
+        let free = devices(4);
+        let oracle = NeedK { need: 1 };
+        let j = job();
+        let busy_ctx =
+            PlacementCtx { job: &j, free: &free, present: 4, running: 1, oracle: &oracle };
+        assert!(FifoExclusive.place(&busy_ctx).is_none(), "must wait while a job runs");
+        let idle_ctx =
+            PlacementCtx { job: &j, free: &free, present: 4, running: 0, oracle: &oracle };
+        let p = FifoExclusive.place(&idle_ctx).expect("places when idle");
+        assert_eq!(p.devices.len(), 4, "takes the whole pool");
+    }
+
+    #[test]
+    fn best_fit_takes_smallest_slowest_subset() {
+        let free = devices(4); // ids 0,2 Nano (slow); 1,3 TX2 (fast)
+        let oracle = NeedK { need: 2 };
+        let j = job();
+        let ctx = PlacementCtx { job: &j, free: &free, present: 4, running: 1, oracle: &oracle };
+        let p = BestFit.place(&ctx).expect("feasible at k=2");
+        assert_eq!(p.devices.len(), 2);
+        let ids: Vec<usize> = p.devices.iter().map(|d| d.id).collect();
+        assert_eq!(ids, vec![0, 2], "slowest-first: conserve the fast devices");
+    }
+
+    #[test]
+    fn best_fit_none_when_infeasible() {
+        let free = devices(2);
+        let oracle = NeedK { need: 3 };
+        let j = job();
+        let ctx = PlacementCtx { job: &j, free: &free, present: 2, running: 0, oracle: &oracle };
+        assert!(BestFit.place(&ctx).is_none());
+    }
+
+    #[test]
+    fn churn_responses() {
+        assert_eq!(FifoExclusive.on_churn(), ChurnResponse::Restart);
+        assert_eq!(BestFit.on_churn(), ChurnResponse::Restart);
+        assert_eq!(PreemptReplan.on_churn(), ChurnResponse::Replan);
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        struct Shadow;
+        impl PlacementPolicy for Shadow {
+            fn name(&self) -> &str {
+                "Best-fit"
+            }
+            fn place(&self, _ctx: &PlacementCtx) -> Option<Placement> {
+                None
+            }
+        }
+        let mut r = PolicyRegistry::with_defaults();
+        let n = r.len();
+        r.register(Arc::new(Shadow));
+        assert_eq!(r.len(), n, "replace, not append");
+    }
+}

@@ -1,0 +1,731 @@
+//! The deterministic discrete-event fleet simulator.
+//!
+//! A binary-heap event loop over a virtual clock processes three event
+//! classes — job arrivals, job completions, and churn — against a
+//! mutable device pool. Placement is delegated to a
+//! [`PlacementPolicy`]; plan costing is delegated to the
+//! [`StrategyOracle`], which resolves every candidate device subset
+//! through the existing [`crate::strategy`] registry (the paper's
+//! planner + 1F1B schedule simulation + cached-epoch model), so the
+//! fleet layer adds queueing and churn semantics without reimplementing
+//! any timing.
+//!
+//! Determinism: events are ordered by `(time, insertion sequence)` with
+//! a total order on `f64` times, all interior maps are `BTreeMap`s, and
+//! the only randomness lives in the seeded trace generators — the same
+//! `(pool, jobs, churn, policy, options)` tuple always produces a
+//! bit-identical [`FleetMetrics`] (enforced by a property test).
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use crate::cluster::{Device, DeviceKind, Env};
+use crate::model::graph::LayerGraph;
+use crate::model::{Method, Precision};
+use crate::profiler::Profile;
+use crate::sched::training;
+use crate::strategy::{ParallelismStrategy, StrategyRegistry, TrainJob};
+
+use super::metrics::FleetMetrics;
+use super::policy::{ChurnResponse, PlacementCtx, PlacementPolicy, PlanOracle};
+use super::trace::{ChurnEvent, ChurnKind, Job};
+
+/// Knobs of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Registry name of the parallelism strategy used for every
+    /// placement plan (`"pac+"`, `"dp"`, ...).
+    pub strategy: String,
+    /// Virtual-time cutoff, seconds: events beyond it do not run and
+    /// unfinished jobs count as incomplete.
+    pub horizon: f64,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions { strategy: "pac+".into(), horizon: 48.0 * 3600.0 }
+    }
+}
+
+/// Plan-costing oracle over a [`ParallelismStrategy`]: service time of
+/// a job on a device subset via `strategy.run` (hybrid epoch 1 + cache
+/// redistribution + cached epochs), and the churn-migration cost via
+/// the same redistribution model. Results are memoized by job shape ×
+/// device-kind multiset — device *identity* never affects timing, so
+/// repeated shapes (the common case in a fleet) cost one planner call.
+pub struct StrategyOracle<'a> {
+    strategy: &'a dyn ParallelismStrategy,
+    network: crate::cluster::Network,
+    service_memo: RefCell<BTreeMap<String, Option<f64>>>,
+    migration_memo: RefCell<BTreeMap<String, f64>>,
+}
+
+impl<'a> StrategyOracle<'a> {
+    pub fn new(strategy: &'a dyn ParallelismStrategy, network: crate::cluster::Network) -> Self {
+        StrategyOracle {
+            strategy,
+            network,
+            service_memo: RefCell::new(BTreeMap::new()),
+            migration_memo: RefCell::new(BTreeMap::new()),
+        }
+    }
+
+    fn memo_key(job: &Job, devices: &[Device]) -> String {
+        let mut kinds: Vec<&str> = devices.iter().map(|d| d.kind.name()).collect();
+        kinds.sort_unstable();
+        format!(
+            "{}|{}|{}|{}|{}|{}",
+            job.model.name,
+            job.samples,
+            job.epochs,
+            job.seq,
+            job.minibatch,
+            kinds.join(",")
+        )
+    }
+
+    fn sub_env(&self, devices: &[Device]) -> Env {
+        Env {
+            name: "fleet-slice".into(),
+            // renumber so planner device indices are dense regardless of
+            // which pool members were picked
+            devices: devices
+                .iter()
+                .enumerate()
+                .map(|(i, d)| Device::new(i, d.kind))
+                .collect(),
+            network: self.network,
+        }
+    }
+
+    fn profile(&self, job: &Job) -> Profile {
+        Profile::new(LayerGraph::new(job.model.clone()), Method::pa(true), Precision::FP32, job.seq)
+    }
+
+    /// Checkpoint/activation-cache migration cost of re-homing `job`
+    /// onto `devices` mid-run (§V-B redistribution over the survivors).
+    pub fn migration_time(&self, job: &Job, devices: &[Device]) -> f64 {
+        let key = Self::memo_key(job, devices);
+        if let Some(v) = self.migration_memo.borrow().get(&key) {
+            return *v;
+        }
+        let env = self.sub_env(devices);
+        let t = training::redistribution_time(&self.profile(job), &env, job.samples);
+        self.migration_memo.borrow_mut().insert(key, t);
+        t
+    }
+}
+
+impl PlanOracle for StrategyOracle<'_> {
+    fn service_time(&self, job: &Job, devices: &[Device]) -> Option<f64> {
+        if devices.is_empty() {
+            return None;
+        }
+        let key = Self::memo_key(job, devices);
+        if let Some(v) = self.service_memo.borrow().get(&key) {
+            return *v;
+        }
+        let env = self.sub_env(devices);
+        let tj = TrainJob::new(job.samples, job.epochs, job.seq, job.minibatch);
+        let t = self
+            .strategy
+            .run(&self.profile(job), &env, tj)
+            .ok()
+            .map(|r| r.total)
+            .filter(|t| t.is_finite() && *t > 0.0);
+        self.service_memo.borrow_mut().insert(key, t);
+        t
+    }
+}
+
+#[derive(Debug, Clone)]
+enum EventKind {
+    Arrival(usize),
+    Finish { job: usize, token: u64 },
+    Churn(ChurnKind),
+}
+
+#[derive(Debug, Clone)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.to_bits() == other.time.to_bits() && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Whole-job fraction still outstanding after an attempt ran for
+/// `active` seconds. The attempt began with `frac_left` of the job
+/// outstanding, spent its first `migration` seconds moving state (no
+/// progress), and executes whole-job work at one full job per
+/// `service_full` seconds — so progress is measured against the *whole
+/// job*, never against the attempt, and repeated churn can never
+/// re-charge work a previous replan already preserved.
+fn replan_frac_left(frac_left: f64, migration: f64, service_full: f64, active: f64) -> f64 {
+    let worked = (active - migration).max(0.0);
+    let done = if service_full > 0.0 { worked / service_full } else { frac_left };
+    (frac_left - done).clamp(0.0, 1.0)
+}
+
+#[derive(Debug, Clone)]
+struct RunningJob {
+    devices: Vec<usize>,
+    /// Start of the current attempt (reset by replans).
+    start: f64,
+    /// Start of this placement chain (preserved across replans): a
+    /// restart discards everything since this instant, progress kept
+    /// by intermediate replans included.
+    chain_start: f64,
+    finish: f64,
+    /// Fraction of the whole job still outstanding when this attempt
+    /// began: 1.0 on (re)placement, shrinking across replans so that
+    /// repeated churn never re-charges work a previous replan already
+    /// preserved.
+    frac_left: f64,
+    /// Migration prefix of this attempt (no job progress during it).
+    migration: f64,
+    /// Full-job service time quoted for this attempt's device slice.
+    service_full: f64,
+    token: u64,
+}
+
+struct Sim<'a> {
+    jobs: &'a [Job],
+    policy: &'a dyn PlacementPolicy,
+    oracle: StrategyOracle<'a>,
+    horizon: f64,
+
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    now: f64,
+
+    /// Device id → current kind, for every device present in the pool.
+    present: BTreeMap<usize, DeviceKind>,
+    /// Device id → running job id, for busy devices.
+    assigned: BTreeMap<usize, usize>,
+    queue: VecDeque<usize>,
+    running: BTreeMap<usize, RunningJob>,
+    /// Per-job finish-token generation: stale Finish events are skipped.
+    tokens: Vec<u64>,
+    pending_joins: usize,
+
+    joined_at: BTreeMap<usize, f64>,
+    presence_acc: BTreeMap<usize, f64>,
+    busy_since: BTreeMap<usize, f64>,
+    busy_acc: BTreeMap<usize, f64>,
+
+    latencies: Vec<f64>,
+    failed: usize,
+    replans: usize,
+    restarts: usize,
+    work_lost: f64,
+    migration_overhead: f64,
+    events: usize,
+}
+
+impl Sim<'_> {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Event { time, seq, kind }));
+    }
+
+    fn free_devices(&self) -> Vec<Device> {
+        self.present
+            .iter()
+            .filter(|(id, _)| !self.assigned.contains_key(id))
+            .map(|(&id, &kind)| Device::new(id, kind))
+            .collect()
+    }
+
+    fn all_present(&self) -> Vec<Device> {
+        self.present.iter().map(|(&id, &kind)| Device::new(id, kind)).collect()
+    }
+
+    /// Close a device's busy span and free it.
+    fn release(&mut self, id: usize, now: f64) {
+        self.assigned.remove(&id);
+        if let Some(since) = self.busy_since.remove(&id) {
+            *self.busy_acc.entry(id).or_insert(0.0) += now - since;
+        }
+    }
+
+    fn start_job(&mut self, job: usize, devices: Vec<Device>, service: f64, now: f64) {
+        let ids: Vec<usize> = devices.iter().map(|d| d.id).collect();
+        for &id in &ids {
+            self.assigned.insert(id, job);
+            self.busy_since.insert(id, now);
+        }
+        let token = self.tokens[job];
+        self.running.insert(
+            job,
+            RunningJob {
+                devices: ids,
+                start: now,
+                chain_start: now,
+                finish: now + service,
+                frac_left: 1.0,
+                migration: 0.0,
+                service_full: service,
+                token,
+            },
+        );
+        self.push(now + service, EventKind::Finish { job, token });
+    }
+
+    /// Drain the queue head-of-line: place while the policy accepts,
+    /// and fail jobs that can never run (infeasible on the full pool
+    /// with no joins pending).
+    fn try_dispatch(&mut self, now: f64) {
+        loop {
+            let Some(&head) = self.queue.front() else { break };
+            let free = self.free_devices();
+            let ctx = PlacementCtx {
+                job: &self.jobs[head],
+                free: &free,
+                present: self.present.len(),
+                running: self.running.len(),
+                oracle: &self.oracle,
+            };
+            if let Some(pl) = self.policy.place(&ctx) {
+                self.queue.pop_front();
+                self.start_job(head, pl.devices, pl.service_time, now);
+                continue;
+            }
+            let everything = self.all_present();
+            if self.pending_joins == 0
+                && self.oracle.service_time(&self.jobs[head], &everything).is_none()
+            {
+                self.queue.pop_front();
+                self.failed += 1;
+                continue;
+            }
+            break;
+        }
+    }
+
+    /// Churn hit a device of running job `job`. `left` is the id of the
+    /// device that departed (already released), or `None` for an
+    /// in-place degrade.
+    fn churn_running_job(&mut self, job: usize, left: Option<usize>, now: f64) {
+        let rj = self.running.remove(&job).expect("churned job is running");
+        self.tokens[job] += 1; // invalidate the scheduled Finish
+        let survivors: Vec<usize> =
+            rj.devices.iter().copied().filter(|&d| Some(d) != left).collect();
+
+        if self.policy.on_churn() == ChurnResponse::Replan && !survivors.is_empty() {
+            let devices: Vec<Device> = survivors
+                .iter()
+                .map(|&id| Device::new(id, self.present[&id]))
+                .collect();
+            if let Some(t_new) = self.oracle.service_time(&self.jobs[job], &devices) {
+                let frac_left =
+                    replan_frac_left(rj.frac_left, rj.migration, rj.service_full, now - rj.start);
+                let migration = self.oracle.migration_time(&self.jobs[job], &devices);
+                let remaining = frac_left * t_new + migration;
+                self.replans += 1;
+                self.migration_overhead += migration;
+                let token = self.tokens[job];
+                self.running.insert(
+                    job,
+                    RunningJob {
+                        devices: survivors,
+                        start: now,
+                        chain_start: rj.chain_start,
+                        finish: now + remaining,
+                        frac_left,
+                        migration,
+                        service_full: t_new,
+                        token,
+                    },
+                );
+                self.push(now + remaining, EventKind::Finish { job, token });
+                return;
+            }
+        }
+
+        // restart: the whole placement chain's work is lost — including
+        // progress that intermediate replans had preserved — and the
+        // job re-queues ahead of everything else (it has been waiting
+        // longest)
+        self.restarts += 1;
+        self.work_lost += now - rj.chain_start;
+        for id in survivors {
+            self.release(id, now);
+        }
+        self.queue.push_front(job);
+    }
+
+    fn apply_churn(&mut self, kind: ChurnKind, now: f64) {
+        match kind {
+            ChurnKind::Join(id, device_kind) => {
+                self.present.insert(id, device_kind);
+                self.joined_at.insert(id, now);
+                self.pending_joins -= 1;
+            }
+            ChurnKind::Leave(id) => {
+                if self.present.remove(&id).is_none() {
+                    return;
+                }
+                if let Some(t0) = self.joined_at.remove(&id) {
+                    *self.presence_acc.entry(id).or_insert(0.0) += now - t0;
+                }
+                let victim = self.assigned.get(&id).copied();
+                self.release(id, now);
+                if let Some(job) = victim {
+                    self.churn_running_job(job, Some(id), now);
+                }
+            }
+            ChurnKind::Degrade(id) => {
+                let Some(kind) = self.present.get_mut(&id) else { return };
+                let low = kind.low_power();
+                if *kind == low {
+                    return; // already in the low-power mode
+                }
+                *kind = low;
+                if let Some(&job) = self.assigned.get(&id) {
+                    self.churn_running_job(job, None, now);
+                }
+            }
+        }
+    }
+}
+
+/// Run one fleet simulation: `jobs` (ids must equal their index,
+/// arrival-sorted) arrive into a queue, `policy` places them onto the
+/// churning pool seeded from `env`, every placement is costed through
+/// the strategy named in `opts`, and the run ends when the event queue
+/// drains or the horizon closes.
+pub fn simulate_fleet(
+    env: &Env,
+    jobs: &[Job],
+    churn: &[ChurnEvent],
+    policy: &dyn PlacementPolicy,
+    opts: &FleetOptions,
+) -> crate::Result<FleetMetrics> {
+    let registry = StrategyRegistry::with_defaults();
+    let strategy = registry.get(&opts.strategy).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown strategy {:?}; registered: {}",
+            opts.strategy,
+            registry.names().join(", ")
+        )
+    })?;
+    for (i, j) in jobs.iter().enumerate() {
+        anyhow::ensure!(j.id == i, "job ids must equal their index ({} at {i})", j.id);
+    }
+    // validate the churn trace against the initial pool before running:
+    // joins must carry fresh ids and leave/degrade must name a device
+    // present at that point of the trace (churn is independent of job
+    // activity, so membership is decidable up front) — a mis-authored
+    // trace must fail loudly, not silently no-op mid-run
+    {
+        let mut order: Vec<&ChurnEvent> = churn.iter().collect();
+        order.sort_by(|a, b| a.time.total_cmp(&b.time));
+        let mut virt: std::collections::BTreeSet<usize> =
+            env.devices.iter().map(|d| d.id).collect();
+        for e in order {
+            match e.kind {
+                ChurnKind::Join(id, _) => anyhow::ensure!(
+                    virt.insert(id),
+                    "churn trace: join of already-present device id {id}"
+                ),
+                ChurnKind::Leave(id) => anyhow::ensure!(
+                    virt.remove(&id),
+                    "churn trace: leave of absent device id {id}"
+                ),
+                ChurnKind::Degrade(id) => anyhow::ensure!(
+                    virt.contains(&id),
+                    "churn trace: degrade of absent device id {id}"
+                ),
+            }
+        }
+    }
+
+    let mut sim = Sim {
+        jobs,
+        policy,
+        oracle: StrategyOracle::new(strategy.as_ref(), env.network),
+        horizon: opts.horizon,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        now: 0.0,
+        present: env.devices.iter().map(|d| (d.id, d.kind)).collect(),
+        assigned: BTreeMap::new(),
+        queue: VecDeque::new(),
+        running: BTreeMap::new(),
+        tokens: vec![0; jobs.len()],
+        pending_joins: churn
+            .iter()
+            .filter(|e| matches!(e.kind, ChurnKind::Join(..)))
+            .count(),
+        joined_at: env.devices.iter().map(|d| (d.id, 0.0)).collect(),
+        presence_acc: BTreeMap::new(),
+        busy_since: BTreeMap::new(),
+        busy_acc: BTreeMap::new(),
+        latencies: Vec::new(),
+        failed: 0,
+        replans: 0,
+        restarts: 0,
+        work_lost: 0.0,
+        migration_overhead: 0.0,
+        events: 0,
+    };
+    for job in jobs {
+        sim.push(job.arrival, EventKind::Arrival(job.id));
+    }
+    for e in churn {
+        sim.push(e.time, EventKind::Churn(e.kind));
+    }
+
+    let mut hit_horizon = false;
+    while let Some(Reverse(ev)) = sim.heap.pop() {
+        if ev.time > sim.horizon {
+            hit_horizon = true;
+            break;
+        }
+        sim.now = ev.time;
+        sim.events += 1;
+        match ev.kind {
+            EventKind::Arrival(id) => sim.queue.push_back(id),
+            EventKind::Finish { job, token } => {
+                if sim.tokens[job] != token {
+                    continue; // superseded by a replan or restart
+                }
+                let rj = sim.running.remove(&job).expect("finished job is running");
+                for id in rj.devices {
+                    sim.release(id, ev.time);
+                }
+                sim.latencies.push(ev.time - sim.jobs[job].arrival);
+            }
+            EventKind::Churn(kind) => sim.apply_churn(kind, ev.time),
+        }
+        sim.try_dispatch(ev.time);
+    }
+
+    let end = if hit_horizon { sim.horizon } else { sim.now };
+    // close open presence/busy spans at the end of virtual time
+    let open_busy: Vec<usize> = sim.busy_since.keys().copied().collect();
+    for id in open_busy {
+        if let Some(since) = sim.busy_since.remove(&id) {
+            *sim.busy_acc.entry(id).or_insert(0.0) += end - since;
+        }
+    }
+    let still_present: Vec<usize> = sim.joined_at.keys().copied().collect();
+    for id in still_present {
+        if let Some(t0) = sim.joined_at.remove(&id) {
+            *sim.presence_acc.entry(id).or_insert(0.0) += end - t0;
+        }
+    }
+    let per_device: Vec<(usize, f64, f64)> = sim
+        .presence_acc
+        .iter()
+        .map(|(&id, &presence)| {
+            (id, sim.busy_acc.get(&id).copied().unwrap_or(0.0), presence)
+        })
+        .collect();
+
+    let completed = sim.latencies.len();
+    Ok(FleetMetrics::assemble(
+        sim.latencies,
+        sim.failed,
+        jobs.len() - completed - sim.failed,
+        end,
+        per_device,
+        sim.replans,
+        sim.restarts,
+        sim.work_lost,
+        sim.migration_overhead,
+        sim.events,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::policy::{BestFit, FifoExclusive, PreemptReplan};
+    use crate::fleet::trace::{generate_churn, generate_jobs, TraceKind};
+    use crate::model::ModelSpec;
+
+    fn small_jobs(n: usize) -> Vec<Job> {
+        // uniform small jobs: one planner call, fast tests
+        (0..n)
+            .map(|i| Job::new(i, i as f64 * 600.0, ModelSpec::t5_base(), 512, 2))
+            .collect()
+    }
+
+    #[test]
+    fn drains_all_jobs_without_churn() {
+        let env = Env::env_a();
+        let jobs = small_jobs(8);
+        for policy in [&FifoExclusive as &dyn PlacementPolicy, &BestFit, &PreemptReplan] {
+            let m =
+                simulate_fleet(&env, &jobs, &[], policy, &FleetOptions::default()).unwrap();
+            assert_eq!(m.completed, 8, "{}", policy.name());
+            assert_eq!(m.failed + m.incomplete, 0, "{}", policy.name());
+            assert!(m.jobs_per_hour > 0.0);
+            assert!(m.latency_p50.unwrap() <= m.latency_p99.unwrap());
+            assert!(m.utilization > 0.0 && m.utilization <= 1.0);
+            assert_eq!(m.replans + m.restarts, 0);
+            assert!(m.events >= 16, "arrival+finish per job");
+        }
+    }
+
+    #[test]
+    fn best_fit_runs_jobs_concurrently() {
+        let env = Env::env_a();
+        // all jobs arrive at once: exclusive runs them serially,
+        // best-fit packs them side by side
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| Job::new(i, 0.0, ModelSpec::t5_base(), 512, 2))
+            .collect();
+        let opts = FleetOptions::default();
+        let fifo = simulate_fleet(&env, &jobs, &[], &FifoExclusive, &opts).unwrap();
+        let bf = simulate_fleet(&env, &jobs, &[], &BestFit, &opts).unwrap();
+        assert_eq!(fifo.completed, 4);
+        assert_eq!(bf.completed, 4);
+        assert!(
+            bf.latency_p99.unwrap() < fifo.latency_p99.unwrap(),
+            "multi-tenant packing must cut tail latency: bf {:?} fifo {:?}",
+            bf.latency_p99,
+            fifo.latency_p99
+        );
+    }
+
+    #[test]
+    fn invalid_churn_trace_is_rejected() {
+        let env = Env::env_a(); // device ids 0..=3
+        let jobs = small_jobs(1);
+        for (churn, want) in [
+            (ChurnKind::Leave(99), "leave of absent"),
+            (ChurnKind::Join(0, DeviceKind::NanoH), "join of already-present"),
+            (ChurnKind::Degrade(7), "degrade of absent"),
+        ] {
+            let trace = vec![ChurnEvent { time: 10.0, kind: churn }];
+            let err = simulate_fleet(&env, &jobs, &trace, &BestFit, &FleetOptions::default())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(want), "{churn:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_strategy_is_an_error() {
+        let env = Env::env_a();
+        let err = simulate_fleet(
+            &env,
+            &small_jobs(1),
+            &[],
+            &BestFit,
+            &FleetOptions { strategy: "zero-3".into(), ..Default::default() },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown strategy"), "{err}");
+    }
+
+    #[test]
+    fn horizon_cuts_the_run() {
+        let env = Env::env_a();
+        let jobs = small_jobs(12);
+        let m = simulate_fleet(
+            &env,
+            &jobs,
+            &[],
+            &FifoExclusive,
+            &FleetOptions { horizon: 1800.0, ..Default::default() },
+        )
+        .unwrap();
+        assert!(m.completed < 12);
+        assert_eq!(m.completed + m.incomplete + m.failed, 12);
+        assert!(m.makespan <= 1800.0);
+    }
+
+    #[test]
+    fn infeasible_job_fails_instead_of_hanging() {
+        // T5-Large full pool of ONE Nano cannot host under PA either
+        let env = Env::standalone(crate::cluster::DeviceKind::NanoH);
+        let jobs = vec![Job::new(0, 0.0, ModelSpec::t5_large(), 4096, 3)];
+        let m = simulate_fleet(&env, &jobs, &[], &BestFit, &FleetOptions::default()).unwrap();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed, 0);
+    }
+
+    /// Generated churn keeps every accounting invariant (the *engineered*
+    /// churn scenarios that pin exact replan/restart behavior live in
+    /// `tests/fleet.rs`, where the hit is constructed, not sampled).
+    #[test]
+    fn generated_churn_keeps_invariants() {
+        let env = Env::env_a();
+        let jobs = generate_jobs(TraceKind::Steady, 20, 11);
+        let churn = generate_churn(&env, 48.0 * 3600.0, 2.0, 11);
+        let opts = FleetOptions::default();
+        for policy in [&FifoExclusive as &dyn PlacementPolicy, &PreemptReplan] {
+            let m = simulate_fleet(&env, &jobs, &churn, policy, &opts).unwrap();
+            assert_eq!(
+                m.completed + m.failed + m.incomplete,
+                20,
+                "{}: every job accounted for: {m:?}",
+                policy.name()
+            );
+            assert!(m.completed > 0, "{}: {m:?}", policy.name());
+            assert!(m.work_lost >= 0.0 && m.work_lost.is_finite());
+            assert!(m.migration_overhead >= 0.0 && m.migration_overhead.is_finite());
+            assert!(m.utilization >= 0.0 && m.utilization <= 1.0, "{m:?}");
+            for (_, u) in &m.per_device_util {
+                assert!(*u >= 0.0 && *u <= 1.0 + 1e-9, "{m:?}");
+            }
+        }
+    }
+
+    /// Regression: progress must be measured against the whole job, not
+    /// the current attempt — a second replan used to re-charge work the
+    /// first replan had already preserved.
+    #[test]
+    fn replan_fraction_does_not_compound() {
+        // attempt 1: no migration, full job takes 100 s, churn at 50 s
+        let f1 = replan_frac_left(1.0, 0.0, 100.0, 50.0);
+        assert!((f1 - 0.5).abs() < 1e-12);
+        // attempt 2: 10 s migration, full job now 80 s, churn 30 s in:
+        // 20 s of work = 0.25 of the whole job -> 0.25 left
+        let f2 = replan_frac_left(f1, 10.0, 80.0, 30.0);
+        assert!((f2 - 0.25).abs() < 1e-12, "got {f2}");
+        // the old attempt-relative formula would have kept
+        // 1 - 30/(0.5*80 + 10) = 0.4 of the job outstanding
+        assert!((f2 - 0.4).abs() > 0.1);
+        // churn during the migration prefix makes no progress
+        assert_eq!(replan_frac_left(0.5, 10.0, 80.0, 5.0), 0.5);
+        // and the fraction never goes negative
+        assert_eq!(replan_frac_left(0.1, 0.0, 100.0, 500.0), 0.0);
+    }
+
+    #[test]
+    fn same_seed_bit_identical() {
+        let env = Env::env_b();
+        let jobs = generate_jobs(TraceKind::Bursty, 15, 21);
+        let churn = generate_churn(&env, 48.0 * 3600.0, 3.0, 21);
+        let opts = FleetOptions::default();
+        let a = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts).unwrap();
+        let b = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts).unwrap();
+        assert_eq!(a, b);
+    }
+}

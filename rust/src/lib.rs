@@ -31,6 +31,7 @@
 //! | [`baselines`]| compatibility adapters (`System` enum) over the strategy registry |
 //! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts (`pjrt` feature) |
 //! | [`exec`]    | real multi-threaded hybrid-parallel training engine |
+//! | [`fleet`]   | discrete-event multi-tenant scheduler: job arrivals, device churn, placement policies |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
 //! | [`data`]    | synthetic GLUE-like workload generators |
 //! | [`exp`]     | typed `Experiment`/`Report` API + name-addressed registry of every paper table/figure |
@@ -87,6 +88,34 @@
 //! A registered experiment is immediately listed by `pacpp exp list`,
 //! runs by name (`pacpp exp run <name> --format json --out FILE`), and
 //! participates in `pacpp exp all` and the bench harness.
+//!
+//! ## Adding a placement policy
+//!
+//! The fleet layer is open the same way: how jobs claim devices from
+//! the shared pool is a [`fleet::PlacementPolicy`] resolved by name
+//! through [`fleet::PolicyRegistry`]. To add one (say, a
+//! shortest-job-first or deadline-aware scheme):
+//!
+//! 1. implement the trait — [`name`](fleet::PlacementPolicy::name)
+//!    (stable display name),
+//!    [`place`](fleet::PlacementPolicy::place) (pick a device subset
+//!    for the queue-head job, or `None` to wait; cost candidate
+//!    subsets through the provided [`fleet::PlanOracle`] — never
+//!    re-derive timing), and optionally
+//!    [`on_churn`](fleet::PlacementPolicy::on_churn) (`Restart` loses
+//!    the attempt, `Replan` keeps progress and pays the cache-migration
+//!    cost);
+//! 2. register it: [`fleet::PolicyRegistry::register`] on top of
+//!    [`with_defaults`](fleet::PolicyRegistry::with_defaults) — or add
+//!    it to `with_defaults` if it should ship by default;
+//! 3. run `cargo test`: the fleet tests exercise every registered
+//!    policy on the experiment grids, and the property suite
+//!    (`tests/prop_invariants.rs`) pins event-loop determinism.
+//!
+//! The fleet experiments (`pacpp exp run fleet fleet_churn`) and the
+//! `pacpp fleet` CLI (`--policy <name>`) resolve policies by registry
+//! name, so a registered policy is immediately comparable against the
+//! built-ins on every trace × environment cell.
 
 pub mod baselines;
 pub mod cache;
@@ -94,6 +123,7 @@ pub mod cluster;
 pub mod data;
 pub mod exec;
 pub mod exp;
+pub mod fleet;
 pub mod model;
 pub mod planner;
 pub mod profiler;

@@ -10,6 +10,12 @@
 //! pacpp exp      list              (list the registered experiments)
 //! pacpp exp      run <name> [--format text|json|csv] [--out FILE]
 //! pacpp exp      all        [--format text|json|csv] [--out FILE]
+//! pacpp fleet    [--env env_a] [--policy all|fifo|best-fit|preempt[,..]]
+//!                [--trace steady|diurnal|bursty] [--jobs 40] [--seed 42]
+//!                [--churn EVENTS_PER_HOUR] [--horizon HOURS]
+//!                [--strategy pac+] [--format text|json|csv] [--out FILE]
+//! pacpp timeline --env env_a [--microbatch 4] [--m 6] [--width 120]
+//!                                  (render a plan's 1F1B schedule as ASCII art)
 //! pacpp table    1|5|6|7           (deprecated alias for `exp run table<N>`)
 //! pacpp fig      3|12|...|18       (deprecated alias for `exp run fig<N>`)
 //! pacpp train    --artifacts artifacts/small --epochs 4 [--pipeline N] [--quant int8]
@@ -22,6 +28,10 @@ use pacpp::cluster::Env;
 use pacpp::data::SyntheticTask;
 use pacpp::exec::{self, TrainOptions};
 use pacpp::exp::{self, ExpContext, ExperimentRegistry, Format, Report};
+use pacpp::fleet::{
+    generate_churn, generate_jobs, simulate_fleet, FleetOptions, PlacementPolicy,
+    PolicyRegistry, TraceKind,
+};
 use pacpp::model::graph::LayerGraph;
 use pacpp::model::{Method, ModelSpec, Precision};
 use pacpp::planner::{plan, PlannerOptions};
@@ -49,13 +59,17 @@ fn main() -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("strategies") => cmd_strategies(),
         Some("exp") => cmd_exp(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("table") => cmd_table(&args),
         Some("fig") => cmd_fig(&args),
         Some("train") => cmd_train(&args),
         Some("timeline") => cmd_timeline(&args),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: pacpp <plan|simulate|strategies|exp|table|fig|train|info> [options]");
+            eprintln!(
+                "usage: pacpp <plan|simulate|strategies|exp|fleet|timeline|table|fig|train|info> \
+                 [options]"
+            );
             eprintln!("see rust/src/main.rs docs for options");
             Ok(())
         }
@@ -103,7 +117,7 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     if args.flag("homo") {
         opts.hetero_aware = false;
     }
-    opts.search_threads = args.get_usize_opt("threads");
+    opts.search_threads = args.get_count_opt("threads")?;
     match strategy.plan(&profile, &env, &opts) {
         Ok(p) => {
             println!(
@@ -276,18 +290,18 @@ fn ensure_csv_single(format: Format, n_reports: usize) -> anyhow::Result<()> {
 }
 
 /// The `--out` destination must be writable *before* experiments run —
-/// minutes of work must not be lost to a mistyped directory.
+/// minutes of work must not be lost to a bad path. Missing parent
+/// directories are created up front (`util::ensure_parent_dirs`, so a
+/// permission problem surfaces in seconds with a clear error naming
+/// the directory — the deliberate cost is that a run that later fails
+/// leaves the created directories behind); a directory target is
+/// rejected.
 fn validate_out(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("out") {
         let p = std::path::Path::new(path);
         anyhow::ensure!(!p.is_dir(), "--out {path}: is a directory, expected a file path");
-        if let Some(dir) = p.parent() {
-            anyhow::ensure!(
-                dir.as_os_str().is_empty() || dir.is_dir(),
-                "--out {path}: directory {} does not exist",
-                dir.display()
-            );
-        }
+        pacpp::util::ensure_parent_dirs(path)
+            .map_err(|e| anyhow::anyhow!("--out {path}: {e}"))?;
     }
     Ok(())
 }
@@ -393,12 +407,78 @@ fn emit_reports(
     };
     match args.get("out") {
         Some(path) => {
-            std::fs::write(path, &rendered)?;
+            pacpp::util::write_creating_dirs(path, &rendered)?;
             eprintln!("wrote {path} ({} bytes, {})", rendered.len(), format.name());
         }
         None => print!("{rendered}"),
     }
     Ok(())
+}
+
+/// `pacpp fleet`: one deterministic multi-tenant simulation per selected
+/// policy over a shared (optionally churning) pool, reported in the
+/// fleet experiment schema.
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let env_name = args.get_str("env", "env_a")?;
+    let Some(env) = Env::by_name(env_name) else {
+        anyhow::bail!("unknown env {env_name:?} (env_a|env_b|<n>xnano)");
+    };
+    let trace_name = args.get_str("trace", "steady")?;
+    let Some(trace) = TraceKind::parse(trace_name) else {
+        anyhow::bail!("unknown trace {trace_name:?} (steady|diurnal|bursty)");
+    };
+    let n_jobs = args.get_count("jobs", 40)?;
+    let seed = args.get_seed("seed", 42)?;
+    let churn_per_hour = args.get_rate("churn", 0.0)?;
+    let horizon_h = args.get_positive_f64("horizon", 48.0)?;
+    let format = parse_format(args)?;
+    validate_out(args)?;
+
+    let registry = PolicyRegistry::with_defaults();
+    let spec = args.get_str("policy", "all")?;
+    let mut policies = Vec::new();
+    if spec == "all" {
+        policies.extend(registry.iter().cloned());
+    } else {
+        for one in spec.split(',') {
+            let Some(p) = registry.get(one.trim()) else {
+                anyhow::bail!(
+                    "unknown policy {:?}; registered: {}",
+                    one.trim(),
+                    registry.names().join(", ")
+                );
+            };
+            policies.push(p.clone());
+        }
+    }
+
+    let opts = FleetOptions {
+        strategy: args.get_str("strategy", "pac+")?.to_string(),
+        horizon: horizon_h * 3600.0,
+    };
+    let jobs = generate_jobs(trace, n_jobs, seed);
+    let churn = if churn_per_hour > 0.0 {
+        generate_churn(&env, opts.horizon, churn_per_hour, seed)
+    } else {
+        Vec::new()
+    };
+
+    let mut report = exp::fleet_schema(
+        "fleet",
+        &format!("Fleet — {n_jobs} jobs ({trace_name}) on {}", env.name),
+    )
+    .meta("jobs", n_jobs)
+    .meta("seed", seed)
+    .meta("trace", trace.name())
+    .meta("env", &env.name)
+    .meta("strategy", &opts.strategy)
+    .meta("horizon_h", horizon_h)
+    .meta("churn_per_hour", churn_per_hour);
+    for policy in &policies {
+        let m = simulate_fleet(&env, &jobs, &churn, policy.as_ref(), &opts)?;
+        report.push(exp::fleet_row(&env.name, trace.name(), policy.name(), n_jobs, &m));
+    }
+    emit_reports(&[report], format, false, args)
 }
 
 /// Deprecated alias: `pacpp table N` forwards to `exp run tableN`.

@@ -75,6 +75,91 @@ impl Args {
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
             .unwrap_or(default)
     }
+
+    // -- checked getters ----------------------------------------------------
+    //
+    // `get_usize`/`get_f64` predate error plumbing and panic on garbage;
+    // the checked getters below return the uniform "invalid value for
+    // --flag" diagnostic instead, and additionally reject values that
+    // parse but are nonsensical (a zero count, a zero seed). New flags
+    // should use these.
+
+    /// Checked count (`--jobs 40`, `--threads 4`): absent → `default`;
+    /// zero, negative or unparseable → an "invalid value" error.
+    pub fn get_count(&self, name: &str, default: usize) -> crate::Result<usize> {
+        Ok(self.get_count_opt(name)?.unwrap_or(default))
+    }
+
+    /// Like [`Args::get_count`] but `None` when the option is absent
+    /// (for knobs whose default is computed, e.g. planner threads).
+    pub fn get_count_opt(&self, name: &str) -> crate::Result<Option<usize>> {
+        if self.flag(name) {
+            return Err(invalid_value(name, "", "a positive integer"));
+        }
+        let Some(v) = self.get(name) else { return Ok(None) };
+        match v.parse::<usize>() {
+            Ok(n) if n > 0 => Ok(Some(n)),
+            _ => Err(invalid_value(name, v, "a positive integer")),
+        }
+    }
+
+    /// Checked RNG seed (`--seed 42`): a positive integer, so every
+    /// seeded run is reproducible by quoting one number.
+    pub fn get_seed(&self, name: &str, default: u64) -> crate::Result<u64> {
+        if self.flag(name) {
+            return Err(invalid_value(name, "", "a positive integer"));
+        }
+        let Some(v) = self.get(name) else { return Ok(default) };
+        match v.parse::<u64>() {
+            Ok(n) if n > 0 => Ok(n),
+            _ => Err(invalid_value(name, v, "a positive integer")),
+        }
+    }
+
+    /// Checked string option (`--trace diurnal`): absent → `default`;
+    /// present as a bare flag (the value was forgotten or swallowed by
+    /// the next `--option`) → an "invalid value" error instead of a
+    /// silent default.
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> crate::Result<&'a str> {
+        if self.flag(name) {
+            return Err(invalid_value(name, "", "a value"));
+        }
+        Ok(self.get(name).unwrap_or(default))
+    }
+
+    /// Checked non-negative rate (`--churn 2.5`): absent → `default`;
+    /// negative, non-finite or unparseable → an "invalid value" error.
+    pub fn get_rate(&self, name: &str, default: f64) -> crate::Result<f64> {
+        self.checked_f64(name, default, 0.0, "a non-negative number")
+    }
+
+    /// Checked positive magnitude (`--horizon 48`): zero is rejected
+    /// too — a zero horizon or size is never a meaningful run.
+    pub fn get_positive_f64(&self, name: &str, default: f64) -> crate::Result<f64> {
+        self.checked_f64(name, default, f64::MIN_POSITIVE, "a positive number")
+    }
+
+    fn checked_f64(
+        &self,
+        name: &str,
+        default: f64,
+        min: f64,
+        expected: &str,
+    ) -> crate::Result<f64> {
+        if self.flag(name) {
+            return Err(invalid_value(name, "", expected));
+        }
+        let Some(v) = self.get(name) else { return Ok(default) };
+        match v.parse::<f64>() {
+            Ok(x) if x.is_finite() && x >= min => Ok(x),
+            _ => Err(invalid_value(name, v, expected)),
+        }
+    }
+}
+
+/// The one spelling of the bad-numeric-flag diagnostic.
+fn invalid_value(name: &str, got: &str, expected: &str) -> anyhow::Error {
+    anyhow::anyhow!("invalid value for --{name}: {got:?} (expected {expected})")
 }
 
 #[cfg(test)]
@@ -177,5 +262,82 @@ mod tests {
         let a = parse("bench --quick --quick");
         assert!(a.flag("quick"));
         assert_eq!(a.flags.iter().filter(|f| *f == "quick").count(), 2);
+    }
+
+    #[test]
+    fn checked_count_accepts_positive() {
+        let a = parse("fleet --jobs 50 --threads 4");
+        assert_eq!(a.get_count("jobs", 1).unwrap(), 50);
+        assert_eq!(a.get_count_opt("threads").unwrap(), Some(4));
+        assert_eq!(a.get_count("absent", 7).unwrap(), 7);
+        assert_eq!(a.get_count_opt("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn checked_count_rejects_zero_and_garbage() {
+        for (argv, flag) in [
+            ("fleet --jobs 0", "jobs"),
+            ("fleet --jobs -3", "jobs"),
+            ("fleet --jobs 1.5", "jobs"),
+            ("fleet --jobs many", "jobs"),
+            ("plan --threads 0", "threads"),
+            ("plan --threads=0x4", "threads"),
+        ] {
+            let a = parse(argv);
+            let err = a.get_count(flag, 1).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("invalid value for --{flag}")),
+                "{argv}: {err}"
+            );
+        }
+        // a value-less trailing flag is not silently the default
+        let a = parse("fleet --jobs");
+        assert!(a.get_count("jobs", 1).is_err());
+        assert!(a.get_count_opt("jobs").is_err());
+    }
+
+    #[test]
+    fn checked_seed() {
+        let a = parse("fleet --seed 1234");
+        assert_eq!(a.get_seed("seed", 42).unwrap(), 1234);
+        assert_eq!(parse("fleet").get_seed("seed", 42).unwrap(), 42);
+        for argv in ["fleet --seed 0", "fleet --seed -1", "fleet --seed abc", "fleet --seed"] {
+            let err = parse(argv).get_seed("seed", 42).unwrap_err().to_string();
+            assert!(err.contains("invalid value for --seed"), "{argv}: {err}");
+        }
+    }
+
+    #[test]
+    fn checked_str_rejects_bare_flag() {
+        let a = parse("fleet --trace diurnal");
+        assert_eq!(a.get_str("trace", "steady").unwrap(), "diurnal");
+        assert_eq!(parse("fleet").get_str("trace", "steady").unwrap(), "steady");
+        // `--policy --format json`: policy parsed as a bare flag
+        let a = parse("fleet --policy --format json");
+        let err = a.get_str("policy", "all").unwrap_err().to_string();
+        assert!(err.contains("invalid value for --policy"), "{err}");
+    }
+
+    #[test]
+    fn checked_floats() {
+        let a = parse("fleet --churn 2.5 --horizon 12");
+        assert!((a.get_rate("churn", 0.0).unwrap() - 2.5).abs() < 1e-12);
+        assert!((a.get_positive_f64("horizon", 48.0).unwrap() - 12.0).abs() < 1e-12);
+        // defaults when absent
+        assert_eq!(parse("fleet").get_rate("churn", 0.0).unwrap(), 0.0);
+        assert_eq!(parse("fleet").get_positive_f64("horizon", 48.0).unwrap(), 48.0);
+        // zero is a valid rate but not a valid positive magnitude
+        assert_eq!(parse("fleet --churn 0").get_rate("churn", 1.0).unwrap(), 0.0);
+        assert!(parse("fleet --horizon 0").get_positive_f64("horizon", 48.0).is_err());
+        for argv in [
+            "fleet --churn -2",
+            "fleet --churn abc",
+            "fleet --churn nan",
+            "fleet --churn inf",
+            "fleet --churn",
+        ] {
+            let err = parse(argv).get_rate("churn", 0.0).unwrap_err().to_string();
+            assert!(err.contains("invalid value for --churn"), "{argv}: {err}");
+        }
     }
 }

@@ -62,6 +62,30 @@ where
     slots.into_iter().map(|s| s.expect("par_map: unfilled slot")).collect()
 }
 
+/// Create `path`'s missing parent directories, if any. The error names
+/// the directory that could not be created — the one copy of this
+/// logic, shared by [`write_creating_dirs`] and the CLI's up-front
+/// `--out` validation.
+pub fn ensure_parent_dirs(path: &str) -> crate::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() && !dir.is_dir() {
+            std::fs::create_dir_all(dir).map_err(|e| {
+                anyhow::anyhow!("cannot create directory {}: {e}", dir.display())
+            })?;
+        }
+    }
+    Ok(())
+}
+
+/// Write `contents` to `path`, creating any missing parent directories
+/// first (`--out results/deep/file.json` must not die on a raw io
+/// error). Failures carry the directory or file that could not be
+/// created.
+pub fn write_creating_dirs(path: &str, contents: &str) -> crate::Result<()> {
+    ensure_parent_dirs(path)?;
+    std::fs::write(path, contents).map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))
+}
+
 /// Format a duration in seconds adaptively (µs → hours).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -94,6 +118,35 @@ mod tests {
         assert_eq!(fmt_secs(0.25), "250.00 ms");
         assert_eq!(fmt_secs(3.0), "3.00 s");
         assert_eq!(fmt_secs(7200.0), "2.00 h");
+    }
+
+    #[test]
+    fn write_creating_dirs_makes_parents() {
+        let base = std::env::temp_dir().join(format!("pacpp_wcd_{}", std::process::id()));
+        let nested = base.join("a/b/out.json");
+        let path = nested.to_str().unwrap();
+        write_creating_dirs(path, "{}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&nested).unwrap(), "{}\n");
+        // bare filenames (no parent) and existing directories also work
+        write_creating_dirs(path, "[]\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&nested).unwrap(), "[]\n");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn write_creating_dirs_names_the_obstacle() {
+        let base = std::env::temp_dir().join(format!("pacpp_wcd_err_{}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        // a *file* where a parent directory is needed
+        let file = base.join("blocker");
+        std::fs::write(&file, "x").unwrap();
+        let target = file.join("deeper/out.json");
+        let err = write_creating_dirs(target.to_str().unwrap(), "{}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot create directory"), "{err}");
+        assert!(err.contains("blocker"), "{err}");
+        std::fs::remove_dir_all(&base).unwrap();
     }
 
     #[test]

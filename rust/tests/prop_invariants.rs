@@ -1,0 +1,116 @@
+//! Property tests (via `util::prop`) for cross-module invariants:
+//! `exec::partition_layers` (the pipelined engine's stage splitter) and
+//! the fleet event loop's same-seed determinism.
+
+use pacpp::cluster::Env;
+use pacpp::exec::partition_layers;
+use pacpp::fleet::{
+    generate_churn, generate_jobs, simulate_fleet, FleetOptions, PreemptReplan, TraceKind,
+};
+use pacpp::util::prop::{check, forall};
+
+#[derive(Debug)]
+struct SplitCase {
+    layers: usize,
+    stages: usize,
+    available: Vec<usize>,
+}
+
+/// The even split `partition_layers` must produce when it succeeds.
+fn expected_sizes(layers: usize, stages: usize) -> Vec<usize> {
+    let base = layers / stages;
+    let rem = layers % stages;
+    (0..stages).map(|i| base + usize::from(i < rem)).collect()
+}
+
+#[test]
+fn partition_layers_invariants() {
+    forall(
+        0xBEEF,
+        120,
+        |g| {
+            let layers = g.int(1, 40);
+            let stages = g.int(0, layers + 3);
+            // random artifact inventory; sometimes seed in the exact
+            // needed sizes so the Ok path is exercised too
+            let mut available: Vec<usize> =
+                (1..=layers.min(12)).filter(|_| g.bool()).collect();
+            if g.bool() && stages >= 1 && stages <= layers {
+                available.extend(expected_sizes(layers, stages));
+            }
+            available.sort_unstable();
+            available.dedup();
+            SplitCase { layers, stages, available }
+        },
+        |case| {
+            let SplitCase { layers, stages, available } = case;
+            match partition_layers(*layers, *stages, available) {
+                Ok(sizes) => {
+                    check(
+                        *stages >= 1 && *stages <= *layers,
+                        format!("accepted infeasible stage count {stages} for {layers}"),
+                    )?;
+                    check(
+                        sizes.len() == *stages,
+                        format!("{} spans != {stages} stages", sizes.len()),
+                    )?;
+                    check(
+                        sizes.iter().sum::<usize>() == *layers,
+                        format!("spans sum to {} != {layers}", sizes.iter().sum::<usize>()),
+                    )?;
+                    check(
+                        sizes.iter().all(|s| available.contains(s)),
+                        format!("span size outside available: {sizes:?} vs {available:?}"),
+                    )?;
+                    let mn = *sizes.iter().min().unwrap();
+                    let mx = *sizes.iter().max().unwrap();
+                    check(mx - mn <= 1, format!("uneven split {sizes:?}"))
+                }
+                Err(_) => {
+                    // an error must be genuine: either the stage count
+                    // is infeasible, or a required span size has no
+                    // artifact
+                    if *stages == 0 || *stages > *layers {
+                        return Ok(());
+                    }
+                    let needed = expected_sizes(*layers, *stages);
+                    check(
+                        needed.iter().any(|s| !available.contains(s)),
+                        format!(
+                            "spurious error: {layers} layers / {stages} stages \
+                             with all of {needed:?} in {available:?}"
+                        ),
+                    )
+                }
+            }
+        },
+    );
+}
+
+#[derive(Debug)]
+struct FleetCase {
+    seed: u64,
+    n_jobs: usize,
+}
+
+/// Same seed ⇒ bit-identical `FleetMetrics`, churn and replans
+/// included: the event loop must be a pure function of its inputs.
+#[test]
+fn fleet_event_loop_is_deterministic() {
+    let env = Env::env_b();
+    let opts = FleetOptions::default();
+    forall(
+        0xF1EE7,
+        3,
+        |g| FleetCase { seed: 1 + g.int(0, 1_000_000) as u64 * 2_654_435_761, n_jobs: g.int(5, 10) },
+        |case| {
+            let jobs = generate_jobs(TraceKind::Bursty, case.n_jobs, case.seed);
+            let churn = generate_churn(&env, opts.horizon, 3.0, case.seed);
+            let a = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts)
+                .map_err(|e| e.to_string())?;
+            let b = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts)
+                .map_err(|e| e.to_string())?;
+            check(a == b, format!("same-seed runs diverged:\n  {a:?}\n  {b:?}"))
+        },
+    );
+}
