@@ -14,7 +14,8 @@
 
 use pacpp::cluster::Env;
 use pacpp::fleet::{
-    generate_churn, simulate_fleet, BestFit, FleetOptions, Job, PreemptReplan,
+    generate_churn, simulate_fleet, BestFit, CheckpointSpec, FleetOptions, Job,
+    PreemptReplan,
 };
 use pacpp::model::ModelSpec;
 use pacpp::util::bench::Bench;
@@ -79,6 +80,37 @@ fn main() {
                 m.completed,
                 m.replans,
                 m.restarts
+            );
+        }
+    }
+
+    // The PR-4 paths: EASY-backfill's shadow/backfill scan plus
+    // checkpointed restarts, under the same dense churn — measures the
+    // queue-policy overhead the FIFO cases never exercise.
+    if b.enabled("fleet_event_loop_backfill_ckpt_1k_jobs") {
+        let jobs = uniform_jobs(1_000);
+        let churn = generate_churn(&env, 100_000.0, 20.0, 7);
+        let bc_opts = FleetOptions {
+            queue: "backfill".into(),
+            ckpt: Some(CheckpointSpec::new(2, 60.0)),
+            ..opts()
+        };
+        let m = simulate_fleet(&env, &jobs, &churn, &BestFit, &bc_opts).unwrap();
+        let res = b
+            .run("fleet_event_loop_backfill_ckpt_1k_jobs", || {
+                simulate_fleet(&env, &jobs, &churn, &BestFit, &bc_opts).unwrap()
+            })
+            .cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.0} events/sec ({} events, {} completed, {} restarts, \
+                 {} ckpts, {:.0} s ckpt overhead)",
+                m.events as f64 / r.summary.mean,
+                m.events,
+                m.completed,
+                m.restarts,
+                m.ckpt_count,
+                m.ckpt_overhead
             );
         }
     }

@@ -1,5 +1,7 @@
 //! The fleet experiments: multi-tenant scheduling grids over
-//! policy × arrival-trace × environment, with and without device churn.
+//! policy × arrival-trace × environment (with and without device
+//! churn), the checkpoint-interval tradeoff, and the per-user SLO
+//! breakdown.
 //!
 //! Each cell is one deterministic [`crate::fleet::simulate_fleet`] run
 //! (fixed seed, shared job count and horizon), so the reports are
@@ -10,8 +12,9 @@ use std::sync::Arc;
 
 use crate::cluster::Env;
 use crate::fleet::{
-    generate_churn, generate_jobs, simulate_fleet, ChurnEvent, FleetMetrics, FleetOptions,
-    PlacementPolicy, PolicyRegistry, TraceKind,
+    generate_churn, generate_jobs, simulate_fleet, BestFit, CheckpointSpec, ChurnEvent,
+    FleetMetrics, FleetOptions, PlacementPolicy, PolicyRegistry, PreemptReplan,
+    QueuePolicyRegistry, TraceKind, DEFAULT_CKPT_COST,
 };
 use crate::util::par_map;
 
@@ -23,47 +26,82 @@ const GRID_JOBS: usize = 40;
 const GRID_SEED: u64 = 42;
 /// Churn intensity of the `fleet_churn` grid, events/hour.
 const GRID_CHURN_PER_HOUR: f64 = 2.0;
+/// Churn intensity of the `fleet_checkpoint` grid — denser, so the
+/// k-vs-overhead tradeoff has restarts to bound.
+const CKPT_CHURN_PER_HOUR: f64 = 4.0;
+
+/// Canonical display name of the queue discipline in `opts` — one
+/// resolution shared by meta and row cells, so the two never disagree
+/// on casing (rows once said "FIFO" while meta said "fifo").
+fn queue_display(opts: &FleetOptions) -> String {
+    QueuePolicyRegistry::with_defaults()
+        .get(&opts.queue)
+        .map(|q| q.name().to_string())
+        .unwrap_or_else(|| opts.queue.clone())
+}
 
 /// The fleet Report's empty shell (name, title, typed columns). Shared
-/// by both grids, the CLI subcommand and `bench_fleet`, so every
+/// by the grids, the CLI subcommand and `bench_fleet`, so every
 /// surface emits the same schema.
 pub fn fleet_schema(name: &str, title: &str) -> Report {
     Report::new(name, title)
         .column("env", ColType::Str)
         .column("trace", ColType::Str)
         .column("policy", ColType::Str)
+        .column("queue", ColType::Str)
+        .column("ckpt", ColType::Int) // checkpoint interval k, 0 = off
         .column("jobs", ColType::Int)
         .column("completed", ColType::Int)
         .column("failed", ColType::Int)
+        .column("met", ColType::Int) // jobs finished within deadline
         .column("throughput", ColType::Float) // jobs/hour
+        .column("goodput", ColType::Float) // deadline-met jobs/hour
+        .column("miss_rate", ColType::Float)
         .column("p50", ColType::Secs)
         .column("p95", ColType::Secs)
         .column("p99", ColType::Secs)
         .column("utilization", ColType::Float)
+        .column("fairness", ColType::Float) // Jain index over user service
         .column("replans", ColType::Int)
         .column("restarts", ColType::Int)
         .column("work_lost", ColType::Secs)
         .column("migration", ColType::Secs)
+        .column("ckpt_overhead", ColType::Secs)
 }
 
 /// One metrics row in the shared schema.
-pub fn fleet_row(env: &str, trace: &str, policy: &str, jobs: usize, m: &FleetMetrics) -> Vec<Cell> {
+pub fn fleet_row(
+    env: &str,
+    trace: &str,
+    policy: &str,
+    queue: &str,
+    ckpt_k: usize,
+    jobs: usize,
+    m: &FleetMetrics,
+) -> Vec<Cell> {
     vec![
         Cell::Str(env.into()),
         Cell::Str(trace.into()),
         Cell::Str(policy.into()),
+        Cell::Str(queue.into()),
+        Cell::Int(ckpt_k as i64),
         Cell::Int(jobs as i64),
         Cell::Int(m.completed as i64),
         Cell::Int(m.failed as i64),
+        Cell::Int(m.deadline_met as i64),
         Cell::Float(m.jobs_per_hour),
+        Cell::Float(m.goodput_per_hour),
+        Cell::Float(m.deadline_miss_rate),
         Cell::opt(m.latency_p50, Cell::Secs),
         Cell::opt(m.latency_p95, Cell::Secs),
         Cell::opt(m.latency_p99, Cell::Secs),
         Cell::Float(m.utilization),
+        Cell::Float(m.fairness),
         Cell::Int(m.replans as i64),
         Cell::Int(m.restarts as i64),
         Cell::Secs(m.work_lost),
         Cell::Secs(m.migration_overhead),
+        Cell::Secs(m.ckpt_overhead),
     ]
 }
 
@@ -97,17 +135,28 @@ fn grid_report(name: &str, title: &str, churn_per_hour: Option<f64>) -> Report {
             .expect("default strategy is registered")
     });
 
+    let queue = queue_display(&opts);
     let mut report = fleet_schema(name, title)
         .meta("jobs", GRID_JOBS)
         .meta("seed", GRID_SEED)
         .meta("horizon_h", opts.horizon / 3600.0)
         .meta("strategy", &opts.strategy)
+        .meta("queue", &queue)
+        .meta("deadline_scale", opts.deadline_scale)
         .meta(
             "churn_per_hour",
             churn_per_hour.map(|r| r.to_string()).unwrap_or_else(|| "0".into()),
         );
     for ((env, trace, policy), m) in combos.iter().zip(&results) {
-        report.push(fleet_row(&env.name, trace.name(), policy.name(), GRID_JOBS, m));
+        report.push(fleet_row(
+            &env.name,
+            trace.name(),
+            policy.name(),
+            &queue,
+            0,
+            GRID_JOBS,
+            m,
+        ));
     }
     report
 }
@@ -130,6 +179,126 @@ pub fn fleet_churn_report() -> Report {
         "Fleet — multi-tenant scheduling under device churn, policy × trace × env",
         Some(GRID_CHURN_PER_HOUR),
     )
+}
+
+/// `fleet_checkpoint` — the checkpoint-interval tradeoff: k ∈
+/// {off, 1, 2, 4} × {restart, replan} policies under dense churn on a
+/// bursty trace. Small k bounds restart losses tightly but pays more
+/// checkpoint overhead; the `work_lost` vs `ckpt_overhead` columns are
+/// the tradeoff.
+pub fn fleet_checkpoint_report() -> Report {
+    let env = Env::env_a();
+    let trace = TraceKind::Bursty;
+    let ks = [0usize, 1, 2, 4];
+    let policies: [Arc<dyn PlacementPolicy>; 2] =
+        [Arc::new(BestFit), Arc::new(PreemptReplan)];
+
+    let mut combos: Vec<(usize, Arc<dyn PlacementPolicy>)> = Vec::new();
+    for &k in &ks {
+        for policy in &policies {
+            combos.push((k, policy.clone()));
+        }
+    }
+    let base = FleetOptions::default();
+    let results = par_map(combos.len(), |i| {
+        let (k, policy) = &combos[i];
+        let opts = FleetOptions {
+            ckpt: if *k > 0 { Some(CheckpointSpec::new(*k, DEFAULT_CKPT_COST)) } else { None },
+            ..base.clone()
+        };
+        let jobs = generate_jobs(trace, GRID_JOBS, GRID_SEED);
+        let churn = generate_churn(&env, opts.horizon, CKPT_CHURN_PER_HOUR, GRID_SEED);
+        simulate_fleet(&env, &jobs, &churn, policy.as_ref(), &opts)
+            .expect("default strategy is registered")
+    });
+
+    let queue = queue_display(&base);
+    let mut report = fleet_schema(
+        "fleet_checkpoint",
+        "Fleet — checkpoint interval k vs restart loss under churn (bursty, Env.A)",
+    )
+    .meta("jobs", GRID_JOBS)
+    .meta("seed", GRID_SEED)
+    .meta("horizon_h", base.horizon / 3600.0)
+    .meta("strategy", &base.strategy)
+    .meta("queue", &queue)
+    .meta("churn_per_hour", CKPT_CHURN_PER_HOUR)
+    .meta("ckpt_cost", DEFAULT_CKPT_COST);
+    for ((k, policy), m) in combos.iter().zip(&results) {
+        report.push(fleet_row(
+            &env.name,
+            trace.name(),
+            policy.name(),
+            &queue,
+            *k,
+            GRID_JOBS,
+            m,
+        ));
+    }
+    report
+}
+
+/// The per-user Report's empty shell: one row per (policy, user).
+pub fn fleet_users_schema() -> Report {
+    Report::new(
+        "fleet_users",
+        "Fleet — per-user SLO breakdown: latency p95, deadline hits, service share",
+    )
+    .column("env", ColType::Str)
+    .column("trace", ColType::Str)
+    .column("policy", ColType::Str)
+    .column("user", ColType::Int)
+    .column("jobs", ColType::Int)
+    .column("completed", ColType::Int)
+    .column("met", ColType::Int)
+    .column("p95", ColType::Secs)
+    .column("service", ColType::Secs) // device-seconds consumed
+    .column("share", ColType::Float) // fraction of all service handed out
+    .column("fairness", ColType::Float) // the run's Jain index (same per policy)
+}
+
+/// `fleet_users` — the per-user dimension of the fleet: each policy's
+/// run on the shared bursty trace, broken down by submitting user, so
+/// JSON/CSV consumers get user ids, per-user p95 and service shares
+/// alongside the run-level Jain fairness index.
+pub fn fleet_users_report() -> Report {
+    let env = Env::env_a();
+    let trace = TraceKind::Bursty;
+    let registry = PolicyRegistry::with_defaults();
+    let opts = FleetOptions::default();
+    let policies: Vec<Arc<dyn PlacementPolicy>> = registry.iter().cloned().collect();
+    let results = par_map(policies.len(), |i| {
+        let jobs = generate_jobs(trace, GRID_JOBS, GRID_SEED);
+        simulate_fleet(&env, &jobs, &[], policies[i].as_ref(), &opts)
+            .expect("default strategy is registered")
+    });
+
+    let mut report = fleet_users_schema()
+        .meta("jobs", GRID_JOBS)
+        .meta("seed", GRID_SEED)
+        .meta("horizon_h", opts.horizon / 3600.0)
+        .meta("strategy", &opts.strategy)
+        .meta("queue", queue_display(&opts))
+        .meta("deadline_scale", opts.deadline_scale);
+    for (policy, m) in policies.iter().zip(&results) {
+        let total: f64 = m.per_user.iter().map(|u| u.service).sum();
+        for u in &m.per_user {
+            report.push(vec![
+                Cell::Str(env.name.clone()),
+                Cell::Str(trace.name().into()),
+                Cell::Str(policy.name().into()),
+                Cell::Int(u.user as i64),
+                Cell::Int(u.jobs as i64),
+                Cell::Int(u.completed as i64),
+                Cell::Int(u.met as i64),
+                Cell::opt(u.p95, Cell::Secs),
+                Cell::Secs(u.service),
+                Cell::Float(if total > 0.0 { u.service / total } else { 0.0 }),
+                Cell::Float(m.fairness),
+            ]);
+        }
+    }
+    report
 }
 
 #[cfg(test)]
@@ -157,16 +326,26 @@ mod tests {
                 assert!(values.iter().any(|v| v == w), "missing {col}={w}");
             }
         }
-        for col in ["throughput", "p50", "p95", "p99", "utilization"] {
+        for col in
+            ["queue", "ckpt", "met", "throughput", "goodput", "miss_rate", "p50", "p95",
+             "p99", "utilization", "fairness", "ckpt_overhead"]
+        {
             assert!(
                 rep.columns().iter().any(|c| c.name == col),
                 "missing column {col}"
             );
         }
-        // a stable pool never replans or restarts
+        // a stable pool never replans, restarts or checkpoints-to-any-use
         for i in 0..rep.n_rows() {
             assert_eq!(rep.cell(i, "replans"), Some(&Cell::Int(0)), "row {i}");
             assert_eq!(rep.cell(i, "restarts"), Some(&Cell::Int(0)), "row {i}");
+            assert_eq!(rep.cell(i, "queue"), Some(&Cell::Str("FIFO".into())), "row {i}");
+            assert_eq!(rep.cell(i, "ckpt"), Some(&Cell::Int(0)), "row {i}");
+            let fairness = rep.cell(i, "fairness").unwrap().as_f64().unwrap();
+            assert!(fairness > 0.0 && fairness <= 1.0 + 1e-9, "row {i}: {fairness}");
+            let met = rep.cell(i, "met").unwrap().as_f64().unwrap();
+            let completed = rep.cell(i, "completed").unwrap().as_f64().unwrap();
+            assert!(met <= completed, "row {i}");
         }
     }
 
@@ -189,6 +368,62 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_grid_shows_the_tradeoff() {
+        let rep = fleet_checkpoint_report();
+        // 4 intervals x 2 policies
+        assert_eq!(rep.n_rows(), 8);
+        let k_values: Vec<f64> = (0..rep.n_rows())
+            .filter_map(|i| rep.cell(i, "ckpt").and_then(Cell::as_f64))
+            .collect();
+        for k in [0.0, 1.0, 2.0, 4.0] {
+            assert!(k_values.contains(&k), "missing ckpt k={k}");
+        }
+        for i in 0..rep.n_rows() {
+            let k = rep.cell(i, "ckpt").unwrap().as_f64().unwrap();
+            let overhead = rep.cell(i, "ckpt_overhead").unwrap().as_f64().unwrap();
+            if k == 0.0 {
+                assert_eq!(overhead, 0.0, "row {i}: no checkpointing, no overhead");
+            }
+        }
+        // checkpointing actually happened somewhere in the k>0 rows
+        let total_overhead: f64 = (0..rep.n_rows())
+            .filter_map(|i| rep.cell(i, "ckpt_overhead").and_then(Cell::as_f64))
+            .sum();
+        assert!(total_overhead > 0.0, "k>0 rows must pay checkpoint overhead");
+    }
+
+    #[test]
+    fn users_report_partitions_jobs_by_user() {
+        let rep = fleet_users_report();
+        let policies: Vec<String> = {
+            let mut v = str_values(&rep, "policy");
+            v.sort();
+            v.dedup();
+            v
+        };
+        assert_eq!(policies.len(), 3, "one block per registered policy");
+        // distinct users, and each policy's user rows partition the jobs
+        let mut users: Vec<f64> = (0..rep.n_rows())
+            .filter_map(|i| rep.cell(i, "user").and_then(Cell::as_f64))
+            .collect();
+        users.sort_by(|a, b| a.total_cmp(b));
+        users.dedup();
+        assert!(users.len() >= 2, "the generated trace spans multiple users");
+        for p in &policies {
+            let jobs_sum: f64 = (0..rep.n_rows())
+                .filter(|&i| rep.cell(i, "policy").and_then(Cell::as_str) == Some(p.as_str()))
+                .filter_map(|i| rep.cell(i, "jobs").and_then(Cell::as_f64))
+                .sum();
+            assert_eq!(jobs_sum, GRID_JOBS as f64, "policy {p}");
+            let share_sum: f64 = (0..rep.n_rows())
+                .filter(|&i| rep.cell(i, "policy").and_then(Cell::as_str) == Some(p.as_str()))
+                .filter_map(|i| rep.cell(i, "share").and_then(Cell::as_f64))
+                .sum();
+            assert!((share_sum - 1.0).abs() < 1e-9, "policy {p}: shares sum to {share_sum}");
+        }
+    }
+
+    #[test]
     fn reports_are_deterministic() {
         let a = fleet_report();
         let b = fleet_report();
@@ -197,5 +432,6 @@ mod tests {
             a.render(crate::exp::Format::Json),
             b.render(crate::exp::Format::Json)
         );
+        assert_eq!(fleet_users_report(), fleet_users_report());
     }
 }

@@ -29,6 +29,8 @@
 //! | `sweep`               | registry-only env × model × strategy grid |
 //! | `fleet`               | multi-tenant scheduling: policy × trace × env, stable pool |
 //! | `fleet_churn`         | the same grid under device churn (joins/leaves/degrades) |
+//! | `fleet_checkpoint`    | checkpoint interval k vs restart loss/overhead under churn |
+//! | `fleet_users`         | per-user SLO breakdown: p95, deadline hits, fairness shares |
 //!
 //! CLI: `pacpp exp list`, `pacpp exp run <name> [--format text|json|csv]
 //! [--out FILE]`, `pacpp exp all`. See the crate docs ("Adding a new
@@ -46,7 +48,10 @@ pub mod registry;
 pub mod report;
 pub mod tables;
 
-pub use fleet::{fleet_churn_report, fleet_report, fleet_row, fleet_schema};
+pub use fleet::{
+    fleet_checkpoint_report, fleet_churn_report, fleet_report, fleet_row, fleet_schema,
+    fleet_users_report, fleet_users_schema,
+};
 pub use registry::{sweep_report, sweep_schema, ExpContext, Experiment, ExperimentRegistry};
 pub use report::{Cell, ColType, Column, Format, Report};
 pub use tables::*;

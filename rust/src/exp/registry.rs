@@ -299,6 +299,24 @@ impl ExperimentRegistry {
                 requires_artifacts: false,
                 run: |_| Ok(super::fleet::fleet_churn_report()),
             },
+            FnExperiment {
+                name: "fleet_checkpoint",
+                aliases: &["checkpoint", "ckpt"],
+                description:
+                    "Fleet — checkpoint interval k vs restart loss/overhead under churn",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::fleet::fleet_checkpoint_report()),
+            },
+            FnExperiment {
+                name: "fleet_users",
+                aliases: &["users", "slo"],
+                description:
+                    "Fleet — per-user SLO breakdown: p95, deadline hits, fairness shares",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::fleet::fleet_users_report()),
+            },
         ];
         for e in defaults {
             r.register(Arc::new(e));
@@ -548,6 +566,8 @@ mod tests {
                 "sweep",
                 "fleet",
                 "fleet_churn",
+                "fleet_checkpoint",
+                "fleet_users",
             ]
         );
     }
@@ -566,6 +586,8 @@ mod tests {
             ("fleet", "fleet"),
             ("fleet-churn", "fleet_churn"),
             ("churn", "fleet_churn"),
+            ("ckpt", "fleet_checkpoint"),
+            ("slo", "fleet_users"),
         ] {
             assert_eq!(r.get(query).map(|e| e.name()), Some(want), "query {query:?}");
         }

@@ -1,0 +1,302 @@
+//! Checkpoint-interval modeling: bounded-loss restarts.
+//!
+//! Without checkpointing, a churn-forced restart discards the whole
+//! placement chain. With a [`CheckpointSpec`], a job persists its
+//! adapter/optimizer state every `k` epochs at a configurable cost, so
+//! a restart resumes from the last *completed* checkpoint and can never
+//! lose more than one checkpoint interval of work (plus the partial
+//! checkpoint in flight) — the classic k-vs-overhead tradeoff surfaced
+//! by the `fleet_checkpoint` experiment.
+//!
+//! [`AttemptTimeline`] is the pure arithmetic core: one attempt of a
+//! job on one device slice is a migration prefix, then work segments
+//! interleaved with checkpoint pauses at **absolute** epoch boundaries
+//! (fractions of the whole job, so resumed attempts align with the
+//! boundaries of earlier ones and never re-checkpoint progress that is
+//! already durable). The simulator never duplicates this walk: attempt
+//! durations, mid-attempt progress, completed-checkpoint lookups and
+//! overhead accounting all go through [`AttemptTimeline::at`], and the
+//! bounded-loss property is property-tested against this module
+//! directly (`tests/prop_invariants.rs`).
+
+/// Default per-checkpoint cost, seconds: serializing a few MB of
+/// adapter + optimizer state to flash or a neighbor over the edge LAN.
+pub const DEFAULT_CKPT_COST: f64 = 60.0;
+
+/// Checkpoint policy of one fleet run: persist durable state every
+/// `every_epochs` epochs, paying `cost` wall-clock seconds per
+/// checkpoint (the job makes no progress during the pause).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointSpec {
+    /// Checkpoint every k epochs (k >= 1).
+    pub every_epochs: usize,
+    /// Seconds per checkpoint.
+    pub cost: f64,
+}
+
+impl CheckpointSpec {
+    pub fn new(every_epochs: usize, cost: f64) -> CheckpointSpec {
+        assert!(every_epochs >= 1, "checkpoint interval must be >= 1 epoch");
+        CheckpointSpec { every_epochs, cost: cost.max(0.0) }
+    }
+}
+
+/// Where an attempt stands after some elapsed active time: see
+/// [`AttemptTimeline::at`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttemptPoint {
+    /// Whole-job fraction completed (work only; checkpoint pauses are
+    /// flat segments).
+    pub progress: f64,
+    /// Highest checkpoint boundary whose pause *completed* within this
+    /// attempt (`None` if no checkpoint finished yet — a pause cut
+    /// short by churn leaves nothing durable).
+    pub last_ckpt: Option<f64>,
+    /// Checkpoints completed within this attempt.
+    pub ckpts: usize,
+    /// Seconds spent checkpointing so far, partial pauses included.
+    pub ckpt_time: f64,
+}
+
+/// The deterministic timeline of one attempt: a job that is `p0` done
+/// (whole-job fraction) starts on a device slice where the *whole* job
+/// takes `service_full` seconds of pure work, after a `migration`
+/// prefix during which no progress is made. Checkpoint boundaries are
+/// the absolute fractions `i·k/epochs < 1` strictly above `durable`
+/// (the last *completed* checkpoint) and not below `p0`; no checkpoint
+/// is taken at completion (the finished result supersedes it).
+///
+/// `durable` and `p0` are passed separately because a replan can cut
+/// an attempt *mid-checkpoint-pause*: progress then sits exactly on a
+/// boundary whose checkpoint never completed, and the next attempt
+/// must retake it — keying boundaries off `p0` alone would silently
+/// skip it and let a later restart lose two intervals instead of one
+/// (the bounded-loss invariant).
+#[derive(Debug, Clone)]
+pub struct AttemptTimeline {
+    p0: f64,
+    migration: f64,
+    service_full: f64,
+    /// Future checkpoint boundaries, ascending, in [p0, 1) ∩ (durable, 1).
+    boundaries: Vec<f64>,
+    cost: f64,
+}
+
+impl AttemptTimeline {
+    pub fn new(
+        p0: f64,
+        durable: f64,
+        migration: f64,
+        service_full: f64,
+        epochs: usize,
+        spec: Option<&CheckpointSpec>,
+    ) -> AttemptTimeline {
+        let p0 = p0.clamp(0.0, 1.0);
+        let mut boundaries = Vec::new();
+        let mut cost = 0.0;
+        if let Some(s) = spec {
+            cost = s.cost;
+            let epochs = epochs.max(1);
+            let mut i = 1;
+            while i * s.every_epochs < epochs {
+                let b = (i * s.every_epochs) as f64 / epochs as f64;
+                // only boundaries whose checkpoint completed are skipped;
+                // a boundary equal to p0 with no durable record is a
+                // pause that churn interrupted — retake it first
+                if b > durable + 1e-12 && b > p0 - 1e-12 {
+                    boundaries.push(b);
+                }
+                i += 1;
+            }
+        }
+        AttemptTimeline { p0, migration, service_full, boundaries, cost }
+    }
+
+    /// Wall-clock duration of the attempt run to completion: migration,
+    /// the outstanding work, and every future checkpoint pause.
+    pub fn duration(&self) -> f64 {
+        self.migration
+            + (1.0 - self.p0) * self.service_full
+            + self.boundaries.len() as f64 * self.cost
+    }
+
+    /// Checkpoints a full run of this attempt will take.
+    pub fn checkpoints_total(&self) -> usize {
+        self.boundaries.len()
+    }
+
+    /// Walk the timeline for `active` seconds since the attempt began
+    /// (migration prefix included) and report where the attempt stands.
+    pub fn at(&self, active: f64) -> AttemptPoint {
+        let mut point = AttemptPoint {
+            progress: self.p0,
+            last_ckpt: None,
+            ckpts: 0,
+            ckpt_time: 0.0,
+        };
+        let mut t = active - self.migration;
+        if t <= 0.0 || self.service_full <= 0.0 {
+            return point;
+        }
+        for &b in &self.boundaries {
+            let work = (b - point.progress) * self.service_full;
+            if t < work {
+                point.progress += t / self.service_full;
+                return point;
+            }
+            t -= work;
+            point.progress = b;
+            if t < self.cost {
+                // mid-checkpoint: progress is flat and nothing new is
+                // durable until the pause completes
+                point.ckpt_time += t;
+                return point;
+            }
+            t -= self.cost;
+            point.ckpt_time += self.cost;
+            point.last_ckpt = Some(b);
+            point.ckpts += 1;
+        }
+        let tail = (1.0 - point.progress) * self.service_full;
+        if t < tail {
+            point.progress += t / self.service_full;
+        } else {
+            point.progress = 1.0;
+        }
+        point
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_spec_is_pure_work() {
+        let tl = AttemptTimeline::new(0.0, 0.0, 0.0, 100.0, 3, None);
+        assert_eq!(tl.checkpoints_total(), 0);
+        assert_eq!(tl.duration(), 100.0);
+        assert_eq!(tl.at(50.0).progress, 0.5);
+        assert_eq!(tl.at(100.0).progress, 1.0);
+        assert_eq!(tl.at(1e9).progress, 1.0);
+    }
+
+    #[test]
+    fn boundaries_are_absolute_epoch_fractions() {
+        let spec = CheckpointSpec::new(1, 10.0);
+        // 4 epochs, k=1: boundaries 0.25/0.50/0.75, none at completion
+        let tl = AttemptTimeline::new(0.0, 0.0, 0.0, 100.0, 4, Some(&spec));
+        assert_eq!(tl.checkpoints_total(), 3);
+        assert_eq!(tl.duration(), 130.0);
+        // resuming exactly from a durable boundary re-checkpoints
+        // nothing below it
+        let resumed = AttemptTimeline::new(0.25, 0.25, 0.0, 100.0, 4, Some(&spec));
+        assert_eq!(resumed.checkpoints_total(), 2);
+        assert_eq!(resumed.duration(), 95.0);
+        // a mid-interval start (post-replan) still uses the absolute
+        // boundaries above it
+        let replanned = AttemptTimeline::new(0.3, 0.25, 0.0, 80.0, 4, Some(&spec));
+        assert_eq!(replanned.checkpoints_total(), 2);
+    }
+
+    #[test]
+    fn walk_tracks_progress_pauses_and_durability() {
+        let spec = CheckpointSpec::new(1, 10.0);
+        let tl = AttemptTimeline::new(0.0, 0.0, 0.0, 100.0, 4, Some(&spec));
+        // mid first work segment
+        let p = tl.at(20.0);
+        assert_eq!((p.progress, p.last_ckpt, p.ckpts), (0.2, None, 0));
+        assert_eq!(p.ckpt_time, 0.0);
+        // inside the first pause: flat progress, nothing durable yet
+        let p = tl.at(30.0);
+        assert_eq!((p.progress, p.last_ckpt, p.ckpts), (0.25, None, 0));
+        assert_eq!(p.ckpt_time, 5.0);
+        // just past the first pause: 0.25 is durable
+        let p = tl.at(36.0);
+        assert!((p.progress - 0.26).abs() < 1e-12, "{p:?}");
+        assert_eq!((p.last_ckpt, p.ckpts), (Some(0.25), 1));
+        assert_eq!(p.ckpt_time, 10.0);
+        // completion: all three checkpoints paid
+        let p = tl.at(tl.duration());
+        assert_eq!(p.progress, 1.0);
+        assert_eq!((p.last_ckpt, p.ckpts), (Some(0.75), 3));
+        assert_eq!(p.ckpt_time, 30.0);
+    }
+
+    #[test]
+    fn migration_prefix_makes_no_progress() {
+        let spec = CheckpointSpec::new(2, 5.0);
+        let tl = AttemptTimeline::new(0.5, 0.5, 40.0, 200.0, 4, Some(&spec));
+        assert_eq!(tl.at(0.0).progress, 0.5);
+        assert_eq!(tl.at(39.0).progress, 0.5);
+        assert!((tl.at(60.0).progress - 0.6).abs() < 1e-12);
+        // p0=0.5 sits exactly on the 2/4 boundary: no re-checkpoint
+        assert_eq!(tl.checkpoints_total(), 0);
+        assert_eq!(tl.duration(), 40.0 + 100.0);
+    }
+
+    /// Regression (moved here from the simulator when checkpointing
+    /// subsumed `replan_frac_left`): progress is measured against the
+    /// whole job, never against the attempt, so repeated replans cannot
+    /// re-charge work an earlier replan already preserved.
+    #[test]
+    fn replan_progress_does_not_compound() {
+        // attempt 1: no migration, whole job takes 100 s, churn at 50 s
+        let p1 = AttemptTimeline::new(0.0, 0.0, 0.0, 100.0, 3, None).at(50.0).progress;
+        assert!((p1 - 0.5).abs() < 1e-12);
+        // attempt 2: 10 s migration, whole job now 80 s, churn 30 s in:
+        // 20 s of work = 0.25 of the whole job -> 0.75 done
+        let p2 = AttemptTimeline::new(p1, 0.0, 10.0, 80.0, 3, None).at(30.0).progress;
+        assert!((p2 - 0.75).abs() < 1e-12, "got {p2}");
+        // churn during the migration prefix makes no progress
+        assert_eq!(AttemptTimeline::new(0.5, 0.0, 10.0, 80.0, 3, None).at(5.0).progress, 0.5);
+        // and progress never exceeds the whole job
+        assert_eq!(AttemptTimeline::new(0.9, 0.0, 0.0, 100.0, 3, None).at(500.0).progress, 1.0);
+    }
+
+    /// A replan that cut the previous attempt *mid-checkpoint-pause*
+    /// leaves progress exactly on a boundary with no durable record:
+    /// the next attempt must retake that checkpoint before moving on,
+    /// or a later restart would lose two intervals instead of one.
+    #[test]
+    fn interrupted_checkpoint_is_retaken() {
+        let spec = CheckpointSpec::new(1, 10.0);
+        // progress stalled at 0.5, but only 0.25 ever became durable
+        let tl = AttemptTimeline::new(0.5, 0.25, 0.0, 100.0, 4, Some(&spec));
+        assert_eq!(tl.checkpoints_total(), 2, "retake 0.5, then 0.75");
+        assert_eq!(tl.duration(), 50.0 + 20.0);
+        // the retaken pause runs first: flat progress, nothing durable
+        let p = tl.at(5.0);
+        assert_eq!((p.progress, p.last_ckpt, p.ckpts), (0.5, None, 0));
+        assert_eq!(p.ckpt_time, 5.0);
+        // once it completes, 0.5 is durable and work resumes
+        let p = tl.at(12.0);
+        assert!((p.progress - 0.52).abs() < 1e-12, "{p:?}");
+        assert_eq!((p.last_ckpt, p.ckpts), (Some(0.5), 1));
+        // and the loss bound holds throughout: progress − durable ≤ k/E
+        for active in [0.0, 5.0, 12.0, 30.0, 36.0, 60.0] {
+            let p = tl.at(active);
+            let resume = p.last_ckpt.unwrap_or(0.25);
+            assert!(
+                p.progress - resume <= 0.25 + 1e-12,
+                "active {active}: {p:?} loses more than one interval"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_cost_checkpoints_complete_instantly() {
+        let spec = CheckpointSpec::new(1, 0.0);
+        let tl = AttemptTimeline::new(0.0, 0.0, 0.0, 100.0, 2, Some(&spec));
+        assert_eq!(tl.duration(), 100.0);
+        let p = tl.at(50.0);
+        assert_eq!((p.progress, p.last_ckpt, p.ckpts), (0.5, Some(0.5), 1));
+        assert_eq!(p.ckpt_time, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "checkpoint interval")]
+    fn zero_interval_is_rejected() {
+        CheckpointSpec::new(0, 1.0);
+    }
+}

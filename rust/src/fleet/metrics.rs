@@ -1,9 +1,82 @@
 //! [`FleetMetrics`] — what one fleet simulation is judged by.
 
+use std::collections::BTreeMap;
+
 use crate::util::stats::percentile;
 
+/// Jain's fairness index over non-negative per-user allocations:
+/// `(Σx)² / (n·Σx²)`, in `(0, 1]` for any non-degenerate input; `1.0`
+/// exactly when every user received the same amount — and by
+/// convention for the vacuous cases (no users, or no service handed
+/// out at all).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sum <= 0.0 || sq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sq)
+}
+
+/// Per-job outcome, indexed by job id in [`FleetMetrics::per_job`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStat {
+    pub id: usize,
+    pub user: usize,
+    pub arrival: f64,
+    /// First instant any attempt of this job started (`None` = never
+    /// placed).
+    pub first_start: Option<f64>,
+    /// Completion instant (`None` = failed or incomplete).
+    pub finish: Option<f64>,
+    /// Absolute deadline (`f64::INFINITY` when deadlines are disabled
+    /// or the job has no feasible full-pool reference plan).
+    pub deadline: f64,
+    /// Completed at or before its deadline.
+    pub met: bool,
+}
+
+/// Per-user SLO aggregate in [`FleetMetrics::per_user`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct UserStat {
+    pub user: usize,
+    /// Jobs this user submitted.
+    pub jobs: usize,
+    pub completed: usize,
+    /// Jobs completed within their deadline.
+    pub met: usize,
+    /// p95 completion latency over the user's completed jobs, seconds.
+    pub p95: Option<f64>,
+    /// Device-seconds this user's jobs occupied.
+    pub service: f64,
+}
+
+/// Raw tallies the simulator hands to [`FleetMetrics::assemble`].
+pub(crate) struct RawFleet {
+    /// One entry per job, ascending id.
+    pub per_job: Vec<JobStat>,
+    /// Jobs proven unplaceable.
+    pub failed: usize,
+    /// Virtual time at which the simulation ended, seconds.
+    pub makespan: f64,
+    /// (id, busy seconds, presence seconds) per device.
+    pub per_device: Vec<(usize, f64, f64)>,
+    /// (user, device-seconds consumed) pairs, ascending user.
+    pub user_service: Vec<(usize, f64)>,
+    pub replans: usize,
+    pub restarts: usize,
+    pub work_lost: f64,
+    pub migration_overhead: f64,
+    pub ckpt_count: usize,
+    pub ckpt_overhead: f64,
+    pub events: usize,
+}
+
 /// Aggregate outcome of one fleet run. All fields are deterministic
-/// functions of (pool, traces, policy, strategy, horizon): the
+/// functions of (pool, traces, policies, strategy, options): the
 /// determinism property test compares whole values with `==`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetMetrics {
@@ -18,6 +91,13 @@ pub struct FleetMetrics {
     pub makespan: f64,
     /// Completed jobs per hour of makespan.
     pub jobs_per_hour: f64,
+    /// Jobs completed within their deadline.
+    pub deadline_met: usize,
+    /// Deadline-met jobs per hour of makespan (the fleet's goodput).
+    pub goodput_per_hour: f64,
+    /// Fraction of all submitted jobs that did *not* complete within
+    /// their deadline (unfinished jobs count as misses — conservative).
+    pub deadline_miss_rate: f64,
     /// Completion-latency (finish − arrival) percentiles over the
     /// completed jobs, seconds. Empty runs report `None`.
     pub latency_p50: Option<f64>,
@@ -28,17 +108,29 @@ pub struct FleetMetrics {
     pub utilization: f64,
     /// Per-device (id, busy/presence) pairs, ascending id.
     pub per_device_util: Vec<(usize, f64)>,
+    /// Jain fairness index over per-user device-seconds, in (0, 1];
+    /// 1.0 for a single-user trace.
+    pub fairness: f64,
+    /// Per-job outcomes, ascending job id.
+    pub per_job: Vec<JobStat>,
+    /// Per-user SLO aggregates, ascending user id.
+    pub per_user: Vec<UserStat>,
     /// Replans triggered by churn (preempt-and-replan policies).
     pub replans: usize,
     /// Attempts aborted by churn (restart policies, or replans whose
     /// survivors could not host the job).
     pub restarts: usize,
-    /// Wall-clock seconds of job execution discarded by churn-forced
-    /// restarts (the whole placement chain, progress preserved by
-    /// intermediate replans included).
+    /// Seconds of job execution discarded by churn-forced restarts.
+    /// Without checkpointing this is the whole placement chain; with it,
+    /// only the work since the last completed checkpoint (expressed at
+    /// the aborted attempt's service rate).
     pub work_lost: f64,
     /// Checkpoint/activation-cache migration seconds paid by replans.
     pub migration_overhead: f64,
+    /// Checkpoints completed across all attempts.
+    pub ckpt_count: usize,
+    /// Seconds spent checkpointing, partial (churn-cut) pauses included.
+    pub ckpt_overhead: f64,
     /// Events processed by the event loop (throughput denominator for
     /// `bench_fleet`).
     pub events: usize,
@@ -46,37 +138,90 @@ pub struct FleetMetrics {
 
 impl FleetMetrics {
     /// Assemble the derived fields from the raw tallies the simulator
-    /// accumulated. `latencies` need not be sorted.
-    #[allow(clippy::too_many_arguments)]
-    pub(crate) fn assemble(
-        mut latencies: Vec<f64>,
-        failed: usize,
-        incomplete: usize,
-        makespan: f64,
-        per_device_util: Vec<(usize, f64, f64)>, // (id, busy, presence)
-        replans: usize,
-        restarts: usize,
-        work_lost: f64,
-        migration_overhead: f64,
-        events: usize,
-    ) -> FleetMetrics {
-        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    /// accumulated.
+    pub(crate) fn assemble(raw: RawFleet) -> FleetMetrics {
+        let n_jobs = raw.per_job.len();
+        let mut latencies: Vec<f64> = raw
+            .per_job
+            .iter()
+            .filter_map(|j| j.finish.map(|f| f - j.arrival))
+            .collect();
+        latencies.sort_by(|a, b| a.total_cmp(b));
         let completed = latencies.len();
-        let pct = |q: f64| (!latencies.is_empty()).then(|| percentile(&latencies, q));
-        let (busy, presence) = per_device_util
+        let incomplete = n_jobs - completed - raw.failed;
+        let pct = |q: f64| {
+            if latencies.is_empty() {
+                None
+            } else {
+                Some(percentile(&latencies, q))
+            }
+        };
+        let deadline_met = raw.per_job.iter().filter(|j| j.met).count();
+        let hours = raw.makespan / 3600.0;
+        let per_hour = |n: usize| if hours > 0.0 { n as f64 / hours } else { 0.0 };
+
+        // per-user aggregation (BTreeMap: deterministic ascending order)
+        #[derive(Default)]
+        struct UserAcc {
+            jobs: usize,
+            completed: usize,
+            met: usize,
+            lats: Vec<f64>,
+        }
+        let mut users: BTreeMap<usize, UserAcc> = BTreeMap::new();
+        for j in &raw.per_job {
+            let acc = users.entry(j.user).or_default();
+            acc.jobs += 1;
+            if let Some(f) = j.finish {
+                acc.completed += 1;
+                acc.lats.push(f - j.arrival);
+            }
+            if j.met {
+                acc.met += 1;
+            }
+        }
+        let service: BTreeMap<usize, f64> = raw.user_service.iter().copied().collect();
+        let per_user: Vec<UserStat> = users
+            .into_iter()
+            .map(|(user, mut acc)| {
+                acc.lats.sort_by(|a, b| a.total_cmp(b));
+                UserStat {
+                    user,
+                    jobs: acc.jobs,
+                    completed: acc.completed,
+                    met: acc.met,
+                    p95: if acc.lats.is_empty() {
+                        None
+                    } else {
+                        Some(percentile(&acc.lats, 0.95))
+                    },
+                    service: service.get(&user).copied().unwrap_or(0.0),
+                }
+            })
+            .collect();
+        let shares: Vec<f64> = per_user.iter().map(|u| u.service).collect();
+        let fairness = jain_index(&shares);
+
+        let (busy, presence) = raw
+            .per_device
             .iter()
             .fold((0.0, 0.0), |(b, p), (_, db, dp)| (b + db, p + dp));
-        let per_device_util: Vec<(usize, f64)> = per_device_util
+        let per_device_util: Vec<(usize, f64)> = raw
+            .per_device
             .into_iter()
             .map(|(id, b, p)| (id, if p > 0.0 { b / p } else { 0.0 }))
             .collect();
+
         FleetMetrics {
             completed,
-            failed,
+            failed: raw.failed,
             incomplete,
-            makespan,
-            jobs_per_hour: if makespan > 0.0 {
-                completed as f64 / (makespan / 3600.0)
+            makespan: raw.makespan,
+            jobs_per_hour: per_hour(completed),
+            deadline_met,
+            goodput_per_hour: per_hour(deadline_met),
+            deadline_miss_rate: if n_jobs > 0 {
+                1.0 - deadline_met as f64 / n_jobs as f64
             } else {
                 0.0
             },
@@ -85,11 +230,16 @@ impl FleetMetrics {
             latency_p99: pct(0.99),
             utilization: if presence > 0.0 { busy / presence } else { 0.0 },
             per_device_util,
-            replans,
-            restarts,
-            work_lost,
-            migration_overhead,
-            events,
+            fairness,
+            per_job: raw.per_job,
+            per_user,
+            replans: raw.replans,
+            restarts: raw.restarts,
+            work_lost: raw.work_lost,
+            migration_overhead: raw.migration_overhead,
+            ckpt_count: raw.ckpt_count,
+            ckpt_overhead: raw.ckpt_overhead,
+            events: raw.events,
         }
     }
 }
@@ -98,38 +248,152 @@ impl FleetMetrics {
 mod tests {
     use super::*;
 
+    fn stat(
+        id: usize,
+        user: usize,
+        arrival: f64,
+        finish: Option<f64>,
+        deadline: f64,
+    ) -> JobStat {
+        JobStat {
+            id,
+            user,
+            arrival,
+            first_start: finish.map(|_| arrival),
+            finish,
+            deadline,
+            met: finish.map(|f| f <= deadline).unwrap_or(false),
+        }
+    }
+
+    fn raw(per_job: Vec<JobStat>, failed: usize, makespan: f64) -> RawFleet {
+        RawFleet {
+            per_job,
+            failed,
+            makespan,
+            per_device: vec![],
+            user_service: vec![],
+            replans: 0,
+            restarts: 0,
+            work_lost: 0.0,
+            migration_overhead: 0.0,
+            ckpt_count: 0,
+            ckpt_overhead: 0.0,
+            events: 0,
+        }
+    }
+
     #[test]
-    fn assemble_computes_percentiles_and_rates() {
-        let m = FleetMetrics::assemble(
-            vec![30.0, 10.0, 20.0, 40.0],
-            1,
-            2,
-            7200.0,
-            vec![(0, 3600.0, 7200.0), (1, 1800.0, 3600.0)],
-            3,
-            4,
-            55.0,
-            5.5,
-            99,
-        );
-        assert_eq!(m.completed, 4);
-        assert_eq!(m.failed, 1);
-        assert_eq!(m.incomplete, 2);
+    fn assemble_computes_percentiles_rates_and_deadlines() {
+        let per_job = vec![
+            stat(0, 0, 0.0, Some(10.0), 100.0),
+            stat(1, 0, 0.0, Some(20.0), 100.0),
+            stat(2, 1, 0.0, Some(30.0), 25.0), // completed but missed
+            stat(3, 1, 0.0, Some(40.0), 100.0),
+            stat(4, 2, 0.0, None, 100.0), // failed
+            stat(5, 2, 0.0, None, 100.0), // incomplete
+            stat(6, 2, 0.0, None, 100.0), // incomplete
+        ];
+        let mut r = raw(per_job, 1, 7200.0);
+        r.per_device = vec![(0, 3600.0, 7200.0), (1, 1800.0, 3600.0)];
+        r.user_service = vec![(0, 100.0), (1, 100.0), (2, 100.0)];
+        r.replans = 3;
+        r.restarts = 4;
+        r.events = 99;
+        let m = FleetMetrics::assemble(r);
+        assert_eq!((m.completed, m.failed, m.incomplete), (4, 1, 2));
         assert!((m.jobs_per_hour - 2.0).abs() < 1e-12);
+        assert_eq!(m.deadline_met, 3);
+        assert!((m.goodput_per_hour - 1.5).abs() < 1e-12);
+        assert!((m.deadline_miss_rate - 4.0 / 7.0).abs() < 1e-12);
         assert!((m.latency_p50.unwrap() - 25.0).abs() < 1e-9);
         assert!(m.latency_p99.unwrap() <= 40.0);
         // utilization is presence-weighted: (3600+1800)/(7200+3600)
         assert!((m.utilization - 0.5).abs() < 1e-12);
         assert_eq!(m.per_device_util, vec![(0, 0.5), (1, 0.5)]);
         assert_eq!((m.replans, m.restarts, m.events), (3, 4, 99));
+        // equal per-user service: perfectly fair
+        assert!((m.fairness - 1.0).abs() < 1e-12);
+        assert_eq!(m.per_user.len(), 3);
+        assert_eq!((m.per_user[0].jobs, m.per_user[0].completed, m.per_user[0].met), (2, 2, 2));
+        assert_eq!((m.per_user[1].jobs, m.per_user[1].met), (2, 1));
+        assert_eq!(m.per_user[2].completed, 0);
+        assert_eq!(m.per_user[2].p95, None);
+    }
+
+    /// Zero completed jobs: every rate is a clean zero, every
+    /// percentile `None` — no NaN or divide-by-zero anywhere.
+    #[test]
+    fn empty_run_has_no_nans() {
+        let m = FleetMetrics::assemble(raw(vec![], 0, 0.0));
+        assert_eq!((m.completed, m.failed, m.incomplete), (0, 0, 0));
+        assert_eq!(m.latency_p50, None);
+        assert_eq!(m.latency_p95, None);
+        assert_eq!(m.jobs_per_hour, 0.0);
+        assert_eq!(m.goodput_per_hour, 0.0);
+        assert_eq!(m.deadline_miss_rate, 0.0);
+        assert_eq!(m.utilization, 0.0);
+        assert_eq!(m.fairness, 1.0, "vacuous fairness is perfect");
+        assert!(m.per_user.is_empty());
+        // all-incomplete run: still no NaN
+        let m = FleetMetrics::assemble(raw(vec![stat(0, 0, 5.0, None, 10.0)], 0, 3600.0));
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.incomplete, 1);
+        assert_eq!(m.deadline_miss_rate, 1.0);
+        assert!(m.goodput_per_hour == 0.0 && !m.goodput_per_hour.is_nan());
+        assert_eq!(m.per_user[0].p95, None);
+        assert_eq!(m.fairness, 1.0, "no service handed out at all");
+    }
+
+    /// A single-event (one-job) trace: percentiles collapse to the one
+    /// latency, fairness is exactly 1.0.
+    #[test]
+    fn single_job_trace() {
+        let mut r = raw(vec![stat(0, 7, 10.0, Some(110.0), 500.0)], 0, 200.0);
+        r.user_service = vec![(7, 100.0)];
+        let m = FleetMetrics::assemble(r);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.latency_p50, Some(100.0));
+        assert_eq!(m.latency_p95, Some(100.0));
+        assert_eq!(m.latency_p99, Some(100.0));
+        assert_eq!(m.fairness, 1.0);
+        assert_eq!(m.per_user, vec![UserStat {
+            user: 7,
+            jobs: 1,
+            completed: 1,
+            met: 1,
+            p95: Some(100.0),
+            service: 100.0,
+        }]);
+        assert_eq!(m.deadline_met, 1);
+        assert_eq!(m.deadline_miss_rate, 0.0);
+    }
+
+    /// Exact percentile indexing at small n: two latencies interpolate
+    /// linearly, matching `util::stats::percentile` to the bit.
+    #[test]
+    fn small_n_percentiles_are_exact() {
+        let per_job = vec![
+            stat(0, 0, 0.0, Some(10.0), f64::INFINITY),
+            stat(1, 0, 0.0, Some(20.0), f64::INFINITY),
+        ];
+        let m = FleetMetrics::assemble(raw(per_job, 0, 100.0));
+        assert_eq!(m.latency_p50, Some(15.0));
+        assert!((m.latency_p95.unwrap() - 19.5).abs() < 1e-12);
+        assert!((m.latency_p99.unwrap() - 19.9).abs() < 1e-12);
+        // infinite deadlines: everything completed counts as met
+        assert_eq!(m.deadline_met, 2);
     }
 
     #[test]
-    fn empty_run_has_no_percentiles() {
-        let m = FleetMetrics::assemble(vec![], 0, 0, 0.0, vec![], 0, 0, 0.0, 0.0, 0);
-        assert_eq!(m.completed, 0);
-        assert_eq!(m.latency_p50, None);
-        assert_eq!(m.jobs_per_hour, 0.0);
-        assert_eq!(m.utilization, 0.0);
+    fn jain_index_properties() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[5.0]), 1.0);
+        assert!((jain_index(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+        // one user hogging everything among n: J = 1/n
+        assert!((jain_index(&[9.0, 0.0, 0.0]) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0, "no service at all is vacuously fair");
+        let j = jain_index(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(j > 0.0 && j <= 1.0);
     }
 }

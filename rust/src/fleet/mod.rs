@@ -1,6 +1,7 @@
 //! `fleet` — a deterministic discrete-event **multi-tenant scheduler**:
 //! many personal fine-tuning jobs contending for one shared, churning
-//! pool of edge devices.
+//! pool of edge devices, with deadlines, per-user SLOs and bounded-loss
+//! checkpointing.
 //!
 //! The paper fine-tunes one personal LLM on one static pool. The
 //! production target (ROADMAP north star) is many concurrent users on
@@ -11,15 +12,25 @@
 //!   ([`sim`]);
 //! * **arrival** — seeded job-stream generators ([`TraceKind`]:
 //!   steady / diurnal / bursty), each job carrying its own model size,
-//!   dataset size and epoch budget ([`trace`]);
+//!   dataset size, epoch budget, submitting user and deadline slack
+//!   ([`trace`]);
 //! * **churn** — devices join, leave, or degrade to low-power modes
 //!   mid-run ([`ChurnEvent`]);
-//! * **contention** — a queue plus a pluggable [`PlacementPolicy`]
-//!   ([`policy`]): FIFO-exclusive, best-fit device-partitioning, and
-//!   preempt-and-replan-on-churn, resolved by name through a
-//!   [`PolicyRegistry`];
-//! * **accounting** — [`FleetMetrics`]: jobs/hour, p50/p95/p99
-//!   completion latency, per-device utilization, replans, work lost.
+//! * **contention** — a queue ordered by a pluggable [`QueuePolicy`]
+//!   ([`queue`]: strict FIFO, EASY-backfill, shortest-job-first) over a
+//!   pluggable [`PlacementPolicy`] ([`policy`]: FIFO-exclusive,
+//!   best-fit device-partitioning, preempt-and-replan-on-churn), each
+//!   resolved by name through its registry ([`QueuePolicyRegistry`],
+//!   [`PolicyRegistry`]);
+//! * **reliability** — optional checkpointing every `k` epochs
+//!   ([`ckpt`]): a churn-forced restart resumes from the last completed
+//!   checkpoint instead of losing the whole attempt, trading bounded
+//!   loss against checkpoint overhead;
+//! * **accounting** — [`FleetMetrics`]: jobs/hour, goodput (jobs
+//!   finished within their deadline), deadline-miss rate, p50/p95/p99
+//!   completion latency, per-user p95 + Jain fairness over per-user
+//!   service ([`jain_index`]), per-device utilization, replans,
+//!   restarts, work lost, migration and checkpoint overhead.
 //!
 //! Placement never re-derives timing: every candidate device subset is
 //! costed through the existing [`crate::strategy`] registry (the
@@ -28,20 +39,31 @@
 //! as the single-job experiments.
 //!
 //! Entry points: [`simulate_fleet`] (library), the `fleet` /
-//! `fleet_churn` experiments in
+//! `fleet_churn` / `fleet_checkpoint` / `fleet_users` experiments in
 //! [`crate::exp::ExperimentRegistry::with_defaults`], and the
-//! `pacpp fleet` CLI subcommand. See the crate docs ("Adding a
-//! placement policy") for how to register your own policy.
+//! `pacpp fleet` CLI subcommand (`--policy`, `--queue`, `--deadline`,
+//! `--ckpt`). See the crate docs ("Adding a placement policy", "Adding
+//! a queue policy") for how to register your own.
 
+pub mod ckpt;
 pub mod metrics;
 pub mod policy;
+pub mod queue;
 pub mod sim;
 pub mod trace;
 
-pub use metrics::FleetMetrics;
+pub use ckpt::{AttemptPoint, AttemptTimeline, CheckpointSpec, DEFAULT_CKPT_COST};
+pub use metrics::{jain_index, FleetMetrics, JobStat, UserStat};
 pub use policy::{
     BestFit, ChurnResponse, FifoExclusive, Placement, PlacementCtx, PlacementPolicy,
     PlanOracle, PolicyRegistry, PreemptReplan,
 };
+pub use queue::{
+    EasyBackfill, FifoQueue, QueueCtx, QueueDecision, QueuePolicy, QueuePolicyRegistry,
+    RunningSnapshot, ShortestJobFirst,
+};
 pub use sim::{simulate_fleet, FleetOptions, StrategyOracle};
-pub use trace::{generate_churn, generate_jobs, ChurnEvent, ChurnKind, Job, TraceKind};
+pub use trace::{
+    generate_churn, generate_jobs, ChurnEvent, ChurnKind, Job, TraceKind,
+    DEFAULT_DEADLINE_MULT,
+};

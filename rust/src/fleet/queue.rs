@@ -1,0 +1,513 @@
+//! The open queueing layer: *which* queued job is attempted next.
+//!
+//! [`super::policy::PlacementPolicy`] decides how a job claims devices;
+//! a [`QueuePolicy`] decides which queued job gets that chance. The
+//! split mirrors real cluster schedulers (Slurm/Flux): the queue
+//! discipline composes with any placement policy, and both resolve by
+//! name through their registries ([`QueuePolicyRegistry`],
+//! [`super::policy::PolicyRegistry`]).
+//!
+//! Built-ins:
+//!
+//! * [`FifoQueue`] — strict head-of-line (the PR-3 behavior);
+//! * [`EasyBackfill`] — EASY backfilling: when the head job cannot be
+//!   placed, compute its *shadow time* (the earliest instant it becomes
+//!   feasible, assuming running jobs release their devices at their
+//!   scheduled finishes) and let a later job jump the line only if it
+//!   is certain to finish — checkpoint pauses included — by that
+//!   instant. On a churn-free run a backfilled job therefore never
+//!   delays the blocked head's start (property-tested in
+//!   `tests/prop_invariants.rs`); under churn finish times are
+//!   estimates and the guarantee is best-effort, like every real
+//!   backfill scheduler's;
+//! * [`ShortestJobFirst`] — place the placeable job with the smallest
+//!   whole-pool service estimate (via the same [`PlanOracle`] quotes
+//!   the placements use). Minimizes mean wait; can starve large jobs.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::cluster::Device;
+
+use super::ckpt::{AttemptTimeline, CheckpointSpec};
+use super::policy::{Placement, PlacementCtx, PlacementPolicy, PlanOracle};
+use super::trace::Job;
+
+/// One running job as the queue layer sees it: its scheduled finish
+/// and the devices (with current kinds) it will release then.
+#[derive(Debug, Clone)]
+pub struct RunningSnapshot {
+    pub job: usize,
+    pub finish: f64,
+    pub devices: Vec<Device>,
+}
+
+/// What a queue decision sees. `queue` holds job ids front-first
+/// (borrowed straight from the simulator — no per-dispatch copy, the
+/// backlog can be thousands of jobs); `running` is ascending by
+/// scheduled finish; `done` is the durable completed fraction per job
+/// id (last checkpoint — 0.0 for fresh jobs).
+pub struct QueueCtx<'a> {
+    pub jobs: &'a [Job],
+    pub queue: &'a VecDeque<usize>,
+    /// Idle devices, ascending id order.
+    pub free: &'a [Device],
+    /// Devices present in the pool (busy + free).
+    pub present: usize,
+    /// Jobs currently running (always populated, unlike `running`).
+    pub n_running: usize,
+    /// Running-job snapshots, ascending by scheduled finish — built
+    /// only for policies whose [`QueuePolicy::wants_running`] is true
+    /// (empty otherwise).
+    pub running: &'a [RunningSnapshot],
+    pub done: &'a [f64],
+    pub now: f64,
+    pub placement: &'a dyn PlacementPolicy,
+    pub oracle: &'a dyn PlanOracle,
+    pub ckpt: Option<&'a CheckpointSpec>,
+}
+
+impl QueueCtx<'_> {
+    /// Attempt to place `job` on a (possibly hypothetical) free set
+    /// with `running` jobs active, through the run's placement policy.
+    pub fn try_place(&self, job: &Job, free: &[Device], running: usize) -> Option<Placement> {
+        let ctx = PlacementCtx {
+            job,
+            free,
+            present: self.present,
+            running,
+            oracle: self.oracle,
+        };
+        self.placement.place(&ctx)
+    }
+
+    /// Wall-clock duration the quoted placement implies for `job`'s
+    /// next attempt, checkpoint pauses included. Queued jobs resume
+    /// from their durable checkpoint, so `p0` and `durable` coincide.
+    pub fn attempt_duration(&self, job: &Job, quote: f64) -> f64 {
+        let done = self.done[job.id];
+        AttemptTimeline::new(done, done, 0.0, quote, job.epochs, self.ckpt).duration()
+    }
+}
+
+/// A queue decision: start the job at `queue_pos` (0 = head) with this
+/// placement.
+#[derive(Debug, Clone)]
+pub struct QueueDecision {
+    pub queue_pos: usize,
+    pub placement: Placement,
+}
+
+/// A pluggable queueing discipline. Implementations must be stateless
+/// (or internally synchronized): the registry hands out shared
+/// references and the fleet experiments run policies from worker
+/// threads.
+pub trait QueuePolicy: Send + Sync {
+    /// Canonical display name (stable: used in tables, JSON, the CLI).
+    fn name(&self) -> &str;
+
+    /// Lowercase lookup aliases accepted by [`QueuePolicyRegistry::get`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for `pacpp fleet` docs.
+    fn description(&self) -> &str {
+        ""
+    }
+
+    /// Whether [`next`](QueuePolicy::next) reads [`QueueCtx::running`].
+    /// The dispatch loop is the simulator's hottest path; disciplines
+    /// that never look at the running set (FIFO) let the simulator
+    /// skip building the per-dispatch snapshot entirely.
+    fn wants_running(&self) -> bool {
+        true
+    }
+
+    /// Pick the next job to start, or `None` to wait (the simulator
+    /// retries at the next state change and fails permanently
+    /// unplaceable jobs itself).
+    fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision>;
+}
+
+/// Strict head-of-line: only the queue head is ever attempted.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FifoQueue;
+
+impl QueuePolicy for FifoQueue {
+    fn name(&self) -> &str {
+        "FIFO"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fifo", "hol", "head-of-line"]
+    }
+
+    fn description(&self) -> &str {
+        "strict head-of-line: a blocked head job blocks everything behind it"
+    }
+
+    fn wants_running(&self) -> bool {
+        false // only the running *count* is read, which travels separately
+    }
+
+    fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision> {
+        let &head = ctx.queue.front()?;
+        let placement = ctx.try_place(&ctx.jobs[head], ctx.free, ctx.n_running)?;
+        Some(QueueDecision { queue_pos: 0, placement })
+    }
+}
+
+/// EASY backfilling: the head keeps an implicit reservation at its
+/// shadow time; later jobs may run now only if they provably finish by
+/// then. Conservative by design — a candidate that *might* overrun the
+/// shadow waits.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EasyBackfill;
+
+impl QueuePolicy for EasyBackfill {
+    fn name(&self) -> &str {
+        "EASY-backfill"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["backfill", "easy", "easy-backfill"]
+    }
+
+    fn description(&self) -> &str {
+        "small jobs jump the line only when they cannot delay the head job's earliest start"
+    }
+
+    fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision> {
+        let &head_id = ctx.queue.front()?;
+        let head = &ctx.jobs[head_id];
+        if let Some(placement) = ctx.try_place(head, ctx.free, ctx.n_running) {
+            return Some(QueueDecision { queue_pos: 0, placement });
+        }
+        // shadow time: replay the scheduled finishes, accumulating the
+        // devices they release, until the head becomes feasible
+        let mut avail: Vec<Device> = ctx.free.to_vec();
+        let mut shadow = None;
+        for (i, r) in ctx.running.iter().enumerate() {
+            avail.extend(r.devices.iter().cloned());
+            avail.sort_by_key(|d| d.id);
+            if ctx.try_place(head, &avail, ctx.n_running - (i + 1)).is_some() {
+                shadow = Some(r.finish);
+                break;
+            }
+        }
+        // head infeasible even on everything: let the simulator's
+        // failed-job pruning deal with it
+        let shadow = shadow?;
+        for pos in 1..ctx.queue.len() {
+            let cand = &ctx.jobs[ctx.queue[pos]];
+            if let Some(placement) = ctx.try_place(cand, ctx.free, ctx.n_running) {
+                if ctx.now + ctx.attempt_duration(cand, placement.service_time) <= shadow {
+                    return Some(QueueDecision { queue_pos: pos, placement });
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Shortest-job-first by whole-pool service estimate: the canonical
+/// "job size" is what the oracle quotes for the job on every present
+/// device, so repeated shapes cost one planner call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShortestJobFirst;
+
+impl QueuePolicy for ShortestJobFirst {
+    fn name(&self) -> &str {
+        "SJF"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["sjf", "shortest", "shortest-job-first"]
+    }
+
+    fn description(&self) -> &str {
+        "place the placeable job with the smallest service estimate; can starve large jobs"
+    }
+
+    fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision> {
+        if ctx.queue.is_empty() {
+            return None;
+        }
+        let mut pool: Vec<Device> = ctx.free.to_vec();
+        for r in ctx.running {
+            pool.extend(r.devices.iter().cloned());
+        }
+        pool.sort_by_key(|d| d.id);
+        let est: Vec<f64> = ctx
+            .queue
+            .iter()
+            .map(|&j| {
+                ctx.oracle
+                    .service_time(&ctx.jobs[j], &pool)
+                    .unwrap_or(f64::INFINITY)
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..ctx.queue.len()).collect();
+        order.sort_by(|&a, &b| est[a].total_cmp(&est[b]).then(a.cmp(&b)));
+        for pos in order {
+            let cand = &ctx.jobs[ctx.queue[pos]];
+            if let Some(placement) = ctx.try_place(cand, ctx.free, ctx.n_running) {
+                return Some(QueueDecision { queue_pos: pos, placement });
+            }
+        }
+        None
+    }
+}
+
+/// An ordered, name-addressed collection of queue policies.
+///
+/// Registration order is preserved; canonical names match
+/// case-insensitively; aliases are lowercase. Mirrors
+/// [`super::policy::PolicyRegistry`].
+pub struct QueuePolicyRegistry {
+    policies: Vec<Arc<dyn QueuePolicy>>,
+}
+
+impl QueuePolicyRegistry {
+    /// An empty registry (build-your-own line-ups).
+    pub fn empty() -> QueuePolicyRegistry {
+        QueuePolicyRegistry { policies: Vec::new() }
+    }
+
+    /// The three built-in disciplines: FIFO, EASY-backfill, SJF.
+    pub fn with_defaults() -> QueuePolicyRegistry {
+        let mut r = QueuePolicyRegistry::empty();
+        r.register(Arc::new(FifoQueue));
+        r.register(Arc::new(EasyBackfill));
+        r.register(Arc::new(ShortestJobFirst));
+        r
+    }
+
+    /// Add a policy; replaces an existing entry with the same canonical
+    /// name (so callers can shadow a built-in).
+    pub fn register(&mut self, p: Arc<dyn QueuePolicy>) {
+        let name = p.name().to_ascii_lowercase();
+        if let Some(slot) =
+            self.policies.iter_mut().find(|e| e.name().to_ascii_lowercase() == name)
+        {
+            *slot = p;
+        } else {
+            self.policies.push(p);
+        }
+    }
+
+    /// Look up by canonical name (case-insensitive) or alias.
+    pub fn get(&self, name: &str) -> Option<&Arc<dyn QueuePolicy>> {
+        let q = name.to_ascii_lowercase();
+        self.policies
+            .iter()
+            .find(|p| p.name().to_ascii_lowercase() == q)
+            .or_else(|| self.policies.iter().find(|p| p.aliases().contains(&q.as_str())))
+    }
+
+    /// Canonical names in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.policies.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn QueuePolicy>> {
+        self.policies.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.policies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+}
+
+impl Default for QueuePolicyRegistry {
+    fn default() -> Self {
+        QueuePolicyRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeviceKind;
+    use crate::fleet::policy::BestFit;
+    use crate::model::ModelSpec;
+
+    /// Oracle for queue tests: a job needs `job.seq` devices (test-local
+    /// encoding) and its service time is `job.samples / n_devices`
+    /// seconds, so job "size" is directly scriptable.
+    struct ScriptedOracle;
+
+    impl PlanOracle for ScriptedOracle {
+        fn service_time(&self, job: &Job, devices: &[Device]) -> Option<f64> {
+            if devices.len() >= job.seq {
+                Some(job.samples as f64 / devices.len() as f64)
+            } else {
+                None
+            }
+        }
+    }
+
+    fn job(id: usize, need_devices: usize, samples: usize) -> Job {
+        let mut j = Job::new(id, 0.0, ModelSpec::tiny(), samples, 2);
+        j.seq = need_devices;
+        j
+    }
+
+    fn devices(ids: &[usize]) -> Vec<Device> {
+        ids.iter().map(|&i| Device::new(i, DeviceKind::NanoH)).collect()
+    }
+
+    struct Fixture {
+        jobs: Vec<Job>,
+        queue: VecDeque<usize>,
+        free: Vec<Device>,
+        running: Vec<RunningSnapshot>,
+        done: Vec<f64>,
+    }
+
+    impl Fixture {
+        fn ctx<'a>(&'a self, ckpt: Option<&'a CheckpointSpec>) -> QueueCtx<'a> {
+            QueueCtx {
+                jobs: &self.jobs,
+                queue: &self.queue,
+                free: &self.free,
+                present: self.free.len()
+                    + self.running.iter().map(|r| r.devices.len()).sum::<usize>(),
+                n_running: self.running.len(),
+                running: &self.running,
+                done: &self.done,
+                now: 0.0,
+                placement: &BestFit,
+                oracle: &ScriptedOracle,
+                ckpt,
+            }
+        }
+    }
+
+    /// Job 0 runs on devices {0,1} until t=1000; device 2 is free. Job 1
+    /// (head) needs 3 devices; job 2 is a long 1-device job; job 3 a
+    /// short one.
+    fn blocked_head_fixture() -> Fixture {
+        let jobs = vec![
+            job(0, 2, 2000),
+            job(1, 3, 3000),
+            job(2, 1, 2000), // 2000 s on one device: overruns the shadow
+            job(3, 1, 500),  // 500 s: fits before the shadow
+        ];
+        Fixture {
+            jobs,
+            queue: VecDeque::from(vec![1, 2, 3]),
+            free: devices(&[2]),
+            running: vec![RunningSnapshot {
+                job: 0,
+                finish: 1000.0,
+                devices: devices(&[0, 1]),
+            }],
+            done: vec![0.0; 4],
+        }
+    }
+
+    #[test]
+    fn fifo_only_attempts_the_head() {
+        let f = blocked_head_fixture();
+        assert!(FifoQueue.next(&f.ctx(None)).is_none(), "blocked head blocks fifo");
+        // placeable head is taken even when shorter jobs wait behind it
+        let mut f = blocked_head_fixture();
+        f.queue = VecDeque::from(vec![3, 2]);
+        let d = FifoQueue.next(&f.ctx(None)).expect("head placeable");
+        assert_eq!(d.queue_pos, 0);
+        assert_eq!(d.placement.devices.len(), 1);
+    }
+
+    #[test]
+    fn backfill_takes_short_job_that_fits_before_shadow() {
+        let f = blocked_head_fixture();
+        let d = EasyBackfill.next(&f.ctx(None)).expect("short job backfills");
+        // job 2 (pos 1) would run past t=1000; job 3 (pos 2) fits
+        assert_eq!(d.queue_pos, 2);
+        assert!((d.placement.service_time - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backfill_prefers_a_placeable_head() {
+        let mut f = blocked_head_fixture();
+        f.queue = VecDeque::from(vec![3, 2]);
+        let d = EasyBackfill.next(&f.ctx(None)).expect("head placeable");
+        assert_eq!(d.queue_pos, 0);
+    }
+
+    #[test]
+    fn backfill_counts_checkpoint_pauses_against_the_shadow() {
+        let mut f = blocked_head_fixture();
+        // job 3 now takes 980 s of work: fits raw, but not with the
+        // checkpoint pause its 2-epoch/k=1 schedule adds
+        f.jobs[3].samples = 980;
+        let spec = CheckpointSpec::new(1, 60.0);
+        assert!(EasyBackfill.next(&f.ctx(Some(&spec))).is_none());
+        assert!(EasyBackfill.next(&f.ctx(None)).is_some(), "without ckpt it fits");
+    }
+
+    #[test]
+    fn backfill_waits_when_head_is_infeasible_on_everything() {
+        let mut f = blocked_head_fixture();
+        f.jobs[1].seq = 99; // more devices than the pool will ever have
+        assert!(
+            EasyBackfill.next(&f.ctx(None)).is_none(),
+            "no shadow, no backfill: the simulator prunes doomed jobs"
+        );
+    }
+
+    #[test]
+    fn sjf_picks_the_smallest_placeable_job() {
+        let mut f = blocked_head_fixture();
+        // all three queued jobs placeable on the single free device
+        f.jobs[1].seq = 1;
+        f.jobs[1].samples = 9000;
+        let d = ShortestJobFirst.next(&f.ctx(None)).expect("smallest places");
+        assert_eq!(d.queue_pos, 2, "job 3 has the smallest whole-pool estimate");
+        // infeasible-estimate jobs sort last but feasible ones still go
+        f.jobs[3].seq = 99;
+        let d = ShortestJobFirst.next(&f.ctx(None)).expect("next smallest");
+        assert_eq!(d.queue_pos, 1, "job 2 is the smallest remaining");
+    }
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        let r = QueuePolicyRegistry::with_defaults();
+        assert_eq!(r.names(), vec!["FIFO", "EASY-backfill", "SJF"]);
+        for (query, want) in [
+            ("fifo", "FIFO"),
+            ("FIFO", "FIFO"),
+            ("backfill", "EASY-backfill"),
+            ("easy", "EASY-backfill"),
+            ("EASY-BACKFILL", "EASY-backfill"),
+            ("sjf", "SJF"),
+            ("shortest", "SJF"),
+        ] {
+            assert_eq!(r.get(query).map(|p| p.name()), Some(want), "query {query:?}");
+        }
+        assert!(r.get("edf").is_none());
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        struct Shadow;
+        impl QueuePolicy for Shadow {
+            fn name(&self) -> &str {
+                "FIFO"
+            }
+            fn next(&self, _ctx: &QueueCtx) -> Option<QueueDecision> {
+                None
+            }
+        }
+        let mut r = QueuePolicyRegistry::with_defaults();
+        let n = r.len();
+        r.register(Arc::new(Shadow));
+        assert_eq!(r.len(), n, "replace, not append");
+    }
+}

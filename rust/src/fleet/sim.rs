@@ -2,18 +2,28 @@
 //!
 //! A binary-heap event loop over a virtual clock processes three event
 //! classes — job arrivals, job completions, and churn — against a
-//! mutable device pool. Placement is delegated to a
+//! mutable device pool. *Which* queued job runs next is delegated to a
+//! [`QueuePolicy`] (FIFO / EASY-backfill / SJF, resolved by name from
+//! [`FleetOptions::queue`]); *how* it claims devices is delegated to a
 //! [`PlacementPolicy`]; plan costing is delegated to the
 //! [`StrategyOracle`], which resolves every candidate device subset
 //! through the existing [`crate::strategy`] registry (the paper's
 //! planner + 1F1B schedule simulation + cached-epoch model), so the
-//! fleet layer adds queueing and churn semantics without reimplementing
-//! any timing.
+//! fleet layer adds queueing, deadline and churn semantics without
+//! reimplementing any timing.
+//!
+//! Deadlines: every job's absolute deadline is `arrival +
+//! deadline_mult × deadline_scale × reference`, where the reference is
+//! the oracle's quote for the job on the *initial full pool* — the
+//! fastest service the fleet could ever have given it — so deadline
+//! attainment measures queueing/sharing/churn delay, not model size.
+//! Checkpointing ([`CheckpointSpec`]) bounds what a churn-forced
+//! restart loses to one checkpoint interval (see [`super::ckpt`]).
 //!
 //! Determinism: events are ordered by `(time, insertion sequence)` with
 //! a total order on `f64` times, all interior maps are `BTreeMap`s, and
 //! the only randomness lives in the seeded trace generators — the same
-//! `(pool, jobs, churn, policy, options)` tuple always produces a
+//! `(pool, jobs, churn, policies, options)` tuple always produces a
 //! bit-identical [`FleetMetrics`] (enforced by a property test).
 
 use std::cell::RefCell;
@@ -27,8 +37,10 @@ use crate::profiler::Profile;
 use crate::sched::training;
 use crate::strategy::{ParallelismStrategy, StrategyRegistry, TrainJob};
 
-use super::metrics::FleetMetrics;
-use super::policy::{ChurnResponse, PlacementCtx, PlacementPolicy, PlanOracle};
+use super::ckpt::{AttemptTimeline, CheckpointSpec};
+use super::metrics::{FleetMetrics, JobStat, RawFleet};
+use super::policy::{ChurnResponse, PlacementPolicy, PlanOracle};
+use super::queue::{QueueCtx, QueuePolicy, QueuePolicyRegistry, RunningSnapshot};
 use super::trace::{ChurnEvent, ChurnKind, Job};
 
 /// Knobs of one fleet run.
@@ -40,11 +52,27 @@ pub struct FleetOptions {
     /// Virtual-time cutoff, seconds: events beyond it do not run and
     /// unfinished jobs count as incomplete.
     pub horizon: f64,
+    /// Registry name of the queueing discipline (`"fifo"`,
+    /// `"backfill"`, `"sjf"` — see [`QueuePolicyRegistry`]).
+    pub queue: String,
+    /// Global multiplier on every job's deadline slack; `<= 0` disables
+    /// deadlines (every job gets an infinite one, so goodput equals
+    /// throughput).
+    pub deadline_scale: f64,
+    /// Checkpoint-interval model; `None` means churn restarts lose the
+    /// whole placement chain.
+    pub ckpt: Option<CheckpointSpec>,
 }
 
 impl Default for FleetOptions {
     fn default() -> Self {
-        FleetOptions { strategy: "pac+".into(), horizon: 48.0 * 3600.0 }
+        FleetOptions {
+            strategy: "pac+".into(),
+            horizon: 48.0 * 3600.0,
+            queue: "fifo".into(),
+            deadline_scale: 1.0,
+            ckpt: None,
+        }
     }
 }
 
@@ -173,33 +201,20 @@ impl Ord for Event {
     }
 }
 
-/// Whole-job fraction still outstanding after an attempt ran for
-/// `active` seconds. The attempt began with `frac_left` of the job
-/// outstanding, spent its first `migration` seconds moving state (no
-/// progress), and executes whole-job work at one full job per
-/// `service_full` seconds — so progress is measured against the *whole
-/// job*, never against the attempt, and repeated churn can never
-/// re-charge work a previous replan already preserved.
-fn replan_frac_left(frac_left: f64, migration: f64, service_full: f64, active: f64) -> f64 {
-    let worked = (active - migration).max(0.0);
-    let done = if service_full > 0.0 { worked / service_full } else { frac_left };
-    (frac_left - done).clamp(0.0, 1.0)
-}
-
 #[derive(Debug, Clone)]
 struct RunningJob {
     devices: Vec<usize>,
     /// Start of the current attempt (reset by replans).
     start: f64,
-    /// Start of this placement chain (preserved across replans): a
-    /// restart discards everything since this instant, progress kept
-    /// by intermediate replans included.
+    /// Start of this placement chain (preserved across replans): an
+    /// un-checkpointed restart discards everything since this instant,
+    /// progress kept by intermediate replans included.
     chain_start: f64,
     finish: f64,
     /// Fraction of the whole job still outstanding when this attempt
-    /// began: 1.0 on (re)placement, shrinking across replans so that
-    /// repeated churn never re-charges work a previous replan already
-    /// preserved.
+    /// began (1 − durable progress on placement, shrinking across
+    /// replans so that repeated churn never re-charges work a previous
+    /// replan already preserved).
     frac_left: f64,
     /// Migration prefix of this attempt (no job progress during it).
     migration: f64,
@@ -211,8 +226,10 @@ struct RunningJob {
 struct Sim<'a> {
     jobs: &'a [Job],
     policy: &'a dyn PlacementPolicy,
+    queue_policy: &'a dyn QueuePolicy,
     oracle: StrategyOracle<'a>,
     horizon: f64,
+    ckpt: Option<CheckpointSpec>,
 
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
@@ -227,18 +244,35 @@ struct Sim<'a> {
     /// Per-job finish-token generation: stale Finish events are skipped.
     tokens: Vec<u64>,
     pending_joins: usize,
+    /// Churn has changed the pool since the last full-queue
+    /// feasibility sweep. Feasibility-on-the-full-pool only moves when
+    /// the pool does, so the sweep (O(queue) oracle lookups) runs once
+    /// per churn burst instead of on every dispatch stall — the
+    /// backlog can be thousands of jobs.
+    pool_dirty: bool,
 
     joined_at: BTreeMap<usize, f64>,
     presence_acc: BTreeMap<usize, f64>,
     busy_since: BTreeMap<usize, f64>,
     busy_acc: BTreeMap<usize, f64>,
+    /// User id → device-seconds consumed by that user's jobs.
+    user_service: BTreeMap<usize, f64>,
 
-    latencies: Vec<f64>,
+    /// Per-job absolute deadlines (`INFINITY` = none).
+    deadlines: Vec<f64>,
+    /// Per-job durable progress: the last *completed* checkpoint
+    /// (always 0.0 when checkpointing is off).
+    ckpt_frac: Vec<f64>,
+    first_start: Vec<Option<f64>>,
+    finish_at: Vec<Option<f64>>,
+
     failed: usize,
     replans: usize,
     restarts: usize,
     work_lost: f64,
     migration_overhead: f64,
+    ckpt_count: usize,
+    ckpt_overhead: f64,
     events: usize,
 }
 
@@ -261,11 +295,34 @@ impl Sim<'_> {
         self.present.iter().map(|(&id, &kind)| Device::new(id, kind)).collect()
     }
 
-    /// Close a device's busy span and free it.
+    /// The attempt timeline of a running job (checkpoint boundaries
+    /// included) — the single source of progress/overhead arithmetic.
+    /// `ckpt_frac[job]` is only advanced when an attempt *ends*, so at
+    /// any point during (or when measuring) an attempt it still holds
+    /// the durable fraction the attempt was scheduled with — including
+    /// a boundary whose pause churn interrupted, which the attempt
+    /// retakes (see [`AttemptTimeline::new`]).
+    fn timeline(&self, job: usize, rj: &RunningJob) -> AttemptTimeline {
+        AttemptTimeline::new(
+            1.0 - rj.frac_left,
+            self.ckpt_frac[job],
+            rj.migration,
+            rj.service_full,
+            self.jobs[job].epochs,
+            self.ckpt.as_ref(),
+        )
+    }
+
+    /// Close a device's busy span, attribute it to the owning user, and
+    /// free the device.
     fn release(&mut self, id: usize, now: f64) {
-        self.assigned.remove(&id);
+        let job = self.assigned.remove(&id);
         if let Some(since) = self.busy_since.remove(&id) {
-            *self.busy_acc.entry(id).or_insert(0.0) += now - since;
+            let span = now - since;
+            *self.busy_acc.entry(id).or_insert(0.0) += span;
+            if let Some(job) = job {
+                *self.user_service.entry(self.jobs[job].user).or_insert(0.0) += span;
+            }
         }
     }
 
@@ -275,49 +332,94 @@ impl Sim<'_> {
             self.assigned.insert(id, job);
             self.busy_since.insert(id, now);
         }
+        if self.first_start[job].is_none() {
+            self.first_start[job] = Some(now);
+        }
         let token = self.tokens[job];
-        self.running.insert(
-            job,
-            RunningJob {
-                devices: ids,
-                start: now,
-                chain_start: now,
-                finish: now + service,
-                frac_left: 1.0,
-                migration: 0.0,
-                service_full: service,
-                token,
-            },
-        );
-        self.push(now + service, EventKind::Finish { job, token });
+        let rj = RunningJob {
+            devices: ids,
+            start: now,
+            chain_start: now,
+            // resume from the last durable checkpoint (1.0 outstanding
+            // when checkpointing is off or nothing is durable yet)
+            frac_left: 1.0 - self.ckpt_frac[job],
+            finish: 0.0,
+            migration: 0.0,
+            service_full: service,
+            token,
+        };
+        let finish = now + self.timeline(job, &rj).duration();
+        self.running.insert(job, RunningJob { finish, ..rj });
+        self.push(finish, EventKind::Finish { job, token });
     }
 
-    /// Drain the queue head-of-line: place while the policy accepts,
-    /// and fail jobs that can never run (infeasible on the full pool
-    /// with no joins pending).
+    /// Let the queue policy pick jobs while it can, and fail jobs that
+    /// can never run (infeasible on the full pool with no joins
+    /// pending) — checked across the entire queue, not just the head,
+    /// so non-head-of-line orders cannot hide a doomed job. Arrivals
+    /// are vetted up front and the pool only moves under churn, so the
+    /// sweep is gated on [`Sim::pool_dirty`].
     fn try_dispatch(&mut self, now: f64) {
         loop {
-            let Some(&head) = self.queue.front() else { break };
-            let free = self.free_devices();
-            let ctx = PlacementCtx {
-                job: &self.jobs[head],
-                free: &free,
-                present: self.present.len(),
-                running: self.running.len(),
-                oracle: &self.oracle,
+            if self.queue.is_empty() {
+                break;
+            }
+            let decision = {
+                let free = self.free_devices();
+                // the snapshot clones device lists; FIFO never reads it,
+                // so the hottest loop skips building it entirely
+                let mut running: Vec<RunningSnapshot> = Vec::new();
+                if self.queue_policy.wants_running() {
+                    running = self
+                        .running
+                        .iter()
+                        .map(|(&job, rj)| RunningSnapshot {
+                            job,
+                            finish: rj.finish,
+                            devices: rj
+                                .devices
+                                .iter()
+                                .map(|&id| Device::new(id, self.present[&id]))
+                                .collect(),
+                        })
+                        .collect();
+                    running
+                        .sort_by(|a, b| a.finish.total_cmp(&b.finish).then(a.job.cmp(&b.job)));
+                }
+                let ctx = QueueCtx {
+                    jobs: self.jobs,
+                    queue: &self.queue,
+                    free: &free,
+                    present: self.present.len(),
+                    n_running: self.running.len(),
+                    running: &running,
+                    done: &self.ckpt_frac,
+                    now,
+                    placement: self.policy,
+                    oracle: &self.oracle,
+                    ckpt: self.ckpt.as_ref(),
+                };
+                self.queue_policy.next(&ctx)
             };
-            if let Some(pl) = self.policy.place(&ctx) {
-                self.queue.pop_front();
-                self.start_job(head, pl.devices, pl.service_time, now);
+            if let Some(d) = decision {
+                let job = self.queue.remove(d.queue_pos).expect("queue decision in range");
+                self.start_job(job, d.placement.devices, d.placement.service_time, now);
                 continue;
             }
-            let everything = self.all_present();
-            if self.pending_joins == 0
-                && self.oracle.service_time(&self.jobs[head], &everything).is_none()
-            {
-                self.queue.pop_front();
-                self.failed += 1;
-                continue;
+            if self.pending_joins == 0 && self.pool_dirty {
+                self.pool_dirty = false;
+                let everything = self.all_present();
+                let doomed: Vec<usize> = self
+                    .queue
+                    .iter()
+                    .copied()
+                    .filter(|&j| self.oracle.service_time(&self.jobs[j], &everything).is_none())
+                    .collect();
+                if !doomed.is_empty() {
+                    self.failed += doomed.len();
+                    self.queue.retain(|j| !doomed.contains(j));
+                    continue;
+                }
             }
             break;
         }
@@ -332,43 +434,56 @@ impl Sim<'_> {
         let survivors: Vec<usize> =
             rj.devices.iter().copied().filter(|&d| Some(d) != left).collect();
 
+        // measure the aborted attempt: progress made, checkpoints that
+        // completed (now durable), and checkpoint time spent
+        let point = self.timeline(job, &rj).at(now - rj.start);
+        self.ckpt_count += point.ckpts;
+        self.ckpt_overhead += point.ckpt_time;
+        if let Some(b) = point.last_ckpt {
+            self.ckpt_frac[job] = self.ckpt_frac[job].max(b);
+        }
+
         if self.policy.on_churn() == ChurnResponse::Replan && !survivors.is_empty() {
             let devices: Vec<Device> = survivors
                 .iter()
                 .map(|&id| Device::new(id, self.present[&id]))
                 .collect();
             if let Some(t_new) = self.oracle.service_time(&self.jobs[job], &devices) {
-                let frac_left =
-                    replan_frac_left(rj.frac_left, rj.migration, rj.service_full, now - rj.start);
                 let migration = self.oracle.migration_time(&self.jobs[job], &devices);
-                let remaining = frac_left * t_new + migration;
                 self.replans += 1;
                 self.migration_overhead += migration;
                 let token = self.tokens[job];
-                self.running.insert(
-                    job,
-                    RunningJob {
-                        devices: survivors,
-                        start: now,
-                        chain_start: rj.chain_start,
-                        finish: now + remaining,
-                        frac_left,
-                        migration,
-                        service_full: t_new,
-                        token,
-                    },
-                );
-                self.push(now + remaining, EventKind::Finish { job, token });
+                let next = RunningJob {
+                    devices: survivors,
+                    start: now,
+                    chain_start: rj.chain_start,
+                    finish: 0.0,
+                    // a replan keeps the live progress (durable or not)
+                    frac_left: 1.0 - point.progress,
+                    migration,
+                    service_full: t_new,
+                    token,
+                };
+                let finish = now + self.timeline(job, &next).duration();
+                self.running.insert(job, RunningJob { finish, ..next });
+                self.push(finish, EventKind::Finish { job, token });
                 return;
             }
         }
 
-        // restart: the whole placement chain's work is lost — including
-        // progress that intermediate replans had preserved — and the
+        // restart: without checkpointing the whole placement chain's
+        // work is lost — including progress intermediate replans had
+        // preserved; with it, only the work since the last durable
+        // checkpoint (expressed at this attempt's service rate). The
         // job re-queues ahead of everything else (it has been waiting
-        // longest)
+        // longest).
         self.restarts += 1;
-        self.work_lost += now - rj.chain_start;
+        if self.ckpt.is_some() {
+            self.work_lost +=
+                (point.progress - self.ckpt_frac[job]).max(0.0) * rj.service_full;
+        } else {
+            self.work_lost += now - rj.chain_start;
+        }
         for id in survivors {
             self.release(id, now);
         }
@@ -376,6 +491,7 @@ impl Sim<'_> {
     }
 
     fn apply_churn(&mut self, kind: ChurnKind, now: f64) {
+        self.pool_dirty = true;
         match kind {
             ChurnKind::Join(id, device_kind) => {
                 self.present.insert(id, device_kind);
@@ -411,10 +527,11 @@ impl Sim<'_> {
 }
 
 /// Run one fleet simulation: `jobs` (ids must equal their index,
-/// arrival-sorted) arrive into a queue, `policy` places them onto the
-/// churning pool seeded from `env`, every placement is costed through
-/// the strategy named in `opts`, and the run ends when the event queue
-/// drains or the horizon closes.
+/// arrival-sorted) arrive into a queue ordered by the discipline named
+/// in `opts.queue`, `policy` places them onto the churning pool seeded
+/// from `env`, every placement is costed through the strategy named in
+/// `opts`, and the run ends when the event queue drains or the horizon
+/// closes.
 pub fn simulate_fleet(
     env: &Env,
     jobs: &[Job],
@@ -428,6 +545,14 @@ pub fn simulate_fleet(
             "unknown strategy {:?}; registered: {}",
             opts.strategy,
             registry.names().join(", ")
+        )
+    })?;
+    let queue_registry = QueuePolicyRegistry::with_defaults();
+    let queue_policy = queue_registry.get(&opts.queue).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown queue policy {:?}; registered: {}",
+            opts.queue,
+            queue_registry.names().join(", ")
         )
     })?;
     for (i, j) in jobs.iter().enumerate() {
@@ -461,11 +586,28 @@ pub fn simulate_fleet(
         }
     }
 
+    let oracle = StrategyOracle::new(strategy.as_ref(), env.network);
+    // absolute deadlines against the ideal full-pool reference plan
+    let deadlines: Vec<f64> = jobs
+        .iter()
+        .map(|j| {
+            if opts.deadline_scale <= 0.0 {
+                return f64::INFINITY;
+            }
+            match oracle.service_time(j, &env.devices) {
+                Some(t) => j.arrival + j.deadline_mult * opts.deadline_scale * t,
+                None => f64::INFINITY,
+            }
+        })
+        .collect();
+
     let mut sim = Sim {
         jobs,
         policy,
-        oracle: StrategyOracle::new(strategy.as_ref(), env.network),
+        queue_policy: queue_policy.as_ref(),
+        oracle,
         horizon: opts.horizon,
+        ckpt: opts.ckpt,
         heap: BinaryHeap::new(),
         seq: 0,
         now: 0.0,
@@ -478,16 +620,23 @@ pub fn simulate_fleet(
             .iter()
             .filter(|e| matches!(e.kind, ChurnKind::Join(..)))
             .count(),
+        pool_dirty: false,
         joined_at: env.devices.iter().map(|d| (d.id, 0.0)).collect(),
         presence_acc: BTreeMap::new(),
         busy_since: BTreeMap::new(),
         busy_acc: BTreeMap::new(),
-        latencies: Vec::new(),
+        user_service: BTreeMap::new(),
+        deadlines,
+        ckpt_frac: vec![0.0; jobs.len()],
+        first_start: vec![None; jobs.len()],
+        finish_at: vec![None; jobs.len()],
         failed: 0,
         replans: 0,
         restarts: 0,
         work_lost: 0.0,
         migration_overhead: 0.0,
+        ckpt_count: 0,
+        ckpt_overhead: 0.0,
         events: 0,
     };
     for job in jobs {
@@ -506,16 +655,36 @@ pub fn simulate_fleet(
         sim.now = ev.time;
         sim.events += 1;
         match ev.kind {
-            EventKind::Arrival(id) => sim.queue.push_back(id),
+            EventKind::Arrival(id) => {
+                // vet the arrival once: a job infeasible on the whole
+                // current pool (with no joins pending that could still
+                // grow it) can never run — fail it now instead of
+                // wedging the queue. Pool changes re-vet the queue via
+                // the `pool_dirty` sweep in `try_dispatch`.
+                if sim.pending_joins == 0
+                    && sim
+                        .oracle
+                        .service_time(&sim.jobs[id], &sim.all_present())
+                        .is_none()
+                {
+                    sim.failed += 1;
+                } else {
+                    sim.queue.push_back(id);
+                }
+            }
             EventKind::Finish { job, token } => {
                 if sim.tokens[job] != token {
                     continue; // superseded by a replan or restart
                 }
                 let rj = sim.running.remove(&job).expect("finished job is running");
+                // every checkpoint of the completed attempt was paid
+                let point = sim.timeline(job, &rj).at(ev.time - rj.start);
+                sim.ckpt_count += point.ckpts;
+                sim.ckpt_overhead += point.ckpt_time;
                 for id in rj.devices {
                     sim.release(id, ev.time);
                 }
-                sim.latencies.push(ev.time - sim.jobs[job].arrival);
+                sim.finish_at[job] = Some(ev.time);
             }
             EventKind::Churn(kind) => sim.apply_churn(kind, ev.time),
         }
@@ -523,11 +692,30 @@ pub fn simulate_fleet(
     }
 
     let end = if hit_horizon { sim.horizon } else { sim.now };
+    // attempts cut off by the horizon never reach their churn/Finish
+    // measurement point — walk them here so the checkpoints they did
+    // complete are counted (their pause time is already in busy spans)
+    let open_ckpts: Vec<(usize, f64)> = sim
+        .running
+        .iter()
+        .map(|(&job, rj)| {
+            let p = sim.timeline(job, rj).at(end - rj.start);
+            (p.ckpts, p.ckpt_time)
+        })
+        .collect();
+    for (ckpts, ckpt_time) in open_ckpts {
+        sim.ckpt_count += ckpts;
+        sim.ckpt_overhead += ckpt_time;
+    }
     // close open presence/busy spans at the end of virtual time
     let open_busy: Vec<usize> = sim.busy_since.keys().copied().collect();
     for id in open_busy {
         if let Some(since) = sim.busy_since.remove(&id) {
-            *sim.busy_acc.entry(id).or_insert(0.0) += end - since;
+            let span = end - since;
+            *sim.busy_acc.entry(id).or_insert(0.0) += span;
+            if let Some(&job) = sim.assigned.get(&id) {
+                *sim.user_service.entry(sim.jobs[job].user).or_insert(0.0) += span;
+            }
         }
     }
     let still_present: Vec<usize> = sim.joined_at.keys().copied().collect();
@@ -544,19 +732,33 @@ pub fn simulate_fleet(
         })
         .collect();
 
-    let completed = sim.latencies.len();
-    Ok(FleetMetrics::assemble(
-        sim.latencies,
-        sim.failed,
-        jobs.len() - completed - sim.failed,
-        end,
+    let per_job: Vec<JobStat> = jobs
+        .iter()
+        .map(|j| JobStat {
+            id: j.id,
+            user: j.user,
+            arrival: j.arrival,
+            first_start: sim.first_start[j.id],
+            finish: sim.finish_at[j.id],
+            deadline: sim.deadlines[j.id],
+            met: sim.finish_at[j.id].map(|f| f <= sim.deadlines[j.id]).unwrap_or(false),
+        })
+        .collect();
+
+    Ok(FleetMetrics::assemble(RawFleet {
+        per_job,
+        failed: sim.failed,
+        makespan: end,
         per_device,
-        sim.replans,
-        sim.restarts,
-        sim.work_lost,
-        sim.migration_overhead,
-        sim.events,
-    ))
+        user_service: sim.user_service.into_iter().collect(),
+        replans: sim.replans,
+        restarts: sim.restarts,
+        work_lost: sim.work_lost,
+        migration_overhead: sim.migration_overhead,
+        ckpt_count: sim.ckpt_count,
+        ckpt_overhead: sim.ckpt_overhead,
+        events: sim.events,
+    }))
 }
 
 #[cfg(test)]
@@ -587,6 +789,10 @@ mod tests {
             assert!(m.utilization > 0.0 && m.utilization <= 1.0);
             assert_eq!(m.replans + m.restarts, 0);
             assert!(m.events >= 16, "arrival+finish per job");
+            // single-user trace: fairness is exactly 1.0
+            assert_eq!(m.fairness, 1.0, "{}", policy.name());
+            assert_eq!(m.per_user.len(), 1);
+            assert_eq!(m.per_user[0].jobs, 8);
         }
     }
 
@@ -644,6 +850,22 @@ mod tests {
     }
 
     #[test]
+    fn unknown_queue_policy_is_an_error() {
+        let env = Env::env_a();
+        let err = simulate_fleet(
+            &env,
+            &small_jobs(1),
+            &[],
+            &BestFit,
+            &FleetOptions { queue: "lifo".into(), ..Default::default() },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown queue policy"), "{err}");
+        assert!(err.contains("EASY-backfill"), "must list alternatives: {err}");
+    }
+
+    #[test]
     fn horizon_cuts_the_run() {
         let env = Env::env_a();
         let jobs = small_jobs(12);
@@ -670,6 +892,53 @@ mod tests {
         assert_eq!(m.completed, 0);
     }
 
+    /// Deadlines: under FIFO-exclusive the service time *is* the
+    /// full-pool reference the deadline is anchored on, so with the
+    /// default 3× slack both jobs provably finish in time (job 1's
+    /// worst-case finish is `max(arrival, t_ref) + t_ref ≤ arrival +
+    /// 3·t_ref`); a crushingly small scale makes every job miss, and
+    /// `deadline_scale <= 0` disables deadlines entirely.
+    #[test]
+    fn deadline_scale_moves_goodput() {
+        let env = Env::env_a();
+        let jobs = small_jobs(2);
+        let easy =
+            simulate_fleet(&env, &jobs, &[], &FifoExclusive, &FleetOptions::default()).unwrap();
+        assert_eq!(easy.completed, 2);
+        assert_eq!(easy.deadline_met, 2, "{easy:?}");
+        assert_eq!(easy.deadline_miss_rate, 0.0);
+        assert!(easy.goodput_per_hour > 0.0);
+        for j in &easy.per_job {
+            assert!(j.deadline.is_finite());
+            assert!(j.met);
+        }
+
+        let tight = simulate_fleet(
+            &env,
+            &jobs,
+            &[],
+            &FifoExclusive,
+            &FleetOptions { deadline_scale: 1e-6, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(tight.completed, 2, "completion is deadline-independent");
+        assert_eq!(tight.deadline_met, 0, "{tight:?}");
+        assert_eq!(tight.deadline_miss_rate, 1.0);
+
+        let off = simulate_fleet(
+            &env,
+            &jobs,
+            &[],
+            &FifoExclusive,
+            &FleetOptions { deadline_scale: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(off.deadline_met, off.completed, "disabled deadlines are all met");
+        for j in &off.per_job {
+            assert!(j.deadline.is_infinite());
+        }
+    }
+
     /// Generated churn keeps every accounting invariant (the *engineered*
     /// churn scenarios that pin exact replan/restart behavior live in
     /// `tests/fleet.rs`, where the hit is constructed, not sampled).
@@ -694,28 +963,69 @@ mod tests {
             for (_, u) in &m.per_device_util {
                 assert!(*u >= 0.0 && *u <= 1.0 + 1e-9, "{m:?}");
             }
+            assert!(m.deadline_met <= m.completed);
+            assert!(m.fairness > 0.0 && m.fairness <= 1.0 + 1e-9, "{m:?}");
+            assert!(m.goodput_per_hour <= m.jobs_per_hour + 1e-9);
+            assert_eq!(m.per_job.len(), 20);
+            assert_eq!(
+                m.per_user.iter().map(|u| u.jobs).sum::<usize>(),
+                20,
+                "user partition covers every job"
+            );
+            // no checkpointing configured: nothing checkpoint-related
+            assert_eq!((m.ckpt_count, m.ckpt_overhead), (0, 0.0));
         }
     }
 
-    /// Regression: progress must be measured against the whole job, not
-    /// the current attempt — a second replan used to re-charge work the
-    /// first replan had already preserved.
+    /// Checkpointing caps restart losses: engineered single-job run on
+    /// one device, churned off mid-flight exactly once.
     #[test]
-    fn replan_fraction_does_not_compound() {
-        // attempt 1: no migration, full job takes 100 s, churn at 50 s
-        let f1 = replan_frac_left(1.0, 0.0, 100.0, 50.0);
-        assert!((f1 - 0.5).abs() < 1e-12);
-        // attempt 2: 10 s migration, full job now 80 s, churn 30 s in:
-        // 20 s of work = 0.25 of the whole job -> 0.25 left
-        let f2 = replan_frac_left(f1, 10.0, 80.0, 30.0);
-        assert!((f2 - 0.25).abs() < 1e-12, "got {f2}");
-        // the old attempt-relative formula would have kept
-        // 1 - 30/(0.5*80 + 10) = 0.4 of the job outstanding
-        assert!((f2 - 0.4).abs() > 0.1);
-        // churn during the migration prefix makes no progress
-        assert_eq!(replan_frac_left(0.5, 10.0, 80.0, 5.0), 0.5);
-        // and the fraction never goes negative
-        assert_eq!(replan_frac_left(0.1, 0.0, 100.0, 500.0), 0.0);
+    fn checkpoint_bounds_restart_loss() {
+        let env = Env::nanos(1);
+        let jobs = vec![Job::new(0, 0.0, ModelSpec::t5_base(), 1024, 4)];
+        // probe the uncheckpointed service time
+        let probe =
+            simulate_fleet(&env, &jobs, &[], &BestFit, &FleetOptions::default()).unwrap();
+        assert_eq!(probe.completed, 1);
+        let t1 = probe.makespan;
+
+        // the single device leaves mid-run and a replacement joins: a
+        // restart-policy job restarts; with k=1 checkpoints it resumes
+        let churn = vec![
+            ChurnEvent { time: 0.6 * t1, kind: ChurnKind::Leave(0) },
+            ChurnEvent { time: 0.6 * t1 + 1.0, kind: ChurnKind::Join(5, DeviceKind::NanoH) },
+        ];
+        let opts_off = FleetOptions { horizon: 4.0 * t1, ..Default::default() };
+        let off = simulate_fleet(&env, &jobs, &churn, &BestFit, &opts_off).unwrap();
+        assert_eq!(off.restarts, 1, "{off:?}");
+        assert_eq!(off.completed, 1);
+        assert!((off.work_lost - 0.6 * t1).abs() < 1e-6, "{off:?}");
+        assert_eq!((off.ckpt_count, off.ckpt_overhead), (0, 0.0));
+
+        let opts_ck = FleetOptions {
+            horizon: 4.0 * t1,
+            ckpt: Some(CheckpointSpec::new(1, 1.0)),
+            ..Default::default()
+        };
+        let ck = simulate_fleet(&env, &jobs, &churn, &BestFit, &opts_ck).unwrap();
+        assert_eq!(ck.restarts, 1, "{ck:?}");
+        assert_eq!(ck.completed, 1);
+        assert!(ck.ckpt_count >= 3, "two before churn, at least one after: {ck:?}");
+        assert!(ck.ckpt_overhead > 0.0);
+        // bounded loss: at most one checkpoint interval (k/epochs of the
+        // job) instead of everything since the chain start
+        assert!(
+            ck.work_lost <= t1 / 4.0 + 1e-6,
+            "loss {} exceeds one interval {}",
+            ck.work_lost,
+            t1 / 4.0
+        );
+        assert!(ck.work_lost < off.work_lost);
+        // and the checkpointed run finishes earlier than the restarted one
+        assert!(
+            ck.latency_p50.unwrap() < off.latency_p50.unwrap(),
+            "ck {ck:?} off {off:?}"
+        );
     }
 
     #[test]

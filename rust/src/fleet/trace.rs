@@ -18,6 +18,11 @@ use crate::cluster::{DeviceKind, Env};
 use crate::model::ModelSpec;
 use crate::util::rng::Rng;
 
+/// Default deadline slack: a job is "on time" within 3× its ideal
+/// full-pool service time (see [`crate::fleet::simulate_fleet`] for how
+/// the multiplier becomes an absolute deadline).
+pub const DEFAULT_DEADLINE_MULT: f64 = 3.0;
+
 /// One personal fine-tuning job: a user's model, dataset and budget.
 #[derive(Debug, Clone)]
 pub struct Job {
@@ -30,11 +35,40 @@ pub struct Job {
     pub epochs: usize,
     pub seq: usize,
     pub minibatch: usize,
+    /// Submitting user (several jobs may share one) — the dimension the
+    /// per-user SLO/fairness metrics aggregate over.
+    pub user: usize,
+    /// Deadline slack as a multiple of the job's ideal full-pool
+    /// service time; the simulator turns it into an absolute deadline
+    /// (`arrival + mult × scale × reference`).
+    pub deadline_mult: f64,
 }
 
 impl Job {
     pub fn new(id: usize, arrival: f64, model: ModelSpec, samples: usize, epochs: usize) -> Job {
-        Job { id, arrival, model, samples, epochs, seq: 128, minibatch: 16 }
+        Job {
+            id,
+            arrival,
+            model,
+            samples,
+            epochs,
+            seq: 128,
+            minibatch: 16,
+            user: 0,
+            deadline_mult: DEFAULT_DEADLINE_MULT,
+        }
+    }
+
+    /// Builder: assign the submitting user.
+    pub fn with_user(mut self, user: usize) -> Job {
+        self.user = user;
+        self
+    }
+
+    /// Builder: override the deadline slack multiplier.
+    pub fn with_deadline_mult(mut self, mult: f64) -> Job {
+        self.deadline_mult = mult;
+        self
     }
 }
 
@@ -81,8 +115,9 @@ fn expo(rng: &mut Rng, mean: f64) -> f64 {
 /// Sample one job's personal workload: model size, dataset size and
 /// epoch budget. Dataset sizes are drawn from power-of-two buckets so
 /// repeated shapes share planner work (the simulator memoizes plans by
-/// job shape).
-fn sample_job(id: usize, arrival: f64, rng: &mut Rng) -> Job {
+/// job shape). Each job is stamped with a submitting user from a pool
+/// of `n_users` and a deadline slack multiplier in [1.5, 4).
+fn sample_job(id: usize, arrival: f64, n_users: usize, rng: &mut Rng) -> Job {
     let model = match rng.range(0, 10) {
         0..=5 => ModelSpec::t5_base(),
         6..=7 => ModelSpec::bart_large(),
@@ -90,12 +125,18 @@ fn sample_job(id: usize, arrival: f64, rng: &mut Rng) -> Job {
     };
     let samples = 512 << rng.range(0, 4); // 512..4096
     let epochs = rng.range(2, 5);
+    let user = rng.range(0, n_users.max(1));
+    let mult = 1.5 + 2.5 * rng.f64();
     Job::new(id, arrival, model, samples, epochs)
+        .with_user(user)
+        .with_deadline_mult(mult)
 }
 
 /// Generate `n` jobs following `kind`, deterministically from `seed`.
-/// Jobs come back sorted by arrival time with ids `0..n`.
+/// Jobs come back sorted by arrival time with ids `0..n`, spread over
+/// `max(1, n/5)` users.
 pub fn generate_jobs(kind: TraceKind, n: usize, seed: u64) -> Vec<Job> {
+    let n_users = (n / 5).max(1);
     let mut rng = Rng::new(seed ^ 0xF1EE7);
     let mut jobs = Vec::with_capacity(n);
     let mut t = 0.0f64;
@@ -122,7 +163,7 @@ pub fn generate_jobs(kind: TraceKind, n: usize, seed: u64) -> Vec<Job> {
             }
         };
         t += gap;
-        jobs.push(sample_job(id, t, &mut rng));
+        jobs.push(sample_job(id, t, n_users, &mut rng));
     }
     jobs
 }
@@ -204,6 +245,8 @@ mod tests {
                 assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
                 assert_eq!(x.model.name, y.model.name);
                 assert_eq!((x.samples, x.epochs), (y.samples, y.epochs));
+                assert_eq!(x.user, y.user);
+                assert_eq!(x.deadline_mult.to_bits(), y.deadline_mult.to_bits());
             }
             assert_ne!(
                 generate_jobs(kind, 50, 10)[0].arrival.to_bits(),
@@ -221,6 +264,34 @@ mod tests {
         let steady = generate_jobs(TraceKind::Steady, 100, 3);
         let bursty = generate_jobs(TraceKind::Bursty, 100, 3);
         assert!(min_gap(&bursty) < min_gap(&steady));
+    }
+
+    #[test]
+    fn jobs_carry_users_and_deadline_slack() {
+        let jobs = generate_jobs(TraceKind::Steady, 40, 17);
+        let n_users = 40 / 5;
+        for j in &jobs {
+            assert!(j.user < n_users, "user {} out of pool", j.user);
+            assert!(
+                (1.5..4.0).contains(&j.deadline_mult),
+                "mult {} outside [1.5, 4)",
+                j.deadline_mult
+            );
+        }
+        let mut users: Vec<usize> = jobs.iter().map(|j| j.user).collect();
+        users.sort_unstable();
+        users.dedup();
+        assert!(users.len() >= 2, "40 jobs over 8 users must hit more than one");
+        // tiny traces collapse to a single user
+        for j in generate_jobs(TraceKind::Bursty, 4, 17) {
+            assert_eq!(j.user, 0);
+        }
+        // builders
+        let j = Job::new(0, 0.0, ModelSpec::tiny(), 64, 2)
+            .with_user(9)
+            .with_deadline_mult(7.5);
+        assert_eq!(j.user, 9);
+        assert_eq!(j.deadline_mult, 7.5);
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! | [`baselines`]| compatibility adapters (`System` enum) over the strategy registry |
 //! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts (`pjrt` feature) |
 //! | [`exec`]    | real multi-threaded hybrid-parallel training engine |
-//! | [`fleet`]   | discrete-event multi-tenant scheduler: job arrivals, device churn, placement policies |
+//! | [`fleet`]   | discrete-event multi-tenant scheduler: arrivals, churn, queue + placement policies, deadlines/SLOs, checkpointing |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
 //! | [`data`]    | synthetic GLUE-like workload generators |
 //! | [`exp`]     | typed `Experiment`/`Report` API + name-addressed registry of every paper table/figure |
@@ -116,6 +116,39 @@
 //! `pacpp fleet` CLI (`--policy <name>`) resolve policies by registry
 //! name, so a registered policy is immediately comparable against the
 //! built-ins on every trace × environment cell.
+//!
+//! ## Adding a queue policy
+//!
+//! *Which* queued job runs next is the other open axis of the fleet
+//! layer: a [`fleet::QueuePolicy`] resolved by name through
+//! [`fleet::QueuePolicyRegistry`], composing with any placement
+//! policy. To add one (say, earliest-deadline-first):
+//!
+//! 1. implement the trait — [`name`](fleet::QueuePolicy::name) (stable
+//!    display name) and [`next`](fleet::QueuePolicy::next), which picks
+//!    a queue position + placement from a [`fleet::QueueCtx`] (the
+//!    queued jobs, free devices, running jobs with scheduled finishes,
+//!    durable per-job progress, and the run's placement policy/oracle —
+//!    use [`try_place`](fleet::QueueCtx::try_place) to test candidate
+//!    placements and
+//!    [`attempt_duration`](fleet::QueueCtx::attempt_duration) for
+//!    checkpoint-aware finish estimates), or `None` to wait;
+//! 2. register it: [`fleet::QueuePolicyRegistry::register`] on top of
+//!    [`with_defaults`](fleet::QueuePolicyRegistry::with_defaults)
+//!    (FIFO, EASY-backfill, SJF) — or add it to `with_defaults` if it
+//!    should ship by default;
+//! 3. run `cargo test`: `tests/fleet.rs` pins same-seed determinism
+//!    per queue policy, and `tests/prop_invariants.rs` shows how to
+//!    property-test a discipline's guarantee (EASY's no-head-delay)
+//!    against FIFO on the same seed.
+//!
+//! `pacpp fleet --queue <name>` and [`fleet::FleetOptions::queue`]
+//! resolve disciplines by registry name. Deadlines
+//! (`--deadline`, [`fleet::FleetOptions::deadline_scale`]) and
+//! checkpointing (`--ckpt`, [`fleet::CheckpointSpec`]) compose with
+//! every discipline; the `fleet_checkpoint` and `fleet_users`
+//! experiments surface the k-vs-overhead tradeoff and the per-user
+//! SLO/fairness breakdown.
 
 pub mod baselines;
 pub mod cache;

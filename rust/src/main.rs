@@ -11,9 +11,11 @@
 //! pacpp exp      run <name> [--format text|json|csv] [--out FILE]
 //! pacpp exp      all        [--format text|json|csv] [--out FILE]
 //! pacpp fleet    [--env env_a] [--policy all|fifo|best-fit|preempt[,..]]
-//!                [--trace steady|diurnal|bursty] [--jobs 40] [--seed 42]
-//!                [--churn EVENTS_PER_HOUR] [--horizon HOURS]
-//!                [--strategy pac+] [--format text|json|csv] [--out FILE]
+//!                [--queue fifo|backfill|sjf] [--trace steady|diurnal|bursty]
+//!                [--jobs 40] [--seed 42] [--churn EVENTS_PER_HOUR]
+//!                [--horizon HOURS] [--deadline SCALE] [--ckpt K]
+//!                [--ckpt-cost SECS] [--strategy pac+]
+//!                [--format text|json|csv] [--out FILE]
 //! pacpp timeline --env env_a [--microbatch 4] [--m 6] [--width 120]
 //!                                  (render a plan's 1F1B schedule as ASCII art)
 //! pacpp table    1|5|6|7           (deprecated alias for `exp run table<N>`)
@@ -29,8 +31,8 @@ use pacpp::data::SyntheticTask;
 use pacpp::exec::{self, TrainOptions};
 use pacpp::exp::{self, ExpContext, ExperimentRegistry, Format, Report};
 use pacpp::fleet::{
-    generate_churn, generate_jobs, simulate_fleet, FleetOptions, PlacementPolicy,
-    PolicyRegistry, TraceKind,
+    generate_churn, generate_jobs, simulate_fleet, CheckpointSpec, FleetOptions,
+    PlacementPolicy, PolicyRegistry, QueuePolicyRegistry, TraceKind, DEFAULT_CKPT_COST,
 };
 use pacpp::model::graph::LayerGraph;
 use pacpp::model::{Method, ModelSpec, Precision};
@@ -417,7 +419,10 @@ fn emit_reports(
 
 /// `pacpp fleet`: one deterministic multi-tenant simulation per selected
 /// policy over a shared (optionally churning) pool, reported in the
-/// fleet experiment schema.
+/// fleet experiment schema. `--queue` picks the queueing discipline,
+/// `--deadline` scales every job's deadline slack (0 disables
+/// deadlines), and `--ckpt K` turns on checkpointing every K epochs at
+/// `--ckpt-cost` seconds apiece (0 = off).
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let env_name = args.get_str("env", "env_a")?;
     let Some(env) = Env::by_name(env_name) else {
@@ -431,6 +436,30 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_seed("seed", 42)?;
     let churn_per_hour = args.get_rate("churn", 0.0)?;
     let horizon_h = args.get_positive_f64("horizon", 48.0)?;
+    let queue_name = args.get_str("queue", "fifo")?;
+    let queue_registry = QueuePolicyRegistry::with_defaults();
+    let Some(queue) = queue_registry.get(queue_name) else {
+        anyhow::bail!(
+            "unknown queue policy {queue_name:?}; registered: {}",
+            queue_registry.names().join(", ")
+        );
+    };
+    let deadline_scale = args.get_rate("deadline", 1.0)?;
+    // `--ckpt 0` reads naturally as "off", so this flag takes a
+    // non-negative count rather than the strictly-positive get_count
+    let ckpt_k = if args.flag("ckpt") {
+        anyhow::bail!("invalid value for --ckpt: \"\" (expected a non-negative integer)");
+    } else {
+        match args.get("ckpt") {
+            None => 0,
+            Some(v) => v.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!(
+                    "invalid value for --ckpt: {v:?} (expected a non-negative integer)"
+                )
+            })?,
+        }
+    };
+    let ckpt_cost = args.get_rate("ckpt-cost", DEFAULT_CKPT_COST)?;
     let format = parse_format(args)?;
     validate_out(args)?;
 
@@ -455,6 +484,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let opts = FleetOptions {
         strategy: args.get_str("strategy", "pac+")?.to_string(),
         horizon: horizon_h * 3600.0,
+        queue: queue.name().to_string(),
+        deadline_scale,
+        ckpt: if ckpt_k > 0 { Some(CheckpointSpec::new(ckpt_k, ckpt_cost)) } else { None },
     };
     let jobs = generate_jobs(trace, n_jobs, seed);
     let churn = if churn_per_hour > 0.0 {
@@ -472,11 +504,23 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     .meta("trace", trace.name())
     .meta("env", &env.name)
     .meta("strategy", &opts.strategy)
+    .meta("queue", queue.name())
     .meta("horizon_h", horizon_h)
-    .meta("churn_per_hour", churn_per_hour);
+    .meta("churn_per_hour", churn_per_hour)
+    .meta("deadline_scale", deadline_scale)
+    .meta("ckpt", ckpt_k)
+    .meta("ckpt_cost", ckpt_cost);
     for policy in &policies {
         let m = simulate_fleet(&env, &jobs, &churn, policy.as_ref(), &opts)?;
-        report.push(exp::fleet_row(&env.name, trace.name(), policy.name(), n_jobs, &m));
+        report.push(exp::fleet_row(
+            &env.name,
+            trace.name(),
+            policy.name(),
+            queue.name(),
+            ckpt_k,
+            n_jobs,
+            &m,
+        ));
     }
     emit_reports(&[report], format, false, args)
 }

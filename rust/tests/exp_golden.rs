@@ -114,3 +114,44 @@ fn sweep_report_roundtrips_in_every_format() {
     assert!(text.lines().count() >= report.n_rows());
     assert_eq!(csv.lines().count(), report.n_rows() + 1, "header + one line per row");
 }
+
+/// The fleet's per-user dimension survives serialization: `fleet_users`
+/// rows carry integer user ids that round-trip losslessly through JSON
+/// and land in the CSV header + rows.
+#[test]
+fn fleet_users_report_roundtrips_user_ids() {
+    let report = run("fleet_users");
+    assert!(report.n_rows() > 0);
+    assert!(
+        report.columns().iter().any(|c| c.name == "user"),
+        "per-user rows need a user column"
+    );
+    let users: Vec<i64> = (0..report.n_rows())
+        .map(|i| match report.cell(i, "user").unwrap() {
+            Cell::Int(u) => *u,
+            other => panic!("row {i}: user must be an Int cell, got {other:?}"),
+        })
+        .collect();
+    let mut distinct = users.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    assert!(distinct.len() >= 2, "the bursty trace spans several users: {distinct:?}");
+
+    // lossless JSON round-trip, user cells included
+    assert_roundtrips(&report);
+    let pretty = report.to_json().to_string_pretty();
+    let back = Report::from_json(&Json::parse(&pretty).unwrap()).unwrap();
+    let back_users: Vec<i64> = (0..back.n_rows())
+        .map(|i| match back.cell(i, "user").unwrap() {
+            Cell::Int(u) => *u,
+            other => panic!("row {i}: user decayed to {other:?}"),
+        })
+        .collect();
+    assert_eq!(back_users, users, "user ids must survive the JSON round-trip");
+
+    // CSV: header carries the column, one line per row
+    let csv = report.to_csv();
+    let header = csv.lines().next().unwrap();
+    assert!(header.split(',').any(|h| h == "user"), "csv header: {header}");
+    assert_eq!(csv.lines().count(), report.n_rows() + 1);
+}

@@ -1,13 +1,21 @@
 //! Fleet integration tests: the churn acceptance comparison
 //! (preempt-and-replan must complete strictly more jobs than
-//! FIFO-exclusive under the same churn trace) and end-to-end coverage
-//! of the `fleet` experiment through the registry.
+//! FIFO-exclusive under the same churn trace), the backfill-goodput
+//! and bounded-loss-checkpoint acceptance scenarios, per-queue-policy
+//! determinism, and end-to-end coverage of the fleet experiments
+//! through the registry.
+//!
+//! The engineered scenarios follow the probe pattern: service times
+//! are *measured* by probe runs, then churn times, deadlines and
+//! horizons are constructed relative to them with wide margins — no
+//! tuned constants, and the preconditions are asserted so a cost-model
+//! change fails loudly at the probe, not mysteriously at the claim.
 
-use pacpp::cluster::Env;
+use pacpp::cluster::{DeviceKind, Env};
 use pacpp::exp::{Cell, ExpContext, ExperimentRegistry, Format, Report};
 use pacpp::fleet::{
-    simulate_fleet, BestFit, ChurnEvent, ChurnKind, FifoExclusive, FleetOptions, Job,
-    PreemptReplan,
+    generate_churn, generate_jobs, simulate_fleet, BestFit, CheckpointSpec, ChurnEvent,
+    ChurnKind, FifoExclusive, FleetOptions, Job, PreemptReplan, TraceKind,
 };
 use pacpp::model::ModelSpec;
 use pacpp::util::json::Json;
@@ -88,6 +96,150 @@ fn degrade_replans_preempt_and_restarts_fifo() {
     assert_eq!(fifo.restarts, 1, "{fifo:?}");
     assert!((fifo.work_lost - 120.0).abs() < 1e-6, "{fifo:?}");
     assert_eq!(fifo.completed, 1);
+}
+
+/// EASY-backfill beats FIFO head-of-line queueing on goodput under a
+/// bursty mixed-size trace, at equal seeds/inputs.
+///
+/// Construction (probed, not tuned): on a 2×Nano pool, a long small
+/// job S0 holds one device; a big job B (T5-Large needs both Nanos)
+/// blocks at the head until S0 finishes; three short jobs queue behind
+/// B. Under FIFO they wait for S0 *and* B; under EASY they backfill
+/// the idle second Nano — provably finishing before B's shadow time —
+/// and meet deadlines FIFO misses. B itself starts at the same instant
+/// either way (the no-head-delay property), so the comparison is pure
+/// queueing discipline.
+#[test]
+fn backfill_beats_fifo_goodput_on_bursty_mixed_sizes() {
+    // probes: single-device service of the short and long small-model
+    // shapes, and the full-pool reference the deadline anchors on
+    let probe = |env: &Env, job: Job, exclusive: bool| -> f64 {
+        let jobs = vec![job];
+        let m = if exclusive {
+            simulate_fleet(env, &jobs, &[], &FifoExclusive, &FleetOptions::default())
+        } else {
+            simulate_fleet(env, &jobs, &[], &BestFit, &FleetOptions::default())
+        }
+        .unwrap();
+        assert_eq!(m.completed, 1, "probe must complete");
+        m.makespan
+    };
+    let one = Env::nanos(1);
+    let two = Env::nanos(2);
+    let short = |id, arrival| Job::new(id, arrival, ModelSpec::t5_base(), 512, 2);
+    let long = |id| Job::new(id, 0.0, ModelSpec::t5_base(), 4096, 4);
+
+    let t_short = probe(&one, short(0, 0.0), false);
+    let t_long = probe(&one, long(0), false);
+    // FIFO-exclusive takes the whole (= initial) pool, so its makespan
+    // IS the oracle's full-pool quote — the deadline reference
+    let ref_short = probe(&two, short(0, 0.0), true);
+
+    // preconditions that make the margins wide, asserted not assumed
+    assert!(t_long > 3600.0, "long job must run for hours, got {t_long}");
+    assert!(
+        240.0 + 3.0 * t_short < 0.5 * t_long,
+        "short jobs (3x{t_short}s deadline) must fit well inside the long job ({t_long}s)"
+    );
+
+    // deadline = arrival + mult x ref_short = arrival + 3 x t_short
+    let mult_short = 3.0 * t_short / ref_short;
+    let jobs = vec![
+        long(0).with_deadline_mult(100.0),
+        Job::new(1, 60.0, ModelSpec::t5_large(), 1024, 2).with_deadline_mult(100.0),
+        short(2, 120.0).with_deadline_mult(mult_short),
+        short(3, 180.0).with_deadline_mult(mult_short),
+        short(4, 240.0).with_deadline_mult(mult_short),
+    ];
+
+    let fifo_opts = FleetOptions { queue: "fifo".into(), ..Default::default() };
+    let bf_opts = FleetOptions { queue: "backfill".into(), ..Default::default() };
+    let fifo = simulate_fleet(&two, &jobs, &[], &BestFit, &fifo_opts).unwrap();
+    let bf = simulate_fleet(&two, &jobs, &[], &BestFit, &bf_opts).unwrap();
+
+    assert_eq!(fifo.completed, 5, "{fifo:?}");
+    assert_eq!(bf.completed, 5, "{bf:?}");
+    // the no-head-delay guarantee: B starts at the same instant
+    assert_eq!(
+        bf.per_job[1].first_start, fifo.per_job[1].first_start,
+        "backfill must not move the blocked head's start"
+    );
+    // the goodput claim: the three shorts meet their deadline only
+    // when they may jump the line
+    assert_eq!(bf.deadline_met, 5, "{bf:?}");
+    assert_eq!(fifo.deadline_met, 2, "shorts starve behind the head: {fifo:?}");
+    assert!(
+        bf.goodput_per_hour > fifo.goodput_per_hour,
+        "EASY-backfill must win goodput: bf {} vs fifo {}",
+        bf.goodput_per_hour,
+        fifo.goodput_per_hour
+    );
+    assert!(bf.latency_p95.unwrap() < fifo.latency_p95.unwrap(), "{bf:?} {fifo:?}");
+}
+
+/// Checkpointing turns a fatal churn pattern into a completed job:
+/// with `ckpt off` two pool replacements cost the whole attempt twice
+/// and the horizon closes first; with `k=1` the job resumes from the
+/// last epoch checkpoint and finishes — strictly more completions, the
+/// ≥ acceptance bound with margin.
+#[test]
+fn checkpoint_k1_completes_at_least_as_many_as_off_under_churn() {
+    let env = Env::nanos(1);
+    let jobs = vec![Job::new(0, 0.0, ModelSpec::t5_base(), 2048, 4)];
+    let probe = simulate_fleet(&env, &jobs, &[], &BestFit, &FleetOptions::default()).unwrap();
+    assert_eq!(probe.completed, 1);
+    let t1 = probe.makespan;
+
+    // the pool's only device is swapped out twice mid-run
+    let churn = vec![
+        ChurnEvent { time: 0.55 * t1, kind: ChurnKind::Leave(0) },
+        ChurnEvent { time: 0.55 * t1 + 1.0, kind: ChurnKind::Join(10, DeviceKind::NanoH) },
+        ChurnEvent { time: 1.25 * t1, kind: ChurnKind::Leave(10) },
+        ChurnEvent { time: 1.25 * t1 + 1.0, kind: ChurnKind::Join(11, DeviceKind::NanoH) },
+    ];
+    let horizon = 2.2 * t1;
+    let off_opts = FleetOptions { horizon, ..Default::default() };
+    let ck_opts = FleetOptions {
+        horizon,
+        ckpt: Some(CheckpointSpec::new(1, 1.0)),
+        ..Default::default()
+    };
+    let off = simulate_fleet(&env, &jobs, &churn, &BestFit, &off_opts).unwrap();
+    let ck = simulate_fleet(&env, &jobs, &churn, &BestFit, &ck_opts).unwrap();
+
+    // off: restart at 0.55·t1 and again at 1.25·t1; the third attempt
+    // needs until 2.25·t1+ — past the horizon
+    assert_eq!(off.completed, 0, "{off:?}");
+    assert_eq!(off.restarts, 2, "{off:?}");
+    // ck: resume from the 0.50 checkpoint, finish around 1.05·t1 —
+    // before the second churn event even lands on the (idle) pool
+    assert_eq!(ck.completed, 1, "{ck:?}");
+    assert_eq!(ck.restarts, 1, "{ck:?}");
+    assert!(ck.completed >= off.completed, "the acceptance bound");
+    assert!(ck.ckpt_count >= 2, "{ck:?}");
+    assert!(ck.ckpt_overhead > 0.0);
+    assert!(
+        ck.work_lost <= t1 / 4.0 + 1e-6,
+        "bounded loss: {} vs one epoch {}",
+        ck.work_lost,
+        t1 / 4.0
+    );
+    assert!(ck.work_lost < off.work_lost, "{ck:?} vs {off:?}");
+}
+
+/// Same-seed bit-identical determinism extends to every queue policy.
+#[test]
+fn every_queue_policy_is_deterministic() {
+    let env = Env::env_b();
+    let jobs = generate_jobs(TraceKind::Bursty, 12, 33);
+    let churn = generate_churn(&env, 48.0 * 3600.0, 3.0, 33);
+    for queue in ["fifo", "backfill", "sjf"] {
+        let opts = FleetOptions { queue: queue.into(), ..Default::default() };
+        let a = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts).unwrap();
+        let b = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts).unwrap();
+        assert_eq!(a, b, "queue {queue} diverged across identical runs");
+        assert_eq!(a.completed + a.failed + a.incomplete, 12, "queue {queue}: {a:?}");
+    }
 }
 
 fn run_registry(name: &str) -> Report {

@@ -1,11 +1,14 @@
 //! Property tests (via `util::prop`) for cross-module invariants:
-//! `exec::partition_layers` (the pipelined engine's stage splitter) and
-//! the fleet event loop's same-seed determinism.
+//! `exec::partition_layers` (the pipelined engine's stage splitter),
+//! the fleet event loop's same-seed determinism, the EASY-backfill
+//! no-head-delay guarantee, the bounded-loss checkpoint arithmetic,
+//! and the Jain fairness index range.
 
 use pacpp::cluster::Env;
 use pacpp::exec::partition_layers;
 use pacpp::fleet::{
-    generate_churn, generate_jobs, simulate_fleet, FleetOptions, PreemptReplan, TraceKind,
+    generate_churn, generate_jobs, jain_index, simulate_fleet, AttemptTimeline, BestFit,
+    CheckpointSpec, FleetOptions, PreemptReplan, TraceKind,
 };
 use pacpp::util::prop::{check, forall};
 
@@ -113,4 +116,211 @@ fn fleet_event_loop_is_deterministic() {
             check(a == b, format!("same-seed runs diverged:\n  {a:?}\n  {b:?}"))
         },
     );
+}
+
+/// EASY-backfill never delays the head job's start vs FIFO on the same
+/// seed (churn-free, where finish estimates are exact).
+///
+/// The checkable form: under FIFO, jobs start in arrival order, so the
+/// first job whose start exceeds its arrival is the first *blocked
+/// head* — up to that blockage both disciplines behave identically,
+/// and EASY's conservative rule (backfill only what provably finishes
+/// by the head's shadow time) guarantees that job starts no later
+/// under backfill. If no job was ever delayed, the runs must be
+/// bit-identical (no blocked head means no backfill opportunity).
+#[test]
+fn backfill_never_delays_the_first_blocked_head() {
+    let env = Env::nanos(2); // tiny pool: queueing is certain
+    forall(
+        0xBACF,
+        3,
+        |g| FleetCase { seed: 1 + g.int(0, 1_000_000) as u64 * 0x9E3779B9, n_jobs: 5 + g.int(0, 4) },
+        |case| {
+            let jobs = generate_jobs(TraceKind::Steady, case.n_jobs, case.seed);
+            let fifo_opts = FleetOptions { queue: "fifo".into(), ..Default::default() };
+            let bf_opts = FleetOptions { queue: "backfill".into(), ..Default::default() };
+            let fifo = simulate_fleet(&env, &jobs, &[], &BestFit, &fifo_opts)
+                .map_err(|e| e.to_string())?;
+            let bf = simulate_fleet(&env, &jobs, &[], &BestFit, &bf_opts)
+                .map_err(|e| e.to_string())?;
+            let first_blocked = fifo.per_job.iter().find(|j| {
+                j.first_start.map(|s| s > j.arrival + 1e-9).unwrap_or(true)
+            });
+            match first_blocked {
+                None => check(
+                    fifo == bf,
+                    "no job ever queued, yet the disciplines diverged".to_string(),
+                ),
+                Some(j) => {
+                    let Some(fifo_start) = j.first_start else {
+                        // FIFO never started it within the horizon:
+                        // backfill cannot possibly have delayed it
+                        return Ok(());
+                    };
+                    let bf_start = bf.per_job[j.id].first_start;
+                    check(
+                        bf_start.map(|s| s <= fifo_start + 1e-6).unwrap_or(false),
+                        format!(
+                            "backfill delayed blocked head {}: fifo start {fifo_start}, \
+                             backfill start {bf_start:?}",
+                            j.id
+                        ),
+                    )
+                }
+            }
+        },
+    );
+}
+
+#[derive(Debug)]
+struct CkptCase {
+    epochs: usize,
+    k: usize,
+    service: f64,
+    cost: f64,
+    migration: f64,
+    prior: f64,
+    p0: f64,
+    active: f64,
+}
+
+/// Bounded loss: at any instant of any attempt, the gap between live
+/// progress and the best durable resume point is at most one
+/// checkpoint interval (`k/epochs` of the whole job) — the invariant
+/// that makes checkpointed restarts cheap. Also pins the timeline's
+/// basic sanity: monotone progress within [p0, 1], and a completed
+/// attempt pays exactly its scheduled checkpoints.
+#[test]
+fn checkpoint_loss_is_bounded_by_one_interval() {
+    forall(
+        0xC4B7,
+        150,
+        |g| {
+            let epochs = g.int(1, 9);
+            let k = g.int(1, epochs + 1).min(epochs);
+            let service = g.f64(10.0, 10_000.0);
+            let cost = g.f64(0.0, service / 4.0);
+            let migration = g.f64(0.0, 100.0);
+            // resume point: a durable boundary (or 0), with the attempt
+            // starting at most one interval past it — the invariant the
+            // simulator maintains across replans and restarts. Half the
+            // cases pin p0 exactly on the *next, non-durable* boundary:
+            // the replan-cut-a-checkpoint-pause shape, which the attempt
+            // must retake or a restart loses two intervals.
+            let n_boundaries = (epochs - 1) / k;
+            let m = g.int(0, n_boundaries + 1);
+            let prior = (m * k) as f64 / epochs as f64;
+            let next_b = ((m + 1) * k) as f64 / epochs as f64;
+            let p0 = if g.bool() && (m + 1) * k < epochs {
+                next_b // stalled mid-pause at a boundary that never became durable
+            } else {
+                let gap = ((k as f64 / epochs as f64).min(1.0 - prior)).max(0.0);
+                prior + gap * g.f64(0.0, 0.999)
+            };
+            let spec = CheckpointSpec::new(k, cost);
+            let duration =
+                AttemptTimeline::new(p0, prior, migration, service, epochs, Some(&spec))
+                    .duration();
+            let active = g.f64(0.0, 1.3) * duration;
+            CkptCase { epochs, k, service, cost, migration, prior, p0, active }
+        },
+        |case| {
+            let spec = CheckpointSpec::new(case.k, case.cost);
+            let tl = AttemptTimeline::new(
+                case.p0,
+                case.prior,
+                case.migration,
+                case.service,
+                case.epochs,
+                Some(&spec),
+            );
+            let point = tl.at(case.active);
+            let interval = case.k as f64 / case.epochs as f64;
+            check(
+                point.progress >= case.p0 - 1e-9 && point.progress <= 1.0 + 1e-9,
+                format!("progress {} outside [p0={}, 1]", point.progress, case.p0),
+            )?;
+            let half = tl.at(case.active * 0.5);
+            check(
+                half.progress <= point.progress + 1e-9,
+                format!("progress not monotone: {} then {}", half.progress, point.progress),
+            )?;
+            if let Some(b) = point.last_ckpt {
+                check(
+                    b <= point.progress + 1e-9,
+                    format!("durable point {b} ahead of progress {}", point.progress),
+                )?;
+            }
+            let resume = point.last_ckpt.unwrap_or(0.0).max(case.prior);
+            check(
+                point.progress - resume <= interval + 1e-9,
+                format!(
+                    "restart would lose {} > one interval {interval}",
+                    point.progress - resume
+                ),
+            )?;
+            // run to (past) completion: full progress, every scheduled
+            // checkpoint completed and paid
+            let done = tl.at(tl.duration() * 1.01 + 1.0);
+            check(
+                done.progress >= 1.0 - 1e-9,
+                format!("completed attempt at progress {}", done.progress),
+            )?;
+            check(
+                done.ckpts == tl.checkpoints_total(),
+                format!("paid {} of {} checkpoints", done.ckpts, tl.checkpoints_total()),
+            )?;
+            check(
+                (done.ckpt_time - done.ckpts as f64 * case.cost).abs() < 1e-6,
+                format!("ckpt_time {} != {} x {}", done.ckpt_time, done.ckpts, case.cost),
+            )
+        },
+    );
+}
+
+/// Jain's index lands in (0, 1] for any non-negative service vector,
+/// hits 1.0 exactly on uniform vectors, and a single-user fleet trace
+/// is perfectly fair end-to-end.
+#[test]
+fn jain_fairness_index_range() {
+    forall(
+        0x7A17,
+        200,
+        |g| {
+            let n = g.int(1, 12);
+            (0..n)
+                .map(|_| if g.bool() { g.f64(0.0, 100.0) } else { 0.0 })
+                .collect::<Vec<f64>>()
+        },
+        |xs| {
+            let j = jain_index(xs);
+            check(
+                j > 0.0 && j <= 1.0 + 1e-9,
+                format!("jain({xs:?}) = {j} outside (0, 1]"),
+            )?;
+            let uniform = vec![7.5; xs.len()];
+            check(
+                (jain_index(&uniform) - 1.0).abs() < 1e-12,
+                "uniform service must be perfectly fair".to_string(),
+            )
+        },
+    );
+}
+
+/// A single-user trace (few jobs share one submitter) reports Jain
+/// fairness of exactly 1.0; a multi-user trace stays within (0, 1].
+#[test]
+fn fleet_fairness_matches_user_structure() {
+    let env = Env::env_a();
+    // n/5 users: a 4-job trace collapses to one user
+    let single = generate_jobs(TraceKind::Bursty, 4, 7);
+    assert!(single.iter().all(|j| j.user == 0));
+    let m = simulate_fleet(&env, &single, &[], &BestFit, &FleetOptions::default()).unwrap();
+    assert_eq!(m.fairness, 1.0);
+    assert_eq!(m.per_user.len(), 1);
+
+    let multi = generate_jobs(TraceKind::Steady, 20, 7);
+    let m = simulate_fleet(&env, &multi, &[], &BestFit, &FleetOptions::default()).unwrap();
+    assert!(m.per_user.len() > 1, "20 jobs over 4 users");
+    assert!(m.fairness > 0.0 && m.fairness <= 1.0 + 1e-9, "{}", m.fairness);
 }
