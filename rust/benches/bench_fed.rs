@@ -1,0 +1,77 @@
+//! Federated round-engine throughput benches. Usage:
+//!
+//! ```bash
+//! cargo bench --bench bench_fed             # all cases
+//! cargo bench --bench bench_fed -- 1000     # just the 1000-client case
+//! ```
+//!
+//! The `fed_rounds_*_clients` cases measure the round engine
+//! (candidate scan, selection, straggler decision, accounting) at
+//! population sizes of 100 and 1000 — local-epoch costing is memoized
+//! by client shape in the shared `StrategyOracle`, so after the first
+//! quote the bench times the engine, not the planner — and report
+//! derived rounds/sec next to the wall-clock summary. The `_dropout`
+//! case runs the flaky trace + deadline cutoff, adding the dropout and
+//! partial-aggregation paths to the measured loop.
+
+use pacpp::fed::{simulate_fed, FedOptions, FedTraceKind};
+use pacpp::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fed");
+
+    for n in [100usize, 1000] {
+        let name = format!("fed_rounds_{n}_clients");
+        if !b.enabled(&name) {
+            continue;
+        }
+        // the default 14-day horizon bounds availability-trace length
+        // (toggles are materialized per client) while comfortably
+        // fitting 50 rounds
+        let opts = FedOptions {
+            rounds: 50,
+            clients: n,
+            k: 16,
+            trace: FedTraceKind::Churny,
+            ..Default::default()
+        };
+        let m = simulate_fed(&opts).unwrap();
+        assert!(m.rounds > 0, "bench run must complete rounds");
+        let res = b.run(&name, || simulate_fed(&opts).unwrap()).cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.1} rounds/sec ({} rounds, {} aggregated, {} dropped, {} stalls)",
+                m.rounds as f64 / r.summary.mean,
+                m.rounds,
+                m.aggregated_total,
+                m.dropped_total,
+                m.stalls
+            );
+        }
+    }
+
+    if b.enabled("fed_rounds_dropout_1000_clients") {
+        let opts = FedOptions {
+            rounds: 50,
+            clients: 1000,
+            k: 16,
+            select: "power-of-d".into(),
+            straggler: "deadline".into(),
+            trace: FedTraceKind::Flaky,
+            ..Default::default()
+        };
+        let m = simulate_fed(&opts).unwrap();
+        let res = b
+            .run("fed_rounds_dropout_1000_clients", || simulate_fed(&opts).unwrap())
+            .cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.1} rounds/sec ({} rounds, {} aggregated, {} dropped)",
+                m.rounds as f64 / r.summary.mean,
+                m.rounds,
+                m.aggregated_total,
+                m.dropped_total
+            );
+        }
+    }
+}

@@ -78,6 +78,22 @@ impl DeviceKind {
             DeviceKind::Tx2L => "TX2-L",
         }
     }
+
+    pub const ALL: [DeviceKind; 4] =
+        [DeviceKind::NanoH, DeviceKind::NanoL, DeviceKind::Tx2H, DeviceKind::Tx2L];
+
+    /// Parse a kind by display name (case-insensitive, `_`/`-`
+    /// agnostic) — the inverse of [`name`](DeviceKind::name), used by
+    /// the churn-trace file format.
+    pub fn parse(s: &str) -> Option<DeviceKind> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "nano-h" | "nanoh" | "nano" => Some(DeviceKind::NanoH),
+            "nano-l" | "nanol" => Some(DeviceKind::NanoL),
+            "tx2-h" | "tx2h" | "tx2" => Some(DeviceKind::Tx2H),
+            "tx2-l" | "tx2l" => Some(DeviceKind::Tx2L),
+            _ => None,
+        }
+    }
 }
 
 /// A concrete device instance in a cluster.
@@ -141,6 +157,16 @@ mod tests {
         assert!(DeviceKind::Tx2L.peak_flops() < DeviceKind::Tx2H.peak_flops());
         let r = DeviceKind::NanoL.peak_flops() / DeviceKind::NanoH.peak_flops();
         assert!((r - 640.0 / 921.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_inverts_name() {
+        for kind in DeviceKind::ALL {
+            assert_eq!(DeviceKind::parse(kind.name()), Some(kind));
+            assert_eq!(DeviceKind::parse(&kind.name().to_ascii_lowercase()), Some(kind));
+        }
+        assert_eq!(DeviceKind::parse("nano_h"), Some(DeviceKind::NanoH));
+        assert_eq!(DeviceKind::parse("a100"), None);
     }
 
     #[test]

@@ -52,6 +52,14 @@ impl Network {
         }
         bytes as f64 / self.bandwidth + (n as f64 - 1.0) * self.latency
     }
+
+    /// Parameter-server star: one server ingests `n` uploads of `bytes`
+    /// each over its single shared link, so transfers serialize — the
+    /// classic star-topology aggregation bottleneck the federated
+    /// experiments compare against the ring collectives.
+    pub fn star_gather_time(&self, bytes: u64, n: usize) -> f64 {
+        n as f64 * (self.latency + bytes as f64 / self.bandwidth)
+    }
 }
 
 #[cfg(test)]
@@ -83,6 +91,18 @@ mod tests {
         let t2 = net.allgather_time(10_000_000, 2);
         let t4 = net.allgather_time(10_000_000, 4);
         assert!(t4 > 2.0 * t2 * 0.9);
+    }
+
+    #[test]
+    fn star_gather_serializes_uploads() {
+        let net = Network::lan_1gbps();
+        assert_eq!(net.star_gather_time(1_000_000, 0), 0.0);
+        let t1 = net.star_gather_time(10_000_000, 1);
+        assert!((t1 - net.transfer_time(10_000_000)).abs() < 1e-12);
+        let t4 = net.star_gather_time(10_000_000, 4);
+        assert!((t4 - 4.0 * t1).abs() < 1e-9, "star serializes: {t4} vs 4x{t1}");
+        // past a couple of participants the star loses to the ring
+        assert!(net.star_gather_time(10_000_000, 8) > net.allreduce_time(10_000_000, 8));
     }
 
     #[test]

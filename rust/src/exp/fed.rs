@@ -1,0 +1,272 @@
+//! The federated experiments: selection × straggler and
+//! selection × availability-trace × network grids over the round-based
+//! adapter-aggregation simulator.
+//!
+//! Each cell is one deterministic [`crate::fed::simulate_fed`] run
+//! (fixed seed, shared client population per seed), so the reports are
+//! bit-identical across runs and machines — diffable with the
+//! `BENCH_*.json` workflow like every other report.
+
+use crate::cluster::Network;
+use crate::fed::{
+    simulate_fed, FedMetrics, FedOptions, FedTraceKind, SelectionRegistry, StragglerRegistry,
+};
+use crate::util::par_map;
+
+use super::report::{Cell, ColType, Report};
+
+/// Rounds per cell of the experiment grids.
+const GRID_ROUNDS: usize = 20;
+/// Client population per cell.
+const GRID_CLIENTS: usize = 24;
+/// Aggregation target K per round.
+const GRID_K: usize = 6;
+/// Seed shared by every grid cell.
+const GRID_SEED: u64 = 42;
+/// Convergence-proxy target in effective rounds (under the round cap,
+/// so full-participation cells provably reach it).
+const GRID_TARGET: f64 = 10.0;
+
+/// The fed Report's empty shell (name, title, typed columns). Shared by
+/// the grids, the CLI subcommand and `bench_fed`, so every surface
+/// emits the same schema.
+pub fn fed_schema(name: &str, title: &str) -> Report {
+    Report::new(name, title)
+        .column("net", ColType::Str)
+        .column("trace", ColType::Str)
+        .column("select", ColType::Str)
+        .column("straggler", ColType::Str)
+        .column("agg", ColType::Str)
+        .column("clients", ColType::Int)
+        .column("k", ColType::Int)
+        .column("rounds", ColType::Int)
+        .column("selected", ColType::Int) // client-rounds selected
+        .column("aggregated", ColType::Int) // client-rounds aggregated
+        .column("dropped", ColType::Int) // stragglers dropped
+        .column("p50", ColType::Secs) // round-time percentiles
+        .column("p95", ColType::Secs)
+        .column("p99", ColType::Secs)
+        .column("bytes_up", ColType::Bytes)
+        .column("bytes_down", ColType::Bytes)
+        .column("fairness", ColType::Float) // Jain over participation counts
+        .column("eff_rounds", ColType::Float) // participation-weighted progress
+        .column("to_target", ColType::Int) // rounds to the convergence proxy
+        .column("t_target", ColType::Secs)
+        .column("makespan", ColType::Secs)
+}
+
+/// One metrics row in the shared schema.
+pub fn fed_row(net: &str, opts: &FedOptions, m: &FedMetrics) -> Vec<Cell> {
+    vec![
+        Cell::Str(net.into()),
+        Cell::Str(opts.trace.name().into()),
+        Cell::Str(opts.select.clone()),
+        Cell::Str(opts.straggler.clone()),
+        Cell::Str(opts.agg.name().into()),
+        Cell::Int(opts.clients as i64),
+        Cell::Int(opts.k as i64),
+        Cell::Int(m.rounds as i64),
+        Cell::Int(m.selected_total as i64),
+        Cell::Int(m.aggregated_total as i64),
+        Cell::Int(m.dropped_total as i64),
+        Cell::opt(m.round_p50, Cell::Secs),
+        Cell::opt(m.round_p95, Cell::Secs),
+        Cell::opt(m.round_p99, Cell::Secs),
+        Cell::Bytes(m.bytes_up),
+        Cell::Bytes(m.bytes_down),
+        Cell::Float(m.participation_fairness),
+        Cell::Float(m.effective_rounds),
+        Cell::opt(m.rounds_to_target, |r| Cell::Int(r as i64)),
+        Cell::opt(m.time_to_target, Cell::Secs),
+        Cell::Secs(m.makespan),
+    ]
+}
+
+fn base_opts() -> FedOptions {
+    FedOptions {
+        rounds: GRID_ROUNDS,
+        clients: GRID_CLIENTS,
+        k: GRID_K,
+        seed: GRID_SEED,
+        target_rounds: GRID_TARGET,
+        ..Default::default()
+    }
+}
+
+fn net_by_name(name: &str) -> Network {
+    match name {
+        "wifi" => Network::wifi_100mbps(),
+        _ => Network::lan_1gbps(),
+    }
+}
+
+/// `fed` — the mitigation grid: every selection policy × every
+/// straggler policy on the shared churny population (LAN, ring
+/// AllReduce). The dropped/round-time columns show what each straggler
+/// discipline buys; the fairness column what each selector costs.
+pub fn fed_report() -> Report {
+    let selections = SelectionRegistry::with_defaults();
+    let stragglers = StragglerRegistry::with_defaults();
+    let mut combos: Vec<(String, String)> = Vec::new();
+    for select in selections.names() {
+        for straggler in stragglers.names() {
+            combos.push((select.to_string(), straggler.to_string()));
+        }
+    }
+    let base = base_opts();
+    let results = par_map(combos.len(), |i| {
+        let (select, straggler) = &combos[i];
+        let opts = FedOptions {
+            select: select.clone(),
+            straggler: straggler.clone(),
+            ..base.clone()
+        };
+        (opts.clone(), simulate_fed(&opts).expect("default fed policies are registered"))
+    });
+
+    let mut report = fed_schema(
+        "fed",
+        "Fed — federated adapter aggregation, selection x straggler (churny clients)",
+    )
+    .meta("rounds", GRID_ROUNDS)
+    .meta("clients", GRID_CLIENTS)
+    .meta("k", GRID_K)
+    .meta("seed", GRID_SEED)
+    .meta("trace", base.trace.name())
+    .meta("agg", base.agg.name())
+    .meta("strategy", &base.strategy)
+    .meta("target", GRID_TARGET);
+    for (opts, m) in &results {
+        report.push(fed_row("lan", opts, m));
+    }
+    report
+}
+
+/// `fed_select` — the availability grid: every selection policy ×
+/// availability trace × network, under synchronous (wait-all) rounds
+/// where a dropout hurts most. Availability-aware selection's edge over
+/// uniform on the flaky/churny traces is the story.
+pub fn fed_select_report() -> Report {
+    let selections = SelectionRegistry::with_defaults();
+    let nets = ["lan", "wifi"];
+    let mut combos: Vec<(String, FedTraceKind, &str)> = Vec::new();
+    for select in selections.names() {
+        for trace in FedTraceKind::ALL {
+            for net in nets {
+                combos.push((select.to_string(), trace, net));
+            }
+        }
+    }
+    let base = base_opts();
+    let results = par_map(combos.len(), |i| {
+        let (select, trace, net) = &combos[i];
+        let opts = FedOptions {
+            select: select.clone(),
+            // canonical name: the straggler column must match the fed
+            // grid's rows, which come from StragglerRegistry::names()
+            straggler: "Wait-all".into(),
+            trace: *trace,
+            network: net_by_name(net),
+            ..base.clone()
+        };
+        (opts.clone(), simulate_fed(&opts).expect("default fed policies are registered"))
+    });
+
+    let mut report = fed_schema(
+        "fed_select",
+        "Fed — client selection x availability trace x network (wait-all rounds)",
+    )
+    .meta("rounds", GRID_ROUNDS)
+    .meta("clients", GRID_CLIENTS)
+    .meta("k", GRID_K)
+    .meta("seed", GRID_SEED)
+    .meta("straggler", "Wait-all")
+    .meta("agg", base.agg.name())
+    .meta("strategy", &base.strategy)
+    .meta("target", GRID_TARGET);
+    for ((_, _, net), (opts, m)) in combos.iter().zip(&results) {
+        report.push(fed_row(net, opts, m));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn str_values(rep: &Report, col: &str) -> Vec<String> {
+        (0..rep.n_rows())
+            .filter_map(|i| rep.cell(i, col).and_then(Cell::as_str).map(String::from))
+            .collect()
+    }
+
+    #[test]
+    fn fed_grid_covers_selection_by_straggler() {
+        let rep = fed_report();
+        // 4 selection x 3 straggler policies
+        assert_eq!(rep.n_rows(), 12);
+        for (col, want) in [
+            (
+                "select",
+                vec!["Uniform", "Power-of-d", "Availability-aware", "Fair-share"],
+            ),
+            ("straggler", vec!["Wait-all", "Deadline", "Over-select"]),
+        ] {
+            let values = str_values(&rep, col);
+            for w in want {
+                assert!(values.iter().any(|v| v == w), "missing {col}={w}");
+            }
+        }
+        for col in
+            ["agg", "rounds", "aggregated", "dropped", "p50", "p95", "bytes_up",
+             "fairness", "eff_rounds", "to_target", "makespan"]
+        {
+            assert!(rep.columns().iter().any(|c| c.name == col), "missing column {col}");
+        }
+        for i in 0..rep.n_rows() {
+            let rounds = rep.cell(i, "rounds").unwrap().as_f64().unwrap();
+            assert!(rounds > 0.0, "row {i} completed no rounds");
+            assert!(rounds <= GRID_ROUNDS as f64, "row {i}");
+            let agg = rep.cell(i, "aggregated").unwrap().as_f64().unwrap();
+            let sel = rep.cell(i, "selected").unwrap().as_f64().unwrap();
+            let dropped = rep.cell(i, "dropped").unwrap().as_f64().unwrap();
+            assert!(agg <= sel, "row {i}");
+            assert_eq!(agg + dropped, sel, "row {i}: selection partitions");
+            let fairness = rep.cell(i, "fairness").unwrap().as_f64().unwrap();
+            assert!(fairness > 0.0 && fairness <= 1.0 + 1e-9, "row {i}: {fairness}");
+            assert!(rep.cell(i, "bytes_up").unwrap().as_f64().unwrap() > 0.0, "row {i}");
+        }
+    }
+
+    #[test]
+    fn fed_select_grid_covers_traces_and_networks() {
+        let rep = fed_select_report();
+        // 4 selection x 3 traces x 2 networks
+        assert_eq!(rep.n_rows(), 24);
+        for (col, want) in [
+            ("net", vec!["lan", "wifi"]),
+            ("trace", vec!["stable", "churny", "flaky"]),
+        ] {
+            let values = str_values(&rep, col);
+            for w in want {
+                assert!(values.iter().any(|v| v == w), "missing {col}={w}");
+            }
+        }
+        // every row is a wait-all row by construction
+        for v in str_values(&rep, "straggler") {
+            assert_eq!(v, "Wait-all");
+        }
+    }
+
+    #[test]
+    fn reports_are_deterministic() {
+        let a = fed_report();
+        let b = fed_report();
+        assert_eq!(a, b);
+        assert_eq!(
+            a.render(crate::exp::Format::Json),
+            b.render(crate::exp::Format::Json)
+        );
+        assert_eq!(fed_select_report(), fed_select_report());
+    }
+}

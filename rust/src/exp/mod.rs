@@ -31,6 +31,8 @@
 //! | `fleet_churn`         | the same grid under device churn (joins/leaves/degrades) |
 //! | `fleet_checkpoint`    | checkpoint interval k vs restart loss/overhead under churn |
 //! | `fleet_users`         | per-user SLO breakdown: p95, deadline hits, fairness shares |
+//! | `fed`                 | federated adapter aggregation: selection × straggler grid |
+//! | `fed_select`          | client selection × availability trace × network grid |
 //!
 //! CLI: `pacpp exp list`, `pacpp exp run <name> [--format text|json|csv]
 //! [--out FILE]`, `pacpp exp all`. See the crate docs ("Adding a new
@@ -43,11 +45,13 @@
 
 pub mod ablations;
 pub mod accuracy;
+pub mod fed;
 pub mod fleet;
 pub mod registry;
 pub mod report;
 pub mod tables;
 
+pub use fed::{fed_report, fed_row, fed_schema, fed_select_report};
 pub use fleet::{
     fleet_checkpoint_report, fleet_churn_report, fleet_report, fleet_row, fleet_schema,
     fleet_users_report, fleet_users_schema,

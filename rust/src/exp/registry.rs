@@ -317,6 +317,24 @@ impl ExperimentRegistry {
                 requires_artifacts: false,
                 run: |_| Ok(super::fleet::fleet_users_report()),
             },
+            FnExperiment {
+                name: "fed",
+                aliases: &["federated"],
+                description:
+                    "Fed — federated adapter aggregation, selection x straggler grid",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::fed::fed_report()),
+            },
+            FnExperiment {
+                name: "fed_select",
+                aliases: &["fed-select", "selection"],
+                description:
+                    "Fed — client selection x availability trace x network grid",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| Ok(super::fed::fed_select_report()),
+            },
         ];
         for e in defaults {
             r.register(Arc::new(e));
@@ -568,6 +586,8 @@ mod tests {
                 "fleet_churn",
                 "fleet_checkpoint",
                 "fleet_users",
+                "fed",
+                "fed_select",
             ]
         );
     }
@@ -588,6 +608,10 @@ mod tests {
             ("churn", "fleet_churn"),
             ("ckpt", "fleet_checkpoint"),
             ("slo", "fleet_users"),
+            ("fed", "fed"),
+            ("federated", "fed"),
+            ("fed-select", "fed_select"),
+            ("selection", "fed_select"),
         ] {
             assert_eq!(r.get(query).map(|e| e.name()), Some(want), "query {query:?}");
         }

@@ -1,0 +1,191 @@
+//! [`FedMetrics`] — what one federated simulation is judged by.
+
+use crate::fleet::jain_index;
+use crate::util::stats::percentile;
+
+/// Per-client accounting, ascending client id in
+/// [`FedMetrics::per_client`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientStat {
+    pub id: usize,
+    /// Rounds this client was selected for.
+    pub selected: usize,
+    /// Rounds whose aggregate actually included this client's update.
+    pub aggregated: usize,
+    /// Selections that ended dropped (availability dropout, deadline
+    /// cutoff, or losing the over-selection race).
+    pub dropped: usize,
+    /// Adapter-delta bytes this client uploaded (aggregated rounds).
+    pub up_bytes: u64,
+    /// Global-adapter bytes this client downloaded (selected rounds).
+    pub down_bytes: u64,
+}
+
+/// Raw tallies the round engine hands to [`FedMetrics::assemble`].
+pub(crate) struct RawFed {
+    /// Duration of every completed round, in round order.
+    pub round_times: Vec<f64>,
+    /// One entry per client, ascending id.
+    pub per_client: Vec<ClientStat>,
+    /// Virtual time at which the simulation ended, seconds.
+    pub makespan: f64,
+    /// Times the engine had to sleep until the next availability toggle
+    /// because no (or no selectable) client was online.
+    pub stalls: usize,
+    /// Clients whose own device cannot host the model at all.
+    pub infeasible: usize,
+    /// Seconds spent in the aggregation collective across all rounds.
+    pub agg_time: f64,
+    /// Participation-weighted progress accumulated (Σ aggregated/K).
+    pub effective_rounds: f64,
+    /// First round index (1-based) at which `effective_rounds` crossed
+    /// the configured target, if it ever did.
+    pub rounds_to_target: Option<usize>,
+    /// Virtual time of that crossing.
+    pub time_to_target: Option<f64>,
+}
+
+/// Aggregate outcome of one federated run. All fields are deterministic
+/// functions of the options (clients, traces and per-round randomness
+/// all derive from the seed): the determinism property test compares
+/// whole values with `==`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FedMetrics {
+    /// Rounds fully completed within the horizon.
+    pub rounds: usize,
+    /// Virtual time at which the simulation ended, seconds.
+    pub makespan: f64,
+    /// Round-duration percentiles over the completed rounds, seconds.
+    pub round_p50: Option<f64>,
+    pub round_p95: Option<f64>,
+    pub round_p99: Option<f64>,
+    /// Client-rounds selected across the run.
+    pub selected_total: usize,
+    /// Client-rounds whose update made it into an aggregate.
+    pub aggregated_total: usize,
+    /// Client-rounds dropped (dropout, cutoff, over-selection loss).
+    pub dropped_total: usize,
+    /// Total adapter-delta bytes uploaded / global bytes downloaded.
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Jain fairness index over per-client aggregated-round counts
+    /// (every client counts, never-selected ones as zero).
+    pub participation_fairness: f64,
+    /// Participation-weighted progress: Σ over rounds of aggregated/K.
+    pub effective_rounds: f64,
+    /// Convergence proxy: first round (1-based) / virtual time at which
+    /// `effective_rounds` reached the configured target (`None` when no
+    /// target was set or it was never reached).
+    pub rounds_to_target: Option<usize>,
+    pub time_to_target: Option<f64>,
+    /// Idle waits for the next availability toggle.
+    pub stalls: usize,
+    /// Clients excluded up front (model infeasible on their device).
+    pub infeasible_clients: usize,
+    /// Seconds spent in the aggregation collective across all rounds.
+    pub agg_time_total: f64,
+    /// Per-client accounting, ascending client id.
+    pub per_client: Vec<ClientStat>,
+}
+
+impl FedMetrics {
+    pub(crate) fn assemble(raw: RawFed) -> FedMetrics {
+        let mut times = raw.round_times.clone();
+        times.sort_by(|a, b| a.total_cmp(b));
+        let pct = |q: f64| {
+            if times.is_empty() {
+                None
+            } else {
+                Some(percentile(&times, q))
+            }
+        };
+        let selected_total = raw.per_client.iter().map(|c| c.selected).sum();
+        let aggregated_total = raw.per_client.iter().map(|c| c.aggregated).sum();
+        let dropped_total = raw.per_client.iter().map(|c| c.dropped).sum();
+        let counts: Vec<f64> =
+            raw.per_client.iter().map(|c| c.aggregated as f64).collect();
+        FedMetrics {
+            rounds: raw.round_times.len(),
+            makespan: raw.makespan,
+            round_p50: pct(0.50),
+            round_p95: pct(0.95),
+            round_p99: pct(0.99),
+            selected_total,
+            aggregated_total,
+            dropped_total,
+            bytes_up: raw.per_client.iter().map(|c| c.up_bytes).sum(),
+            bytes_down: raw.per_client.iter().map(|c| c.down_bytes).sum(),
+            participation_fairness: jain_index(&counts),
+            effective_rounds: raw.effective_rounds,
+            rounds_to_target: raw.rounds_to_target,
+            time_to_target: raw.time_to_target,
+            stalls: raw.stalls,
+            infeasible_clients: raw.infeasible,
+            agg_time_total: raw.agg_time,
+            per_client: raw.per_client,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(id: usize, selected: usize, aggregated: usize) -> ClientStat {
+        ClientStat {
+            id,
+            selected,
+            aggregated,
+            dropped: selected - aggregated,
+            up_bytes: aggregated as u64 * 100,
+            down_bytes: selected as u64 * 100,
+        }
+    }
+
+    fn raw(round_times: Vec<f64>, per_client: Vec<ClientStat>) -> RawFed {
+        RawFed {
+            round_times,
+            per_client,
+            makespan: 1000.0,
+            stalls: 0,
+            infeasible: 0,
+            agg_time: 0.0,
+            effective_rounds: 0.0,
+            rounds_to_target: None,
+            time_to_target: None,
+        }
+    }
+
+    #[test]
+    fn assemble_totals_and_percentiles() {
+        let m = FedMetrics::assemble(raw(
+            vec![10.0, 20.0, 30.0],
+            vec![stat(0, 3, 3), stat(1, 2, 1), stat(2, 0, 0)],
+        ));
+        assert_eq!(m.rounds, 3);
+        assert_eq!((m.selected_total, m.aggregated_total, m.dropped_total), (5, 4, 1));
+        assert_eq!((m.bytes_up, m.bytes_down), (400, 500));
+        assert_eq!(m.round_p50, Some(20.0));
+        assert!(m.round_p99.unwrap() <= 30.0);
+        // shares (3, 1, 0): unfair but within (0, 1]
+        assert!(m.participation_fairness > 0.0 && m.participation_fairness < 1.0);
+    }
+
+    #[test]
+    fn empty_run_has_no_nans() {
+        let m = FedMetrics::assemble(raw(vec![], vec![]));
+        assert_eq!(m.rounds, 0);
+        assert_eq!(m.round_p50, None);
+        assert_eq!(m.participation_fairness, 1.0, "vacuous fairness is perfect");
+        assert_eq!(m.rounds_to_target, None);
+    }
+
+    #[test]
+    fn uniform_participation_is_perfectly_fair() {
+        let m = FedMetrics::assemble(raw(
+            vec![5.0],
+            vec![stat(0, 1, 1), stat(1, 1, 1), stat(2, 1, 1)],
+        ));
+        assert!((m.participation_fairness - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,64 @@
+//! `fed` — a deterministic round-based **federated adapter-aggregation
+//! simulator**: many users' Parallel-Adapter deltas combined across a
+//! churning population of personal edge devices.
+//!
+//! The paper fine-tunes one personal model per user on a private edge
+//! pool. Scaling toward the ROADMAP's millions-of-users north star
+//! means those users' adapters must also be *combined* across devices
+//! — cross-device federated fine-tuning, instantiated here for
+//! adapter-only exchange (only the tiny deltas ever leave a device,
+//! preserving the paper's privacy premise). This module composes
+//! ingredients the repo already has into federated rounds:
+//!
+//! * **local epochs** — each selected client's adapter training is
+//!   costed through the existing [`crate::fleet::StrategyOracle`]
+//!   (the paper's planner + cached-epoch model) on the client's own
+//!   device ([`round`]);
+//! * **selection** — which available clients join a round is a
+//!   pluggable [`ClientSelection`] resolved by name through
+//!   [`SelectionRegistry`] ([`select`]: uniform-random, power-of-d
+//!   fastest by oracle estimate, availability-aware over the churn
+//!   traces, participation-fairness balancing);
+//! * **communication** — dissemination, adapter-delta uploads and the
+//!   aggregation collective (ring AllReduce / all-gather / a
+//!   parameter-server star) are timed through [`crate::cluster::Network`],
+//!   with optional secure-aggregation and DP-noise cost knobs;
+//! * **stragglers** — when a round closes and whose updates count is a
+//!   pluggable [`StragglerPolicy`] ([`straggler`]: wait-all, deadline
+//!   cutoff with partial aggregation, over-select K+s);
+//! * **churn** — every client has a seeded availability trace
+//!   ([`ClientTrace`]); a window closing mid-round is a dropout the
+//!   server only detects by timeout;
+//! * **accounting** — [`FedMetrics`]: round-time p50/p95/p99, bytes
+//!   up/down per client, stragglers dropped, per-client participation
+//!   with a Jain fairness index, and a participation-weighted
+//!   rounds-to-target convergence proxy.
+//!
+//! Entry points: [`simulate_fed`] / [`simulate_fed_with`] (library),
+//! the `fed` / `fed_select` experiments in
+//! [`crate::exp::ExperimentRegistry::with_defaults`], and the
+//! `pacpp fed` CLI subcommand (`--rounds`, `--clients`, `--select`,
+//! `--straggler`, `--agg`, `--seed`, `--trace`, `--strategy`). Same
+//! options produce bit-identical metrics (property-tested across every
+//! selection × straggler combination, like `fleet`). See the crate
+//! docs ("Adding a client-selection policy") for how to register your
+//! own.
+
+pub mod metrics;
+pub mod round;
+pub mod select;
+pub mod straggler;
+
+pub use metrics::{ClientStat, FedMetrics};
+pub use round::{
+    generate_availability, generate_clients, simulate_fed, simulate_fed_with, AggMode,
+    ClientTrace, FedClient, FedOptions, FedTraceKind, SECURE_KEY_BYTES,
+};
+pub use select::{
+    AvailabilityAware, Candidate, ClientSelection, FairShare, PowerOfD, SelectCtx,
+    SelectionRegistry, UniformRandom, AVAIL_SAFETY, POWER_OF_D,
+};
+pub use straggler::{
+    ClientRoundResult, DeadlineCutoff, OverSelect, RoundDecision, SelectedOutcome,
+    StragglerCtx, StragglerPolicy, StragglerRegistry, WaitAll, DROPOUT_DETECT_MULT,
+};

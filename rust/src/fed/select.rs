@@ -1,0 +1,389 @@
+//! The open client-selection layer: *which* available clients join a
+//! federated round.
+//!
+//! Mirrors the fleet layer's open design
+//! ([`crate::fleet::PolicyRegistry`], [`crate::fleet::QueuePolicyRegistry`]):
+//! a scheme is one [`ClientSelection`] impl plus one
+//! [`SelectionRegistry::register`] call, and the `fed` experiments and
+//! `pacpp fed` CLI resolve policies by name. Selection never costs
+//! training itself — every [`Candidate`] carries the round-time
+//! estimate the engine derived through the shared
+//! [`crate::fleet::StrategyOracle`], plus the availability-trace
+//! signals (remaining up-time, long-run availability fraction) and the
+//! client's participation history.
+//!
+//! Built-ins:
+//!
+//! * [`UniformRandom`] — the classic FedAvg sampler: K uniform picks
+//!   from the available set;
+//! * [`PowerOfD`] — power-of-d-choices: sample `d·K` random candidates
+//!   and keep the K fastest by oracle estimate (low round time without
+//!   scanning the whole population);
+//! * [`AvailabilityAware`] — prefer clients whose current availability
+//!   window outlasts their estimated round completion (they are the
+//!   ones that will not drop out mid-round), breaking ties toward
+//!   historically-available clients;
+//! * [`FairShare`] — participation balancing: least-aggregated-first,
+//!   driving the per-client participation Jain index toward 1.
+
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
+
+/// One selectable client as the selection layer sees it.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub id: usize,
+    /// Estimated round time (dissemination + local epochs + upload),
+    /// seconds, from the engine's oracle quotes.
+    pub est: f64,
+    /// Seconds until the client's current availability window closes
+    /// (`f64::INFINITY` when no departure is scheduled).
+    pub up_remaining: f64,
+    /// Long-run fraction of the trace this client is available.
+    pub avail_frac: f64,
+    /// Rounds whose aggregate included this client so far.
+    pub participation: usize,
+}
+
+/// What a selection decision sees. `candidates` holds every available,
+/// feasible client, ascending id.
+pub struct SelectCtx<'a> {
+    pub round: usize,
+    pub now: f64,
+    /// How many clients to pick (K plus any straggler over-selection),
+    /// already capped at `candidates.len()`.
+    pub want: usize,
+    pub candidates: &'a [Candidate],
+}
+
+/// A pluggable client-selection scheme. Implementations must be
+/// stateless (or internally synchronized): the registry hands out
+/// shared references and the fed experiments run policies from worker
+/// threads. All randomness must come from the provided `rng` (seeded
+/// per round by the engine) — that is what makes same-seed runs
+/// bit-identical under every policy.
+pub trait ClientSelection: Send + Sync {
+    /// Canonical display name (stable: used in tables, JSON, the CLI).
+    fn name(&self) -> &str;
+
+    /// Lowercase lookup aliases accepted by [`SelectionRegistry::get`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for `pacpp fed` docs.
+    fn description(&self) -> &str {
+        ""
+    }
+
+    /// Pick up to `ctx.want` client ids from `ctx.candidates`. The
+    /// engine sanitizes the result (drops non-candidates and
+    /// duplicates, truncates to `want`), so a sloppy policy degrades
+    /// gracefully instead of corrupting the round.
+    fn select(&self, ctx: &SelectCtx, rng: &mut Rng) -> Vec<usize>;
+}
+
+/// K uniform random picks from the available set (FedAvg's sampler).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UniformRandom;
+
+impl ClientSelection for UniformRandom {
+    fn name(&self) -> &str {
+        "Uniform"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["uniform", "random", "uniform-random"]
+    }
+
+    fn description(&self) -> &str {
+        "K uniform random picks from the available clients (FedAvg)"
+    }
+
+    fn select(&self, ctx: &SelectCtx, rng: &mut Rng) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..ctx.candidates.len()).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(ctx.want);
+        idx.into_iter().map(|i| ctx.candidates[i].id).collect()
+    }
+}
+
+/// How many random candidates [`PowerOfD`] samples per selected slot.
+pub const POWER_OF_D: usize = 3;
+
+/// Power-of-d-choices: sample `d·K` random candidates, keep the K with
+/// the smallest round-time estimates — most of uniform sampling's
+/// fairness, most of fastest-first's round time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PowerOfD;
+
+impl ClientSelection for PowerOfD {
+    fn name(&self) -> &str {
+        "Power-of-d"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["power-of-d", "pod", "fastest", "power"]
+    }
+
+    fn description(&self) -> &str {
+        "sample d*K random candidates, keep the K fastest by oracle estimate"
+    }
+
+    fn select(&self, ctx: &SelectCtx, rng: &mut Rng) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..ctx.candidates.len()).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate((ctx.want * POWER_OF_D).min(ctx.candidates.len()));
+        idx.sort_by(|&a, &b| {
+            let (ca, cb) = (&ctx.candidates[a], &ctx.candidates[b]);
+            ca.est.total_cmp(&cb.est).then(ca.id.cmp(&cb.id))
+        });
+        idx.truncate(ctx.want);
+        idx.into_iter().map(|i| ctx.candidates[i].id).collect()
+    }
+}
+
+/// Safety margin [`AvailabilityAware`] demands between a candidate's
+/// remaining up-time and its round estimate.
+pub const AVAIL_SAFETY: f64 = 1.5;
+
+/// Availability-aware selection over the churn traces: prefer clients
+/// whose current up-window comfortably outlasts their estimated round
+/// (`up_remaining >= 1.5 × est`), ranked by survival headroom and then
+/// long-run availability — the clients least likely to drop mid-round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AvailabilityAware;
+
+impl ClientSelection for AvailabilityAware {
+    fn name(&self) -> &str {
+        "Availability-aware"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["availability", "avail", "availability-aware"]
+    }
+
+    fn description(&self) -> &str {
+        "prefer clients whose availability window outlasts their estimated round"
+    }
+
+    fn select(&self, ctx: &SelectCtx, _rng: &mut Rng) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..ctx.candidates.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let (ca, cb) = (&ctx.candidates[a], &ctx.candidates[b]);
+            // headroom ratio, capped so every "safe enough" client ties
+            // and the historically-available ones win among them
+            let ha = (ca.up_remaining / ca.est.max(1e-9)).min(AVAIL_SAFETY * 4.0);
+            let hb = (cb.up_remaining / cb.est.max(1e-9)).min(AVAIL_SAFETY * 4.0);
+            hb.total_cmp(&ha)
+                .then(cb.avail_frac.total_cmp(&ca.avail_frac))
+                .then(ca.est.total_cmp(&cb.est))
+                .then(ca.id.cmp(&cb.id))
+        });
+        idx.truncate(ctx.want);
+        idx.into_iter().map(|i| ctx.candidates[i].id).collect()
+    }
+}
+
+/// Participation-fairness balancing: least-aggregated clients first, so
+/// every client's adapter gets a voice in the global aggregate.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FairShare;
+
+impl ClientSelection for FairShare {
+    fn name(&self) -> &str {
+        "Fair-share"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fair", "fairness", "fair-share", "least-participated"]
+    }
+
+    fn description(&self) -> &str {
+        "least-participated clients first, balancing per-client aggregation counts"
+    }
+
+    fn select(&self, ctx: &SelectCtx, _rng: &mut Rng) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..ctx.candidates.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let (ca, cb) = (&ctx.candidates[a], &ctx.candidates[b]);
+            ca.participation.cmp(&cb.participation).then(ca.id.cmp(&cb.id))
+        });
+        idx.truncate(ctx.want);
+        idx.into_iter().map(|i| ctx.candidates[i].id).collect()
+    }
+}
+
+/// An ordered, name-addressed collection of selection policies.
+/// Mirrors [`crate::fleet::QueuePolicyRegistry`].
+pub struct SelectionRegistry {
+    policies: Vec<Arc<dyn ClientSelection>>,
+}
+
+impl SelectionRegistry {
+    /// An empty registry (build-your-own line-ups).
+    pub fn empty() -> SelectionRegistry {
+        SelectionRegistry { policies: Vec::new() }
+    }
+
+    /// The four built-ins: uniform, power-of-d, availability-aware,
+    /// fair-share.
+    pub fn with_defaults() -> SelectionRegistry {
+        let mut r = SelectionRegistry::empty();
+        r.register(Arc::new(UniformRandom));
+        r.register(Arc::new(PowerOfD));
+        r.register(Arc::new(AvailabilityAware));
+        r.register(Arc::new(FairShare));
+        r
+    }
+
+    /// Add a policy; replaces an existing entry with the same canonical
+    /// name (so callers can shadow a built-in).
+    pub fn register(&mut self, p: Arc<dyn ClientSelection>) {
+        let name = p.name().to_ascii_lowercase();
+        if let Some(slot) =
+            self.policies.iter_mut().find(|e| e.name().to_ascii_lowercase() == name)
+        {
+            *slot = p;
+        } else {
+            self.policies.push(p);
+        }
+    }
+
+    /// Look up by canonical name (case-insensitive) or alias.
+    pub fn get(&self, name: &str) -> Option<&Arc<dyn ClientSelection>> {
+        let q = name.to_ascii_lowercase();
+        self.policies
+            .iter()
+            .find(|p| p.name().to_ascii_lowercase() == q)
+            .or_else(|| self.policies.iter().find(|p| p.aliases().contains(&q.as_str())))
+    }
+
+    /// Canonical names in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.policies.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn ClientSelection>> {
+        self.policies.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.policies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+}
+
+impl Default for SelectionRegistry {
+    fn default() -> Self {
+        SelectionRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(id: usize, est: f64, up: f64, frac: f64, part: usize) -> Candidate {
+        Candidate { id, est, up_remaining: up, avail_frac: frac, participation: part }
+    }
+
+    fn ctx(candidates: &[Candidate], want: usize) -> SelectCtx {
+        SelectCtx { round: 0, now: 0.0, want, candidates }
+    }
+
+    #[test]
+    fn uniform_is_seed_deterministic_and_covers() {
+        let cands: Vec<Candidate> =
+            (0..10).map(|i| cand(i, 100.0, f64::INFINITY, 1.0, 0)).collect();
+        let a = UniformRandom.select(&ctx(&cands, 4), &mut Rng::new(7));
+        let b = UniformRandom.select(&ctx(&cands, 4), &mut Rng::new(7));
+        assert_eq!(a, b, "same rng seed, same picks");
+        assert_eq!(a.len(), 4);
+        let mut dedup = a.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 4, "picks are distinct");
+        let c = UniformRandom.select(&ctx(&cands, 4), &mut Rng::new(8));
+        assert_ne!(a, c, "different seeds explore");
+    }
+
+    #[test]
+    fn power_of_d_prefers_fast_clients() {
+        // client est grows with id: the fastest K must dominate picks
+        let cands: Vec<Candidate> =
+            (0..12).map(|i| cand(i, 100.0 * (i + 1) as f64, f64::INFINITY, 1.0, 0)).collect();
+        let picked = PowerOfD.select(&ctx(&cands, 3), &mut Rng::new(3));
+        assert_eq!(picked.len(), 3);
+        // with d=3 the sample holds 9 of 12 candidates; the 3 fastest of
+        // the sample always beat the population median
+        let worst = picked.iter().copied().max().unwrap();
+        assert!(worst < 10, "picked a near-slowest client: {picked:?}");
+    }
+
+    #[test]
+    fn availability_aware_prefers_surviving_clients() {
+        let cands = vec![
+            cand(0, 100.0, 50.0, 0.9, 0),           // dies mid-round
+            cand(1, 100.0, f64::INFINITY, 0.5, 0),  // survives
+            cand(2, 100.0, 120.0, 0.9, 0),          // tight window
+            cand(3, 100.0, f64::INFINITY, 0.8, 0),  // survives, more available
+        ];
+        let picked = AvailabilityAware.select(&ctx(&cands, 2), &mut Rng::new(1));
+        assert_eq!(picked, vec![3, 1], "survivors first, higher avail_frac breaking ties");
+    }
+
+    #[test]
+    fn fair_share_picks_least_participated() {
+        let cands = vec![
+            cand(0, 100.0, f64::INFINITY, 1.0, 5),
+            cand(1, 100.0, f64::INFINITY, 1.0, 0),
+            cand(2, 100.0, f64::INFINITY, 1.0, 2),
+            cand(3, 100.0, f64::INFINITY, 1.0, 0),
+        ];
+        let picked = FairShare.select(&ctx(&cands, 3), &mut Rng::new(1));
+        assert_eq!(picked, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        let r = SelectionRegistry::with_defaults();
+        assert_eq!(
+            r.names(),
+            vec!["Uniform", "Power-of-d", "Availability-aware", "Fair-share"]
+        );
+        for (query, want) in [
+            ("uniform", "Uniform"),
+            ("RANDOM", "Uniform"),
+            ("pod", "Power-of-d"),
+            ("fastest", "Power-of-d"),
+            ("avail", "Availability-aware"),
+            ("fair", "Fair-share"),
+            ("least-participated", "Fair-share"),
+        ] {
+            assert_eq!(r.get(query).map(|p| p.name()), Some(want), "query {query:?}");
+        }
+        assert!(r.get("oracle").is_none());
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        struct Shadow;
+        impl ClientSelection for Shadow {
+            fn name(&self) -> &str {
+                "Uniform"
+            }
+            fn select(&self, _ctx: &SelectCtx, _rng: &mut Rng) -> Vec<usize> {
+                Vec::new()
+            }
+        }
+        let mut r = SelectionRegistry::with_defaults();
+        let n = r.len();
+        r.register(Arc::new(Shadow));
+        assert_eq!(r.len(), n, "replace, not append");
+    }
+}

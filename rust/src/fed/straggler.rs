@@ -1,0 +1,413 @@
+//! The straggler layer: *when* a federated round ends and *whose*
+//! updates make the aggregate.
+//!
+//! A selected client either finishes its local epochs + upload, or
+//! drops out when its availability window closes mid-round. The server
+//! cannot see a dropout directly — it gives up on an unresponsive
+//! client after [`DROPOUT_DETECT_MULT`] times that client's estimated
+//! round time — so dropouts under a wait-everyone discipline are
+//! expensive, which is exactly the cost the cutoff and over-selection
+//! disciplines (and availability-aware selection) exist to avoid.
+//!
+//! Built-ins:
+//!
+//! * [`WaitAll`] — synchronous FedAvg: the round ends when every
+//!   selected client has finished or been given up on;
+//! * [`DeadlineCutoff`] — the round is cut at `deadline_mult ×` the
+//!   median estimated round time; whatever arrived by then is
+//!   aggregated (partial aggregation), the rest is dropped;
+//! * [`OverSelect`] — select `K + s` clients and aggregate the first K
+//!   finishers; the stragglers' uploads are discarded.
+
+use std::sync::Arc;
+
+/// How long the server waits for an unresponsive client, as a multiple
+/// of that client's estimated round time, before giving up on it.
+pub const DROPOUT_DETECT_MULT: f64 = 3.0;
+
+/// How one selected client's round attempt resolved, offsets measured
+/// from the round start.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClientRoundResult {
+    /// Local epochs + upload completed at this offset.
+    Finished { offset: f64 },
+    /// The client's availability window closed mid-round; the server
+    /// notices at `detect_offset` (its give-up timeout).
+    Dropped { detect_offset: f64 },
+}
+
+/// One selected client's predicted and actual round behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectedOutcome {
+    pub client: usize,
+    /// The engine's estimate of this client's round time (what the
+    /// server schedules against).
+    pub est: f64,
+    pub result: ClientRoundResult,
+}
+
+impl SelectedOutcome {
+    /// When the server is done with this client: its finish, or the
+    /// instant the server gives up on it.
+    pub fn resolved_at(&self) -> f64 {
+        match self.result {
+            ClientRoundResult::Finished { offset } => offset,
+            ClientRoundResult::Dropped { detect_offset } => detect_offset,
+        }
+    }
+
+    pub fn finished_at(&self) -> Option<f64> {
+        match self.result {
+            ClientRoundResult::Finished { offset } => Some(offset),
+            ClientRoundResult::Dropped { .. } => None,
+        }
+    }
+}
+
+/// What a round-end decision sees.
+pub struct StragglerCtx<'a> {
+    /// The aggregation target K (over-selection selects more).
+    pub k: usize,
+    /// The `deadline_mult` knob from the run options.
+    pub deadline_mult: f64,
+    /// One outcome per selected client.
+    pub outcomes: &'a [SelectedOutcome],
+}
+
+impl StragglerCtx<'_> {
+    /// The round-end offset of full synchronization: every client
+    /// finished or given up on.
+    pub fn resolved_all(&self) -> f64 {
+        self.outcomes.iter().map(|o| o.resolved_at()).fold(0.0, f64::max)
+    }
+
+    /// Median of the selected clients' estimates (lower median for even
+    /// counts — deterministic).
+    pub fn median_est(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        let mut ests: Vec<f64> = self.outcomes.iter().map(|o| o.est).collect();
+        ests.sort_by(|a, b| a.total_cmp(b));
+        ests[(ests.len() - 1) / 2]
+    }
+}
+
+/// A round-end decision: when the round closes and which outcome
+/// indices (into [`StragglerCtx::outcomes`]) are aggregated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundDecision {
+    /// Offset from the round start at which the server starts
+    /// aggregating (the collective's own time is added by the engine).
+    pub end_offset: f64,
+    /// Indices of the aggregated clients, ascending.
+    pub aggregated: Vec<usize>,
+}
+
+/// A pluggable straggler-mitigation discipline. Implementations must be
+/// stateless (or internally synchronized): the registry hands out
+/// shared references and the fed experiments run policies from worker
+/// threads.
+pub trait StragglerPolicy: Send + Sync {
+    /// Canonical display name (stable: used in tables, JSON, the CLI).
+    fn name(&self) -> &str;
+
+    /// Lowercase lookup aliases accepted by [`StragglerRegistry::get`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for `pacpp fed` docs.
+    fn description(&self) -> &str {
+        ""
+    }
+
+    /// Extra clients to select beyond K. `configured` is the run's
+    /// `over_select` knob; policies that do not over-select ignore it.
+    fn extra(&self, _configured: usize) -> usize {
+        0
+    }
+
+    /// Close the round: pick the end offset and the aggregated set.
+    fn decide(&self, ctx: &StragglerCtx) -> RoundDecision;
+}
+
+fn finished_indices(ctx: &StragglerCtx) -> Vec<usize> {
+    (0..ctx.outcomes.len())
+        .filter(|&i| ctx.outcomes[i].finished_at().is_some())
+        .collect()
+}
+
+/// Synchronous FedAvg: wait for every selected client (dropouts stall
+/// the round until the server's give-up timeout).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WaitAll;
+
+impl StragglerPolicy for WaitAll {
+    fn name(&self) -> &str {
+        "Wait-all"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["wait-all", "waitall", "sync", "all"]
+    }
+
+    fn description(&self) -> &str {
+        "synchronous FedAvg: the round waits for every selected client"
+    }
+
+    fn decide(&self, ctx: &StragglerCtx) -> RoundDecision {
+        RoundDecision { end_offset: ctx.resolved_all(), aggregated: finished_indices(ctx) }
+    }
+}
+
+/// Deadline cutoff with partial aggregation: the round closes at
+/// `deadline_mult × median estimate`; late clients are dropped.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeadlineCutoff;
+
+impl StragglerPolicy for DeadlineCutoff {
+    fn name(&self) -> &str {
+        "Deadline"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["deadline", "cutoff", "deadline-cutoff", "partial"]
+    }
+
+    fn description(&self) -> &str {
+        "cut the round at deadline_mult x the median estimate; aggregate what arrived"
+    }
+
+    fn decide(&self, ctx: &StragglerCtx) -> RoundDecision {
+        let deadline = ctx.deadline_mult * ctx.median_est();
+        // everyone resolving early closes the round early; otherwise the
+        // deadline does
+        let end = ctx.resolved_all().min(deadline);
+        let aggregated = (0..ctx.outcomes.len())
+            .filter(|&i| {
+                ctx.outcomes[i].finished_at().map(|f| f <= end + 1e-9).unwrap_or(false)
+            })
+            .collect();
+        RoundDecision { end_offset: end, aggregated }
+    }
+}
+
+/// Over-selection: select `K + s`, aggregate the first K finishers and
+/// discard the stragglers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OverSelect;
+
+impl StragglerPolicy for OverSelect {
+    fn name(&self) -> &str {
+        "Over-select"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["over-select", "overselect", "over", "k+s"]
+    }
+
+    fn description(&self) -> &str {
+        "select K+s clients, aggregate the first K finishers"
+    }
+
+    fn extra(&self, configured: usize) -> usize {
+        configured.max(1)
+    }
+
+    fn decide(&self, ctx: &StragglerCtx) -> RoundDecision {
+        let mut fin = finished_indices(ctx);
+        fin.sort_by(|&a, &b| {
+            ctx.outcomes[a]
+                .resolved_at()
+                .total_cmp(&ctx.outcomes[b].resolved_at())
+                .then(a.cmp(&b))
+        });
+        if fin.len() >= ctx.k && ctx.k > 0 {
+            let mut aggregated: Vec<usize> = fin[..ctx.k].to_vec();
+            let end = aggregated
+                .iter()
+                .map(|&i| ctx.outcomes[i].resolved_at())
+                .fold(0.0, f64::max);
+            aggregated.sort_unstable();
+            RoundDecision { end_offset: end, aggregated }
+        } else {
+            // not enough finishers to fill K: degenerate to wait-all
+            fin.sort_unstable();
+            RoundDecision { end_offset: ctx.resolved_all(), aggregated: fin }
+        }
+    }
+}
+
+/// An ordered, name-addressed collection of straggler policies.
+/// Mirrors [`crate::fleet::QueuePolicyRegistry`].
+pub struct StragglerRegistry {
+    policies: Vec<Arc<dyn StragglerPolicy>>,
+}
+
+impl StragglerRegistry {
+    /// An empty registry (build-your-own line-ups).
+    pub fn empty() -> StragglerRegistry {
+        StragglerRegistry { policies: Vec::new() }
+    }
+
+    /// The three built-ins: wait-all, deadline cutoff, over-select.
+    pub fn with_defaults() -> StragglerRegistry {
+        let mut r = StragglerRegistry::empty();
+        r.register(Arc::new(WaitAll));
+        r.register(Arc::new(DeadlineCutoff));
+        r.register(Arc::new(OverSelect));
+        r
+    }
+
+    /// Add a policy; replaces an existing entry with the same canonical
+    /// name (so callers can shadow a built-in).
+    pub fn register(&mut self, p: Arc<dyn StragglerPolicy>) {
+        let name = p.name().to_ascii_lowercase();
+        if let Some(slot) =
+            self.policies.iter_mut().find(|e| e.name().to_ascii_lowercase() == name)
+        {
+            *slot = p;
+        } else {
+            self.policies.push(p);
+        }
+    }
+
+    /// Look up by canonical name (case-insensitive) or alias.
+    pub fn get(&self, name: &str) -> Option<&Arc<dyn StragglerPolicy>> {
+        let q = name.to_ascii_lowercase();
+        self.policies
+            .iter()
+            .find(|p| p.name().to_ascii_lowercase() == q)
+            .or_else(|| self.policies.iter().find(|p| p.aliases().contains(&q.as_str())))
+    }
+
+    /// Canonical names in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.policies.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn StragglerPolicy>> {
+        self.policies.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.policies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+}
+
+impl Default for StragglerRegistry {
+    fn default() -> Self {
+        StragglerRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fin(client: usize, est: f64, offset: f64) -> SelectedOutcome {
+        SelectedOutcome { client, est, result: ClientRoundResult::Finished { offset } }
+    }
+
+    fn drop_(client: usize, est: f64) -> SelectedOutcome {
+        SelectedOutcome {
+            client,
+            est,
+            result: ClientRoundResult::Dropped {
+                detect_offset: DROPOUT_DETECT_MULT * est,
+            },
+        }
+    }
+
+    fn ctx(k: usize, outcomes: &[SelectedOutcome]) -> StragglerCtx<'_> {
+        StragglerCtx { k, deadline_mult: 2.0, outcomes }
+    }
+
+    #[test]
+    fn wait_all_waits_for_the_slowest_and_for_dropout_detection() {
+        let outcomes = vec![fin(0, 100.0, 110.0), fin(1, 200.0, 190.0)];
+        let d = WaitAll.decide(&ctx(2, &outcomes));
+        assert_eq!(d.end_offset, 190.0);
+        assert_eq!(d.aggregated, vec![0, 1]);
+
+        // a dropout stalls the round until the give-up timeout
+        let outcomes = vec![fin(0, 100.0, 110.0), drop_(1, 200.0)];
+        let d = WaitAll.decide(&ctx(2, &outcomes));
+        assert_eq!(d.end_offset, 600.0, "3x the dropped client's estimate");
+        assert_eq!(d.aggregated, vec![0]);
+    }
+
+    #[test]
+    fn deadline_cuts_late_clients_but_closes_early_when_everyone_arrives() {
+        // median est = 100 (lower median of [100, 300]); deadline = 200
+        let outcomes = vec![fin(0, 100.0, 110.0), fin(1, 300.0, 310.0)];
+        let d = DeadlineCutoff.decide(&ctx(2, &outcomes));
+        assert_eq!(d.end_offset, 200.0);
+        assert_eq!(d.aggregated, vec![0], "the 310 s finisher missed the cut");
+
+        // everyone early: the round closes at the last arrival
+        let outcomes = vec![fin(0, 100.0, 90.0), fin(1, 100.0, 95.0)];
+        let d = DeadlineCutoff.decide(&ctx(2, &outcomes));
+        assert_eq!(d.end_offset, 95.0);
+        assert_eq!(d.aggregated, vec![0, 1]);
+
+        // a dropout cannot stall past the deadline
+        let outcomes = vec![fin(0, 100.0, 110.0), drop_(1, 100.0)];
+        let d = DeadlineCutoff.decide(&ctx(2, &outcomes));
+        assert_eq!(d.end_offset, 200.0);
+        assert_eq!(d.aggregated, vec![0]);
+    }
+
+    #[test]
+    fn over_select_takes_the_first_k_finishers() {
+        let outcomes = vec![
+            fin(0, 100.0, 150.0),
+            fin(1, 100.0, 90.0),
+            fin(2, 100.0, 120.0),
+            drop_(3, 100.0),
+        ];
+        let d = OverSelect.decide(&ctx(2, &outcomes));
+        assert_eq!(d.end_offset, 120.0, "round closes at the K-th finisher");
+        assert_eq!(d.aggregated, vec![1, 2]);
+
+        // fewer finishers than K: degenerate to wait-all over finishers
+        let outcomes = vec![fin(0, 100.0, 150.0), drop_(1, 100.0), drop_(2, 100.0)];
+        let d = OverSelect.decide(&ctx(2, &outcomes));
+        assert_eq!(d.aggregated, vec![0]);
+        assert_eq!(d.end_offset, 300.0, "stalls to the dropout detections");
+        assert_eq!(OverSelect.extra(3), 3);
+        assert_eq!(OverSelect.extra(0), 1, "over-select always selects at least one spare");
+        assert_eq!(WaitAll.extra(3), 0);
+    }
+
+    #[test]
+    fn empty_round_is_a_zero_decision() {
+        for p in [&WaitAll as &dyn StragglerPolicy, &DeadlineCutoff, &OverSelect] {
+            let d = p.decide(&ctx(2, &[]));
+            assert_eq!(d.end_offset, 0.0, "{}", p.name());
+            assert!(d.aggregated.is_empty(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        let r = StragglerRegistry::with_defaults();
+        assert_eq!(r.names(), vec!["Wait-all", "Deadline", "Over-select"]);
+        for (query, want) in [
+            ("wait-all", "Wait-all"),
+            ("SYNC", "Wait-all"),
+            ("deadline", "Deadline"),
+            ("partial", "Deadline"),
+            ("k+s", "Over-select"),
+            ("overselect", "Over-select"),
+        ] {
+            assert_eq!(r.get(query).map(|p| p.name()), Some(want), "query {query:?}");
+        }
+        assert!(r.get("async").is_none());
+    }
+}

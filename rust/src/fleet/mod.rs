@@ -17,7 +17,8 @@
 //! * **churn** — devices join, leave, or degrade to low-power modes
 //!   mid-run ([`ChurnEvent`]);
 //! * **contention** — a queue ordered by a pluggable [`QueuePolicy`]
-//!   ([`queue`]: strict FIFO, EASY-backfill, shortest-job-first) over a
+//!   ([`queue`]: strict FIFO, EASY-backfill, shortest-job-first,
+//!   earliest-deadline-first, least-laxity) over a
 //!   pluggable [`PlacementPolicy`] ([`policy`]: FIFO-exclusive,
 //!   best-fit device-partitioning, preempt-and-replan-on-churn), each
 //!   resolved by name through its registry ([`QueuePolicyRegistry`],
@@ -59,11 +60,11 @@ pub use policy::{
     PlanOracle, PolicyRegistry, PreemptReplan,
 };
 pub use queue::{
-    EasyBackfill, FifoQueue, QueueCtx, QueueDecision, QueuePolicy, QueuePolicyRegistry,
-    RunningSnapshot, ShortestJobFirst,
+    EarliestDeadlineFirst, EasyBackfill, FifoQueue, LeastLaxity, QueueCtx, QueueDecision,
+    QueuePolicy, QueuePolicyRegistry, RunningSnapshot, ShortestJobFirst,
 };
 pub use sim::{simulate_fleet, FleetOptions, StrategyOracle};
 pub use trace::{
-    generate_churn, generate_jobs, ChurnEvent, ChurnKind, Job, TraceKind,
-    DEFAULT_DEADLINE_MULT,
+    churn_from_json, churn_to_json, generate_churn, generate_jobs, ChurnEvent, ChurnKind,
+    Job, TraceKind, DEFAULT_DEADLINE_MULT,
 };

@@ -22,7 +22,15 @@
 //!   backfill scheduler's;
 //! * [`ShortestJobFirst`] — place the placeable job with the smallest
 //!   whole-pool service estimate (via the same [`PlanOracle`] quotes
-//!   the placements use). Minimizes mean wait; can starve large jobs.
+//!   the placements use). Minimizes mean wait; can starve large jobs;
+//! * [`EarliestDeadlineFirst`] — attempt queued jobs in absolute-
+//!   deadline order (ties in queue order), placing the first that
+//!   fits. Deadline-less jobs sort last;
+//! * [`LeastLaxity`] — attempt queued jobs by laxity: deadline minus
+//!   now minus the whole-pool remaining-work estimate (checkpoint
+//!   pauses and durable progress included). A job with zero slack gets
+//!   the next free slot even when its deadline is later than a short
+//!   job's.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -61,6 +69,10 @@ pub struct QueueCtx<'a> {
     /// (empty otherwise).
     pub running: &'a [RunningSnapshot],
     pub done: &'a [f64],
+    /// Per-job absolute deadlines, indexed by job id
+    /// (`f64::INFINITY` = none) — what the deadline-aware disciplines
+    /// ([`EarliestDeadlineFirst`], [`LeastLaxity`]) order by.
+    pub deadlines: &'a [f64],
     pub now: f64,
     pub placement: &'a dyn PlacementPolicy,
     pub oracle: &'a dyn PlanOracle,
@@ -260,6 +272,104 @@ impl QueuePolicy for ShortestJobFirst {
     }
 }
 
+/// Earliest-deadline-first: attempt queued jobs in absolute-deadline
+/// order (arrival order among equal deadlines), place the first that
+/// fits. The classic deadline discipline; non-preemptive here, so it
+/// orders *starts*, not running jobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EarliestDeadlineFirst;
+
+impl QueuePolicy for EarliestDeadlineFirst {
+    fn name(&self) -> &str {
+        "EDF"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["edf", "earliest-deadline", "earliest-deadline-first"]
+    }
+
+    fn description(&self) -> &str {
+        "attempt queued jobs in absolute-deadline order; deadline-less jobs go last"
+    }
+
+    fn wants_running(&self) -> bool {
+        false // deadlines and the free set are all it reads
+    }
+
+    fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision> {
+        let mut order: Vec<usize> = (0..ctx.queue.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (da, db) = (ctx.deadlines[ctx.queue[a]], ctx.deadlines[ctx.queue[b]]);
+            da.total_cmp(&db).then(a.cmp(&b))
+        });
+        for pos in order {
+            let cand = &ctx.jobs[ctx.queue[pos]];
+            if let Some(placement) = ctx.try_place(cand, ctx.free, ctx.n_running) {
+                return Some(QueueDecision { queue_pos: pos, placement });
+            }
+        }
+        None
+    }
+}
+
+/// Least-laxity-first: attempt queued jobs by slack — deadline minus
+/// now minus the whole-pool remaining-work estimate (durable progress
+/// and checkpoint pauses included via
+/// [`QueueCtx::attempt_duration`]). Unlike EDF, a long job with a late
+/// but already-tight deadline outranks a short job with an earlier,
+/// comfortable one.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LeastLaxity;
+
+impl QueuePolicy for LeastLaxity {
+    fn name(&self) -> &str {
+        "LLF"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["llf", "least-laxity", "laxity", "least-laxity-first"]
+    }
+
+    fn description(&self) -> &str {
+        "attempt queued jobs by slack: deadline - now - remaining-work estimate"
+    }
+
+    fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision> {
+        if ctx.queue.is_empty() {
+            return None;
+        }
+        // the same canonical "job size" SJF uses: the whole-pool quote
+        let mut pool: Vec<Device> = ctx.free.to_vec();
+        for r in ctx.running {
+            pool.extend(r.devices.iter().cloned());
+        }
+        pool.sort_by_key(|d| d.id);
+        let laxity: Vec<f64> = ctx
+            .queue
+            .iter()
+            .map(|&j| {
+                let deadline = ctx.deadlines[j];
+                if deadline.is_infinite() {
+                    return f64::INFINITY; // no deadline, no urgency
+                }
+                match ctx.oracle.service_time(&ctx.jobs[j], &pool) {
+                    Some(est) => deadline - ctx.now - ctx.attempt_duration(&ctx.jobs[j], est),
+                    None => f64::INFINITY, // unplaceable anywhere: the simulator prunes it
+                }
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..ctx.queue.len()).collect();
+        order.sort_by(|&a, &b| laxity[a].total_cmp(&laxity[b]).then(a.cmp(&b)));
+        for pos in order {
+            let cand = &ctx.jobs[ctx.queue[pos]];
+            if let Some(placement) = ctx.try_place(cand, ctx.free, ctx.n_running) {
+                return Some(QueueDecision { queue_pos: pos, placement });
+            }
+        }
+        None
+    }
+}
+
 /// An ordered, name-addressed collection of queue policies.
 ///
 /// Registration order is preserved; canonical names match
@@ -275,12 +385,14 @@ impl QueuePolicyRegistry {
         QueuePolicyRegistry { policies: Vec::new() }
     }
 
-    /// The three built-in disciplines: FIFO, EASY-backfill, SJF.
+    /// The built-in disciplines: FIFO, EASY-backfill, SJF, EDF, LLF.
     pub fn with_defaults() -> QueuePolicyRegistry {
         let mut r = QueuePolicyRegistry::empty();
         r.register(Arc::new(FifoQueue));
         r.register(Arc::new(EasyBackfill));
         r.register(Arc::new(ShortestJobFirst));
+        r.register(Arc::new(EarliestDeadlineFirst));
+        r.register(Arc::new(LeastLaxity));
         r
     }
 
@@ -368,6 +480,7 @@ mod tests {
         free: Vec<Device>,
         running: Vec<RunningSnapshot>,
         done: Vec<f64>,
+        deadlines: Vec<f64>,
     }
 
     impl Fixture {
@@ -381,6 +494,7 @@ mod tests {
                 n_running: self.running.len(),
                 running: &self.running,
                 done: &self.done,
+                deadlines: &self.deadlines,
                 now: 0.0,
                 placement: &BestFit,
                 oracle: &ScriptedOracle,
@@ -409,6 +523,7 @@ mod tests {
                 devices: devices(&[0, 1]),
             }],
             done: vec![0.0; 4],
+            deadlines: vec![f64::INFINITY; 4],
         }
     }
 
@@ -476,10 +591,55 @@ mod tests {
         assert_eq!(d.queue_pos, 1, "job 2 is the smallest remaining");
     }
 
+    /// EDF attempts jobs in deadline order, falling through blocked
+    /// ones; deadline-less jobs sort last; equal deadlines keep queue
+    /// order.
+    #[test]
+    fn edf_orders_by_deadline_and_skips_blocked() {
+        let mut f = blocked_head_fixture();
+        // all three queued jobs fit the single free device
+        f.jobs[1].seq = 1;
+        // head (job 1) has the latest deadline; job 3 the earliest
+        f.deadlines = vec![f64::INFINITY, 9000.0, 700.0, 500.0];
+        let d = EarliestDeadlineFirst.next(&f.ctx(None)).expect("placeable");
+        assert_eq!(d.queue_pos, 2, "job 3 has the earliest deadline");
+        // the earliest-deadline job is blocked: EDF falls through to the
+        // next deadline instead of idling the device
+        f.jobs[3].seq = 99;
+        let d = EarliestDeadlineFirst.next(&f.ctx(None)).expect("falls through");
+        assert_eq!(d.queue_pos, 1, "job 2 is next by deadline");
+        // no deadlines at all: EDF degenerates to first-placeable in
+        // queue order
+        f.deadlines = vec![f64::INFINITY; 4];
+        let d = EarliestDeadlineFirst.next(&f.ctx(None)).expect("queue order");
+        assert_eq!(d.queue_pos, 0, "infinite deadlines tie back to queue order");
+    }
+
+    /// LLF ranks by slack, not raw deadline: a long job whose deadline
+    /// is later but already tight outranks a short comfortable one.
+    #[test]
+    fn llf_orders_by_slack_not_deadline() {
+        let mut f = blocked_head_fixture();
+        f.queue = VecDeque::from(vec![2, 3]);
+        // whole pool = 3 devices; ScriptedOracle: service = samples/3.
+        // job 2: 2000 samples -> est 666.7 s; job 3: 500 -> est 166.7 s.
+        // deadlines: job 3 earlier (800) but slack 633; job 2 later
+        // (900) but slack 233 -> LLF starts job 2, EDF would pick job 3.
+        f.deadlines = vec![f64::INFINITY, f64::INFINITY, 900.0, 800.0];
+        let d = LeastLaxity.next(&f.ctx(None)).expect("placeable");
+        assert_eq!(d.queue_pos, 0, "job 2 has the least laxity");
+        let d = EarliestDeadlineFirst.next(&f.ctx(None)).expect("placeable");
+        assert_eq!(d.queue_pos, 1, "EDF disagrees: job 3's deadline is earlier");
+        // deadline-less jobs have infinite laxity and go last
+        f.deadlines = vec![f64::INFINITY, f64::INFINITY, f64::INFINITY, 800.0];
+        let d = LeastLaxity.next(&f.ctx(None)).expect("placeable");
+        assert_eq!(d.queue_pos, 1, "the only deadlined job is most urgent");
+    }
+
     #[test]
     fn registry_resolves_names_and_aliases() {
         let r = QueuePolicyRegistry::with_defaults();
-        assert_eq!(r.names(), vec!["FIFO", "EASY-backfill", "SJF"]);
+        assert_eq!(r.names(), vec!["FIFO", "EASY-backfill", "SJF", "EDF", "LLF"]);
         for (query, want) in [
             ("fifo", "FIFO"),
             ("FIFO", "FIFO"),
@@ -488,10 +648,14 @@ mod tests {
             ("EASY-BACKFILL", "EASY-backfill"),
             ("sjf", "SJF"),
             ("shortest", "SJF"),
+            ("edf", "EDF"),
+            ("earliest-deadline", "EDF"),
+            ("llf", "LLF"),
+            ("least-laxity", "LLF"),
         ] {
             assert_eq!(r.get(query).map(|p| p.name()), Some(want), "query {query:?}");
         }
-        assert!(r.get("edf").is_none());
+        assert!(r.get("lifo").is_none());
     }
 
     #[test]

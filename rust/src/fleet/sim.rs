@@ -394,6 +394,7 @@ impl Sim<'_> {
                     n_running: self.running.len(),
                     running: &running,
                     done: &self.ckpt_frac,
+                    deadlines: &self.deadlines,
                     now,
                     placement: self.policy,
                     oracle: &self.oracle,

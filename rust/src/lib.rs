@@ -32,6 +32,7 @@
 //! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts (`pjrt` feature) |
 //! | [`exec`]    | real multi-threaded hybrid-parallel training engine |
 //! | [`fleet`]   | discrete-event multi-tenant scheduler: arrivals, churn, queue + placement policies, deadlines/SLOs, checkpointing |
+//! | [`fed`]     | round-based federated adapter-aggregation simulator: client selection, straggler policies, availability churn, secure-agg/DP knobs |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
 //! | [`data`]    | synthetic GLUE-like workload generators |
 //! | [`exp`]     | typed `Experiment`/`Report` API + name-addressed registry of every paper table/figure |
@@ -149,6 +150,35 @@
 //! every discipline; the `fleet_checkpoint` and `fleet_users`
 //! experiments surface the k-vs-overhead tradeoff and the per-user
 //! SLO/fairness breakdown.
+//!
+//! ## Adding a client-selection policy
+//!
+//! The federated layer ([`fed`]) is open the same way: which available
+//! clients join a round is a [`fed::ClientSelection`] resolved by name
+//! through [`fed::SelectionRegistry`], composing with any
+//! [`fed::StragglerPolicy`] and aggregation mode. To add one (say, an
+//! Oort-style utility sampler):
+//!
+//! 1. implement the trait — [`name`](fed::ClientSelection::name)
+//!    (stable display name) and
+//!    [`select`](fed::ClientSelection::select), which picks up to
+//!    `want` client ids from a [`fed::SelectCtx`] of
+//!    [`fed::Candidate`]s (each carries the oracle's round-time
+//!    estimate, the availability trace's remaining up-time and
+//!    long-run fraction, and the client's participation count). Draw
+//!    all randomness from the provided seeded `rng` — that is what
+//!    keeps same-seed runs bit-identical under your policy;
+//! 2. register it: [`fed::SelectionRegistry::register`] on top of
+//!    [`with_defaults`](fed::SelectionRegistry::with_defaults)
+//!    (uniform, power-of-d, availability-aware, fair-share) — or add
+//!    it to `with_defaults` if it should ship by default;
+//! 3. run `cargo test`: `tests/fed.rs` pins same-seed determinism
+//!    across every selection × straggler combination and shows how the
+//!    availability-aware acceptance comparison is engineered.
+//!
+//! `pacpp fed --select <name>` and [`fed::FedOptions::select`] resolve
+//! policies by registry name; the `fed` / `fed_select` experiments
+//! compare every registered policy on the shared grids.
 
 pub mod baselines;
 pub mod cache;
@@ -156,6 +186,7 @@ pub mod cluster;
 pub mod data;
 pub mod exec;
 pub mod exp;
+pub mod fed;
 pub mod fleet;
 pub mod model;
 pub mod planner;

@@ -11,10 +11,20 @@
 //! pacpp exp      run <name> [--format text|json|csv] [--out FILE]
 //! pacpp exp      all        [--format text|json|csv] [--out FILE]
 //! pacpp fleet    [--env env_a] [--policy all|fifo|best-fit|preempt[,..]]
-//!                [--queue fifo|backfill|sjf] [--trace steady|diurnal|bursty]
+//!                [--queue fifo|backfill|sjf|edf|llf]
+//!                [--trace steady|diurnal|bursty]
 //!                [--jobs 40] [--seed 42] [--churn EVENTS_PER_HOUR]
-//!                [--horizon HOURS] [--deadline SCALE] [--ckpt K]
-//!                [--ckpt-cost SECS] [--strategy pac+]
+//!                [--churn-file FILE] [--horizon HOURS] [--deadline SCALE]
+//!                [--ckpt K] [--ckpt-cost SECS] [--strategy pac+]
+//!                [--format text|json|csv] [--out FILE]
+//! pacpp fed      [--rounds 50] [--clients 24] [--k 6]
+//!                [--select all|uniform|power-of-d|availability|fair[,..]]
+//!                [--straggler wait-all|deadline|over-select]
+//!                [--agg allreduce|allgather|star] [--seed 42]
+//!                [--trace stable|churny|flaky] [--net lan|wifi]
+//!                [--model t5-base] [--strategy pac+] [--horizon HOURS]
+//!                [--deadline-mult X] [--over-select S] [--secure-agg]
+//!                [--dp-cost SECS] [--jitter X] [--target ROUNDS]
 //!                [--format text|json|csv] [--out FILE]
 //! pacpp timeline --env env_a [--microbatch 4] [--m 6] [--width 120]
 //!                                  (render a plan's 1F1B schedule as ASCII art)
@@ -26,13 +36,17 @@
 
 use std::sync::Arc;
 
-use pacpp::cluster::Env;
+use pacpp::cluster::{Env, Network};
 use pacpp::data::SyntheticTask;
 use pacpp::exec::{self, TrainOptions};
 use pacpp::exp::{self, ExpContext, ExperimentRegistry, Format, Report};
+use pacpp::fed::{
+    simulate_fed, AggMode, FedOptions, FedTraceKind, SelectionRegistry, StragglerRegistry,
+};
 use pacpp::fleet::{
-    generate_churn, generate_jobs, simulate_fleet, CheckpointSpec, FleetOptions,
-    PlacementPolicy, PolicyRegistry, QueuePolicyRegistry, TraceKind, DEFAULT_CKPT_COST,
+    churn_from_json, generate_churn, generate_jobs, simulate_fleet, CheckpointSpec,
+    FleetOptions, PlacementPolicy, PolicyRegistry, QueuePolicyRegistry, TraceKind,
+    DEFAULT_CKPT_COST,
 };
 use pacpp::model::graph::LayerGraph;
 use pacpp::model::{Method, ModelSpec, Precision};
@@ -62,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         Some("strategies") => cmd_strategies(),
         Some("exp") => cmd_exp(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("fed") => cmd_fed(&args),
         Some("table") => cmd_table(&args),
         Some("fig") => cmd_fig(&args),
         Some("train") => cmd_train(&args),
@@ -69,8 +84,8 @@ fn main() -> anyhow::Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: pacpp <plan|simulate|strategies|exp|fleet|timeline|table|fig|train|info> \
-                 [options]"
+                "usage: pacpp <plan|simulate|strategies|exp|fleet|fed|timeline|table|fig|\
+                 train|info> [options]"
             );
             eprintln!("see rust/src/main.rs docs for options");
             Ok(())
@@ -447,18 +462,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let deadline_scale = args.get_rate("deadline", 1.0)?;
     // `--ckpt 0` reads naturally as "off", so this flag takes a
     // non-negative count rather than the strictly-positive get_count
-    let ckpt_k = if args.flag("ckpt") {
-        anyhow::bail!("invalid value for --ckpt: \"\" (expected a non-negative integer)");
-    } else {
-        match args.get("ckpt") {
-            None => 0,
-            Some(v) => v.parse::<usize>().map_err(|_| {
-                anyhow::anyhow!(
-                    "invalid value for --ckpt: {v:?} (expected a non-negative integer)"
-                )
-            })?,
-        }
-    };
+    let ckpt_k = args.get_count0("ckpt", 0)?;
     let ckpt_cost = args.get_rate("ckpt-cost", DEFAULT_CKPT_COST)?;
     let format = parse_format(args)?;
     validate_out(args)?;
@@ -489,10 +493,23 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         ckpt: if ckpt_k > 0 { Some(CheckpointSpec::new(ckpt_k, ckpt_cost)) } else { None },
     };
     let jobs = generate_jobs(trace, n_jobs, seed);
-    let churn = if churn_per_hour > 0.0 {
-        generate_churn(&env, opts.horizon, churn_per_hour, seed)
-    } else {
-        Vec::new()
+    // `--churn-file` replays a recorded JSON event list (see
+    // `fleet::churn_to_json` for the format) instead of sampling one
+    let churn_file = args.get("churn-file").map(String::from);
+    let churn = match &churn_file {
+        Some(path) => {
+            anyhow::ensure!(
+                churn_per_hour == 0.0,
+                "--churn and --churn-file are mutually exclusive"
+            );
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--churn-file {path}: {e}"))?;
+            let json = pacpp::util::json::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("--churn-file {path}: {e}"))?;
+            churn_from_json(&json).map_err(|e| anyhow::anyhow!("--churn-file {path}: {e}"))?
+        }
+        None if churn_per_hour > 0.0 => generate_churn(&env, opts.horizon, churn_per_hour, seed),
+        None => Vec::new(),
     };
 
     let mut report = exp::fleet_schema(
@@ -507,6 +524,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     .meta("queue", queue.name())
     .meta("horizon_h", horizon_h)
     .meta("churn_per_hour", churn_per_hour)
+    .meta("churn_file", churn_file.as_deref().unwrap_or("-"))
     .meta("deadline_scale", deadline_scale)
     .meta("ckpt", ckpt_k)
     .meta("ckpt_cost", ckpt_cost);
@@ -521,6 +539,118 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             n_jobs,
             &m,
         ));
+    }
+    emit_reports(&[report], format, false, args)
+}
+
+/// `pacpp fed`: one deterministic federated adapter-aggregation
+/// simulation per selected client-selection policy, reported in the fed
+/// experiment schema. `--straggler` picks the round-end discipline,
+/// `--agg` the aggregation collective, `--trace` the client
+/// availability pattern, and `--secure-agg`/`--dp-cost` the privacy
+/// cost knobs.
+fn cmd_fed(args: &Args) -> anyhow::Result<()> {
+    let rounds = args.get_count("rounds", 50)?;
+    let n_clients = args.get_count("clients", 24)?;
+    let k = args.get_count("k", 6)?;
+    let seed = args.get_seed("seed", 42)?;
+    let trace_name = args.get_str("trace", "churny")?;
+    let Some(trace) = FedTraceKind::parse(trace_name) else {
+        anyhow::bail!("unknown trace {trace_name:?} (stable|churny|flaky)");
+    };
+    let agg_name = args.get_str("agg", "allreduce")?;
+    let Some(agg) = AggMode::parse(agg_name) else {
+        anyhow::bail!("unknown aggregation mode {agg_name:?} (allreduce|allgather|star)");
+    };
+    let net_name = args.get_str("net", "lan")?;
+    let network = match net_name {
+        "lan" => Network::lan_1gbps(),
+        "wifi" => Network::wifi_100mbps(),
+        other => anyhow::bail!("unknown network {other:?} (lan|wifi)"),
+    };
+    let model_name = args.get_str("model", "t5-base")?;
+    let Some(model) = ModelSpec::by_name(model_name) else {
+        anyhow::bail!("unknown model {model_name:?}");
+    };
+    let straggler_registry = StragglerRegistry::with_defaults();
+    let straggler_name = args.get_str("straggler", "wait-all")?;
+    let Some(straggler) = straggler_registry.get(straggler_name) else {
+        anyhow::bail!(
+            "unknown straggler policy {straggler_name:?}; registered: {}",
+            straggler_registry.names().join(", ")
+        );
+    };
+    let horizon_h = args.get_positive_f64("horizon", 336.0)?;
+    let deadline_mult = args.get_positive_f64("deadline-mult", 2.0)?;
+    // `--over-select 0` reads naturally as "no spares" (the
+    // over-select policy still floors it at one spare)
+    let over_select = args.get_count0("over-select", 2)?;
+    let dp_cost = args.get_rate("dp-cost", 0.0)?;
+    let jitter = args.get_rate("jitter", 0.25)?;
+    let target = args.get_rate("target", 0.0)?;
+    let format = parse_format(args)?;
+    validate_out(args)?;
+
+    let selection_registry = SelectionRegistry::with_defaults();
+    let spec = args.get_str("select", "all")?;
+    let mut selects = Vec::new();
+    if spec == "all" {
+        selects.extend(selection_registry.names().iter().map(|s| s.to_string()));
+    } else {
+        for one in spec.split(',') {
+            let Some(p) = selection_registry.get(one.trim()) else {
+                anyhow::bail!(
+                    "unknown selection policy {:?}; registered: {}",
+                    one.trim(),
+                    selection_registry.names().join(", ")
+                );
+            };
+            selects.push(p.name().to_string());
+        }
+    }
+
+    let mut report = exp::fed_schema(
+        "fed",
+        &format!("Fed — {rounds} rounds x K={k} of {n_clients} clients ({trace_name})"),
+    )
+    .meta("rounds", rounds)
+    .meta("clients", n_clients)
+    .meta("k", k)
+    .meta("seed", seed)
+    .meta("trace", trace.name())
+    .meta("net", net_name)
+    .meta("agg", agg.name())
+    .meta("model", &model.name)
+    .meta("straggler", straggler.name())
+    .meta("strategy", args.get_str("strategy", "pac+")?)
+    .meta("horizon_h", horizon_h)
+    .meta("secure_agg", args.flag("secure-agg"))
+    .meta("dp_cost", dp_cost)
+    .meta("jitter", jitter)
+    .meta("target", target);
+    for select in &selects {
+        let opts = FedOptions {
+            rounds,
+            clients: n_clients,
+            k,
+            select: select.clone(),
+            straggler: straggler.name().to_string(),
+            agg,
+            seed,
+            trace,
+            strategy: args.get_str("strategy", "pac+")?.to_string(),
+            network,
+            model: model.clone(),
+            horizon: horizon_h * 3600.0,
+            deadline_mult,
+            over_select,
+            secure_agg: args.flag("secure-agg"),
+            dp_cost,
+            jitter,
+            target_rounds: target,
+        };
+        let m = simulate_fed(&opts)?;
+        report.push(exp::fed_row(net_name, &opts, &m));
     }
     emit_reports(&[report], format, false, args)
 }

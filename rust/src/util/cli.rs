@@ -103,6 +103,20 @@ impl Args {
         }
     }
 
+    /// Checked non-negative count (`--ckpt 0`, `--over-select 0`):
+    /// zero is a meaningful "off"/"none" value, so only a bare flag or
+    /// an unparseable value is rejected.
+    pub fn get_count0(&self, name: &str, default: usize) -> crate::Result<usize> {
+        if self.flag(name) {
+            return Err(invalid_value(name, "", "a non-negative integer"));
+        }
+        let Some(v) = self.get(name) else { return Ok(default) };
+        match v.parse::<usize>() {
+            Ok(n) => Ok(n),
+            Err(_) => Err(invalid_value(name, v, "a non-negative integer")),
+        }
+    }
+
     /// Checked RNG seed (`--seed 42`): a positive integer, so every
     /// seeded run is reproducible by quoting one number.
     pub fn get_seed(&self, name: &str, default: u64) -> crate::Result<u64> {
@@ -271,6 +285,19 @@ mod tests {
         assert_eq!(a.get_count_opt("threads").unwrap(), Some(4));
         assert_eq!(a.get_count("absent", 7).unwrap(), 7);
         assert_eq!(a.get_count_opt("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn nonneg_count_accepts_zero_rejects_garbage() {
+        let a = parse("fleet --ckpt 0 --over-select 3");
+        assert_eq!(a.get_count0("ckpt", 9).unwrap(), 0);
+        assert_eq!(a.get_count0("over-select", 9).unwrap(), 3);
+        assert_eq!(a.get_count0("absent", 9).unwrap(), 9);
+        for argv in ["fleet --ckpt -1", "fleet --ckpt 1.5", "fleet --ckpt many", "fleet --ckpt"] {
+            let err = parse(argv).get_count0("ckpt", 0).unwrap_err().to_string();
+            assert!(err.contains("invalid value for --ckpt"), "{argv}: {err}");
+            assert!(err.contains("non-negative"), "{argv}: {err}");
+        }
     }
 
     #[test]

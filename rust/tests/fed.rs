@@ -1,0 +1,302 @@
+//! Federated-simulator integration tests: the availability-aware
+//! acceptance comparison (strictly more rounds than uniform-random on
+//! the same churny population within a fixed horizon), same-options
+//! bit-identical determinism across every selection × straggler
+//! combination, straggler-policy separations, and end-to-end coverage
+//! of the `fed` experiments through the registry.
+//!
+//! The engineered scenarios follow the fleet tests' probe pattern:
+//! round times are *measured* by probe runs, then horizons and margins
+//! are constructed relative to them — no tuned constants, and the
+//! preconditions are asserted so a cost-model change fails loudly at
+//! the probe, not mysteriously at the claim.
+
+use pacpp::cluster::DeviceKind;
+use pacpp::exp::{Cell, ExpContext, ExperimentRegistry, Format, Report};
+use pacpp::fed::{
+    simulate_fed, simulate_fed_with, ClientTrace, FedClient, FedOptions, FedTraceKind,
+    SelectionRegistry, StragglerRegistry,
+};
+use pacpp::util::json::Json;
+use pacpp::util::prop::{check, forall};
+
+/// A population for the engineered dropout scenarios: client 0 is
+/// always up; clients `1..n` are identical hardware but "flaky" —
+/// available almost always, yet their up-windows (`up` seconds,
+/// separated by `down`-second gaps) are far shorter than a round, so a
+/// flaky client selected into a round is *guaranteed* to drop out.
+fn flaky_population(
+    n: usize,
+    horizon: f64,
+    up: f64,
+    down: f64,
+) -> (Vec<FedClient>, Vec<ClientTrace>) {
+    let clients: Vec<FedClient> =
+        (0..n).map(|i| FedClient::new(i, DeviceKind::NanoH, 1024, 2)).collect();
+    let mut traces = vec![ClientTrace::always_up()];
+    for _ in 1..n {
+        let mut toggles = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += up;
+            if t >= horizon {
+                break;
+            }
+            toggles.push(t); // up window closes
+            t += down;
+            if t >= horizon {
+                break;
+            }
+            toggles.push(t); // back up
+        }
+        traces.push(ClientTrace::new(true, toggles, horizon));
+    }
+    (clients, traces)
+}
+
+/// The ISSUE-5 acceptance run: availability-aware selection completes
+/// **strictly more rounds within a fixed horizon** than uniform-random
+/// on the same churny population.
+///
+/// Construction (probed, not tuned): K=1 over one always-up client and
+/// 15 flaky ones whose 60 s up-windows are far shorter than a round
+/// (precondition asserted from the probe), so any flaky selection
+/// drops out and stalls its synchronous round at the server's 3×
+/// give-up timeout — a 3×-cost round. Availability-aware always picks
+/// the always-up client (its window outlasts any estimate), completing
+/// `R` rounds in exactly `R` round-times; the horizon is set to
+/// `R + 0.4` round-times, so uniform-random — which with seed 42
+/// inevitably samples flaky clients — cannot fit `R` rounds unless
+/// every single pick was the one stable client out of 16.
+#[test]
+fn availability_aware_completes_strictly_more_rounds_than_uniform() {
+    const ROUNDS: usize = 12;
+    let horizon_gen = 80.0 * 3600.0; // trace-generation span, re-checked below
+    let (clients, traces) = flaky_population(16, horizon_gen, 60.0, 0.5);
+
+    let base = FedOptions {
+        rounds: ROUNDS,
+        clients: 16,
+        k: 1,
+        straggler: "wait-all".into(),
+        jitter: 0.0,
+        ..Default::default()
+    };
+
+    // probe: availability-aware rounds are all identical (jitter off,
+    // same client every round), so the probe measures one round time
+    let avail_opts = FedOptions { select: "availability".into(), ..base.clone() };
+    let probe = simulate_fed_with(&clients, &traces, &avail_opts).unwrap();
+    assert_eq!(probe.rounds, ROUNDS, "probe must complete: {probe:?}");
+    assert_eq!(probe.dropped_total, 0, "the always-up client never drops: {probe:?}");
+    let round_time = probe.makespan / ROUNDS as f64;
+    // preconditions that make the margins provable, asserted not assumed
+    assert!(
+        round_time > 2.0 * 60.0,
+        "a round ({round_time} s) must dwarf the 60 s flaky up-window"
+    );
+    assert!(
+        probe.makespan * 1.1 < horizon_gen,
+        "traces must cover the acceptance horizon: {} vs {horizon_gen}",
+        probe.makespan
+    );
+
+    // fixed horizon: R rounds plus 0.4 of one more. A single flaky pick
+    // costs 3 round-times (dropout detection), so uniform fits R rounds
+    // only by picking the one stable client R times in a row.
+    let horizon = probe.makespan + 0.4 * round_time;
+    let avail = simulate_fed_with(
+        &clients,
+        &traces,
+        &FedOptions { horizon, ..avail_opts.clone() },
+    )
+    .unwrap();
+    let uniform = simulate_fed_with(
+        &clients,
+        &traces,
+        &FedOptions { select: "uniform".into(), horizon, ..base.clone() },
+    )
+    .unwrap();
+
+    assert_eq!(avail.rounds, ROUNDS, "{avail:?}");
+    assert!(
+        uniform.rounds < avail.rounds,
+        "availability-aware must complete strictly more rounds: \
+         uniform {} vs availability-aware {}",
+        uniform.rounds,
+        avail.rounds
+    );
+    assert!(uniform.dropped_total > 0, "uniform must have hit dropouts: {uniform:?}");
+    assert_eq!(avail.dropped_total, 0, "{avail:?}");
+    // the convergence proxy tells the same story
+    assert!(avail.effective_rounds > uniform.effective_rounds);
+}
+
+/// Straggler-policy separation on the same dropout-heavy population:
+/// deadline cutoff caps what a dropout can cost (its rounds never
+/// stall to the 3× give-up timeout), so its p99 round time is strictly
+/// below synchronous wait-all's.
+#[test]
+fn deadline_cutoff_caps_dropout_stalls() {
+    let horizon_gen = 80.0 * 3600.0;
+    let (clients, traces) = flaky_population(8, horizon_gen, 60.0, 0.5);
+    // k=4 of 8: every round must select at least 3 flaky clients, so
+    // every wait-all round stalls at 3x while every deadline round is
+    // cut at 2x the median estimate
+    let base = FedOptions {
+        rounds: 6,
+        clients: 8,
+        k: 4,
+        select: "uniform".into(),
+        jitter: 0.0,
+        deadline_mult: 2.0,
+        ..Default::default()
+    };
+    let wait = simulate_fed_with(
+        &clients,
+        &traces,
+        &FedOptions { straggler: "wait-all".into(), ..base.clone() },
+    )
+    .unwrap();
+    let cut = simulate_fed_with(
+        &clients,
+        &traces,
+        &FedOptions { straggler: "deadline".into(), ..base.clone() },
+    )
+    .unwrap();
+    assert!(wait.rounds > 0 && cut.rounds > 0);
+    assert!(wait.dropped_total > 0, "{wait:?}");
+    assert!(
+        cut.round_p99.unwrap() < wait.round_p99.unwrap(),
+        "deadline cutoff must cap the stall: cut {:?} vs wait {:?}",
+        cut.round_p99,
+        wait.round_p99
+    );
+}
+
+#[derive(Debug)]
+struct FedCase {
+    seed: u64,
+    rounds: usize,
+}
+
+/// Same options ⇒ bit-identical `FedMetrics` for **every registered
+/// selection × straggler combination** — the engine must be a pure
+/// function of its options (the ISSUE-5 determinism acceptance).
+#[test]
+fn fed_is_bit_identical_across_every_policy_combination() {
+    let selections = SelectionRegistry::with_defaults();
+    let stragglers = StragglerRegistry::with_defaults();
+    forall(
+        0xFED5EED,
+        2,
+        |g| FedCase {
+            seed: 1 + g.int(0, 1_000_000) as u64 * 2_654_435_761,
+            rounds: 4 + g.int(0, 4),
+        },
+        |case| {
+            for select in selections.names() {
+                for straggler in stragglers.names() {
+                    let opts = FedOptions {
+                        rounds: case.rounds,
+                        clients: 12,
+                        k: 4,
+                        select: select.to_string(),
+                        straggler: straggler.to_string(),
+                        seed: case.seed,
+                        trace: FedTraceKind::Flaky,
+                        ..Default::default()
+                    };
+                    let a = simulate_fed(&opts).map_err(|e| e.to_string())?;
+                    let b = simulate_fed(&opts).map_err(|e| e.to_string())?;
+                    check(
+                        a == b,
+                        format!("{select} x {straggler} diverged:\n  {a:?}\n  {b:?}"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fair-share selection balances participation on an always-up
+/// population: with K dividing the population evenly, round-robin
+/// participation is exact and the Jain index is 1.0.
+#[test]
+fn fair_share_balances_participation_perfectly() {
+    let clients: Vec<FedClient> =
+        (0..8).map(|i| FedClient::new(i, DeviceKind::NanoH, 256, 1)).collect();
+    let traces = vec![ClientTrace::always_up(); 8];
+    let opts = FedOptions {
+        rounds: 8,
+        clients: 8,
+        k: 4,
+        select: "fair".into(),
+        ..Default::default()
+    };
+    let m = simulate_fed_with(&clients, &traces, &opts).unwrap();
+    assert_eq!(m.rounds, 8);
+    assert!(
+        (m.participation_fairness - 1.0).abs() < 1e-12,
+        "8 rounds x K=4 over 8 clients must round-robin exactly: {m:?}"
+    );
+    for c in &m.per_client {
+        assert_eq!(c.aggregated, 4, "client {}: {m:?}", c.id);
+    }
+}
+
+fn run_registry(name: &str) -> Report {
+    ExperimentRegistry::with_defaults()
+        .run(name, &ExpContext::new())
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"))
+}
+
+/// `pacpp exp run fed --format json` acceptance shape: every selection
+/// × straggler combination present, round-time/bytes/fairness columns,
+/// and a lossless JSON round-trip.
+#[test]
+fn fed_experiment_covers_grid_and_roundtrips_json() {
+    let rep = run_registry("fed");
+    let distinct = |col: &str| {
+        let mut v: Vec<String> = (0..rep.n_rows())
+            .filter_map(|i| rep.cell(i, col).and_then(Cell::as_str).map(String::from))
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+    assert_eq!(distinct("select").len(), 4, "selects: {:?}", distinct("select"));
+    assert_eq!(distinct("straggler").len(), 3, "stragglers: {:?}", distinct("straggler"));
+    for col in ["rounds", "p50", "p95", "p99", "bytes_up", "bytes_down", "fairness"] {
+        assert!(rep.columns().iter().any(|c| c.name == col), "missing {col}");
+    }
+    for i in 0..rep.n_rows() {
+        let rounds = rep.cell(i, "rounds").unwrap().as_f64().unwrap();
+        assert!(rounds > 0.0, "row {i} completed nothing");
+    }
+
+    let json = rep.render(Format::Json);
+    let back = Report::from_json(&Json::parse(&json).expect("valid json")).expect("report");
+    assert_eq!(back, rep, "JSON round-trip must be lossless");
+}
+
+/// The `fed_select` grid reports availability effects somewhere: the
+/// flaky-trace rows drop strictly more client-rounds than the
+/// stable-trace rows in aggregate.
+#[test]
+fn fed_select_experiment_shows_availability_effects() {
+    let rep = run_registry("fed_select");
+    let dropped_on = |trace: &str| -> f64 {
+        (0..rep.n_rows())
+            .filter(|&i| rep.cell(i, "trace").and_then(Cell::as_str) == Some(trace))
+            .filter_map(|i| rep.cell(i, "dropped").and_then(Cell::as_f64))
+            .sum()
+    };
+    assert!(
+        dropped_on("flaky") > dropped_on("stable"),
+        "flaky clients must drop more: flaky {} vs stable {}",
+        dropped_on("flaky"),
+        dropped_on("stable")
+    );
+}

@@ -2,9 +2,10 @@
 //! `exec::partition_layers` (the pipelined engine's stage splitter),
 //! the fleet event loop's same-seed determinism, the EASY-backfill
 //! no-head-delay guarantee, the bounded-loss checkpoint arithmetic,
-//! and the Jain fairness index range.
+//! the Jain fairness index range, and the `cluster::Network`
+//! collective-timing edge cases (n = 0/1, zero bytes, monotonicity).
 
-use pacpp::cluster::Env;
+use pacpp::cluster::{Env, Network};
 use pacpp::exec::partition_layers;
 use pacpp::fleet::{
     generate_churn, generate_jobs, jain_index, simulate_fleet, AttemptTimeline, BestFit,
@@ -303,6 +304,81 @@ fn jain_fairness_index_range() {
                 (jain_index(&uniform) - 1.0).abs() < 1e-12,
                 "uniform service must be perfectly fair".to_string(),
             )
+        },
+    );
+}
+
+#[derive(Debug)]
+struct CollectiveCase {
+    bytes: u64,
+    n: usize,
+}
+
+/// `cluster::Network` collective timing: degenerate participant counts
+/// (n = 0/1) are free for the symmetric collectives, zero-byte
+/// transfers cost only latency (never negative, never NaN), and every
+/// collective is monotone in both participant count and payload size —
+/// the invariants the fed aggregation models lean on.
+#[test]
+fn network_collectives_edge_cases_and_monotonicity() {
+    let nets = [Network::lan_1gbps(), Network::wifi_100mbps()];
+    forall(
+        0xC0113C7,
+        150,
+        |g| CollectiveCase {
+            bytes: (g.int(0, 1_000_001) as u64) * (1 + g.int(0, 1000) as u64),
+            n: g.int(0, 64),
+        },
+        |case| {
+            let &CollectiveCase { bytes, n } = case;
+            let symmetric: [fn(&Network, u64, usize) -> f64; 3] = [
+                Network::allreduce_time,
+                Network::allgather_time,
+                Network::broadcast_time,
+            ];
+            let all: [fn(&Network, u64, usize) -> f64; 4] = [
+                Network::allreduce_time,
+                Network::allgather_time,
+                Network::broadcast_time,
+                Network::star_gather_time,
+            ];
+            for net in &nets {
+                // n = 0 / 1: nothing to synchronize
+                for f in symmetric {
+                    check(f(net, bytes, 0) == 0.0, "collective at n=0 not free".to_string())?;
+                    check(f(net, bytes, 1) == 0.0, "collective at n=1 not free".to_string())?;
+                }
+                check(net.star_gather_time(bytes, 0) == 0.0, "star at n=0 not free".to_string())?;
+                // zero bytes: pure latency, finite and non-negative
+                for t in [
+                    net.allreduce_time(0, n),
+                    net.allgather_time(0, n),
+                    net.broadcast_time(0, n),
+                    net.star_gather_time(0, n),
+                    net.transfer_time(0),
+                ] {
+                    check(
+                        t.is_finite() && t >= 0.0,
+                        format!("zero-byte time {t} must be finite and non-negative"),
+                    )?;
+                }
+                // monotone in participant count and in payload
+                for f in all {
+                    check(
+                        f(net, bytes, n) <= f(net, bytes, n + 1) + 1e-12,
+                        format!("not monotone in n at ({bytes}, {n})"),
+                    )?;
+                    check(
+                        f(net, bytes, n) <= f(net, bytes + 1_000_000, n) + 1e-12,
+                        format!("not monotone in bytes at ({bytes}, {n})"),
+                    )?;
+                    check(
+                        f(net, bytes, n).is_finite() && f(net, bytes, n) >= 0.0,
+                        format!("time not finite/non-negative at ({bytes}, {n})"),
+                    )?;
+                }
+            }
+            Ok(())
         },
     );
 }
