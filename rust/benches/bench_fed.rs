@@ -12,7 +12,9 @@
 //! quote the bench times the engine, not the planner — and report
 //! derived rounds/sec next to the wall-clock summary. The `_dropout`
 //! case runs the flaky trace + deadline cutoff, adding the dropout and
-//! partial-aggregation paths to the measured loop.
+//! partial-aggregation paths to the measured loop. The 100k-client
+//! scale case drives the SoA per-client state and the sharded quoting
+//! pass — the population size the paper's edge pools imply.
 
 use pacpp::fed::{simulate_fed, FedOptions, FedTraceKind};
 use pacpp::util::bench::Bench;
@@ -38,6 +40,37 @@ fn main() {
         let m = simulate_fed(&opts).unwrap();
         assert!(m.rounds > 0, "bench run must complete rounds");
         let res = b.run(&name, || simulate_fed(&opts).unwrap()).cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.1} rounds/sec ({} rounds, {} aggregated, {} dropped, {} stalls)",
+                m.rounds as f64 / r.summary.mean,
+                m.rounds,
+                m.aggregated_total,
+                m.dropped_total,
+                m.stalls
+            );
+        }
+    }
+
+    // Scale case: 100k clients through the SoA round engine. Trace
+    // generation and the per-client quoting pass shard across cores
+    // (`shards: 0` = auto) — the property tests pin the shard count as
+    // metric-invariant, so this measures the same computation the
+    // small cases do. Fewer rounds keep the wall-clock per iteration
+    // in bench range.
+    if b.enabled("fed_rounds_100k_clients") {
+        let opts = FedOptions {
+            rounds: 10,
+            clients: 100_000,
+            k: 256,
+            trace: FedTraceKind::Churny,
+            ..Default::default()
+        };
+        let m = simulate_fed(&opts).unwrap();
+        assert!(m.rounds > 0, "scale bench run must complete rounds");
+        let res = b
+            .run("fed_rounds_100k_clients", || simulate_fed(&opts).unwrap())
+            .cloned();
         if let Some(r) = res {
             println!(
                 "    -> {:.1} rounds/sec ({} rounds, {} aggregated, {} dropped, {} stalls)",

@@ -6,11 +6,13 @@
 //! ```
 //!
 //! The `fleet_event_loop_*` cases measure the discrete-event core
-//! (heap, dispatch, accounting) on a stream of uniform jobs — one
-//! planner call total thanks to the oracle's shape memo — and report
-//! derived events/sec and jobs/sec next to the wall-clock summary.
-//! The `_churn` case layers a churn trace on top, adding the
-//! replan/restart paths to the measured loop.
+//! (calendar event queue, incremental dispatch, accounting) on a
+//! stream of uniform jobs — one planner call total thanks to the
+//! oracle's shape memo — and report derived events/sec and jobs/sec
+//! next to the wall-clock summary. The 100k/1m scale cases are the
+//! scaling gate: their events/sec should stay within an order of
+//! magnitude of the 10k case. The `_churn` case layers a churn trace
+//! on top, adding the replan/restart paths to the measured loop.
 
 use pacpp::cluster::Env;
 use pacpp::fleet::{
@@ -49,6 +51,40 @@ fn main() {
         assert_eq!(m.completed, n, "bench jobs must all complete");
         let res = b
             .run(&name, || simulate_fleet(&env, &jobs, &[], &BestFit, &opts()).unwrap())
+            .cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.0} events/sec, {:.0} jobs/sec ({} events, {} jobs)",
+                m.events as f64 / r.summary.mean,
+                m.completed as f64 / r.summary.mean,
+                m.events,
+                m.completed
+            );
+        }
+    }
+
+    // Scale cases: the same uniform stream at 100k and 1M jobs. The
+    // events/sec figure here against the 10k case is the scaling
+    // acceptance gate — the calendar queue and incremental dispatch
+    // keep per-event cost flat as the backlog grows. The horizon is
+    // widened so the tail drains even if arrivals outpace service.
+    for n in [100_000usize, 1_000_000] {
+        let name = if n >= 1_000_000 {
+            format!("fleet_event_loop_{}m_jobs", n / 1_000_000)
+        } else {
+            format!("fleet_event_loop_{}k_jobs", n / 1_000)
+        };
+        if !b.enabled(&name) {
+            continue;
+        }
+        let jobs = uniform_jobs(n);
+        let scale_opts = FleetOptions { horizon: 1e10, ..Default::default() };
+        let m = simulate_fleet(&env, &jobs, &[], &BestFit, &scale_opts).unwrap();
+        assert_eq!(m.completed, n, "scale-bench jobs must all complete");
+        let res = b
+            .run(&name, || {
+                simulate_fleet(&env, &jobs, &[], &BestFit, &scale_opts).unwrap()
+            })
             .cloned();
         if let Some(r) = res {
             println!(

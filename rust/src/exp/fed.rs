@@ -139,7 +139,22 @@ pub fn fed_report() -> Report {
     for (opts, m) in &results {
         report.push(fed_row("lan", opts, m));
     }
+    observe_meta(report, &results)
+}
+
+/// Attach the grid-summed observe counters (strategy-oracle memo
+/// hits/misses over the per-client quoting passes) to a fed report's
+/// metadata.
+fn observe_meta(report: Report, results: &[(FedOptions, FedMetrics)]) -> Report {
     report
+        .meta(
+            "oracle_hits_total",
+            results.iter().map(|(_, m)| m.oracle_hits).sum::<usize>(),
+        )
+        .meta(
+            "oracle_misses_total",
+            results.iter().map(|(_, m)| m.oracle_misses).sum::<usize>(),
+        )
 }
 
 /// `fed_select` — the availability grid: every selection policy ×
@@ -187,7 +202,7 @@ pub fn fed_select_report() -> Report {
     for ((_, _, net), (opts, m)) in combos.iter().zip(&results) {
         report.push(fed_row(net, opts, m));
     }
-    report
+    observe_meta(report, &results)
 }
 
 #[cfg(test)]
@@ -236,6 +251,14 @@ mod tests {
             assert!(fairness > 0.0 && fairness <= 1.0 + 1e-9, "row {i}: {fairness}");
             assert!(rep.cell(i, "bytes_up").unwrap().as_f64().unwrap() > 0.0, "row {i}");
         }
+        // observe counters ride along in the metadata: 12 cells × 24
+        // quoted clients each
+        for key in ["oracle_hits_total", "oracle_misses_total"] {
+            assert!(rep.meta.contains_key(key), "missing meta {key}");
+        }
+        let hits: usize = rep.meta["oracle_hits_total"].parse().unwrap();
+        let misses: usize = rep.meta["oracle_misses_total"].parse().unwrap();
+        assert_eq!(hits + misses, 12 * GRID_CLIENTS, "one quote per client per cell");
     }
 
     #[test]

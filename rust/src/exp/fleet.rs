@@ -158,7 +158,24 @@ fn grid_report(name: &str, title: &str, churn_per_hour: Option<f64>) -> Report {
             m,
         ));
     }
+    observe_meta(report, &results)
+}
+
+/// Attach the grid-summed observe counters (events processed, oracle
+/// memo hits/misses, rescans the incremental index avoided) to a fleet
+/// report's metadata.
+fn observe_meta(report: Report, results: &[FleetMetrics]) -> Report {
     report
+        .meta("events_total", results.iter().map(|m| m.events).sum::<usize>())
+        .meta("oracle_hits_total", results.iter().map(|m| m.oracle_hits).sum::<usize>())
+        .meta(
+            "oracle_misses_total",
+            results.iter().map(|m| m.oracle_misses).sum::<usize>(),
+        )
+        .meta(
+            "rescans_avoided_total",
+            results.iter().map(|m| m.rescans_avoided).sum::<usize>(),
+        )
 }
 
 /// `fleet` — the stable-pool grid: policy × trace × env, no churn.
@@ -235,7 +252,7 @@ pub fn fleet_checkpoint_report() -> Report {
             m,
         ));
     }
-    report
+    observe_meta(report, &results)
 }
 
 /// The per-user Report's empty shell: one row per (policy, user).
@@ -298,7 +315,7 @@ pub fn fleet_users_report() -> Report {
             ]);
         }
     }
-    report
+    observe_meta(report, &results)
 }
 
 #[cfg(test)]
@@ -347,6 +364,14 @@ mod tests {
             let completed = rep.cell(i, "completed").unwrap().as_f64().unwrap();
             assert!(met <= completed, "row {i}");
         }
+        // observe counters ride along in the metadata
+        for key in
+            ["events_total", "oracle_hits_total", "oracle_misses_total", "rescans_avoided_total"]
+        {
+            assert!(rep.meta.contains_key(key), "missing meta {key}");
+        }
+        assert!(rep.meta["events_total"].parse::<usize>().unwrap() > 0);
+        assert!(rep.meta["oracle_hits_total"].parse::<usize>().unwrap() > 0);
     }
 
     #[test]

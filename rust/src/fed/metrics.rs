@@ -1,7 +1,7 @@
 //! [`FedMetrics`] — what one federated simulation is judged by.
 
 use crate::fleet::jain_index;
-use crate::util::stats::percentile;
+use crate::util::stats::{QuantileSketch, SKETCH_EXACT_LIMIT};
 
 /// Per-client accounting, ascending client id in
 /// [`FedMetrics::per_client`].
@@ -43,6 +43,9 @@ pub(crate) struct RawFed {
     pub rounds_to_target: Option<usize>,
     /// Virtual time of that crossing.
     pub time_to_target: Option<f64>,
+    /// Strategy-oracle memo hits / misses while quoting client compute.
+    pub oracle_hits: usize,
+    pub oracle_misses: usize,
 }
 
 /// Aggregate outcome of one federated run. All fields are deterministic
@@ -84,21 +87,25 @@ pub struct FedMetrics {
     pub infeasible_clients: usize,
     /// Seconds spent in the aggregation collective across all rounds.
     pub agg_time_total: f64,
+    /// Strategy-oracle memo hits while quoting per-client compute
+    /// (observe counter: how much the plan memoisation saved).
+    pub oracle_hits: usize,
+    /// Strategy-oracle memo misses — distinct plans actually computed.
+    pub oracle_misses: usize,
     /// Per-client accounting, ascending client id.
     pub per_client: Vec<ClientStat>,
 }
 
 impl FedMetrics {
     pub(crate) fn assemble(raw: RawFed) -> FedMetrics {
-        let mut times = raw.round_times.clone();
-        times.sort_by(|a, b| a.total_cmp(b));
-        let pct = |q: f64| {
-            if times.is_empty() {
-                None
-            } else {
-                Some(percentile(&times, q))
-            }
-        };
+        // Stream the round durations through the quantile sketch: exact
+        // (sorted once, not once per query) below the threshold,
+        // fixed-state P² beyond it — no O(rounds log rounds) per query.
+        let mut sketch = QuantileSketch::new(&[0.50, 0.95, 0.99], SKETCH_EXACT_LIMIT);
+        for &t in &raw.round_times {
+            sketch.add(t);
+        }
+        let pcts = sketch.quantile_many(&[0.50, 0.95, 0.99]);
         let selected_total = raw.per_client.iter().map(|c| c.selected).sum();
         let aggregated_total = raw.per_client.iter().map(|c| c.aggregated).sum();
         let dropped_total = raw.per_client.iter().map(|c| c.dropped).sum();
@@ -107,9 +114,9 @@ impl FedMetrics {
         FedMetrics {
             rounds: raw.round_times.len(),
             makespan: raw.makespan,
-            round_p50: pct(0.50),
-            round_p95: pct(0.95),
-            round_p99: pct(0.99),
+            round_p50: pcts[0],
+            round_p95: pcts[1],
+            round_p99: pcts[2],
             selected_total,
             aggregated_total,
             dropped_total,
@@ -122,6 +129,8 @@ impl FedMetrics {
             stalls: raw.stalls,
             infeasible_clients: raw.infeasible,
             agg_time_total: raw.agg_time,
+            oracle_hits: raw.oracle_hits,
+            oracle_misses: raw.oracle_misses,
             per_client: raw.per_client,
         }
     }
@@ -153,6 +162,8 @@ mod tests {
             effective_rounds: 0.0,
             rounds_to_target: None,
             time_to_target: None,
+            oracle_hits: 0,
+            oracle_misses: 0,
         }
     }
 

@@ -38,7 +38,12 @@
 //! the `fed` / `fed_select` experiments in
 //! [`crate::exp::ExperimentRegistry::with_defaults`], and the
 //! `pacpp fed` CLI subcommand (`--rounds`, `--clients`, `--select`,
-//! `--straggler`, `--agg`, `--seed`, `--trace`, `--strategy`). Same
+//! `--straggler`, `--agg`, `--seed`, `--trace`, `--strategy`,
+//! `--shards`). The round engine keeps per-client state in compact
+//! structure-of-arrays form and shards the per-client quoting/trace
+//! passes across cores at ≥ [`PAR_CLIENT_THRESHOLD`] clients
+//! ([`FedOptions::shards`], property-tested shard-invariant), so 100k
+//! client populations are routine. Same
 //! options produce bit-identical metrics (property-tested across every
 //! selection × straggler combination, like `fleet`). See the crate
 //! docs ("Adding a client-selection policy") for how to register your
@@ -52,7 +57,8 @@ pub mod straggler;
 pub use metrics::{ClientStat, FedMetrics};
 pub use round::{
     generate_availability, generate_clients, simulate_fed, simulate_fed_with, AggMode,
-    ClientTrace, FedClient, FedOptions, FedTraceKind, SECURE_KEY_BYTES,
+    ClientTrace, FedClient, FedOptions, FedTraceKind, PAR_CLIENT_THRESHOLD,
+    SECURE_KEY_BYTES,
 };
 pub use select::{
     AvailabilityAware, Candidate, ClientSelection, FairShare, PowerOfD, SelectCtx,

@@ -2,7 +2,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, QuantileSketch, SKETCH_EXACT_LIMIT};
 
 /// Jain's fairness index over non-negative per-user allocations:
 /// `(Σx)² / (n·Σx²)`, in `(0, 1]` for any non-degenerate input; `1.0`
@@ -73,6 +73,12 @@ pub(crate) struct RawFleet {
     pub ckpt_count: usize,
     pub ckpt_overhead: f64,
     pub events: usize,
+    /// Oracle memo-cache hits / misses (observe counters).
+    pub oracle_hits: usize,
+    pub oracle_misses: usize,
+    /// Dispatch attempts answered from incremental queue-policy state
+    /// without a full-queue rescan (observe counter).
+    pub rescans_avoided: usize,
 }
 
 /// Aggregate outcome of one fleet run. All fields are deterministic
@@ -134,6 +140,15 @@ pub struct FleetMetrics {
     /// Events processed by the event loop (throughput denominator for
     /// `bench_fleet`).
     pub events: usize,
+    /// Strategy-oracle memo-cache hits across the run (observe
+    /// counter: the planner calls the cache absorbed).
+    pub oracle_hits: usize,
+    /// Strategy-oracle memo-cache misses (planner calls actually paid).
+    pub oracle_misses: usize,
+    /// Dispatch attempts answered from incremental queue-policy state
+    /// without rescanning/re-sorting the whole queue (observe counter
+    /// for the O(log n) dispatch path).
+    pub rescans_avoided: usize,
 }
 
 impl FleetMetrics {
@@ -141,21 +156,18 @@ impl FleetMetrics {
     /// accumulated.
     pub(crate) fn assemble(raw: RawFleet) -> FleetMetrics {
         let n_jobs = raw.per_job.len();
-        let mut latencies: Vec<f64> = raw
-            .per_job
-            .iter()
-            .filter_map(|j| j.finish.map(|f| f - j.arrival))
-            .collect();
-        latencies.sort_by(|a, b| a.total_cmp(b));
-        let completed = latencies.len();
-        let incomplete = n_jobs - completed - raw.failed;
-        let pct = |q: f64| {
-            if latencies.is_empty() {
-                None
-            } else {
-                Some(percentile(&latencies, q))
+        // Latencies stream through the quantile sketch in job-id order:
+        // exact (bit-identical to collect-and-sort) below
+        // SKETCH_EXACT_LIMIT completions, fixed-state P² beyond it.
+        let mut sketch = QuantileSketch::new(&[0.50, 0.95, 0.99], SKETCH_EXACT_LIMIT);
+        for j in &raw.per_job {
+            if let Some(f) = j.finish {
+                sketch.add(f - j.arrival);
             }
-        };
+        }
+        let completed = sketch.len();
+        let incomplete = n_jobs - completed - raw.failed;
+        let lat = sketch.quantile_many(&[0.50, 0.95, 0.99]);
         let deadline_met = raw.per_job.iter().filter(|j| j.met).count();
         let hours = raw.makespan / 3600.0;
         let per_hour = |n: usize| if hours > 0.0 { n as f64 / hours } else { 0.0 };
@@ -190,11 +202,7 @@ impl FleetMetrics {
                     jobs: acc.jobs,
                     completed: acc.completed,
                     met: acc.met,
-                    p95: if acc.lats.is_empty() {
-                        None
-                    } else {
-                        Some(percentile(&acc.lats, 0.95))
-                    },
+                    p95: percentile(&acc.lats, 0.95),
                     service: service.get(&user).copied().unwrap_or(0.0),
                 }
             })
@@ -225,9 +233,9 @@ impl FleetMetrics {
             } else {
                 0.0
             },
-            latency_p50: pct(0.50),
-            latency_p95: pct(0.95),
-            latency_p99: pct(0.99),
+            latency_p50: lat[0],
+            latency_p95: lat[1],
+            latency_p99: lat[2],
             utilization: if presence > 0.0 { busy / presence } else { 0.0 },
             per_device_util,
             fairness,
@@ -240,6 +248,9 @@ impl FleetMetrics {
             ckpt_count: raw.ckpt_count,
             ckpt_overhead: raw.ckpt_overhead,
             events: raw.events,
+            oracle_hits: raw.oracle_hits,
+            oracle_misses: raw.oracle_misses,
+            rescans_avoided: raw.rescans_avoided,
         }
     }
 }
@@ -280,6 +291,9 @@ mod tests {
             ckpt_count: 0,
             ckpt_overhead: 0.0,
             events: 0,
+            oracle_hits: 0,
+            oracle_misses: 0,
+            rescans_avoided: 0,
         }
     }
 
@@ -300,6 +314,9 @@ mod tests {
         r.replans = 3;
         r.restarts = 4;
         r.events = 99;
+        r.oracle_hits = 5;
+        r.oracle_misses = 2;
+        r.rescans_avoided = 11;
         let m = FleetMetrics::assemble(r);
         assert_eq!((m.completed, m.failed, m.incomplete), (4, 1, 2));
         assert!((m.jobs_per_hour - 2.0).abs() < 1e-12);
@@ -312,6 +329,7 @@ mod tests {
         assert!((m.utilization - 0.5).abs() < 1e-12);
         assert_eq!(m.per_device_util, vec![(0, 0.5), (1, 0.5)]);
         assert_eq!((m.replans, m.restarts, m.events), (3, 4, 99));
+        assert_eq!((m.oracle_hits, m.oracle_misses, m.rescans_avoided), (5, 2, 11));
         // equal per-user service: perfectly fair
         assert!((m.fairness - 1.0).abs() < 1e-12);
         assert_eq!(m.per_user.len(), 3);

@@ -8,8 +8,9 @@
 //! shared, unreliable edge hardware — which adds exactly the dimensions
 //! this module models:
 //!
-//! * **time** — a virtual clock driven by a binary-heap event loop
-//!   ([`sim`]);
+//! * **time** — a virtual clock driven by a pluggable event queue
+//!   ([`sim`], [`eventq`]: calendar/bucket queue by default, binary
+//!   heap for equivalence testing — bit-identical orderings);
 //! * **arrival** — seeded job-stream generators ([`TraceKind`]:
 //!   steady / diurnal / bursty), each job carrying its own model size,
 //!   dataset size, epoch budget, submitting user and deadline slack
@@ -47,6 +48,7 @@
 //! a queue policy") for how to register your own.
 
 pub mod ckpt;
+pub mod eventq;
 pub mod metrics;
 pub mod policy;
 pub mod queue;
@@ -54,6 +56,7 @@ pub mod sim;
 pub mod trace;
 
 pub use ckpt::{AttemptPoint, AttemptTimeline, CheckpointSpec, DEFAULT_CKPT_COST};
+pub use eventq::{CalendarQueue, EventQueue, EventQueueKind, HeapQueue};
 pub use metrics::{jain_index, FleetMetrics, JobStat, UserStat};
 pub use policy::{
     BestFit, ChurnResponse, FifoExclusive, Placement, PlacementCtx, PlacementPolicy,
@@ -61,7 +64,7 @@ pub use policy::{
 };
 pub use queue::{
     EarliestDeadlineFirst, EasyBackfill, FifoQueue, LeastLaxity, QueueCtx, QueueDecision,
-    QueuePolicy, QueuePolicyRegistry, RunningSnapshot, ShortestJobFirst,
+    QueueIndex, QueuePolicy, QueuePolicyRegistry, RunningSnapshot, ShortestJobFirst,
 };
 pub use sim::{simulate_fleet, FleetOptions, StrategyOracle};
 pub use trace::{

@@ -32,7 +32,8 @@
 //!   the next free slot even when its deadline is later than a short
 //!   job's.
 
-use std::collections::VecDeque;
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 
 use crate::cluster::Device;
@@ -77,6 +78,11 @@ pub struct QueueCtx<'a> {
     pub placement: &'a dyn PlacementPolicy,
     pub oracle: &'a dyn PlanOracle,
     pub ckpt: Option<&'a CheckpointSpec>,
+    /// Incremental dispatch state maintained by the simulator
+    /// ([`super::FleetOptions::incremental_queue`]); `None` runs every
+    /// policy on its exact legacy path (kept for the equivalence
+    /// property tests).
+    pub index: Option<&'a QueueIndex>,
 }
 
 impl QueueCtx<'_> {
@@ -108,6 +114,245 @@ impl QueueCtx<'_> {
 pub struct QueueDecision {
     pub queue_pos: usize,
     pub placement: Placement,
+}
+
+/// `f64` → `u64` preserving `total_cmp` order, so float keys can live
+/// in ordered integer sets.
+fn key_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 0 {
+        b | (1 << 63)
+    } else {
+        !b
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum IndexOp {
+    Enqueue(usize, i64),
+    Dequeue(usize),
+}
+
+/// One incrementally-maintained sort of the queue, valid for a single
+/// pool epoch: `(key bits, rank, job)` — rank order equals queue-
+/// position order, so iteration reproduces the legacy
+/// sort-by-(key, position) exactly.
+#[derive(Debug)]
+struct SortedOrder {
+    epoch: u64,
+    set: BTreeSet<(u64, i64, usize)>,
+    key_of: BTreeMap<usize, (u64, i64)>,
+}
+
+/// Incremental dispatch state shared between the simulator and the
+/// queue policies, so EASY/SJF/EDF/LLF stop rescanning or re-sorting
+/// the whole backlog on every dispatch:
+///
+/// * a **sorted order** over the queue (EDF's deadlines, SJF's
+///   whole-pool estimates) kept by sorted insert against the
+///   simulator's enqueue/dequeue notifications — O(log n) per queue
+///   change instead of an O(n log n) sort per dispatch — and rebuilt
+///   only when churn moves the pool (the keys' epoch);
+/// * **oracle estimates** keyed by `(job, pool epoch)`, so each queued
+///   job is quoted once per pool change instead of once per dispatch;
+/// * **placement failures** keyed by the free/running state epoch: a
+///   job that could not be placed stays unplaceable until a start,
+///   finish or churn event changes the state, so re-dispatches within
+///   the same state skip it outright (counted in
+///   [`rescans_avoided`](QueueIndex::rescans_avoided));
+/// * EASY's **shadow time**, a pure function of the same state.
+///
+/// Ranks replicate queue order without tracking index shifts: arrivals
+/// take increasing back ranks, churn-requeues decreasing front ranks,
+/// and interior removals keep relative order — exactly like the
+/// `VecDeque` itself.
+///
+/// Policies receive a shared reference through [`QueueCtx::index`]
+/// (they are stateless and `Sync`-shared across experiment threads;
+/// per-run state has to travel with the run), hence the interior
+/// mutability. Everything here is a cache of pure functions of
+/// simulator state, so the incremental paths are bit-identical to the
+/// legacy ones — property-tested in `tests/prop_invariants.rs`.
+#[derive(Debug, Default)]
+pub struct QueueIndex {
+    pool_epoch: Cell<u64>,
+    state_epoch: Cell<u64>,
+    back_rank: Cell<i64>,
+    front_rank: Cell<i64>,
+    ranks: RefCell<BTreeMap<usize, i64>>,
+    /// Queue changes since the last order sync (only fed while an
+    /// order is live — policies that never sort skip the cost).
+    log: RefCell<Vec<IndexOp>>,
+    order: RefCell<Option<SortedOrder>>,
+    /// `(state epoch, jobs that failed to place in it)`.
+    place_fail: RefCell<(u64, BTreeSet<usize>)>,
+    /// `(state epoch, head job, shadow)` memo for EASY backfill.
+    shadow: RefCell<Option<(u64, usize, Option<f64>)>>,
+    /// `(pool epoch, job → whole-pool estimate)`; infeasible = ∞.
+    est: RefCell<(u64, BTreeMap<usize, f64>)>,
+    rescans_avoided: Cell<usize>,
+}
+
+impl QueueIndex {
+    pub fn new() -> QueueIndex {
+        QueueIndex::default()
+    }
+
+    /// The simulator enqueued `job` at the back (arrival).
+    pub fn on_enqueue_back(&self, job: usize) {
+        let r = self.back_rank.get();
+        self.back_rank.set(r + 1);
+        self.ranks.borrow_mut().insert(job, r);
+        if self.order.borrow().is_some() {
+            self.log.borrow_mut().push(IndexOp::Enqueue(job, r));
+        }
+    }
+
+    /// The simulator re-queued `job` at the front (churn restart).
+    pub fn on_enqueue_front(&self, job: usize) {
+        let r = self.front_rank.get() - 1;
+        self.front_rank.set(r);
+        self.ranks.borrow_mut().insert(job, r);
+        if self.order.borrow().is_some() {
+            self.log.borrow_mut().push(IndexOp::Enqueue(job, r));
+        }
+    }
+
+    /// The simulator removed `job` from the queue (dispatch or prune).
+    pub fn on_dequeue(&self, job: usize) {
+        self.ranks.borrow_mut().remove(&job);
+        if self.order.borrow().is_some() {
+            self.log.borrow_mut().push(IndexOp::Dequeue(job));
+        }
+    }
+
+    /// Churn changed pool membership or a device kind: whole-pool
+    /// estimates and orders keyed on them are stale.
+    pub fn on_pool_change(&self) {
+        self.pool_epoch.set(self.pool_epoch.get() + 1);
+        self.state_epoch.set(self.state_epoch.get() + 1);
+        *self.order.borrow_mut() = None;
+        self.log.borrow_mut().clear();
+    }
+
+    /// A start, finish or churn changed the free/running state:
+    /// placement outcomes and shadows are stale (pool-epoch caches
+    /// survive — the device multiset did not move).
+    pub fn on_state_change(&self) {
+        self.state_epoch.set(self.state_epoch.get() + 1);
+    }
+
+    /// Observe counter: dispatch work skipped thanks to the caches
+    /// (placement-failure hits + per-dispatch re-sorts avoided).
+    pub fn rescans_avoided(&self) -> usize {
+        self.rescans_avoided.get()
+    }
+
+    /// Whole-pool service estimate for `job` (∞ when infeasible),
+    /// cached per pool epoch. Same value the legacy paths compute —
+    /// the oracle is pure.
+    fn pool_est(&self, ctx: &QueueCtx, pool: &[Device], job: usize) -> f64 {
+        let epoch = self.pool_epoch.get();
+        let mut est = self.est.borrow_mut();
+        if est.0 != epoch {
+            *est = (epoch, BTreeMap::new());
+        }
+        if let Some(&v) = est.1.get(&job) {
+            return v;
+        }
+        let v = ctx
+            .oracle
+            .service_time(&ctx.jobs[job], pool)
+            .unwrap_or(f64::INFINITY);
+        est.1.insert(job, v);
+        v
+    }
+
+    /// Did `job` already fail to place in the current state?
+    fn known_unplaceable(&self, job: usize) -> bool {
+        let epoch = self.state_epoch.get();
+        let mut pf = self.place_fail.borrow_mut();
+        if pf.0 != epoch {
+            *pf = (epoch, BTreeSet::new());
+            return false;
+        }
+        if pf.1.contains(&job) {
+            self.rescans_avoided.set(self.rescans_avoided.get() + 1);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn note_unplaceable(&self, job: usize) {
+        let epoch = self.state_epoch.get();
+        let mut pf = self.place_fail.borrow_mut();
+        if pf.0 != epoch {
+            *pf = (epoch, BTreeSet::new());
+        }
+        pf.1.insert(job);
+    }
+
+    /// EASY's shadow time for `head`, memoized per state epoch.
+    fn shadow_of(&self, head: usize, compute: impl FnOnce() -> Option<f64>) -> Option<f64> {
+        let epoch = self.state_epoch.get();
+        if let Some((e, h, s)) = *self.shadow.borrow() {
+            if e == epoch && h == head {
+                self.rescans_avoided.set(self.rescans_avoided.get() + 1);
+                return s;
+            }
+        }
+        let s = compute();
+        *self.shadow.borrow_mut() = Some((epoch, head, s));
+        s
+    }
+
+    /// Run `f` over the queue sorted by `(key_fn, queue order)`,
+    /// syncing the sorted order first: rebuilt after pool churn,
+    /// otherwise patched from the enqueue/dequeue log.
+    fn with_order<R>(
+        &self,
+        ctx: &QueueCtx,
+        key_fn: impl Fn(usize) -> f64,
+        f: impl FnOnce(&BTreeSet<(u64, i64, usize)>) -> R,
+    ) -> R {
+        let epoch = self.pool_epoch.get();
+        let mut slot = self.order.borrow_mut();
+        let fresh = !matches!(slot.as_ref(), Some(o) if o.epoch == epoch);
+        if fresh {
+            let ranks = self.ranks.borrow();
+            let mut set = BTreeSet::new();
+            let mut key_of = BTreeMap::new();
+            for &job in ctx.queue {
+                let rank = ranks[&job];
+                let bits = key_bits(key_fn(job));
+                set.insert((bits, rank, job));
+                key_of.insert(job, (bits, rank));
+            }
+            drop(ranks);
+            self.log.borrow_mut().clear();
+            *slot = Some(SortedOrder { epoch, set, key_of });
+        } else {
+            let ops: Vec<IndexOp> = std::mem::take(&mut *self.log.borrow_mut());
+            let o = slot.as_mut().expect("order exists when not fresh");
+            for op in ops {
+                match op {
+                    IndexOp::Enqueue(job, rank) => {
+                        let bits = key_bits(key_fn(job));
+                        o.set.insert((bits, rank, job));
+                        o.key_of.insert(job, (bits, rank));
+                    }
+                    IndexOp::Dequeue(job) => {
+                        if let Some((bits, rank)) = o.key_of.remove(&job) {
+                            o.set.remove(&(bits, rank, job));
+                        }
+                    }
+                }
+            }
+            self.rescans_avoided.set(self.rescans_avoided.get() + 1);
+        }
+        f(&slot.as_ref().expect("order just synced").set)
+    }
 }
 
 /// A pluggable queueing discipline. Implementations must be stateless
@@ -193,30 +438,51 @@ impl QueuePolicy for EasyBackfill {
     fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision> {
         let &head_id = ctx.queue.front()?;
         let head = &ctx.jobs[head_id];
-        if let Some(placement) = ctx.try_place(head, ctx.free, ctx.n_running) {
-            return Some(QueueDecision { queue_pos: 0, placement });
-        }
-        // shadow time: replay the scheduled finishes, accumulating the
-        // devices they release, until the head becomes feasible
-        let mut avail: Vec<Device> = ctx.free.to_vec();
-        let mut shadow = None;
-        for (i, r) in ctx.running.iter().enumerate() {
-            avail.extend(r.devices.iter().cloned());
-            avail.sort_by_key(|d| d.id);
-            if ctx.try_place(head, &avail, ctx.n_running - (i + 1)).is_some() {
-                shadow = Some(r.finish);
-                break;
+        if ctx.index.is_none_or(|ix| !ix.known_unplaceable(head_id)) {
+            if let Some(placement) = ctx.try_place(head, ctx.free, ctx.n_running) {
+                return Some(QueueDecision { queue_pos: 0, placement });
+            }
+            if let Some(ix) = ctx.index {
+                ix.note_unplaceable(head_id);
             }
         }
+        // shadow time: replay the scheduled finishes, accumulating the
+        // devices they release, until the head becomes feasible. A pure
+        // function of the free/running state, so the index memoizes it
+        // across the dispatch retries within one state.
+        let compute_shadow = || {
+            let mut avail: Vec<Device> = ctx.free.to_vec();
+            let mut shadow = None;
+            for (i, r) in ctx.running.iter().enumerate() {
+                avail.extend(r.devices.iter().cloned());
+                avail.sort_by_key(|d| d.id);
+                if ctx.try_place(head, &avail, ctx.n_running - (i + 1)).is_some() {
+                    shadow = Some(r.finish);
+                    break;
+                }
+            }
+            shadow
+        };
         // head infeasible even on everything: let the simulator's
         // failed-job pruning deal with it
-        let shadow = shadow?;
+        let shadow = match ctx.index {
+            Some(ix) => ix.shadow_of(head_id, compute_shadow)?,
+            None => compute_shadow()?,
+        };
         for pos in 1..ctx.queue.len() {
-            let cand = &ctx.jobs[ctx.queue[pos]];
+            let job = ctx.queue[pos];
+            if ctx.index.is_some_and(|ix| ix.known_unplaceable(job)) {
+                continue;
+            }
+            let cand = &ctx.jobs[job];
             if let Some(placement) = ctx.try_place(cand, ctx.free, ctx.n_running) {
                 if ctx.now + ctx.attempt_duration(cand, placement.service_time) <= shadow {
                     return Some(QueueDecision { queue_pos: pos, placement });
                 }
+                // placed but overruns the shadow: not cached — the
+                // check depends on `now`, which moves between calls
+            } else if let Some(ix) = ctx.index {
+                ix.note_unplaceable(job);
             }
         }
         None
@@ -251,6 +517,32 @@ impl QueuePolicy for ShortestJobFirst {
             pool.extend(r.devices.iter().cloned());
         }
         pool.sort_by_key(|d| d.id);
+        if let Some(ix) = ctx.index {
+            // incremental path: the queue stays sorted by (estimate,
+            // queue order) across dispatches; estimates re-quote only
+            // when churn moves the pool
+            let hit = ix.with_order(
+                ctx,
+                |j| ix.pool_est(ctx, &pool, j),
+                |sorted| {
+                    for &(_, _, job) in sorted {
+                        if ix.known_unplaceable(job) {
+                            continue;
+                        }
+                        if let Some(p) = ctx.try_place(&ctx.jobs[job], ctx.free, ctx.n_running)
+                        {
+                            return Some((job, p));
+                        }
+                        ix.note_unplaceable(job);
+                    }
+                    None
+                },
+            );
+            let (job, placement) = hit?;
+            let queue_pos =
+                ctx.queue.iter().position(|&j| j == job).expect("sorted job is queued");
+            return Some(QueueDecision { queue_pos, placement });
+        }
         let est: Vec<f64> = ctx
             .queue
             .iter()
@@ -297,6 +589,31 @@ impl QueuePolicy for EarliestDeadlineFirst {
     }
 
     fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision> {
+        if let Some(ix) = ctx.index {
+            // incremental path: deadlines are fixed per job, so the
+            // sorted order only ever changes by sorted insert/remove
+            let hit = ix.with_order(
+                ctx,
+                |j| ctx.deadlines[j],
+                |sorted| {
+                    for &(_, _, job) in sorted {
+                        if ix.known_unplaceable(job) {
+                            continue;
+                        }
+                        if let Some(p) = ctx.try_place(&ctx.jobs[job], ctx.free, ctx.n_running)
+                        {
+                            return Some((job, p));
+                        }
+                        ix.note_unplaceable(job);
+                    }
+                    None
+                },
+            );
+            let (job, placement) = hit?;
+            let queue_pos =
+                ctx.queue.iter().position(|&j| j == job).expect("sorted job is queued");
+            return Some(QueueDecision { queue_pos, placement });
+        }
         let mut order: Vec<usize> = (0..ctx.queue.len()).collect();
         order.sort_by(|&a, &b| {
             let (da, db) = (ctx.deadlines[ctx.queue[a]], ctx.deadlines[ctx.queue[b]]);
@@ -338,7 +655,13 @@ impl QueuePolicy for LeastLaxity {
         if ctx.queue.is_empty() {
             return None;
         }
-        // the same canonical "job size" SJF uses: the whole-pool quote
+        // the same canonical "job size" SJF uses: the whole-pool quote.
+        // Laxity depends on `now`, so a persisted sorted order cannot
+        // reproduce the legacy float rounding exactly; instead the
+        // index caches the expensive part — the per-job quote, valid
+        // for a whole pool epoch — and placement failures, leaving the
+        // per-dispatch arithmetic (and therefore the dispatch order)
+        // bit-identical to the legacy path.
         let mut pool: Vec<Device> = ctx.free.to_vec();
         for r in ctx.running {
             pool.extend(r.devices.iter().cloned());
@@ -352,18 +675,33 @@ impl QueuePolicy for LeastLaxity {
                 if deadline.is_infinite() {
                     return f64::INFINITY; // no deadline, no urgency
                 }
-                match ctx.oracle.service_time(&ctx.jobs[j], &pool) {
-                    Some(est) => deadline - ctx.now - ctx.attempt_duration(&ctx.jobs[j], est),
-                    None => f64::INFINITY, // unplaceable anywhere: the simulator prunes it
+                let est = match ctx.index {
+                    Some(ix) => ix.pool_est(ctx, &pool, j),
+                    None => ctx
+                        .oracle
+                        .service_time(&ctx.jobs[j], &pool)
+                        .unwrap_or(f64::INFINITY),
+                };
+                if est.is_finite() {
+                    deadline - ctx.now - ctx.attempt_duration(&ctx.jobs[j], est)
+                } else {
+                    f64::INFINITY // unplaceable anywhere: the simulator prunes it
                 }
             })
             .collect();
         let mut order: Vec<usize> = (0..ctx.queue.len()).collect();
         order.sort_by(|&a, &b| laxity[a].total_cmp(&laxity[b]).then(a.cmp(&b)));
         for pos in order {
-            let cand = &ctx.jobs[ctx.queue[pos]];
+            let job = ctx.queue[pos];
+            if ctx.index.is_some_and(|ix| ix.known_unplaceable(job)) {
+                continue;
+            }
+            let cand = &ctx.jobs[job];
             if let Some(placement) = ctx.try_place(cand, ctx.free, ctx.n_running) {
                 return Some(QueueDecision { queue_pos: pos, placement });
+            }
+            if let Some(ix) = ctx.index {
+                ix.note_unplaceable(job);
             }
         }
         None
@@ -499,7 +837,17 @@ mod tests {
                 placement: &BestFit,
                 oracle: &ScriptedOracle,
                 ckpt,
+                index: None,
             }
+        }
+
+        /// The same context with an incremental index attached.
+        fn ctx_ix<'a>(
+            &'a self,
+            ckpt: Option<&'a CheckpointSpec>,
+            ix: &'a QueueIndex,
+        ) -> QueueCtx<'a> {
+            QueueCtx { index: Some(ix), ..self.ctx(ckpt) }
         }
     }
 
@@ -634,6 +982,66 @@ mod tests {
         f.deadlines = vec![f64::INFINITY, f64::INFINITY, f64::INFINITY, 800.0];
         let d = LeastLaxity.next(&f.ctx(None)).expect("placeable");
         assert_eq!(d.queue_pos, 1, "the only deadlined job is most urgent");
+    }
+
+    /// Every policy's incremental path must pick the same job with the
+    /// same placement as its legacy path, including on cache-warm
+    /// re-queries (the full-simulation bit-identity check lives in
+    /// `tests/prop_invariants.rs`).
+    #[test]
+    fn incremental_paths_match_legacy_decisions() {
+        let policies: Vec<Box<dyn QueuePolicy>> = vec![
+            Box::new(EasyBackfill),
+            Box::new(ShortestJobFirst),
+            Box::new(EarliestDeadlineFirst),
+            Box::new(LeastLaxity),
+        ];
+        let mut f = blocked_head_fixture();
+        f.jobs[1].seq = 1; // every queued job fits the free device
+        f.deadlines = vec![f64::INFINITY, 9000.0, 700.0, 500.0];
+        for p in &policies {
+            let legacy =
+                p.next(&f.ctx(None)).map(|d| (d.queue_pos, d.placement.service_time));
+            let ix = QueueIndex::new();
+            for &j in &f.queue {
+                ix.on_enqueue_back(j);
+            }
+            let inc =
+                p.next(&f.ctx_ix(None, &ix)).map(|d| (d.queue_pos, d.placement.service_time));
+            assert_eq!(legacy, inc, "{}", p.name());
+            let warm =
+                p.next(&f.ctx_ix(None, &ix)).map(|d| (d.queue_pos, d.placement.service_time));
+            assert_eq!(legacy, warm, "{} (cache-warm)", p.name());
+        }
+    }
+
+    /// The sorted order survives enqueue/dequeue churn via the log and
+    /// rebuilds after a pool change.
+    #[test]
+    fn index_order_syncs_across_queue_changes() {
+        let mut f = blocked_head_fixture();
+        f.jobs[1].seq = 1;
+        f.deadlines = vec![f64::INFINITY, 9000.0, 700.0, 500.0];
+        let ix = QueueIndex::new();
+        for &j in &f.queue {
+            ix.on_enqueue_back(j);
+        }
+        let d = EarliestDeadlineFirst.next(&f.ctx_ix(None, &ix)).unwrap();
+        assert_eq!(d.queue_pos, 2, "job 3 has the earliest deadline");
+        // dispatch it: dequeue + state change
+        let job = f.queue.remove(2).unwrap();
+        ix.on_dequeue(job);
+        ix.on_state_change();
+        let d = EarliestDeadlineFirst.next(&f.ctx_ix(None, &ix)).unwrap();
+        assert_eq!(d.queue_pos, 1, "job 2 (deadline 700) is next");
+        // churn-requeue at the front: the pool epoch moved, so the
+        // order rebuilds from the live queue
+        f.queue.push_front(job);
+        ix.on_enqueue_front(job);
+        ix.on_pool_change();
+        let d = EarliestDeadlineFirst.next(&f.ctx_ix(None, &ix)).unwrap();
+        assert_eq!(d.queue_pos, 0, "requeued job 3 still sorts first");
+        assert!(ix.rescans_avoided() > 0, "warm queries reused the order");
     }
 
     #[test]

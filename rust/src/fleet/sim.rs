@@ -1,7 +1,9 @@
 //! The deterministic discrete-event fleet simulator.
 //!
-//! A binary-heap event loop over a virtual clock processes three event
-//! classes — job arrivals, job completions, and churn — against a
+//! An event loop over a virtual clock (a pluggable [`EventQueue`] —
+//! calendar queue by default, the original binary heap behind
+//! [`FleetOptions::event_queue`]) processes three event classes — job
+//! arrivals, job completions, and churn — against a
 //! mutable device pool. *Which* queued job runs next is delegated to a
 //! [`QueuePolicy`] (FIFO / EASY-backfill / SJF, resolved by name from
 //! [`FleetOptions::queue`]); *how* it claims devices is delegated to a
@@ -26,9 +28,8 @@
 //! `(pool, jobs, churn, policies, options)` tuple always produces a
 //! bit-identical [`FleetMetrics`] (enforced by a property test).
 
-use std::cell::RefCell;
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::{Device, DeviceKind, Env};
 use crate::model::graph::LayerGraph;
@@ -38,9 +39,10 @@ use crate::sched::training;
 use crate::strategy::{ParallelismStrategy, StrategyRegistry, TrainJob};
 
 use super::ckpt::{AttemptTimeline, CheckpointSpec};
+use super::eventq::{EventQueue, EventQueueKind};
 use super::metrics::{FleetMetrics, JobStat, RawFleet};
 use super::policy::{ChurnResponse, PlacementPolicy, PlanOracle};
-use super::queue::{QueueCtx, QueuePolicy, QueuePolicyRegistry, RunningSnapshot};
+use super::queue::{QueueCtx, QueueIndex, QueuePolicy, QueuePolicyRegistry, RunningSnapshot};
 use super::trace::{ChurnEvent, ChurnKind, Job};
 
 /// Knobs of one fleet run.
@@ -62,6 +64,16 @@ pub struct FleetOptions {
     /// Checkpoint-interval model; `None` means churn restarts lose the
     /// whole placement chain.
     pub ckpt: Option<CheckpointSpec>,
+    /// Event-queue implementation (scaling knob): the calendar queue
+    /// by default, the original binary heap for the equivalence tests.
+    /// Both produce bit-identical runs (property-tested).
+    pub event_queue: EventQueueKind,
+    /// Maintain the incremental dispatch index ([`QueueIndex`]) so
+    /// EASY/SJF/EDF/LLF avoid full-queue rescans/re-sorts per dispatch
+    /// (scaling knob). `false` runs the exact legacy policy paths;
+    /// dispatch sequences are bit-identical either way
+    /// (property-tested).
+    pub incremental_queue: bool,
 }
 
 impl Default for FleetOptions {
@@ -72,6 +84,8 @@ impl Default for FleetOptions {
             queue: "fifo".into(),
             deadline_scale: 1.0,
             ckpt: None,
+            event_queue: EventQueueKind::default(),
+            incremental_queue: true,
         }
     }
 }
@@ -87,6 +101,8 @@ pub struct StrategyOracle<'a> {
     network: crate::cluster::Network,
     service_memo: RefCell<BTreeMap<String, Option<f64>>>,
     migration_memo: RefCell<BTreeMap<String, f64>>,
+    hits: Cell<usize>,
+    misses: Cell<usize>,
 }
 
 impl<'a> StrategyOracle<'a> {
@@ -96,7 +112,16 @@ impl<'a> StrategyOracle<'a> {
             network,
             service_memo: RefCell::new(BTreeMap::new()),
             migration_memo: RefCell::new(BTreeMap::new()),
+            hits: Cell::new(0),
+            misses: Cell::new(0),
         }
+    }
+
+    /// Observe counters: memo `(hits, misses)` across both the service
+    /// and migration memos — how many planner calls the shape
+    /// memoization saved this run.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.hits.get(), self.misses.get())
     }
 
     fn memo_key(job: &Job, devices: &[Device]) -> String {
@@ -136,8 +161,10 @@ impl<'a> StrategyOracle<'a> {
     pub fn migration_time(&self, job: &Job, devices: &[Device]) -> f64 {
         let key = Self::memo_key(job, devices);
         if let Some(v) = self.migration_memo.borrow().get(&key) {
+            self.hits.set(self.hits.get() + 1);
             return *v;
         }
+        self.misses.set(self.misses.get() + 1);
         let env = self.sub_env(devices);
         let t = training::redistribution_time(&self.profile(job), &env, job.samples);
         self.migration_memo.borrow_mut().insert(key, t);
@@ -152,8 +179,10 @@ impl PlanOracle for StrategyOracle<'_> {
         }
         let key = Self::memo_key(job, devices);
         if let Some(v) = self.service_memo.borrow().get(&key) {
+            self.hits.set(self.hits.get() + 1);
             return *v;
         }
+        self.misses.set(self.misses.get() + 1);
         let env = self.sub_env(devices);
         let tj = TrainJob::new(job.samples, job.epochs, job.seq, job.minibatch);
         let t = self
@@ -172,33 +201,6 @@ enum EventKind {
     Arrival(usize),
     Finish { job: usize, token: u64 },
     Churn(ChurnKind),
-}
-
-#[derive(Debug, Clone)]
-struct Event {
-    time: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.time.to_bits() == other.time.to_bits() && self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
-    }
 }
 
 #[derive(Debug, Clone)]
@@ -231,7 +233,12 @@ struct Sim<'a> {
     horizon: f64,
     ckpt: Option<CheckpointSpec>,
 
-    heap: BinaryHeap<Reverse<Event>>,
+    /// The event queue, `(time, seq)`-ordered behind the
+    /// [`EventQueue`] trait ([`FleetOptions::event_queue`]).
+    eventq: Box<dyn EventQueue<EventKind>>,
+    /// Incremental dispatch state handed to the queue policies
+    /// (`None` = exact legacy dispatch paths).
+    index: Option<QueueIndex>,
     seq: u64,
     now: f64,
 
@@ -280,7 +287,7 @@ impl Sim<'_> {
     fn push(&mut self, time: f64, kind: EventKind) {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Reverse(Event { time, seq, kind }));
+        self.eventq.push(time, seq, kind);
     }
 
     fn free_devices(&self) -> Vec<Device> {
@@ -327,6 +334,9 @@ impl Sim<'_> {
     }
 
     fn start_job(&mut self, job: usize, devices: Vec<Device>, service: f64, now: f64) {
+        if let Some(ix) = &self.index {
+            ix.on_state_change(); // the free/running sets are moving
+        }
         let ids: Vec<usize> = devices.iter().map(|d| d.id).collect();
         for &id in &ids {
             self.assigned.insert(id, job);
@@ -399,11 +409,15 @@ impl Sim<'_> {
                     placement: self.policy,
                     oracle: &self.oracle,
                     ckpt: self.ckpt.as_ref(),
+                    index: self.index.as_ref(),
                 };
                 self.queue_policy.next(&ctx)
             };
             if let Some(d) = decision {
                 let job = self.queue.remove(d.queue_pos).expect("queue decision in range");
+                if let Some(ix) = &self.index {
+                    ix.on_dequeue(job);
+                }
                 self.start_job(job, d.placement.devices, d.placement.service_time, now);
                 continue;
             }
@@ -419,6 +433,11 @@ impl Sim<'_> {
                 if !doomed.is_empty() {
                     self.failed += doomed.len();
                     self.queue.retain(|j| !doomed.contains(j));
+                    if let Some(ix) = &self.index {
+                        for &j in &doomed {
+                            ix.on_dequeue(j);
+                        }
+                    }
                     continue;
                 }
             }
@@ -489,10 +508,16 @@ impl Sim<'_> {
             self.release(id, now);
         }
         self.queue.push_front(job);
+        if let Some(ix) = &self.index {
+            ix.on_enqueue_front(job);
+        }
     }
 
     fn apply_churn(&mut self, kind: ChurnKind, now: f64) {
         self.pool_dirty = true;
+        if let Some(ix) = &self.index {
+            ix.on_pool_change(); // pool-keyed estimates and orders are stale
+        }
         match kind {
             ChurnKind::Join(id, device_kind) => {
                 self.present.insert(id, device_kind);
@@ -609,7 +634,8 @@ pub fn simulate_fleet(
         oracle,
         horizon: opts.horizon,
         ckpt: opts.ckpt,
-        heap: BinaryHeap::new(),
+        eventq: opts.event_queue.make(),
+        index: opts.incremental_queue.then(QueueIndex::new),
         seq: 0,
         now: 0.0,
         present: env.devices.iter().map(|d| (d.id, d.kind)).collect(),
@@ -648,14 +674,14 @@ pub fn simulate_fleet(
     }
 
     let mut hit_horizon = false;
-    while let Some(Reverse(ev)) = sim.heap.pop() {
-        if ev.time > sim.horizon {
+    while let Some((time, _seq, kind)) = sim.eventq.pop() {
+        if time > sim.horizon {
             hit_horizon = true;
             break;
         }
-        sim.now = ev.time;
+        sim.now = time;
         sim.events += 1;
-        match ev.kind {
+        match kind {
             EventKind::Arrival(id) => {
                 // vet the arrival once: a job infeasible on the whole
                 // current pool (with no joins pending that could still
@@ -671,6 +697,9 @@ pub fn simulate_fleet(
                     sim.failed += 1;
                 } else {
                     sim.queue.push_back(id);
+                    if let Some(ix) = &sim.index {
+                        ix.on_enqueue_back(id);
+                    }
                 }
             }
             EventKind::Finish { job, token } => {
@@ -679,17 +708,20 @@ pub fn simulate_fleet(
                 }
                 let rj = sim.running.remove(&job).expect("finished job is running");
                 // every checkpoint of the completed attempt was paid
-                let point = sim.timeline(job, &rj).at(ev.time - rj.start);
+                let point = sim.timeline(job, &rj).at(time - rj.start);
                 sim.ckpt_count += point.ckpts;
                 sim.ckpt_overhead += point.ckpt_time;
                 for id in rj.devices {
-                    sim.release(id, ev.time);
+                    sim.release(id, time);
                 }
-                sim.finish_at[job] = Some(ev.time);
+                sim.finish_at[job] = Some(time);
+                if let Some(ix) = &sim.index {
+                    ix.on_state_change(); // devices were freed
+                }
             }
-            EventKind::Churn(kind) => sim.apply_churn(kind, ev.time),
+            EventKind::Churn(kind) => sim.apply_churn(kind, time),
         }
-        sim.try_dispatch(ev.time);
+        sim.try_dispatch(time);
     }
 
     let end = if hit_horizon { sim.horizon } else { sim.now };
@@ -746,6 +778,7 @@ pub fn simulate_fleet(
         })
         .collect();
 
+    let (oracle_hits, oracle_misses) = sim.oracle.cache_stats();
     Ok(FleetMetrics::assemble(RawFleet {
         per_job,
         failed: sim.failed,
@@ -759,6 +792,9 @@ pub fn simulate_fleet(
         ckpt_count: sim.ckpt_count,
         ckpt_overhead: sim.ckpt_overhead,
         events: sim.events,
+        oracle_hits,
+        oracle_misses,
+        rescans_avoided: sim.index.as_ref().map_or(0, |ix| ix.rescans_avoided()),
     }))
 }
 
@@ -1038,5 +1074,42 @@ mod tests {
         let a = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts).unwrap();
         let b = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts).unwrap();
         assert_eq!(a, b);
+    }
+
+    /// Scrub the observe counters that legitimately differ between the
+    /// legacy and incremental dispatch paths (the caches exist exactly
+    /// to skip oracle calls), leaving every simulated outcome.
+    fn scrubbed(mut m: FleetMetrics) -> FleetMetrics {
+        m.oracle_hits = 0;
+        m.oracle_misses = 0;
+        m.rescans_avoided = 0;
+        m
+    }
+
+    /// The scaling paths (calendar event queue, incremental dispatch
+    /// index) must be bit-identical to the original binary heap +
+    /// legacy full-rescan dispatch. The broad placement × queue × churn
+    /// sweep lives in `tests/prop_invariants.rs`; this pins the
+    /// churn-heavy EDF case in-module.
+    #[test]
+    fn calendar_and_incremental_match_heap_and_legacy() {
+        let env = Env::env_b();
+        let jobs = generate_jobs(TraceKind::Bursty, 12, 33);
+        let churn = generate_churn(&env, 48.0 * 3600.0, 3.0, 33);
+        let base = FleetOptions { queue: "edf".into(), ..Default::default() };
+        let legacy = FleetOptions {
+            event_queue: EventQueueKind::Heap,
+            incremental_queue: false,
+            ..base.clone()
+        };
+        let a = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &base).unwrap();
+        let b = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &legacy).unwrap();
+        assert_eq!(scrubbed(a.clone()), scrubbed(b));
+
+        // same dispatch path, different event queue: full equality,
+        // counters included
+        let heap_inc = FleetOptions { event_queue: EventQueueKind::Heap, ..base.clone() };
+        let c = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &heap_inc).unwrap();
+        assert_eq!(a, c);
     }
 }

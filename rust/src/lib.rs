@@ -32,6 +32,7 @@
 //! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts (`pjrt` feature) |
 //! | [`exec`]    | real multi-threaded hybrid-parallel training engine |
 //! | [`fleet`]   | discrete-event multi-tenant scheduler: arrivals, churn, queue + placement policies, deadlines/SLOs, checkpointing |
+//! | [`fleet::eventq`] | pluggable event-queue backends for the fleet loop: calendar/bucket queue (default) and binary heap, bit-identical orderings |
 //! | [`fed`]     | round-based federated adapter-aggregation simulator: client selection, straggler policies, availability churn, secure-agg/DP knobs |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
 //! | [`data`]    | synthetic GLUE-like workload generators |
@@ -179,6 +180,42 @@
 //! `pacpp fed --select <name>` and [`fed::FedOptions::select`] resolve
 //! policies by registry name; the `fed` / `fed_select` experiments
 //! compare every registered policy on the shared grids.
+//!
+//! ## Scaling knobs
+//!
+//! The simulators are sized for 1M-job fleet traces and 100k-client
+//! federated populations. Every scaling path is same-seed
+//! bit-identical to the simple implementation it replaced —
+//! `tests/prop_invariants.rs` pins the equivalences — so the knobs
+//! below trade only speed, never results:
+//!
+//! * [`fleet::FleetOptions::event_queue`] — event-queue backend
+//!   ([`fleet::EventQueueKind`]): `Calendar` (default; O(1) amortized
+//!   bucket queue) or `Heap` (the reference `BinaryHeap`). CLI:
+//!   `pacpp fleet --event-queue calendar|heap`.
+//! * [`fleet::FleetOptions::incremental_queue`] — incremental dispatch
+//!   order (default `true`): SJF/EDF keep sorted orders and the
+//!   backfill/SJF/EDF/LLF paths memoize oracle estimates and placement
+//!   failures across dispatch attempts, invalidated by pool/state
+//!   epochs, instead of rescanning the whole backlog per event. CLI:
+//!   `pacpp fleet --legacy-dispatch` turns it off.
+//! * [`fed::FedOptions::shards`] — per-client quoting/trace shards
+//!   (`0` = auto: all cores at ≥ [`fed::PAR_CLIENT_THRESHOLD`]
+//!   clients). Property-tested shard-count-invariant. CLI:
+//!   `pacpp fed --shards N`.
+//! * [`util::stats::SKETCH_EXACT_LIMIT`] — percentile accounting
+//!   switches from exact sorted samples to the deterministic P²-style
+//!   [`util::stats::QuantileSketch`] above this many observations
+//!   (exact below it, streaming O(1)-memory above).
+//!
+//! The observe counters ride along in every report's metadata
+//! (`events_total`, `oracle_hits_total`, `oracle_misses_total`,
+//! `rescans_avoided_total`) and in [`fleet::FleetMetrics`] /
+//! [`fed::FedMetrics`], so scaling regressions show up in the diffable
+//! `BENCH_*.json` artifacts. `cargo bench --bench bench_fleet` /
+//! `--bench bench_fed` carry 100k/1M-job and 100k-client scale cases
+//! (events/sec and rounds/sec printed per case); CI smokes the same
+//! paths via `BENCH_fleet_scale.json` / `BENCH_fed_scale.json`.
 
 pub mod baselines;
 pub mod cache;

@@ -16,6 +16,7 @@
 //!                [--jobs 40] [--seed 42] [--churn EVENTS_PER_HOUR]
 //!                [--churn-file FILE] [--horizon HOURS] [--deadline SCALE]
 //!                [--ckpt K] [--ckpt-cost SECS] [--strategy pac+]
+//!                [--event-queue calendar|heap] [--legacy-dispatch]
 //!                [--format text|json|csv] [--out FILE]
 //! pacpp fed      [--rounds 50] [--clients 24] [--k 6]
 //!                [--select all|uniform|power-of-d|availability|fair[,..]]
@@ -25,7 +26,7 @@
 //!                [--model t5-base] [--strategy pac+] [--horizon HOURS]
 //!                [--deadline-mult X] [--over-select S] [--secure-agg]
 //!                [--dp-cost SECS] [--jitter X] [--target ROUNDS]
-//!                [--format text|json|csv] [--out FILE]
+//!                [--shards N] [--format text|json|csv] [--out FILE]
 //! pacpp timeline --env env_a [--microbatch 4] [--m 6] [--width 120]
 //!                                  (render a plan's 1F1B schedule as ASCII art)
 //! pacpp table    1|5|6|7           (deprecated alias for `exp run table<N>`)
@@ -45,8 +46,8 @@ use pacpp::fed::{
 };
 use pacpp::fleet::{
     churn_from_json, generate_churn, generate_jobs, simulate_fleet, CheckpointSpec,
-    FleetOptions, PlacementPolicy, PolicyRegistry, QueuePolicyRegistry, TraceKind,
-    DEFAULT_CKPT_COST,
+    EventQueueKind, FleetOptions, PlacementPolicy, PolicyRegistry, QueuePolicyRegistry,
+    TraceKind, DEFAULT_CKPT_COST,
 };
 use pacpp::model::graph::LayerGraph;
 use pacpp::model::{Method, ModelSpec, Precision};
@@ -464,6 +465,14 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     // non-negative count rather than the strictly-positive get_count
     let ckpt_k = args.get_count0("ckpt", 0)?;
     let ckpt_cost = args.get_rate("ckpt-cost", DEFAULT_CKPT_COST)?;
+    // scaling knobs: both paths are bit-identical to the defaults
+    // (property-tested) — these exist for benchmarking them against
+    // each other on big runs
+    let eventq_name = args.get_str("event-queue", "calendar")?;
+    let Some(event_queue) = EventQueueKind::parse(eventq_name) else {
+        anyhow::bail!("unknown event queue {eventq_name:?} (calendar|heap)");
+    };
+    let incremental_queue = !args.flag("legacy-dispatch");
     let format = parse_format(args)?;
     validate_out(args)?;
 
@@ -491,6 +500,8 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         queue: queue.name().to_string(),
         deadline_scale,
         ckpt: if ckpt_k > 0 { Some(CheckpointSpec::new(ckpt_k, ckpt_cost)) } else { None },
+        event_queue,
+        incremental_queue,
     };
     let jobs = generate_jobs(trace, n_jobs, seed);
     // `--churn-file` replays a recorded JSON event list (see
@@ -527,9 +538,17 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     .meta("churn_file", churn_file.as_deref().unwrap_or("-"))
     .meta("deadline_scale", deadline_scale)
     .meta("ckpt", ckpt_k)
-    .meta("ckpt_cost", ckpt_cost);
+    .meta("ckpt_cost", ckpt_cost)
+    .meta("event_queue", event_queue.name())
+    .meta("incremental_queue", incremental_queue);
+    // observe counters, summed over the policy rows
+    let (mut events, mut hits, mut misses, mut rescans) = (0usize, 0usize, 0usize, 0usize);
     for policy in &policies {
         let m = simulate_fleet(&env, &jobs, &churn, policy.as_ref(), &opts)?;
+        events += m.events;
+        hits += m.oracle_hits;
+        misses += m.oracle_misses;
+        rescans += m.rescans_avoided;
         report.push(exp::fleet_row(
             &env.name,
             trace.name(),
@@ -540,6 +559,11 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             &m,
         ));
     }
+    report = report
+        .meta("events_total", events)
+        .meta("oracle_hits_total", hits)
+        .meta("oracle_misses_total", misses)
+        .meta("rescans_avoided_total", rescans);
     emit_reports(&[report], format, false, args)
 }
 
@@ -588,6 +612,8 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
     let dp_cost = args.get_rate("dp-cost", 0.0)?;
     let jitter = args.get_rate("jitter", 0.25)?;
     let target = args.get_rate("target", 0.0)?;
+    // scaling knob: quoting-pass shards, 0 = auto (see FedOptions)
+    let shards = args.get_count0("shards", 0)?;
     let format = parse_format(args)?;
     validate_out(args)?;
 
@@ -627,7 +653,10 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
     .meta("secure_agg", args.flag("secure-agg"))
     .meta("dp_cost", dp_cost)
     .meta("jitter", jitter)
-    .meta("target", target);
+    .meta("target", target)
+    .meta("shards", shards);
+    // observe counters, summed over the selection rows
+    let (mut hits, mut misses) = (0usize, 0usize);
     for select in &selects {
         let opts = FedOptions {
             rounds,
@@ -648,10 +677,14 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
             dp_cost,
             jitter,
             target_rounds: target,
+            shards,
         };
         let m = simulate_fed(&opts)?;
+        hits += m.oracle_hits;
+        misses += m.oracle_misses;
         report.push(exp::fed_row(net_name, &opts, &m));
     }
+    report = report.meta("oracle_hits_total", hits).meta("oracle_misses_total", misses);
     emit_reports(&[report], format, false, args)
 }
 

@@ -1,4 +1,12 @@
 //! Small statistics helpers shared by the bench harness and experiments.
+//!
+//! Besides the exact [`Summary`]/[`percentile`] helpers this module
+//! hosts [`QuantileSketch`], the deterministic streaming quantile
+//! estimator the metric assemblers use at fleet scale: below
+//! [`SKETCH_EXACT_LIMIT`] observations it answers with the exact
+//! sorted interpolation (bit-identical to collect-and-sort), above it
+//! it switches to fixed-state P² estimation so a million-sample run
+//! never materialises or sorts the full sample vector.
 
 /// Summary statistics over a sample of measurements.
 #[derive(Debug, Clone, PartialEq)]
@@ -17,36 +25,41 @@ impl Summary {
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "empty sample");
         let n = samples.len();
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = sorted.iter().sum::<f64>() / n as f64;
-        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        // Moments come straight off the input; only the order
+        // statistics need the sorted copy.
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / n.max(2) as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n,
             mean,
             std: var.sqrt(),
             min: sorted[0],
-            p50: percentile(&sorted, 0.50),
-            p95: percentile(&sorted, 0.95),
-            p99: percentile(&sorted, 0.99),
+            p50: percentile(&sorted, 0.50).expect("non-empty"),
+            p95: percentile(&sorted, 0.95).expect("non-empty"),
+            p99: percentile(&sorted, 0.99).expect("non-empty"),
             max: sorted[n - 1],
         }
     }
 }
 
-/// Linear-interpolated percentile over a **sorted** slice.
-pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
-    assert!((0.0..=1.0).contains(&q));
+/// Linear-interpolated percentile over a **sorted** slice; `None` on
+/// empty input.
+pub fn percentile(sorted: &[f64], q: f64) -> Option<f64> {
+    assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+    if sorted.is_empty() {
+        return None;
+    }
     if sorted.len() == 1 {
-        return sorted[0];
+        return Some(sorted[0]);
     }
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     let frac = pos - lo as f64;
-    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    Some(sorted[lo] * (1.0 - frac) + sorted[hi] * frac)
 }
 
 /// Geometric mean (used for speedup aggregation across workloads).
@@ -54,6 +67,240 @@ pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
     let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
     (s / xs.len() as f64).exp()
+}
+
+/// Exact-mode capacity of [`QuantileSketch`]: runs with at most this
+/// many observations keep the raw samples and report sorted-exact
+/// percentiles (bit-identical to the historical collect-and-sort
+/// path), so every golden/grid test — all far below this — is
+/// unaffected by the streaming estimator. This is the "sketch
+/// threshold" scaling knob: raise it for more exactness, lower it for
+/// a smaller memory ceiling.
+pub const SKETCH_EXACT_LIMIT: usize = 4096;
+
+/// One P² estimator (Jain & Chlamtac, 1985): five markers tracking a
+/// single quantile with O(1) state and no randomness.
+#[derive(Debug, Clone)]
+struct P2Cell {
+    q: f64,
+    /// Marker heights `q_0..q_4` (estimates of the 0, q/2, q, (1+q)/2
+    /// and 1 quantiles).
+    heights: [f64; 5],
+    /// Marker positions, 1-based as in the paper.
+    pos: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+    /// Per-observation desired-position increments.
+    incr: [f64; 5],
+}
+
+impl P2Cell {
+    /// Seed the five markers from an already-sorted sample (the spilled
+    /// exact buffer), placing each marker on the order statistic
+    /// nearest its ideal position.
+    fn seed(q: f64, sorted: &[f64]) -> P2Cell {
+        let m = sorted.len();
+        debug_assert!(m >= 5, "seed needs at least 5 samples");
+        let incr = [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0];
+        let mut pos = [0.0; 5];
+        for i in 0..5 {
+            let ideal = (1.0 + (m - 1) as f64 * incr[i]).round();
+            // keep marker i inside [i+1, m-(4-i)] so the cascade below
+            // can always restore strict monotonicity
+            pos[i] = ideal.clamp((i + 1) as f64, (m - (4 - i)) as f64);
+        }
+        for i in 1..5 {
+            if pos[i] <= pos[i - 1] {
+                pos[i] = pos[i - 1] + 1.0;
+            }
+        }
+        let mut heights = [0.0; 5];
+        for i in 0..5 {
+            heights[i] = sorted[pos[i] as usize - 1];
+        }
+        let mut desired = [0.0; 5];
+        for i in 0..5 {
+            desired[i] = 1.0 + (m - 1) as f64 * incr[i];
+        }
+        P2Cell { q, heights, pos, desired, incr }
+    }
+
+    fn add(&mut self, x: f64) {
+        // Locate the marker interval containing x, extending the
+        // extremes when it falls outside them.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 1..4 {
+                if x >= self.heights[i] {
+                    k = i;
+                }
+            }
+            k
+        };
+        for p in self.pos[k + 1..].iter_mut() {
+            *p += 1.0;
+        }
+        for i in 0..5 {
+            self.desired[i] += self.incr[i];
+        }
+        // Nudge interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let d = d.signum();
+                let candidate = self.parabolic(i, d);
+                self.heights[i] =
+                    if self.heights[i - 1] < candidate && candidate < self.heights[i + 1] {
+                        candidate
+                    } else {
+                        self.linear(i, d)
+                    };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let h = &self.heights;
+        let n = &self.pos;
+        h[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (h[i + 1] - h[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (h[i] - h[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i] + d * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    fn estimate(&self) -> f64 {
+        self.heights[2]
+    }
+}
+
+/// Deterministic streaming quantile estimator over a fixed set of
+/// tracked quantiles.
+///
+/// Up to `exact_limit` observations the raw samples are buffered and
+/// queries answer with the exact [`percentile`] interpolation — the
+/// same values (to the bit) as the historical collect-and-sort code.
+/// Past the limit the buffer is spilled once into one [`P2Cell`] per
+/// tracked quantile and subsequent observations stream through in O(1)
+/// per tracked quantile with no further allocation. The whole state is
+/// a pure function of the input sequence: no RNG, no hashing, no
+/// platform-dependent iteration order.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    quantiles: Vec<f64>,
+    exact_limit: usize,
+    exact: Vec<f64>,
+    count: usize,
+    min: f64,
+    max: f64,
+    cells: Vec<P2Cell>,
+}
+
+impl QuantileSketch {
+    /// A sketch tracking `quantiles` (each in `[0, 1]`) that stays
+    /// exact up to `exact_limit` observations (clamped to at least 8 so
+    /// the P² seeding always has enough samples).
+    pub fn new(quantiles: &[f64], exact_limit: usize) -> QuantileSketch {
+        for &q in quantiles {
+            assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+        }
+        QuantileSketch {
+            quantiles: quantiles.to_vec(),
+            exact_limit: exact_limit.max(8),
+            exact: Vec::new(),
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            cells: Vec::new(),
+        }
+    }
+
+    /// Observe one sample.
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.cells.is_empty() {
+            self.exact.push(x);
+            if self.exact.len() > self.exact_limit {
+                self.spill();
+            }
+        } else {
+            for cell in &mut self.cells {
+                cell.add(x);
+            }
+        }
+    }
+
+    fn spill(&mut self) {
+        let mut sorted = std::mem::take(&mut self.exact);
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        self.cells = self
+            .quantiles
+            .iter()
+            .map(|&q| P2Cell::seed(q, &sorted))
+            .collect();
+    }
+
+    /// Number of observations so far.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Whether queries still come from the exact buffer.
+    pub fn is_exact(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Estimate several quantiles at once, sorting the exact buffer at
+    /// most once (callers should prefer this over repeated
+    /// [`QuantileSketch::quantile`] calls). `None` entries mean the
+    /// sketch saw no observations.
+    ///
+    /// Panics if a requested quantile is not one of the tracked set and
+    /// the sketch has already spilled to streaming mode.
+    pub fn quantile_many(&self, qs: &[f64]) -> Vec<Option<f64>> {
+        if self.count == 0 {
+            return qs.iter().map(|_| None).collect();
+        }
+        if self.cells.is_empty() {
+            let mut sorted = self.exact.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            return qs.iter().map(|&q| percentile(&sorted, q)).collect();
+        }
+        qs.iter()
+            .map(|&q| {
+                let cell = self
+                    .quantiles
+                    .iter()
+                    .position(|&t| (t - q).abs() < 1e-9)
+                    .map(|i| &self.cells[i])
+                    .unwrap_or_else(|| panic!("quantile {q} not tracked by this sketch"));
+                Some(cell.estimate().clamp(self.min, self.max))
+            })
+            .collect()
+    }
+
+    /// Estimate one quantile; see [`QuantileSketch::quantile_many`].
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        self.quantile_many(&[q]).pop().expect("one query, one answer")
+    }
 }
 
 #[cfg(test)]
@@ -73,9 +320,14 @@ mod tests {
     #[test]
     fn percentile_interpolates() {
         let v = [0.0, 10.0];
-        assert!((percentile(&v, 0.5) - 5.0).abs() < 1e-12);
-        assert_eq!(percentile(&v, 0.0), 0.0);
-        assert_eq!(percentile(&v, 1.0), 10.0);
+        assert!((percentile(&v, 0.5).unwrap() - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&v, 0.0), Some(0.0));
+        assert_eq!(percentile(&v, 1.0), Some(10.0));
+    }
+
+    #[test]
+    fn percentile_of_empty_is_none() {
+        assert_eq!(percentile(&[], 0.5), None);
     }
 
     #[test]
@@ -88,5 +340,89 @@ mod tests {
     #[should_panic]
     fn empty_summary_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn sketch_below_limit_matches_exact_sort_bitwise() {
+        let mut sketch = QuantileSketch::new(&[0.5, 0.95, 0.99], 4096);
+        let mut vals = Vec::new();
+        let mut x = 17u64;
+        for _ in 0..1000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = (x >> 11) as f64 / (1u64 << 53) as f64 * 500.0;
+            vals.push(v);
+            sketch.add(v);
+        }
+        assert!(sketch.is_exact());
+        vals.sort_by(|a, b| a.total_cmp(b));
+        let got = sketch.quantile_many(&[0.5, 0.95, 0.99]);
+        for (g, q) in got.iter().zip([0.5, 0.95, 0.99]) {
+            assert_eq!(*g, percentile(&vals, q), "q={q} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn sketch_streams_accurately_past_limit() {
+        // 100k samples from a deterministic LCG, limit 256: the P²
+        // estimate of the uniform's quantiles should land within a few
+        // percent of the exact value.
+        let mut sketch = QuantileSketch::new(&[0.5, 0.95, 0.99], 256);
+        let mut vals = Vec::new();
+        let mut x = 99u64;
+        for _ in 0..100_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = (x >> 11) as f64 / (1u64 << 53) as f64;
+            vals.push(v);
+            sketch.add(v);
+        }
+        assert!(!sketch.is_exact());
+        assert_eq!(sketch.len(), 100_000);
+        vals.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.5, 0.95, 0.99] {
+            let est = sketch.quantile(q).unwrap();
+            let exact = percentile(&vals, q).unwrap();
+            assert!(
+                (est - exact).abs() < 0.02,
+                "q={q}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_is_deterministic() {
+        let feed = |seed: u64| {
+            let mut s = QuantileSketch::new(&[0.5, 0.99], 64);
+            let mut x = seed;
+            for _ in 0..5000 {
+                x = x.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+                s.add((x >> 12) as f64);
+            }
+            s.quantile_many(&[0.5, 0.99])
+        };
+        assert_eq!(feed(42), feed(42));
+    }
+
+    #[test]
+    fn sketch_empty_and_single() {
+        let mut s = QuantileSketch::new(&[0.5], 16);
+        assert!(s.is_empty());
+        assert_eq!(s.quantile(0.5), None);
+        s.add(7.5);
+        assert_eq!(s.quantile(0.5), Some(7.5));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn sketch_monotone_stream() {
+        // A sorted stream is the adversarial case for P² seeding; the
+        // estimate must still stay inside the observed range and close
+        // to the true quantile.
+        let mut s = QuantileSketch::new(&[0.5], 32);
+        for i in 0..10_000 {
+            s.add(i as f64);
+        }
+        let est = s.quantile(0.5).unwrap();
+        assert!(est >= 0.0 && est <= 9999.0);
+        assert!((est - 4999.5).abs() < 500.0, "p50 of 0..10000 ≈ 5000, got {est}");
     }
 }

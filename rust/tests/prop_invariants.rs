@@ -1,15 +1,19 @@
 //! Property tests (via `util::prop`) for cross-module invariants:
 //! `exec::partition_layers` (the pipelined engine's stage splitter),
-//! the fleet event loop's same-seed determinism, the EASY-backfill
+//! the fleet event loop's same-seed determinism, the scaling-path
+//! equivalences (calendar event queue vs binary heap, incremental vs
+//! legacy dispatch, fed quoting shards), the EASY-backfill
 //! no-head-delay guarantee, the bounded-loss checkpoint arithmetic,
 //! the Jain fairness index range, and the `cluster::Network`
 //! collective-timing edge cases (n = 0/1, zero bytes, monotonicity).
 
 use pacpp::cluster::{Env, Network};
 use pacpp::exec::partition_layers;
+use pacpp::fed::{simulate_fed, FedOptions, FedTraceKind};
 use pacpp::fleet::{
     generate_churn, generate_jobs, jain_index, simulate_fleet, AttemptTimeline, BestFit,
-    CheckpointSpec, FleetOptions, PreemptReplan, TraceKind,
+    CheckpointSpec, EventQueueKind, FleetMetrics, FleetOptions, PlacementPolicy,
+    PreemptReplan, TraceKind,
 };
 use pacpp::util::prop::{check, forall};
 
@@ -115,6 +119,107 @@ fn fleet_event_loop_is_deterministic() {
             let b = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts)
                 .map_err(|e| e.to_string())?;
             check(a == b, format!("same-seed runs diverged:\n  {a:?}\n  {b:?}"))
+        },
+    );
+}
+
+#[derive(Debug)]
+struct EquivCase {
+    seed: u64,
+    n_jobs: usize,
+    queue: &'static str,
+    churn: bool,
+}
+
+/// Drop the observe counters that legitimately differ between the
+/// legacy and incremental dispatch paths (the caches exist exactly to
+/// skip oracle calls); every simulated outcome stays.
+fn scrub_counters(mut m: FleetMetrics) -> FleetMetrics {
+    m.oracle_hits = 0;
+    m.oracle_misses = 0;
+    m.rescans_avoided = 0;
+    m
+}
+
+/// The scaling paths must never change a run: the calendar event queue
+/// is bit-identical to the binary heap (full equality — same dispatch
+/// path, counters included), and the incremental dispatch index is
+/// bit-identical to the legacy full-rescan policies once the observe
+/// counters are scrubbed. Swept across queue discipline × placement
+/// policy × churn.
+#[test]
+fn scaling_paths_are_bit_identical() {
+    let env = Env::env_b();
+    const QUEUES: [&str; 5] = ["fifo", "backfill", "sjf", "edf", "llf"];
+    forall(
+        0xEC4B1,
+        5,
+        |g| EquivCase {
+            seed: 1 + g.int(0, 1_000_000) as u64 * 2_654_435_761,
+            n_jobs: g.int(5, 9),
+            queue: QUEUES[g.int(0, QUEUES.len() - 1)],
+            churn: g.bool(),
+        },
+        |case| {
+            let jobs = generate_jobs(TraceKind::Bursty, case.n_jobs, case.seed);
+            let base = FleetOptions { queue: case.queue.into(), ..Default::default() };
+            let churn = if case.churn {
+                generate_churn(&env, base.horizon, 3.0, case.seed)
+            } else {
+                Vec::new()
+            };
+            let heap_inc = FleetOptions { event_queue: EventQueueKind::Heap, ..base.clone() };
+            let legacy = FleetOptions { incremental_queue: false, ..heap_inc.clone() };
+            for policy in [&BestFit as &dyn PlacementPolicy, &PreemptReplan] {
+                let a = simulate_fleet(&env, &jobs, &churn, policy, &base)
+                    .map_err(|e| e.to_string())?;
+                let b = simulate_fleet(&env, &jobs, &churn, policy, &heap_inc)
+                    .map_err(|e| e.to_string())?;
+                check(
+                    a == b,
+                    format!("{}/{}: calendar diverged from heap", policy.name(), case.queue),
+                )?;
+                let c = simulate_fleet(&env, &jobs, &churn, policy, &legacy)
+                    .map_err(|e| e.to_string())?;
+                check(
+                    scrub_counters(a) == scrub_counters(c),
+                    format!(
+                        "{}/{}: incremental dispatch diverged from legacy",
+                        policy.name(),
+                        case.queue
+                    ),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The fed quoting-pass shard count never changes the metrics: quotes
+/// are pure per client and the oracle counters are computed
+/// shard-invariantly.
+#[test]
+fn fed_shard_count_is_metric_invariant() {
+    forall(
+        0x54A8D,
+        4,
+        |g| (1 + g.int(0, 1_000_000) as u64 * 0x9E3779B9, g.int(8, 20)),
+        |&(seed, clients)| {
+            let base = FedOptions {
+                rounds: 5,
+                clients,
+                k: 4,
+                seed,
+                trace: FedTraceKind::Flaky,
+                ..Default::default()
+            };
+            let a = simulate_fed(&base).map_err(|e| e.to_string())?;
+            for shards in [2, clients] {
+                let b = simulate_fed(&FedOptions { shards, ..base.clone() })
+                    .map_err(|e| e.to_string())?;
+                check(a == b, format!("shards={shards} changed the metrics"))?;
+            }
+            Ok(())
         },
     );
 }
