@@ -16,11 +16,13 @@
 
 use pacpp::cluster::Env;
 use pacpp::fleet::{
-    generate_churn, simulate_fleet, BestFit, CheckpointSpec, FleetOptions, Job,
-    PreemptReplan,
+    generate_churn, simulate_fleet, simulate_fleet_with, BestFit, CheckpointSpec, FleetOptions,
+    Job, PreemptReplan,
 };
+use pacpp::learn::{LearnedQueue, Mlp, N_FEATURES};
 use pacpp::model::ModelSpec;
 use pacpp::util::bench::Bench;
+use pacpp::util::rng::Rng;
 
 /// `n` identical small jobs, one arrival every 30 s: the oracle
 /// memoizes their shape once, so the bench times the event loop, not
@@ -147,6 +149,32 @@ fn main() {
                 m.restarts,
                 m.ckpt_count,
                 m.ckpt_overhead
+            );
+        }
+    }
+
+    // The learned-discipline inference path: per dispatch, featurize
+    // every placeable candidate and run one MLP forward each. The
+    // weights are seeded-random — inference cost does not depend on
+    // training — so this times exactly the per-decision overhead
+    // `LearnedQueue` adds over the FIFO cases above.
+    if b.enabled("fleet_event_loop_learned_1k_jobs") {
+        let jobs = uniform_jobs(1_000);
+        let learned = LearnedQueue::new(Mlp::new(&[N_FEATURES, 16, 1], &mut Rng::new(1)));
+        let m = simulate_fleet_with(&env, &jobs, &[], &BestFit, &learned, &opts()).unwrap();
+        assert_eq!(m.completed, 1_000, "learned bench jobs must all complete");
+        let res = b
+            .run("fleet_event_loop_learned_1k_jobs", || {
+                simulate_fleet_with(&env, &jobs, &[], &BestFit, &learned, &opts()).unwrap()
+            })
+            .cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.0} events/sec, {:.0} jobs/sec ({} events, {} jobs)",
+                m.events as f64 / r.summary.mean,
+                m.completed as f64 / r.summary.mean,
+                m.events,
+                m.completed
             );
         }
     }

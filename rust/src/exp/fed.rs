@@ -55,11 +55,14 @@ pub fn fed_schema(name: &str, title: &str) -> Report {
         .column("makespan", ColType::Secs)
 }
 
-/// One metrics row in the shared schema.
-pub fn fed_row(net: &str, opts: &FedOptions, m: &FedMetrics) -> Vec<Cell> {
+/// One metrics row in the shared schema. `trace` is the availability
+/// label — usually `opts.trace.name()`, but `pacpp fed --churn-file`
+/// passes `"churn-file"` (the traces came from a recorded fleet churn
+/// trace, not a generated [`FedTraceKind`] pattern).
+pub fn fed_row(net: &str, trace: &str, opts: &FedOptions, m: &FedMetrics) -> Vec<Cell> {
     vec![
         Cell::Str(net.into()),
-        Cell::Str(opts.trace.name().into()),
+        Cell::Str(trace.into()),
         Cell::Str(opts.select.clone()),
         Cell::Str(opts.straggler.clone()),
         Cell::Str(opts.agg.name().into()),
@@ -137,7 +140,7 @@ pub fn fed_report() -> Report {
     .meta("strategy", &base.strategy)
     .meta("target", GRID_TARGET);
     for (opts, m) in &results {
-        report.push(fed_row("lan", opts, m));
+        report.push(fed_row("lan", opts.trace.name(), opts, m));
     }
     observe_meta(report, &results)
 }
@@ -200,7 +203,7 @@ pub fn fed_select_report() -> Report {
     .meta("strategy", &base.strategy)
     .meta("target", GRID_TARGET);
     for ((_, _, net), (opts, m)) in combos.iter().zip(&results) {
-        report.push(fed_row(net, opts, m));
+        report.push(fed_row(net, opts.trace.name(), opts, m));
     }
     observe_meta(report, &results)
 }

@@ -1,0 +1,155 @@
+//! The `fleet_learn` experiment: train the in-simulator DQN scheduler
+//! ([`crate::learn`]), round-trip its weights through the JSON dump
+//! format, and evaluate the reloaded [`crate::learn::LearnedQueue`]
+//! against the hand-written disciplines on held-out workloads.
+//!
+//! The report has two row phases sharing one schema:
+//!
+//! * `train` rows — the episode curve (reward, ε, fitted-Q loss, and
+//!   the episode's own goodput/miss-rate under the exploring policy);
+//! * `eval` rows — one per policy (the learned one plus
+//!   FIFO / EASY-backfill / EDF), aggregated over the held-out seeds
+//!   ([`crate::learn::held_out_seed`] — disjoint from every training
+//!   seed by construction).
+//!
+//! The weights the eval rows use are **not** the in-memory trained
+//! network: they are dumped to JSON text and parsed back first
+//! ([`crate::learn::Mlp::to_json`]/[`from_json`](crate::learn::Mlp::from_json)),
+//! so the experiment exercises the same dump → reload path the CLI and
+//! CI smoke use. The dump is bit-exact, so this costs nothing but
+//! proves the artifact is sufficient.
+
+use anyhow::{Context, Result};
+
+use crate::cluster::Env;
+use crate::fleet::QueuePolicyRegistry;
+use crate::learn::{evaluate, train, LearnedQueue, Mlp, TrainConfig};
+use crate::util::json::Json;
+
+use super::report::{Cell, ColType, Report};
+
+/// The learn Report's empty shell: one schema shared by the `train`
+/// and `eval` phases (cells not meaningful for a phase are
+/// [`Cell::Missing`]).
+pub fn learn_schema(name: &str, title: &str) -> Report {
+    Report::new(name, title)
+        .column("phase", ColType::Str) // "train" | "eval"
+        .column("episode", ColType::Int) // train rows; Missing on eval
+        .column("policy", ColType::Str)
+        .column("steps", ColType::Int) // dispatch decisions taken
+        .column("reward", ColType::Float)
+        .column("epsilon", ColType::Float)
+        .column("loss", ColType::Float)
+        .column("goodput", ColType::Float) // deadline-met jobs/hour
+        .column("miss_rate", ColType::Float)
+        .column("completed", ColType::Int)
+        .column("met", ColType::Int)
+}
+
+/// Queue policies the learned scheduler is evaluated against.
+const EVAL_BASELINES: &[&str] = &["fifo", "backfill", "edf"];
+
+/// Train + dump + reload + evaluate, as one typed report. The returned
+/// [`Mlp`] is the *reloaded* network (identical to the trained one —
+/// the dump is bit-exact), so callers can persist exactly what was
+/// evaluated.
+pub fn learn_report(env: &Env, cfg: &TrainConfig) -> Result<(Report, Mlp)> {
+    let result = train(env, cfg)?;
+
+    // round-trip the weights through the JSON dump format: what the
+    // eval rows measure is what `--weights` / a later `from_json` gets
+    let dump = result.net.to_json().to_string_pretty();
+    let net = Mlp::from_json(
+        &Json::parse(&dump).map_err(|e| anyhow::anyhow!("re-parsing weight dump: {e}"))?,
+    )
+    .context("reloading dumped weights")?;
+
+    let mut report = learn_schema(
+        "fleet_learn",
+        "Learn — in-sim DQN training curve + held-out eval vs hand-written disciplines",
+    )
+    .meta("env", env.name.clone())
+    .meta("episodes", cfg.episodes)
+    .meta("jobs", cfg.jobs)
+    .meta("seed", cfg.seed)
+    .meta("eval_seeds", cfg.eval_seeds)
+    .meta("hidden", cfg.dqn.hidden)
+    .meta("lr", cfg.dqn.lr)
+    .meta("gamma", cfg.dqn.gamma)
+    .meta("weights_bytes", dump.len());
+
+    for e in &result.episodes {
+        report.push(vec![
+            Cell::Str("train".into()),
+            Cell::Int(e.episode as i64),
+            Cell::Str("Learned-trainer".into()),
+            Cell::Int(e.steps as i64),
+            Cell::Float(e.reward),
+            Cell::Float(e.epsilon),
+            Cell::opt(e.loss, Cell::Float),
+            Cell::Float(e.goodput),
+            Cell::Float(e.miss_rate),
+            Cell::Int(e.completed as i64),
+            Cell::Int(e.met as i64),
+        ]);
+    }
+
+    let learned = LearnedQueue::new(net.clone());
+    let registry = QueuePolicyRegistry::with_defaults();
+    let mut evals = vec![evaluate(env, cfg, &learned)?];
+    for name in EVAL_BASELINES {
+        evals.push(evaluate(env, cfg, registry.get_or_err(name)?.as_ref())?);
+    }
+    for ev in &evals {
+        report.push(vec![
+            Cell::Str("eval".into()),
+            Cell::Missing,
+            Cell::Str(ev.policy.clone()),
+            Cell::Missing,
+            Cell::Missing,
+            Cell::Missing,
+            Cell::Missing,
+            Cell::Float(ev.goodput),
+            Cell::Float(ev.miss_rate),
+            Cell::Int(ev.completed as i64),
+            Cell::Int(ev.met as i64),
+        ]);
+    }
+
+    Ok((report, net))
+}
+
+/// Registry entry point: the CI-fast default configuration (small
+/// episode count, small workloads) on Env.A. For real training runs
+/// use `pacpp learn` with explicit `--episodes/--jobs`.
+pub fn fleet_learn_report() -> Result<Report> {
+    let env = Env::env_a();
+    let cfg = TrainConfig { episodes: 8, jobs: 20, ..TrainConfig::default() };
+    Ok(learn_report(&env, &cfg)?.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learn_report_has_train_and_eval_phases() {
+        let env = Env::env_a();
+        let cfg = TrainConfig { episodes: 2, jobs: 8, eval_seeds: 1, ..TrainConfig::default() };
+        let (report, net) = learn_report(&env, &cfg).expect("learn_report");
+        let rows = report.rows();
+        // 2 train rows + learned + 3 baselines
+        assert_eq!(rows.len(), 2 + 1 + EVAL_BASELINES.len());
+        let phases: Vec<_> = rows
+            .iter()
+            .map(|r| match &r[0] {
+                Cell::Str(s) => s.as_str(),
+                other => panic!("phase cell should be Str, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(phases[..2], ["train", "train"]);
+        assert!(phases[2..].iter().all(|p| *p == "eval"));
+        // the returned net survived a dump→reload round trip
+        assert_eq!(net.n_in(), crate::learn::N_FEATURES);
+    }
+}

@@ -33,6 +33,7 @@
 //! | `fleet_users`         | per-user SLO breakdown: p95, deadline hits, fairness shares |
 //! | `fed`                 | federated adapter aggregation: selection × straggler grid |
 //! | `fed_select`          | client selection × availability trace × network grid |
+//! | `fleet_learn`         | in-sim DQN training curve + held-out eval vs FIFO/backfill/EDF |
 //!
 //! CLI: `pacpp exp list`, `pacpp exp run <name> [--format text|json|csv]
 //! [--out FILE]`, `pacpp exp all`. See the crate docs ("Adding a new
@@ -47,6 +48,7 @@ pub mod ablations;
 pub mod accuracy;
 pub mod fed;
 pub mod fleet;
+pub mod learn;
 pub mod registry;
 pub mod report;
 pub mod tables;
@@ -56,6 +58,7 @@ pub use fleet::{
     fleet_checkpoint_report, fleet_churn_report, fleet_report, fleet_row, fleet_schema,
     fleet_users_report, fleet_users_schema,
 };
+pub use learn::{fleet_learn_report, learn_report, learn_schema};
 pub use registry::{sweep_report, sweep_schema, ExpContext, Experiment, ExperimentRegistry};
 pub use report::{Cell, ColType, Column, Format, Report};
 pub use tables::*;

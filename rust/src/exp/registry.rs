@@ -11,7 +11,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::accuracy::Budget;
 use super::report::{Cell, ColType, Report};
@@ -132,19 +132,31 @@ impl Experiment for FnExperiment {
     }
 }
 
-/// An ordered, name-addressed collection of experiments.
+impl crate::util::registry::Registered for dyn Experiment {
+    fn name(&self) -> &str {
+        Experiment::name(self)
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        Experiment::aliases(self)
+    }
+    fn describe(&self) -> &str {
+        self.description()
+    }
+}
+
+/// An ordered, name-addressed collection of experiments — a
+/// [`crate::util::registry::Registry`] instantiation (uniform
+/// resolution semantics; see [`crate::util::registry`]).
 ///
 /// Registration order is preserved (it is the `exp list` / `exp all`
 /// order). Canonical names are matched case-insensitively; aliases are
 /// lowercase.
-pub struct ExperimentRegistry {
-    experiments: Vec<Arc<dyn Experiment>>,
-}
+pub type ExperimentRegistry = crate::util::registry::Registry<dyn Experiment>;
 
 impl ExperimentRegistry {
     /// An empty registry (build-your-own experiment line-ups).
     pub fn empty() -> ExperimentRegistry {
-        ExperimentRegistry { experiments: Vec::new() }
+        crate::util::registry::Registry::new("experiment")
     }
 
     /// Every table, figure and ablation of the evaluation, plus the
@@ -335,53 +347,20 @@ impl ExperimentRegistry {
                 requires_artifacts: false,
                 run: |_| Ok(super::fed::fed_select_report()),
             },
+            FnExperiment {
+                name: "fleet_learn",
+                aliases: &["learn", "rl", "dqn"],
+                description:
+                    "Learn — in-sim DQN training curve + eval vs FIFO/backfill/EDF",
+                parallel_safe: true,
+                requires_artifacts: false,
+                run: |_| super::learn::fleet_learn_report(),
+            },
         ];
         for e in defaults {
             r.register(Arc::new(e));
         }
         r
-    }
-
-    /// Add an experiment; replaces an existing entry with the same
-    /// canonical name (so callers can shadow a built-in). Matching is
-    /// case-insensitive, like [`get`](ExperimentRegistry::get) — a
-    /// differently-cased registration must shadow, not append an
-    /// unreachable twin.
-    pub fn register(&mut self, e: Arc<dyn Experiment>) {
-        let name = e.name().to_ascii_lowercase();
-        if let Some(slot) = self
-            .experiments
-            .iter_mut()
-            .find(|x| x.name().to_ascii_lowercase() == name)
-        {
-            *slot = e;
-        } else {
-            self.experiments.push(e);
-        }
-    }
-
-    /// Look up by canonical name (case-insensitive) or alias. Canonical
-    /// names win over aliases, so an experiment registered under a name
-    /// that collides with an earlier entry's alias is still reachable.
-    pub fn get(&self, name: &str) -> Option<&Arc<dyn Experiment>> {
-        let q = name.to_ascii_lowercase();
-        self.experiments
-            .iter()
-            .find(|e| e.name().to_ascii_lowercase() == q)
-            .or_else(|| self.experiments.iter().find(|e| e.aliases().contains(&q.as_str())))
-    }
-
-    /// Like [`get`](ExperimentRegistry::get), but an unknown name is an
-    /// error listing the registered alternatives (the one diagnostic the
-    /// CLI and library both show).
-    pub fn get_or_err(&self, name: &str) -> Result<&Arc<dyn Experiment>> {
-        match self.get(name) {
-            Some(e) => Ok(e),
-            None => bail!(
-                "unknown experiment {name:?}; registered: {}",
-                self.names().join(", ")
-            ),
-        }
     }
 
     /// Run one experiment by name or alias.
@@ -399,10 +378,9 @@ impl ExperimentRegistry {
     /// ones; the oversubscription is transient and keeps the API free
     /// of a "how parallel am I inside" knob.
     pub fn run_all(&self, ctx: &ExpContext) -> Vec<(String, Result<Report>)> {
-        let experiments: Vec<&Arc<dyn Experiment>> = self.experiments.iter().collect();
+        let experiments: Vec<&Arc<dyn Experiment>> = self.iter().collect();
         let results = Self::run_set(&experiments, ctx);
-        self.experiments
-            .iter()
+        self.iter()
             .zip(results)
             .map(|(e, res)| (e.name().to_string(), res))
             .collect()
@@ -435,23 +413,6 @@ impl ExperimentRegistry {
             .into_iter()
             .map(|s| s.expect("run_set: unfilled slot"))
             .collect()
-    }
-
-    /// Canonical names in registration order.
-    pub fn names(&self) -> Vec<&str> {
-        self.experiments.iter().map(|e| e.name()).collect()
-    }
-
-    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn Experiment>> {
-        self.experiments.iter()
-    }
-
-    pub fn len(&self) -> usize {
-        self.experiments.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.experiments.is_empty()
     }
 }
 
@@ -588,6 +549,7 @@ mod tests {
                 "fleet_users",
                 "fed",
                 "fed_select",
+                "fleet_learn",
             ]
         );
     }

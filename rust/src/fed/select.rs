@@ -215,16 +215,28 @@ impl ClientSelection for FairShare {
     }
 }
 
-/// An ordered, name-addressed collection of selection policies.
-/// Mirrors [`crate::fleet::QueuePolicyRegistry`].
-pub struct SelectionRegistry {
-    policies: Vec<Arc<dyn ClientSelection>>,
+impl crate::util::registry::Registered for dyn ClientSelection {
+    fn name(&self) -> &str {
+        ClientSelection::name(self)
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        ClientSelection::aliases(self)
+    }
+    fn describe(&self) -> &str {
+        self.description()
+    }
 }
+
+/// An ordered, name-addressed collection of selection policies — a
+/// [`crate::util::registry::Registry`] instantiation (uniform
+/// resolution semantics; see [`crate::util::registry`]). Mirrors
+/// [`crate::fleet::QueuePolicyRegistry`].
+pub type SelectionRegistry = crate::util::registry::Registry<dyn ClientSelection>;
 
 impl SelectionRegistry {
     /// An empty registry (build-your-own line-ups).
     pub fn empty() -> SelectionRegistry {
-        SelectionRegistry { policies: Vec::new() }
+        crate::util::registry::Registry::new("selection policy")
     }
 
     /// The four built-ins: uniform, power-of-d, availability-aware,
@@ -236,45 +248,6 @@ impl SelectionRegistry {
         r.register(Arc::new(AvailabilityAware));
         r.register(Arc::new(FairShare));
         r
-    }
-
-    /// Add a policy; replaces an existing entry with the same canonical
-    /// name (so callers can shadow a built-in).
-    pub fn register(&mut self, p: Arc<dyn ClientSelection>) {
-        let name = p.name().to_ascii_lowercase();
-        if let Some(slot) =
-            self.policies.iter_mut().find(|e| e.name().to_ascii_lowercase() == name)
-        {
-            *slot = p;
-        } else {
-            self.policies.push(p);
-        }
-    }
-
-    /// Look up by canonical name (case-insensitive) or alias.
-    pub fn get(&self, name: &str) -> Option<&Arc<dyn ClientSelection>> {
-        let q = name.to_ascii_lowercase();
-        self.policies
-            .iter()
-            .find(|p| p.name().to_ascii_lowercase() == q)
-            .or_else(|| self.policies.iter().find(|p| p.aliases().contains(&q.as_str())))
-    }
-
-    /// Canonical names in registration order.
-    pub fn names(&self) -> Vec<&str> {
-        self.policies.iter().map(|p| p.name()).collect()
-    }
-
-    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn ClientSelection>> {
-        self.policies.iter()
-    }
-
-    pub fn len(&self) -> usize {
-        self.policies.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.policies.is_empty()
     }
 }
 

@@ -239,16 +239,28 @@ impl StragglerPolicy for OverSelect {
     }
 }
 
-/// An ordered, name-addressed collection of straggler policies.
-/// Mirrors [`crate::fleet::QueuePolicyRegistry`].
-pub struct StragglerRegistry {
-    policies: Vec<Arc<dyn StragglerPolicy>>,
+impl crate::util::registry::Registered for dyn StragglerPolicy {
+    fn name(&self) -> &str {
+        StragglerPolicy::name(self)
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        StragglerPolicy::aliases(self)
+    }
+    fn describe(&self) -> &str {
+        self.description()
+    }
 }
+
+/// An ordered, name-addressed collection of straggler policies — a
+/// [`crate::util::registry::Registry`] instantiation (uniform
+/// resolution semantics; see [`crate::util::registry`]). Mirrors
+/// [`crate::fleet::QueuePolicyRegistry`].
+pub type StragglerRegistry = crate::util::registry::Registry<dyn StragglerPolicy>;
 
 impl StragglerRegistry {
     /// An empty registry (build-your-own line-ups).
     pub fn empty() -> StragglerRegistry {
-        StragglerRegistry { policies: Vec::new() }
+        crate::util::registry::Registry::new("straggler policy")
     }
 
     /// The three built-ins: wait-all, deadline cutoff, over-select.
@@ -258,45 +270,6 @@ impl StragglerRegistry {
         r.register(Arc::new(DeadlineCutoff));
         r.register(Arc::new(OverSelect));
         r
-    }
-
-    /// Add a policy; replaces an existing entry with the same canonical
-    /// name (so callers can shadow a built-in).
-    pub fn register(&mut self, p: Arc<dyn StragglerPolicy>) {
-        let name = p.name().to_ascii_lowercase();
-        if let Some(slot) =
-            self.policies.iter_mut().find(|e| e.name().to_ascii_lowercase() == name)
-        {
-            *slot = p;
-        } else {
-            self.policies.push(p);
-        }
-    }
-
-    /// Look up by canonical name (case-insensitive) or alias.
-    pub fn get(&self, name: &str) -> Option<&Arc<dyn StragglerPolicy>> {
-        let q = name.to_ascii_lowercase();
-        self.policies
-            .iter()
-            .find(|p| p.name().to_ascii_lowercase() == q)
-            .or_else(|| self.policies.iter().find(|p| p.aliases().contains(&q.as_str())))
-    }
-
-    /// Canonical names in registration order.
-    pub fn names(&self) -> Vec<&str> {
-        self.policies.iter().map(|p| p.name()).collect()
-    }
-
-    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn StragglerPolicy>> {
-        self.policies.iter()
-    }
-
-    pub fn len(&self) -> usize {
-        self.policies.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.policies.is_empty()
     }
 }
 

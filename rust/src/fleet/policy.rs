@@ -185,19 +185,31 @@ impl PlacementPolicy for PreemptReplan {
     }
 }
 
-/// An ordered, name-addressed collection of placement policies.
+impl crate::util::registry::Registered for dyn PlacementPolicy {
+    fn name(&self) -> &str {
+        PlacementPolicy::name(self)
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        PlacementPolicy::aliases(self)
+    }
+    fn describe(&self) -> &str {
+        self.description()
+    }
+}
+
+/// An ordered, name-addressed collection of placement policies — a
+/// [`crate::util::registry::Registry`] instantiation (uniform
+/// resolution semantics; see [`crate::util::registry`]).
 ///
 /// Registration order is preserved (it is the row order of the fleet
 /// experiment grids). Canonical names match case-insensitively; aliases
 /// are lowercase.
-pub struct PolicyRegistry {
-    policies: Vec<Arc<dyn PlacementPolicy>>,
-}
+pub type PolicyRegistry = crate::util::registry::Registry<dyn PlacementPolicy>;
 
 impl PolicyRegistry {
     /// An empty registry (build-your-own line-ups).
     pub fn empty() -> PolicyRegistry {
-        PolicyRegistry { policies: Vec::new() }
+        crate::util::registry::Registry::new("placement policy")
     }
 
     /// The three built-in policies: FIFO-exclusive, Best-fit,
@@ -208,45 +220,6 @@ impl PolicyRegistry {
         r.register(Arc::new(BestFit));
         r.register(Arc::new(PreemptReplan));
         r
-    }
-
-    /// Add a policy; replaces an existing entry with the same canonical
-    /// name (so callers can shadow a built-in).
-    pub fn register(&mut self, p: Arc<dyn PlacementPolicy>) {
-        let name = p.name().to_ascii_lowercase();
-        if let Some(slot) =
-            self.policies.iter_mut().find(|e| e.name().to_ascii_lowercase() == name)
-        {
-            *slot = p;
-        } else {
-            self.policies.push(p);
-        }
-    }
-
-    /// Look up by canonical name (case-insensitive) or alias.
-    pub fn get(&self, name: &str) -> Option<&Arc<dyn PlacementPolicy>> {
-        let q = name.to_ascii_lowercase();
-        self.policies
-            .iter()
-            .find(|p| p.name().to_ascii_lowercase() == q)
-            .or_else(|| self.policies.iter().find(|p| p.aliases().contains(&q.as_str())))
-    }
-
-    /// Canonical names in registration order.
-    pub fn names(&self) -> Vec<&str> {
-        self.policies.iter().map(|p| p.name()).collect()
-    }
-
-    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn PlacementPolicy>> {
-        self.policies.iter()
-    }
-
-    pub fn len(&self) -> usize {
-        self.policies.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.policies.is_empty()
     }
 }
 

@@ -250,8 +250,9 @@ impl QueueIndex {
 
     /// Whole-pool service estimate for `job` (∞ when infeasible),
     /// cached per pool epoch. Same value the legacy paths compute —
-    /// the oracle is pure.
-    fn pool_est(&self, ctx: &QueueCtx, pool: &[Device], job: usize) -> f64 {
+    /// the oracle is pure. Crate-visible so [`crate::learn`]'s queue
+    /// policies share the memo instead of re-quoting.
+    pub(crate) fn pool_est(&self, ctx: &QueueCtx, pool: &[Device], job: usize) -> f64 {
         let epoch = self.pool_epoch.get();
         let mut est = self.est.borrow_mut();
         if est.0 != epoch {
@@ -269,7 +270,7 @@ impl QueueIndex {
     }
 
     /// Did `job` already fail to place in the current state?
-    fn known_unplaceable(&self, job: usize) -> bool {
+    pub(crate) fn known_unplaceable(&self, job: usize) -> bool {
         let epoch = self.state_epoch.get();
         let mut pf = self.place_fail.borrow_mut();
         if pf.0 != epoch {
@@ -284,7 +285,7 @@ impl QueueIndex {
         }
     }
 
-    fn note_unplaceable(&self, job: usize) {
+    pub(crate) fn note_unplaceable(&self, job: usize) {
         let epoch = self.state_epoch.get();
         let mut pf = self.place_fail.borrow_mut();
         if pf.0 != epoch {
@@ -708,22 +709,36 @@ impl QueuePolicy for LeastLaxity {
     }
 }
 
-/// An ordered, name-addressed collection of queue policies.
+impl crate::util::registry::Registered for dyn QueuePolicy {
+    fn name(&self) -> &str {
+        QueuePolicy::name(self)
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        QueuePolicy::aliases(self)
+    }
+    fn describe(&self) -> &str {
+        self.description()
+    }
+}
+
+/// An ordered, name-addressed collection of queue policies — a
+/// [`crate::util::registry::Registry`] instantiation (uniform
+/// resolution semantics; see [`crate::util::registry`]).
 ///
 /// Registration order is preserved; canonical names match
 /// case-insensitively; aliases are lowercase. Mirrors
 /// [`super::policy::PolicyRegistry`].
-pub struct QueuePolicyRegistry {
-    policies: Vec<Arc<dyn QueuePolicy>>,
-}
+pub type QueuePolicyRegistry = crate::util::registry::Registry<dyn QueuePolicy>;
 
 impl QueuePolicyRegistry {
     /// An empty registry (build-your-own line-ups).
     pub fn empty() -> QueuePolicyRegistry {
-        QueuePolicyRegistry { policies: Vec::new() }
+        crate::util::registry::Registry::new("queue policy")
     }
 
     /// The built-in disciplines: FIFO, EASY-backfill, SJF, EDF, LLF.
+    /// [`crate::learn::LearnedQueue`] is *not* a default — it needs
+    /// trained weights, so callers register it explicitly.
     pub fn with_defaults() -> QueuePolicyRegistry {
         let mut r = QueuePolicyRegistry::empty();
         r.register(Arc::new(FifoQueue));
@@ -732,45 +747,6 @@ impl QueuePolicyRegistry {
         r.register(Arc::new(EarliestDeadlineFirst));
         r.register(Arc::new(LeastLaxity));
         r
-    }
-
-    /// Add a policy; replaces an existing entry with the same canonical
-    /// name (so callers can shadow a built-in).
-    pub fn register(&mut self, p: Arc<dyn QueuePolicy>) {
-        let name = p.name().to_ascii_lowercase();
-        if let Some(slot) =
-            self.policies.iter_mut().find(|e| e.name().to_ascii_lowercase() == name)
-        {
-            *slot = p;
-        } else {
-            self.policies.push(p);
-        }
-    }
-
-    /// Look up by canonical name (case-insensitive) or alias.
-    pub fn get(&self, name: &str) -> Option<&Arc<dyn QueuePolicy>> {
-        let q = name.to_ascii_lowercase();
-        self.policies
-            .iter()
-            .find(|p| p.name().to_ascii_lowercase() == q)
-            .or_else(|| self.policies.iter().find(|p| p.aliases().contains(&q.as_str())))
-    }
-
-    /// Canonical names in registration order.
-    pub fn names(&self) -> Vec<&str> {
-        self.policies.iter().map(|p| p.name()).collect()
-    }
-
-    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn QueuePolicy>> {
-        self.policies.iter()
-    }
-
-    pub fn len(&self) -> usize {
-        self.policies.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.policies.is_empty()
     }
 }
 

@@ -565,22 +565,28 @@ pub fn simulate_fleet(
     policy: &dyn PlacementPolicy,
     opts: &FleetOptions,
 ) -> crate::Result<FleetMetrics> {
-    let registry = StrategyRegistry::with_defaults();
-    let strategy = registry.get(&opts.strategy).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown strategy {:?}; registered: {}",
-            opts.strategy,
-            registry.names().join(", ")
-        )
-    })?;
     let queue_registry = QueuePolicyRegistry::with_defaults();
-    let queue_policy = queue_registry.get(&opts.queue).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown queue policy {:?}; registered: {}",
-            opts.queue,
-            queue_registry.names().join(", ")
-        )
-    })?;
+    let queue_policy = queue_registry.get_or_err(&opts.queue)?;
+    simulate_fleet_with(env, jobs, churn, policy, queue_policy.as_ref(), opts)
+}
+
+/// Like [`simulate_fleet`], but over an explicit queue-policy *instance*
+/// instead of the registry name in `opts.queue` (which is ignored).
+///
+/// This is the entry point for policies that carry state or weights the
+/// name registry cannot construct — the `learn` subsystem's
+/// [`crate::learn::LearnedQueue`] (inference) and its training shim
+/// dispatch through here.
+pub fn simulate_fleet_with(
+    env: &Env,
+    jobs: &[Job],
+    churn: &[ChurnEvent],
+    policy: &dyn PlacementPolicy,
+    queue_policy: &dyn QueuePolicy,
+    opts: &FleetOptions,
+) -> crate::Result<FleetMetrics> {
+    let registry = StrategyRegistry::with_defaults();
+    let strategy = registry.get_or_err(&opts.strategy)?;
     for (i, j) in jobs.iter().enumerate() {
         anyhow::ensure!(j.id == i, "job ids must equal their index ({} at {i})", j.id);
     }
@@ -630,7 +636,7 @@ pub fn simulate_fleet(
     let mut sim = Sim {
         jobs,
         policy,
-        queue_policy: queue_policy.as_ref(),
+        queue_policy,
         oracle,
         horizon: opts.horizon,
         ckpt: opts.ckpt,

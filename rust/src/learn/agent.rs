@@ -1,0 +1,248 @@
+//! The epsilon-greedy DQN-style agent over fleet decision points.
+//!
+//! "Action-in" architecture: instead of a fixed action space, the Q
+//! network scores each *candidate job's* feature vector
+//! ([`super::feature::featurize`]) and the agent picks the argmax (or
+//! explores with probability ε). That makes the action space exactly
+//! "the placeable queued jobs right now" — variable-width, like the
+//! queue itself — with one scalar-head network.
+//!
+//! Learning is standard fitted Q with a target network: for each
+//! replayed transition, `y = r + γ · max_a' Q_target(a')` (no bootstrap
+//! on terminal transitions), one SGD step on the online network toward
+//! `y`, target weights re-synced every [`DqnConfig::target_sync`]
+//! batches. Rewards arrive *delayed* — the fleet simulator only knows a
+//! dispatch's worth once the job meets/misses its deadline — so γ is
+//! kept small: most credit is assigned directly to the dispatch
+//! decision, with a light bootstrap through the queue state it left
+//! behind.
+//!
+//! Exploration, replay sampling and weight init all draw from one
+//! seeded [`crate::util::rng::Rng`], so a whole training run is a pure
+//! function of `(workloads, seed)` — the bit-reproducibility the
+//! property tests pin.
+
+use super::feature::N_FEATURES;
+use super::net::Mlp;
+use super::replay::{Replay, Transition};
+use crate::util::rng::Rng;
+
+/// DQN hyperparameters. The defaults are the ones the `fleet_learn`
+/// experiment and acceptance tests were tuned with; they favor fast,
+/// stable convergence on hundreds-of-decisions episodes over
+/// asymptotic polish.
+#[derive(Debug, Clone)]
+pub struct DqnConfig {
+    /// Hidden tanh units in the Q head.
+    pub hidden: usize,
+    /// SGD learning rate.
+    pub lr: f64,
+    /// Discount on the bootstrapped next-decision value. Small by
+    /// design: rewards are per-job outcomes already assigned to the
+    /// dispatching decision.
+    pub gamma: f64,
+    /// Initial exploration rate.
+    pub epsilon0: f64,
+    /// Exploration floor.
+    pub epsilon_min: f64,
+    /// Multiplicative ε decay applied once per episode.
+    pub epsilon_decay: f64,
+    /// Transitions per SGD batch.
+    pub batch: usize,
+    /// SGD batches run after each episode.
+    pub batches_per_episode: usize,
+    /// Batches between target-network re-syncs.
+    pub target_sync: usize,
+    /// Replay-buffer capacity.
+    pub replay_capacity: usize,
+    /// No training until the buffer holds this many transitions.
+    pub min_replay: usize,
+}
+
+impl Default for DqnConfig {
+    fn default() -> DqnConfig {
+        DqnConfig {
+            hidden: 16,
+            lr: 0.02,
+            gamma: 0.2,
+            epsilon0: 0.4,
+            epsilon_min: 0.02,
+            epsilon_decay: 0.85,
+            batch: 32,
+            batches_per_episode: 12,
+            target_sync: 8,
+            replay_capacity: 4096,
+            min_replay: 48,
+        }
+    }
+}
+
+/// The agent: online + target Q networks, bounded replay, seeded
+/// exploration state.
+#[derive(Debug, Clone)]
+pub struct DqnAgent {
+    cfg: DqnConfig,
+    q: Mlp,
+    target: Mlp,
+    replay: Replay,
+    rng: Rng,
+    epsilon: f64,
+    batches: usize,
+}
+
+/// Greedy argmax over candidate scores; first-wins tie-break keeps the
+/// choice deterministic (and queue-order-biased, a sane prior).
+fn argmax(net: &Mlp, candidates: &[Vec<f64>]) -> usize {
+    let mut best = 0;
+    let mut best_q = f64::NEG_INFINITY;
+    for (i, c) in candidates.iter().enumerate() {
+        let q = net.scalar(c);
+        if q > best_q {
+            best_q = q;
+            best = i;
+        }
+    }
+    best
+}
+
+impl DqnAgent {
+    pub fn new(cfg: DqnConfig, seed: u64) -> DqnAgent {
+        let mut rng = Rng::new(seed ^ 0xD0_9E75);
+        let q = Mlp::new(&[N_FEATURES, cfg.hidden, 1], &mut rng);
+        let target = q.clone();
+        let replay = Replay::new(cfg.replay_capacity);
+        let epsilon = cfg.epsilon0;
+        DqnAgent { cfg, q, target, replay, rng, epsilon, batches: 0 }
+    }
+
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    pub fn replay_len(&self) -> usize {
+        self.replay.len()
+    }
+
+    /// Pick a candidate index: uniform with probability ε, greedy
+    /// otherwise. Panics on an empty candidate list (callers gate on
+    /// non-empty — "no placeable job" is the policy's `None`, not an
+    /// action).
+    pub fn act(&mut self, candidates: &[Vec<f64>]) -> usize {
+        assert!(!candidates.is_empty(), "act() needs at least one candidate");
+        if self.rng.f64() < self.epsilon {
+            self.rng.range(0, candidates.len())
+        } else {
+            argmax(&self.q, candidates)
+        }
+    }
+
+    /// Greedy choice under the *online* network — what the exported
+    /// inference-only policy will do with these weights.
+    pub fn act_greedy(&self, candidates: &[Vec<f64>]) -> usize {
+        argmax(&self.q, candidates)
+    }
+
+    pub fn remember(&mut self, t: Transition) {
+        self.replay.push(t);
+    }
+
+    /// Post-episode learning: [`DqnConfig::batches_per_episode`] fitted-Q
+    /// batches (skipped below [`DqnConfig::min_replay`]), then one ε
+    /// decay. Returns the mean per-sample loss across the batches run
+    /// (`None` when the buffer was still warming up).
+    pub fn train_episode(&mut self) -> Option<f64> {
+        if self.replay.len() < self.cfg.min_replay {
+            self.epsilon = (self.epsilon * self.cfg.epsilon_decay).max(self.cfg.epsilon_min);
+            return None;
+        }
+        let mut loss_sum = 0.0;
+        let mut samples = 0usize;
+        for _ in 0..self.cfg.batches_per_episode {
+            // sample indices first; the SGD borrow needs &mut self.q
+            // while the transitions borrow self.replay, so copy out
+            let batch: Vec<Transition> = self
+                .replay
+                .sample(self.cfg.batch, &mut self.rng)
+                .into_iter()
+                .cloned()
+                .collect();
+            for t in &batch {
+                let bootstrap = t
+                    .next
+                    .iter()
+                    .map(|c| self.target.scalar(c))
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let y = if bootstrap.is_finite() {
+                    t.reward + self.cfg.gamma * bootstrap
+                } else {
+                    t.reward // terminal: nothing to bootstrap through
+                };
+                loss_sum += self.q.sgd_scalar(&t.state, y, self.cfg.lr);
+                samples += 1;
+            }
+            self.batches += 1;
+            if self.batches % self.cfg.target_sync == 0 {
+                self.target = self.q.clone();
+            }
+        }
+        self.epsilon = (self.epsilon * self.cfg.epsilon_decay).max(self.cfg.epsilon_min);
+        (samples > 0).then(|| loss_sum / samples as f64)
+    }
+
+    /// Extract the trained online network (for dumping / wrapping in
+    /// [`super::LearnedQueue`]).
+    pub fn into_net(self) -> Mlp {
+        self.q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(v: f64) -> Vec<f64> {
+        let mut c = vec![0.0; N_FEATURES];
+        c[0] = 1.0;
+        c[1] = v;
+        c
+    }
+
+    #[test]
+    fn same_seed_agents_act_identically() {
+        let cands = vec![cand(0.1), cand(0.5), cand(0.9)];
+        let mut a = DqnAgent::new(DqnConfig::default(), 42);
+        let mut b = DqnAgent::new(DqnConfig::default(), 42);
+        for _ in 0..200 {
+            assert_eq!(a.act(&cands), b.act(&cands));
+        }
+    }
+
+    /// Fitted Q on a bandit: candidate with feature 0.9 pays +1, the
+    /// others −1. After training, the greedy choice is the paying arm.
+    #[test]
+    fn learns_a_contextual_bandit() {
+        let mut agent = DqnAgent::new(DqnConfig::default(), 7);
+        let cands = vec![cand(0.1), cand(0.5), cand(0.9)];
+        for _ in 0..40 {
+            for (i, c) in cands.iter().enumerate() {
+                let reward = if i == 2 { 1.0 } else { -1.0 };
+                agent.remember(Transition {
+                    state: c.clone(),
+                    reward,
+                    next: Vec::new(),
+                });
+            }
+            agent.train_episode();
+        }
+        assert_eq!(agent.act_greedy(&cands), 2);
+        assert!(agent.epsilon() < DqnConfig::default().epsilon0, "epsilon decayed");
+    }
+
+    #[test]
+    fn no_training_below_min_replay() {
+        let mut agent = DqnAgent::new(DqnConfig::default(), 3);
+        agent.remember(Transition { state: cand(0.5), reward: 1.0, next: Vec::new() });
+        assert_eq!(agent.train_episode(), None, "buffer below min_replay");
+        assert!(agent.replay_len() < DqnConfig::default().min_replay);
+    }
+}

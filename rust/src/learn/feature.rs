@@ -1,0 +1,176 @@
+//! The featurizer: one fleet decision point → a fixed-width, normalized
+//! feature vector the Q network scores.
+//!
+//! A "decision point" is one `(queue state, candidate job)` pair inside
+//! [`crate::fleet::QueuePolicy::next`]: the agent ranks every placeable
+//! queued job by `Q(φ(state, job))` and starts the best one. The
+//! features deliberately span what the *hand-written* disciplines each
+//! read in isolation — queue depth (FIFO's blindness), the oracle's
+//! whole-pool ETA (SJF's key), deadline slack (EDF's key), laxity
+//! (LLF's key), plus pool capacity/occupancy signals none of them use —
+//! so the learned policy's hypothesis space contains every built-in
+//! ordering and the blends between them.
+//!
+//! Every feature is squashed to a bounded range (most via
+//! `x / (1 + |x|)`, a cheap smooth sigmoid that keeps relative order),
+//! with time-like quantities pre-scaled to hours. Bounded inputs keep
+//! the tanh hidden layer out of saturation regardless of how long the
+//! simulated horizon runs.
+
+use crate::fleet::{Placement, QueueCtx};
+
+/// Width of [`featurize`]'s output — the Q network's input dimension.
+pub const N_FEATURES: usize = 12;
+
+/// Smooth squash to (−1, 1): monotone, cheap, no saturation cliff.
+fn squash(x: f64) -> f64 {
+    x / (1.0 + x.abs())
+}
+
+/// Hours-scaled squash for durations/slacks; ±∞ maps to ±1.
+fn squash_h(seconds: f64) -> f64 {
+    if seconds.is_infinite() {
+        seconds.signum()
+    } else {
+        squash(seconds / 3600.0)
+    }
+}
+
+/// Featurize the candidate at queue position `pos` given its whole-pool
+/// service estimate `est` (the SJF/LLF oracle quote, ∞ = infeasible on
+/// the full pool) and the `placement` it would start with right now.
+///
+/// Layout (each entry documented because the dump/load weights format
+/// is only meaningful against a fixed feature contract):
+///
+/// | # | feature | range |
+/// |---|---------------------------------------------|--------|
+/// | 0 | bias (always 1) | 1 |
+/// | 1 | queue depth / 32, capped | [0, 1] |
+/// | 2 | free-device fraction of the present pool | [0, 1] |
+/// | 3 | running-job count / present devices, capped | [0, 1] |
+/// | 4 | candidate's queue position / queue length | [0, 1) |
+/// | 5 | wait so far (now − arrival), squashed hours | [0, 1) |
+/// | 6 | whole-pool ETA `est`, squashed hours | [0, 1] |
+/// | 7 | this placement's attempt duration, squashed | [0, 1) |
+/// | 8 | deadline slack (deadline − now), squashed | (−1, 1] |
+/// | 9 | laxity (slack − attempt on this placement) | (−1, 1] |
+/// | 10| devices the placement claims / present | (0, 1] |
+/// | 11| durable progress already checkpointed | [0, 1] |
+pub fn featurize(ctx: &QueueCtx, pos: usize, est: f64, placement: &Placement) -> Vec<f64> {
+    let job_id = ctx.queue[pos];
+    let job = &ctx.jobs[job_id];
+    let present = ctx.present.max(1) as f64;
+    let deadline = ctx.deadlines[job_id];
+    let attempt = ctx.attempt_duration(job, placement.service_time);
+    vec![
+        1.0,
+        (ctx.queue.len() as f64 / 32.0).min(1.0),
+        ctx.free.len() as f64 / present,
+        (ctx.n_running as f64 / present).min(1.0),
+        pos as f64 / ctx.queue.len().max(1) as f64,
+        squash_h(ctx.now - job.arrival),
+        squash_h(est),
+        squash_h(attempt),
+        squash_h(deadline - ctx.now),
+        squash_h(if deadline.is_infinite() { deadline } else { deadline - ctx.now - attempt }),
+        placement.devices.len() as f64 / present,
+        ctx.done[job_id],
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::VecDeque;
+
+    use super::*;
+    use crate::cluster::{Device, DeviceKind};
+    use crate::fleet::policy::{BestFit, PlanOracle};
+    use crate::fleet::Job;
+    use crate::model::ModelSpec;
+
+    struct FlatOracle;
+
+    impl PlanOracle for FlatOracle {
+        fn service_time(&self, job: &Job, devices: &[Device]) -> Option<f64> {
+            (!devices.is_empty()).then(|| job.samples as f64 / devices.len() as f64)
+        }
+    }
+
+    #[test]
+    fn features_are_bounded_and_deadline_aware() {
+        let jobs = vec![
+            Job::new(0, 0.0, ModelSpec::tiny(), 7200, 2),
+            Job::new(1, 100.0, ModelSpec::tiny(), 3600, 2).with_deadline_mult(1.0),
+        ];
+        let queue: VecDeque<usize> = VecDeque::from(vec![0, 1]);
+        let free: Vec<Device> = (0..4).map(|i| Device::new(i, DeviceKind::NanoH)).collect();
+        let done = vec![0.0, 0.25];
+        // job 0 deadline-less, job 1 tight
+        let deadlines = vec![f64::INFINITY, 500.0];
+        let ctx = QueueCtx {
+            jobs: &jobs,
+            queue: &queue,
+            free: &free,
+            present: 4,
+            n_running: 0,
+            running: &[],
+            done: &done,
+            deadlines: &deadlines,
+            now: 400.0,
+            placement: &BestFit,
+            oracle: &FlatOracle,
+            ckpt: None,
+            index: None,
+        };
+        for pos in 0..2 {
+            let p = ctx.try_place(&jobs[ctx.queue[pos]], &free, 0).unwrap();
+            let est = FlatOracle.service_time(&jobs[ctx.queue[pos]], &free).unwrap();
+            let f = featurize(&ctx, pos, est, &p);
+            assert_eq!(f.len(), N_FEATURES);
+            assert!(f.iter().all(|v| v.is_finite() && (-1.0..=1.0).contains(v)), "{f:?}");
+        }
+        // deadline-less head: slack and laxity saturate at +1
+        let p0 = ctx.try_place(&jobs[0], &free, 0).unwrap();
+        let f0 = featurize(&ctx, 0, 1800.0, &p0);
+        assert_eq!(f0[8], 1.0);
+        assert_eq!(f0[9], 1.0);
+        assert_eq!(f0[11], 0.0, "fresh job has no durable progress");
+        // the tight job: positive wait, small positive slack, progress
+        let p1 = ctx.try_place(&jobs[1], &free, 0).unwrap();
+        let f1 = featurize(&ctx, 1, 900.0, &p1);
+        assert!(f1[5] > 0.0, "waited 300 s");
+        assert!(f1[8] > 0.0 && f1[8] < 0.1, "100 s of slack squashes small");
+        assert!(f1[9] < f1[8], "laxity < slack once the attempt is subtracted");
+        assert_eq!(f1[11], 0.25);
+    }
+
+    /// Infeasible-on-the-full-pool candidates (est = ∞) featurize to
+    /// the saturated ETA rather than NaN/∞ — the net must always see
+    /// finite inputs.
+    #[test]
+    fn infinite_estimate_saturates() {
+        let jobs = vec![Job::new(0, 0.0, ModelSpec::tiny(), 100, 2)];
+        let queue: VecDeque<usize> = VecDeque::from(vec![0]);
+        let free: Vec<Device> = vec![Device::new(0, DeviceKind::NanoH)];
+        let ctx = QueueCtx {
+            jobs: &jobs,
+            queue: &queue,
+            free: &free,
+            present: 1,
+            n_running: 0,
+            running: &[],
+            done: &[0.0],
+            deadlines: &[f64::INFINITY],
+            now: 0.0,
+            placement: &BestFit,
+            oracle: &FlatOracle,
+            ckpt: None,
+            index: None,
+        };
+        let p = ctx.try_place(&jobs[0], &free, 0).unwrap();
+        let f = featurize(&ctx, 0, f64::INFINITY, &p);
+        assert_eq!(f[6], 1.0);
+        assert!(f.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,54 @@
+//! `learn` — an in-simulator **reinforcement-learning scheduling
+//! subsystem**: a dependency-free DQN trained at the fleet simulator's
+//! decision points, exported as a pluggable queue discipline.
+//!
+//! The fleet layer's hand-written disciplines (FIFO, EASY-backfill,
+//! SJF, EDF, LLF — [`crate::fleet::queue`]) each order the queue by one
+//! signal. This module learns the ordering instead: every dispatch
+//! decision becomes a state, every placeable queued job an action, and
+//! the per-job outcome (deadline met / late / never finished) the
+//! reward. Because the simulator is deterministic and fast, training
+//! runs *inside* it — no environment wrappers, no frameworks, no
+//! `rand`:
+//!
+//! * [`net`] — a small dense network (tanh MLP, scalar Q head) with
+//!   seeded init, pure-Rust forward/backward, and **bit-exact** JSON
+//!   weight dump/load via [`crate::util::json`];
+//! * [`replay`] — a bounded ring replay buffer with seeded
+//!   without-replacement sampling;
+//! * [`feature`] — the decision-point featurizer: queue depth, oracle
+//!   ETA, deadline slack, laxity, pool capacity/occupancy — a feature
+//!   space containing every built-in discipline's key;
+//! * [`agent`] — the ε-greedy fitted-Q agent (action-in scalar head,
+//!   target network, per-episode SGD), reproducible bit for bit from
+//!   its seed;
+//! * [`policy`] — [`LearnedQueue`], the inference-only
+//!   [`crate::fleet::QueuePolicy`] built from trained weights, and
+//!   [`TrainerQueue`], the exploring/recording training shim;
+//! * [`train`] — the episode loop over Weibull/UUniFast-diversified
+//!   seeded workloads ([`workload`]), with provably disjoint held-out
+//!   evaluation seeds ([`held_out_seed`]).
+//!
+//! Entry points: the `fleet_learn` experiment
+//! ([`crate::exp::learn::fleet_learn_report`]), the `pacpp learn` CLI
+//! subcommand (train → dump weights → reload → eval against
+//! FIFO/backfill/EDF in one invocation), and the library pair
+//! [`train()`]/[`evaluate()`]. See the crate docs ("Training a policy
+//! in-sim") for the walkthrough.
+
+pub mod agent;
+pub mod feature;
+pub mod net;
+pub mod policy;
+pub mod replay;
+pub mod train;
+
+pub use agent::{DqnAgent, DqnConfig};
+pub use feature::{featurize, N_FEATURES};
+pub use net::{Dense, Mlp};
+pub use policy::{EpisodeOutcome, LearnedQueue, TrainerQueue, CANDIDATE_CAP};
+pub use replay::{Replay, Transition};
+pub use train::{
+    evaluate, held_out_seed, train, train_seed, workload, EpisodeStats, EvalStats,
+    TrainConfig, TrainResult,
+};

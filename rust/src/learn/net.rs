@@ -1,0 +1,293 @@
+//! A small dense policy/value network in pure Rust — the offline image
+//! has no ML framework, and none is needed: the Q function over
+//! [`super::feature::N_FEATURES`]-dimensional decision features is tiny
+//! (one hidden layer of a few dozen tanh units), so forward passes and
+//! SGD backward passes are a few hundred multiply-adds.
+//!
+//! Everything is `f64` end to end, for one load-bearing reason:
+//! [`Mlp::to_json`]/[`Mlp::from_json`] must round-trip weights
+//! **bit-exactly** through [`crate::util::json`] (whose numbers are
+//! `f64` rendered with Rust's shortest-roundtrip `Display`), so a
+//! dumped-and-reloaded network is the *same* network — the property the
+//! determinism tests and the CI smoke (train → dump → reload → eval in
+//! one step) pin down. Initialization draws from the caller's seeded
+//! [`crate::util::rng::Rng`]; nothing here touches the wall clock or
+//! thread-local randomness.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+/// One fully-connected layer: `out = act(W·x + b)`, weights stored
+/// row-major (`w[o * n_in + i]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+}
+
+impl Dense {
+    /// Xavier/Glorot uniform init from the caller's seeded RNG.
+    fn init(n_in: usize, n_out: usize, rng: &mut Rng) -> Dense {
+        let s = (6.0 / (n_in + n_out) as f64).sqrt();
+        let w = (0..n_in * n_out).map(|_| (2.0 * rng.f64() - 1.0) * s).collect();
+        Dense { n_in, n_out, w, b: vec![0.0; n_out] }
+    }
+
+    fn forward(&self, x: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let mut acc = self.b[o];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out.push(acc);
+        }
+    }
+}
+
+/// A multi-layer perceptron with tanh hidden activations and a linear
+/// output layer — the DQN's scalar Q head ([`super::agent::DqnAgent`])
+/// uses `dims = [N_FEATURES, hidden, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mlp {
+    pub layers: Vec<Dense>,
+}
+
+impl Mlp {
+    /// Build with seeded-deterministic initialization. `dims` lists the
+    /// layer widths input-first; at least one weight layer is required.
+    pub fn new(dims: &[usize], rng: &mut Rng) -> Mlp {
+        assert!(dims.len() >= 2, "an MLP needs at least [n_in, n_out]");
+        let layers = dims.windows(2).map(|w| Dense::init(w[0], w[1], rng)).collect();
+        Mlp { layers }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.layers[0].n_in
+    }
+
+    /// Forward pass, returning the (linear) output vector.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), self.n_in());
+        let last = self.layers.len() - 1;
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            layer.forward(&cur, &mut next);
+            if li != last {
+                for v in next.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Scalar convenience for the 1-output Q head.
+    pub fn scalar(&self, x: &[f64]) -> f64 {
+        self.forward(x)[0]
+    }
+
+    /// One SGD step toward `target` on the scalar head under squared
+    /// error, returning the pre-step loss. Plain backprop: tanh hidden
+    /// gradients, linear output, no momentum — deterministic and
+    /// dependency-free beats fancy here.
+    pub fn sgd_scalar(&mut self, x: &[f64], target: f64, lr: f64) -> f64 {
+        // forward, keeping each layer's post-activation output
+        let last = self.layers.len() - 1;
+        let mut acts: Vec<Vec<f64>> = Vec::with_capacity(self.layers.len() + 1);
+        acts.push(x.to_vec());
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mut out = Vec::new();
+            layer.forward(&acts[li], &mut out);
+            if li != last {
+                for v in out.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            acts.push(out);
+        }
+        let y = acts[last + 1][0];
+        let err = y - target;
+        let loss = 0.5 * err * err;
+
+        // backward: delta starts at dL/dy for the linear scalar head
+        let mut delta = vec![err];
+        for li in (0..self.layers.len()).rev() {
+            let layer = &mut self.layers[li];
+            let input = &acts[li];
+            // gradient w.r.t. this layer's input, before updating W
+            let mut prev_delta = vec![0.0; layer.n_in];
+            for o in 0..layer.n_out {
+                let row = &layer.w[o * layer.n_in..(o + 1) * layer.n_in];
+                for (pd, wi) in prev_delta.iter_mut().zip(row) {
+                    *pd += wi * delta[o];
+                }
+            }
+            // parameter step
+            for o in 0..layer.n_out {
+                let row = &mut layer.w[o * layer.n_in..(o + 1) * layer.n_in];
+                for (wi, xi) in row.iter_mut().zip(input) {
+                    *wi -= lr * delta[o] * xi;
+                }
+                layer.b[o] -= lr * delta[o];
+            }
+            if li > 0 {
+                // through the tanh of the layer below: act' = 1 - act²
+                for (pd, a) in prev_delta.iter_mut().zip(&acts[li]) {
+                    *pd *= 1.0 - a * a;
+                }
+                delta = prev_delta;
+            }
+        }
+        loss
+    }
+
+    /// Serialize as nested JSON arrays (`{"dims": [...], "layers":
+    /// [{"w": [...], "b": [...]}, ...]}`). Numbers are `f64` through
+    /// and through, so [`Mlp::from_json`] restores every weight
+    /// bit-exactly.
+    pub fn to_json(&self) -> Json {
+        let mut dims: Vec<Json> = vec![self.n_in().into()];
+        dims.extend(self.layers.iter().map(|l| Json::from(l.n_out)));
+        let layers: Json = self
+            .layers
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("w", l.w.iter().map(|&v| Json::from(v)).collect()),
+                    ("b", l.b.iter().map(|&v| Json::from(v)).collect()),
+                ])
+            })
+            .collect();
+        obj(vec![("dims", Json::Arr(dims)), ("layers", layers)])
+    }
+
+    /// Parse the [`Mlp::to_json`] format, validating every shape.
+    pub fn from_json(json: &Json) -> Result<Mlp> {
+        let dims: Vec<usize> = json
+            .get("dims")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("weights: missing \"dims\" array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("weights: non-integer dim")))
+            .collect::<Result<_>>()?;
+        ensure!(dims.len() >= 2, "weights: need at least [n_in, n_out] dims");
+        let layers_json = json
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("weights: missing \"layers\" array"))?;
+        ensure!(
+            layers_json.len() == dims.len() - 1,
+            "weights: {} layers for {} dims",
+            layers_json.len(),
+            dims.len()
+        );
+        let floats = |j: Option<&Json>, what: &str, want: usize| -> Result<Vec<f64>> {
+            let arr = j
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("weights: missing \"{what}\" array"))?;
+            ensure!(arr.len() == want, "weights: {what} has {} values, want {want}", arr.len());
+            arr.iter()
+                .map(|v| v.as_f64().ok_or_else(|| anyhow!("weights: non-numeric {what}")))
+                .collect()
+        };
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (i, l) in layers_json.iter().enumerate() {
+            let (n_in, n_out) = (dims[i], dims[i + 1]);
+            layers.push(Dense {
+                n_in,
+                n_out,
+                w: floats(l.get("w"), "w", n_in * n_out)?,
+                b: floats(l.get("b"), "b", n_out)?,
+            });
+        }
+        Ok(Mlp { layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_seeded_and_deterministic() {
+        let a = Mlp::new(&[4, 8, 1], &mut Rng::new(7));
+        let b = Mlp::new(&[4, 8, 1], &mut Rng::new(7));
+        assert_eq!(a, b);
+        let c = Mlp::new(&[4, 8, 1], &mut Rng::new(8));
+        assert_ne!(a, c, "different seeds must give different nets");
+    }
+
+    /// SGD on the scalar head drives the squared error down on a tiny
+    /// regression problem (fit y = 2·x₀ − x₁).
+    #[test]
+    fn sgd_learns_a_linear_target() {
+        let mut net = Mlp::new(&[2, 8, 1], &mut Rng::new(3));
+        let data: Vec<([f64; 2], f64)> = (0..16)
+            .map(|i| {
+                let x0 = (i % 4) as f64 / 4.0;
+                let x1 = (i / 4) as f64 / 4.0;
+                ([x0, x1], 2.0 * x0 - x1)
+            })
+            .collect();
+        let loss_sum = |net: &Mlp| -> f64 {
+            data.iter().map(|(x, y)| (net.scalar(x) - y).powi(2)).sum()
+        };
+        let before = loss_sum(&net);
+        for _ in 0..400 {
+            for (x, y) in &data {
+                net.sgd_scalar(x, *y, 0.05);
+            }
+        }
+        let after = loss_sum(&net);
+        assert!(after < before * 0.05, "loss {before} -> {after}");
+    }
+
+    /// Weights survive JSON bit-exactly: dump → parse → identical
+    /// structure AND identical forward outputs to the bit, through the
+    /// full text pipeline the CLI uses.
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(11);
+        let mut net = Mlp::new(&[6, 12, 1], &mut rng);
+        // push the weights off their clean init values
+        for _ in 0..50 {
+            let x: Vec<f64> = (0..6).map(|_| rng.f64()).collect();
+            net.sgd_scalar(&x, rng.f64(), 0.1);
+        }
+        let text = net.to_json().to_string_pretty();
+        let back = Mlp::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(net, back);
+        let x: Vec<f64> = (0..6).map(|_| rng.f64()).collect();
+        assert_eq!(net.scalar(&x).to_bits(), back.scalar(&x).to_bits());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_weights() {
+        for (src, needle) in [
+            (r#"{"layers": []}"#, "missing \"dims\""),
+            (r#"{"dims": [4], "layers": []}"#, "at least"),
+            (r#"{"dims": [2, 1], "layers": []}"#, "0 layers for 2 dims"),
+            (r#"{"dims": [2, 1], "layers": [{"b": [0]}]}"#, "missing \"w\""),
+            (
+                r#"{"dims": [2, 1], "layers": [{"w": [1], "b": [0]}]}"#,
+                "w has 1 values, want 2",
+            ),
+            (
+                r#"{"dims": [2, 1], "layers": [{"w": [1, 2], "b": []}]}"#,
+                "b has 0 values, want 1",
+            ),
+        ] {
+            let err =
+                Mlp::from_json(&Json::parse(src).unwrap()).unwrap_err().to_string();
+            assert!(err.contains(needle), "{src}: {err}");
+        }
+    }
+}

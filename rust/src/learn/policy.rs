@@ -1,0 +1,362 @@
+//! The learned queue disciplines: [`LearnedQueue`] (inference-only,
+//! loadable weights) and [`TrainerQueue`] (the in-simulator training
+//! shim that explores, records transitions, and learns between
+//! episodes).
+//!
+//! Both implement [`crate::fleet::QueuePolicy`] and plug into
+//! [`crate::fleet::simulate_fleet_with`] like any hand-written
+//! discipline — the simulator cannot tell a learned policy from FIFO.
+//! Candidate enumeration mirrors the built-ins exactly: respect the
+//! incremental index's known-unplaceable cache, attempt placements
+//! through the run's placement policy, quote whole-pool estimates
+//! through the shared memo — so a learned run's per-dispatch cost
+//! profile matches an LLF run's, plus one tiny MLP forward per
+//! candidate.
+
+use std::sync::Mutex;
+
+use crate::cluster::Device;
+use crate::fleet::{FleetMetrics, Placement, QueueCtx, QueueDecision, QueuePolicy};
+
+use super::agent::DqnAgent;
+use super::feature::{featurize, N_FEATURES};
+use super::net::Mlp;
+use super::replay::Transition;
+
+/// Queue positions considered per decision. Bounds per-dispatch cost on
+/// deep backlogs; 32 front positions is far beyond where any candidate
+/// is still competitive under the arrival-ordered queue.
+pub const CANDIDATE_CAP: usize = 32;
+
+/// One placeable candidate at a decision point.
+struct Candidate {
+    pos: usize,
+    feats: Vec<f64>,
+    placement: Placement,
+}
+
+/// Enumerate the placeable candidates among the first
+/// [`CANDIDATE_CAP`] queue positions, featurized. Shares the
+/// incremental index's placement-failure and whole-pool-estimate memos
+/// with the built-in policies.
+fn gather_candidates(ctx: &QueueCtx) -> Vec<Candidate> {
+    if ctx.queue.is_empty() || ctx.free.is_empty() {
+        return Vec::new();
+    }
+    let mut pool: Vec<Device> = ctx.free.to_vec();
+    for r in ctx.running {
+        pool.extend(r.devices.iter().cloned());
+    }
+    pool.sort_by_key(|d| d.id);
+    let mut out = Vec::new();
+    for pos in 0..ctx.queue.len().min(CANDIDATE_CAP) {
+        let job = ctx.queue[pos];
+        if ctx.index.is_some_and(|ix| ix.known_unplaceable(job)) {
+            continue;
+        }
+        let Some(placement) = ctx.try_place(&ctx.jobs[job], ctx.free, ctx.n_running) else {
+            if let Some(ix) = ctx.index {
+                ix.note_unplaceable(job);
+            }
+            continue;
+        };
+        let est = match ctx.index {
+            Some(ix) => ix.pool_est(ctx, &pool, job),
+            None => ctx
+                .oracle
+                .service_time(&ctx.jobs[job], &pool)
+                .unwrap_or(f64::INFINITY),
+        };
+        let feats = featurize(ctx, pos, est, &placement);
+        out.push(Candidate { pos, feats, placement });
+    }
+    out
+}
+
+/// The inference-only learned discipline: score every placeable
+/// candidate with the trained Q network, start the argmax. Stateless
+/// per decision (the net is read-only), so it is `Sync`-shareable like
+/// every registry policy — but it is *not* a registry default, because
+/// it cannot exist without weights
+/// ([`crate::fleet::QueuePolicyRegistry::with_defaults`] documents
+/// this). Build one from a dumped-weights file via [`Mlp::from_json`].
+#[derive(Debug, Clone)]
+pub struct LearnedQueue {
+    net: Mlp,
+}
+
+impl LearnedQueue {
+    pub fn new(net: Mlp) -> LearnedQueue {
+        assert_eq!(
+            net.n_in(),
+            N_FEATURES,
+            "LearnedQueue weights expect {N_FEATURES} features"
+        );
+        LearnedQueue { net }
+    }
+
+    pub fn net(&self) -> &Mlp {
+        &self.net
+    }
+}
+
+impl QueuePolicy for LearnedQueue {
+    fn name(&self) -> &str {
+        "Learned"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["learned", "dqn", "rl"]
+    }
+
+    fn description(&self) -> &str {
+        "score placeable queued jobs with a trained Q network, start the argmax"
+    }
+
+    fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision> {
+        let cands = gather_candidates(ctx);
+        let best = cands.into_iter().max_by(|a, b| {
+            self.net
+                .scalar(&a.feats)
+                .total_cmp(&self.net.scalar(&b.feats))
+                // earlier queue position wins ties: deterministic, and
+                // the same prior the built-ins' stable sorts encode
+                .then(b.pos.cmp(&a.pos))
+        })?;
+        Some(QueueDecision { queue_pos: best.pos, placement: best.placement })
+    }
+}
+
+/// Per-decision record the trainer keeps until the episode's rewards
+/// are known.
+struct EpisodeStep {
+    feats: Vec<f64>,
+    job: usize,
+    cands: Vec<Vec<f64>>,
+}
+
+struct TrainerInner {
+    agent: DqnAgent,
+    steps: Vec<EpisodeStep>,
+}
+
+/// What one training episode earned, from
+/// [`TrainerQueue::finish_episode`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpisodeOutcome {
+    /// Dispatch decisions taken.
+    pub steps: usize,
+    /// Summed per-decision reward (deadline-met dispatches pay +1, late
+    /// completions +0.25, never-finished −0.5).
+    pub reward: f64,
+    /// Exploration rate after this episode's decay.
+    pub epsilon: f64,
+    /// Mean fitted-Q loss over the episode's batches (`None` while the
+    /// replay buffer warms up).
+    pub loss: Option<f64>,
+}
+
+/// The training shim: an ε-greedy [`DqnAgent`] behind a `Mutex`
+/// (QueuePolicy takes `&self`; the simulator drives it from one
+/// thread, so lock order — and therefore training — is deterministic).
+/// Run an episode with [`crate::fleet::simulate_fleet_with`], then call
+/// [`TrainerQueue::finish_episode`] with the metrics to assign the
+/// delayed per-job rewards and learn.
+pub struct TrainerQueue {
+    inner: Mutex<TrainerInner>,
+}
+
+impl TrainerQueue {
+    pub fn new(agent: DqnAgent) -> TrainerQueue {
+        TrainerQueue { inner: Mutex::new(TrainerInner { agent, steps: Vec::new() }) }
+    }
+
+    /// Assign rewards from the finished episode's per-job outcomes,
+    /// feed the replay buffer (each decision's `next` is the following
+    /// decision's candidate matrix; the last is terminal), run the
+    /// post-episode SGD batches, decay ε.
+    pub fn finish_episode(&self, metrics: &FleetMetrics) -> EpisodeOutcome {
+        let inner = &mut *self.inner.lock().expect("trainer lock");
+        let steps = std::mem::take(&mut inner.steps);
+        let mut reward_total = 0.0;
+        for (i, s) in steps.iter().enumerate() {
+            let stat = &metrics.per_job[s.job];
+            let reward = if stat.met {
+                1.0
+            } else if stat.finish.is_some() {
+                0.25
+            } else {
+                -0.5
+            };
+            reward_total += reward;
+            let next =
+                if i + 1 < steps.len() { steps[i + 1].cands.clone() } else { Vec::new() };
+            inner.agent.remember(Transition { state: s.feats.clone(), reward, next });
+        }
+        let loss = inner.agent.train_episode();
+        EpisodeOutcome {
+            steps: steps.len(),
+            reward: reward_total,
+            epsilon: inner.agent.epsilon(),
+            loss,
+        }
+    }
+
+    /// Extract the agent (and its trained network) when training ends.
+    pub fn into_agent(self) -> DqnAgent {
+        self.inner.into_inner().expect("trainer lock").agent
+    }
+}
+
+impl QueuePolicy for TrainerQueue {
+    fn name(&self) -> &str {
+        "Learned-trainer"
+    }
+
+    fn description(&self) -> &str {
+        "epsilon-greedy training shim over the learned discipline (not for the registry)"
+    }
+
+    fn next(&self, ctx: &QueueCtx) -> Option<QueueDecision> {
+        let cands = gather_candidates(ctx);
+        if cands.is_empty() {
+            return None;
+        }
+        let inner = &mut *self.inner.lock().expect("trainer lock");
+        let matrix: Vec<Vec<f64>> = cands.iter().map(|c| c.feats.clone()).collect();
+        let choice = inner.agent.act(&matrix);
+        let chosen = &cands[choice];
+        inner.steps.push(EpisodeStep {
+            feats: chosen.feats.clone(),
+            job: ctx.queue[chosen.pos],
+            cands: matrix,
+        });
+        Some(QueueDecision { queue_pos: chosen.pos, placement: chosen.placement.clone() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::VecDeque;
+
+    use super::*;
+    use crate::cluster::DeviceKind;
+    use crate::fleet::policy::{BestFit, PlanOracle};
+    use crate::fleet::Job;
+    use crate::learn::DqnConfig;
+    use crate::model::ModelSpec;
+    use crate::util::rng::Rng;
+
+    struct FlatOracle;
+
+    impl PlanOracle for FlatOracle {
+        fn service_time(&self, job: &Job, devices: &[Device]) -> Option<f64> {
+            (!devices.is_empty()).then(|| job.samples as f64 / devices.len() as f64)
+        }
+    }
+
+    struct Fx {
+        jobs: Vec<Job>,
+        queue: VecDeque<usize>,
+        free: Vec<Device>,
+        done: Vec<f64>,
+        deadlines: Vec<f64>,
+    }
+
+    impl Fx {
+        fn new(n: usize) -> Fx {
+            let jobs: Vec<Job> = (0..n)
+                .map(|i| Job::new(i, 0.0, ModelSpec::tiny(), 100 * (i + 1), 2))
+                .collect();
+            Fx {
+                queue: (0..n).collect(),
+                free: (0..2).map(|i| Device::new(i, DeviceKind::NanoH)).collect(),
+                done: vec![0.0; n],
+                deadlines: vec![f64::INFINITY; n],
+                jobs,
+            }
+        }
+
+        fn ctx(&self) -> QueueCtx<'_> {
+            QueueCtx {
+                jobs: &self.jobs,
+                queue: &self.queue,
+                free: &self.free,
+                present: self.free.len(),
+                n_running: 0,
+                running: &[],
+                done: &self.done,
+                deadlines: &self.deadlines,
+                now: 0.0,
+                placement: &BestFit,
+                oracle: &FlatOracle,
+                ckpt: None,
+                index: None,
+            }
+        }
+    }
+
+    #[test]
+    fn learned_queue_picks_deterministically_and_within_queue() {
+        let fx = Fx::new(5);
+        let net = Mlp::new(&[N_FEATURES, 8, 1], &mut Rng::new(4));
+        let policy = LearnedQueue::new(net);
+        let a = policy.next(&fx.ctx()).expect("placeable jobs exist");
+        let b = policy.next(&fx.ctx()).expect("placeable jobs exist");
+        assert_eq!(a.queue_pos, b.queue_pos);
+        assert!(a.queue_pos < fx.queue.len());
+        assert_eq!(
+            a.placement.devices.len(),
+            b.placement.devices.len(),
+            "same decision, same placement"
+        );
+    }
+
+    #[test]
+    fn empty_queue_and_no_free_devices_yield_none() {
+        let mut fx = Fx::new(3);
+        let net = Mlp::new(&[N_FEATURES, 8, 1], &mut Rng::new(4));
+        let policy = LearnedQueue::new(net);
+        fx.free.clear();
+        assert!(policy.next(&fx.ctx()).is_none(), "no free devices");
+        let mut fx = Fx::new(3);
+        fx.queue.clear();
+        assert!(policy.next(&fx.ctx()).is_none(), "empty queue");
+    }
+
+    /// The trainer records one step per decision and turns per-job
+    /// outcomes into the documented rewards at episode end.
+    #[test]
+    fn trainer_records_and_rewards() {
+        use crate::cluster::Env;
+        use crate::fleet::{simulate_fleet_with, FleetOptions};
+        // a real tiny run, for a well-formed single-job FleetMetrics
+        let env = Env::env_a();
+        let jobs = vec![Job::new(0, 0.0, ModelSpec::tiny(), 64, 1)];
+        let m = simulate_fleet_with(
+            &env,
+            &jobs,
+            &[],
+            &BestFit,
+            &crate::fleet::FifoQueue,
+            &FleetOptions::default(),
+        )
+        .unwrap();
+
+        let fx = Fx::new(1);
+        let trainer = TrainerQueue::new(DqnAgent::new(DqnConfig::default(), 9));
+        trainer.next(&fx.ctx()).expect("placeable");
+        let out = trainer.finish_episode(&m);
+        assert_eq!(out.steps, 1);
+        let expected = if m.per_job[0].met {
+            1.0
+        } else if m.per_job[0].finish.is_some() {
+            0.25
+        } else {
+            -0.5
+        };
+        assert_eq!(out.reward, expected);
+        // episode log cleared: a second finish sees zero steps
+        assert_eq!(trainer.finish_episode(&m).steps, 0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Bounded experience-replay buffer with seeded sampling.
+//!
+//! A plain ring buffer: once `capacity` transitions are stored, new
+//! pushes overwrite the oldest (standard DQN replay). Sampling is
+//! **without replacement** via a partial Fisher–Yates over an index
+//! array, drawn from the *caller's* seeded [`crate::util::rng::Rng`] —
+//! the buffer itself holds no randomness, so the whole training loop
+//! stays a pure function of its seed.
+
+use crate::util::rng::Rng;
+
+/// One decision-point experience: the features of the action taken,
+/// the (delayed, per-job) reward it earned, and the candidate feature
+/// matrix of the *next* decision (empty = terminal, no bootstrap).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transition {
+    pub state: Vec<f64>,
+    pub reward: f64,
+    pub next: Vec<Vec<f64>>,
+}
+
+/// Bounded FIFO-overwrite replay store.
+#[derive(Debug, Clone)]
+pub struct Replay {
+    capacity: usize,
+    buf: Vec<Transition>,
+    /// Next write slot once the buffer is full (ring cursor).
+    head: usize,
+}
+
+impl Replay {
+    pub fn new(capacity: usize) -> Replay {
+        assert!(capacity > 0, "replay capacity must be positive");
+        Replay { capacity, buf: Vec::new(), head: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Store a transition, overwriting the oldest once full.
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    /// Sample `n` distinct stored transitions (all of them, in storage
+    /// order, when `n >= len`; none when empty). Partial Fisher–Yates:
+    /// exactly `min(n, len)` draws from `rng`, so the RNG consumption —
+    /// and therefore everything downstream — is deterministic.
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng) -> Vec<&'a Transition> {
+        let len = self.buf.len();
+        if len == 0 {
+            return Vec::new();
+        }
+        if n >= len {
+            return self.buf.iter().collect();
+        }
+        let mut idx: Vec<usize> = (0..len).collect();
+        for i in 0..n {
+            let j = rng.range(i, len);
+            idx.swap(i, j);
+        }
+        idx[..n].iter().map(|&i| &self.buf[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(tag: f64) -> Transition {
+        Transition { state: vec![tag], reward: tag, next: Vec::new() }
+    }
+
+    fn tags(sample: &[&Transition]) -> Vec<f64> {
+        sample.iter().map(|t| t.reward).collect()
+    }
+
+    /// The ring wraps: pushing past capacity overwrites oldest-first,
+    /// keeping exactly the newest `capacity` transitions.
+    #[test]
+    fn wraparound_overwrites_oldest() {
+        let mut r = Replay::new(4);
+        for i in 0..4 {
+            r.push(t(i as f64));
+        }
+        assert_eq!(r.len(), 4);
+        // 3 more pushes overwrite slots 0, 1, 2
+        for i in 4..7 {
+            r.push(t(i as f64));
+        }
+        assert_eq!(r.len(), 4);
+        let mut held = tags(&r.sample(10, &mut Rng::new(1)));
+        held.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(held, vec![3.0, 4.0, 5.0, 6.0]);
+        // a full second lap lands back on slot 0
+        for i in 7..12 {
+            r.push(t(i as f64));
+        }
+        let mut held = tags(&r.sample(10, &mut Rng::new(1)));
+        held.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(held, vec![8.0, 9.0, 10.0, 11.0]);
+    }
+
+    /// Small-n sampling is without replacement: every sampled index is
+    /// distinct, and n ≥ len degrades to "all of them, storage order".
+    #[test]
+    fn sampling_is_without_replacement() {
+        let mut r = Replay::new(16);
+        for i in 0..10 {
+            r.push(t(i as f64));
+        }
+        let mut rng = Rng::new(9);
+        for n in [1usize, 3, 7, 9] {
+            let s = r.sample(n, &mut rng);
+            assert_eq!(s.len(), n);
+            let mut got = tags(&s);
+            got.sort_by(|a, b| a.total_cmp(b));
+            got.dedup();
+            assert_eq!(got.len(), n, "duplicate transition in a sample of {n}");
+        }
+        assert_eq!(tags(&r.sample(10, &mut rng)), (0..10).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(r.sample(25, &mut rng).len(), 10);
+    }
+
+    /// Empty buffer: sampling returns nothing and consumes no RNG state.
+    #[test]
+    fn empty_buffer_samples_nothing() {
+        let r = Replay::new(8);
+        assert!(r.is_empty());
+        let mut rng = Rng::new(5);
+        let before = rng.clone();
+        assert!(r.sample(4, &mut rng).is_empty());
+        assert_eq!(rng.next_u64(), { let mut b = before; b.next_u64() });
+    }
+
+    #[test]
+    fn same_seed_same_sample() {
+        let mut r = Replay::new(32);
+        for i in 0..20 {
+            r.push(t(i as f64));
+        }
+        let a = tags(&r.sample(8, &mut Rng::new(42)));
+        let b = tags(&r.sample(8, &mut Rng::new(42)));
+        assert_eq!(a, b);
+    }
+}

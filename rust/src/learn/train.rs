@@ -1,0 +1,251 @@
+//! The in-simulator training loop: episodes of
+//! [`crate::fleet::simulate_fleet_with`] under the
+//! [`super::TrainerQueue`], over a seeded grid of diversified
+//! workloads, with held-out seeds for evaluation.
+//!
+//! **Workload diversification** ([`workload`]): each episode's trace
+//! starts from one of the three built-in [`TraceKind`]s, then gets its
+//! arrivals re-spaced with Weibull inter-arrival gaps
+//! ([`crate::util::rng::Rng::weibull`] — shape < 1 produces burstiness
+//! the built-in generators never reach) and its deadline-slack budget
+//! re-spread across jobs with UUniFast
+//! ([`crate::util::rng::Rng::uunifast`] — total slack fixed, its
+//! distribution varying per seed, so some jobs are tight and some
+//! loose in every episode). Diverse training workloads are what stop
+//! the agent from memorizing one trace's dispatch sequence.
+//!
+//! **Seed hygiene**: training seeds are always even
+//! ([`train_seed`]), held-out evaluation seeds always odd
+//! ([`held_out_seed`]) — provably disjoint, so an evaluation win can
+//! never be a memorized workload.
+//!
+//! Everything here is a pure function of `(env, config)`: same config,
+//! same weights, bit for bit (property-tested in
+//! `tests/prop_invariants.rs`).
+
+use anyhow::Result;
+
+use crate::cluster::Env;
+use crate::fleet::{
+    generate_churn, generate_jobs, simulate_fleet_with, BestFit, ChurnEvent, FleetOptions,
+    Job, QueuePolicy, TraceKind,
+};
+use crate::util::rng::Rng;
+
+use super::agent::{DqnAgent, DqnConfig};
+use super::net::Mlp;
+use super::policy::TrainerQueue;
+
+/// Training-run configuration: workload shape + DQN hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Training episodes (one fleet simulation each).
+    pub episodes: usize,
+    /// Jobs per episode.
+    pub jobs: usize,
+    /// Master seed: drives weight init, exploration, replay sampling
+    /// and the training-workload grid.
+    pub seed: u64,
+    /// Held-out evaluation workloads ([`held_out_seed`] indices `0..n`).
+    pub eval_seeds: usize,
+    /// Simulated horizon per episode, seconds.
+    pub horizon: f64,
+    /// Deadline scale forwarded to [`FleetOptions::deadline_scale`].
+    pub deadline_scale: f64,
+    pub dqn: DqnConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            episodes: 30,
+            jobs: 40,
+            seed: 42,
+            eval_seeds: 3,
+            horizon: 48.0 * 3600.0,
+            deadline_scale: 1.0,
+            dqn: DqnConfig::default(),
+        }
+    }
+}
+
+/// Seed of training episode `e`: always **even**.
+pub fn train_seed(seed: u64, episode: usize) -> u64 {
+    seed.wrapping_add(0x51AB3u64.wrapping_mul(episode as u64 + 1)) << 1
+}
+
+/// Seed of held-out evaluation workload `i`: always **odd**, hence
+/// disjoint from every [`train_seed`].
+pub fn held_out_seed(i: usize) -> u64 {
+    (0x9E1D_5EEDu64.wrapping_add(i as u64) << 1) | 1
+}
+
+/// One diversified episode workload: a built-in trace re-spaced with
+/// Weibull inter-arrivals and re-slacked with a UUniFast spread, plus
+/// (on some seeds) a sampled churn trace. Deterministic in `seed`.
+pub fn workload(env: &Env, n_jobs: usize, horizon: f64, seed: u64) -> (Vec<Job>, Vec<ChurnEvent>) {
+    let mut rng = Rng::new(seed ^ 0x11EA2D);
+    let kind = *rng.choose(&TraceKind::ALL);
+    let mut jobs = generate_jobs(kind, n_jobs, seed);
+    // arrivals: Weibull gaps at a mean that lands the stream inside
+    // roughly the first half of the horizon, so late arrivals still
+    // have room to finish. Cumulative sums keep ids arrival-sorted.
+    let shape = *rng.choose(&[0.6, 0.8, 1.0, 1.4]);
+    let mean_gap = 0.5 * horizon / n_jobs.max(1) as f64;
+    let mut t = 0.0;
+    for j in jobs.iter_mut() {
+        t += rng.weibull(shape, mean_gap);
+        j.arrival = t;
+    }
+    // deadline slack: a fixed total budget, UUniFast-spread — every
+    // episode mixes tight and loose jobs in different proportions
+    for (j, p) in jobs.iter_mut().zip(rng.uunifast(n_jobs, n_jobs as f64)) {
+        j.deadline_mult = (0.8 + 1.2 * p).clamp(0.9, 4.0);
+    }
+    let churn_rate = *rng.choose(&[0.0, 1.0, 2.5]);
+    let churn = if churn_rate > 0.0 {
+        generate_churn(env, horizon, churn_rate, seed)
+    } else {
+        Vec::new()
+    };
+    (jobs, churn)
+}
+
+fn fleet_opts(cfg: &TrainConfig) -> FleetOptions {
+    FleetOptions {
+        horizon: cfg.horizon,
+        deadline_scale: cfg.deadline_scale,
+        ..FleetOptions::default()
+    }
+}
+
+/// One row of the training curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpisodeStats {
+    pub episode: usize,
+    pub seed: u64,
+    /// Dispatch decisions the agent took.
+    pub steps: usize,
+    /// Summed per-decision reward.
+    pub reward: f64,
+    /// Exploration rate after this episode.
+    pub epsilon: f64,
+    /// Mean fitted-Q loss (`None` during replay warm-up).
+    pub loss: Option<f64>,
+    pub goodput: f64,
+    pub miss_rate: f64,
+    pub completed: usize,
+    pub met: usize,
+}
+
+/// What [`train`] returns: the episode curve and the trained network.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub episodes: Vec<EpisodeStats>,
+    pub net: Mlp,
+}
+
+/// Run the training loop. Bit-deterministic in `(env, cfg)`.
+pub fn train(env: &Env, cfg: &TrainConfig) -> Result<TrainResult> {
+    let opts = fleet_opts(cfg);
+    let trainer = TrainerQueue::new(DqnAgent::new(cfg.dqn.clone(), cfg.seed));
+    let mut episodes = Vec::with_capacity(cfg.episodes);
+    for e in 0..cfg.episodes {
+        let seed = train_seed(cfg.seed, e);
+        let (jobs, churn) = workload(env, cfg.jobs, cfg.horizon, seed);
+        let m = simulate_fleet_with(env, &jobs, &churn, &BestFit, &trainer, &opts)?;
+        let out = trainer.finish_episode(&m);
+        episodes.push(EpisodeStats {
+            episode: e,
+            seed,
+            steps: out.steps,
+            reward: out.reward,
+            epsilon: out.epsilon,
+            loss: out.loss,
+            goodput: m.goodput_per_hour,
+            miss_rate: m.deadline_miss_rate,
+            completed: m.completed,
+            met: m.deadline_met,
+        });
+    }
+    Ok(TrainResult { episodes, net: trainer.into_agent().into_net() })
+}
+
+/// Held-out evaluation aggregate for one queue policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalStats {
+    pub policy: String,
+    /// Mean goodput (deadline-met jobs/hour) over the held-out seeds.
+    pub goodput: f64,
+    /// Mean deadline-miss rate over the held-out seeds.
+    pub miss_rate: f64,
+    /// Completions summed over the held-out seeds.
+    pub completed: usize,
+    /// Deadline-met completions summed over the held-out seeds.
+    pub met: usize,
+}
+
+/// Evaluate one queue policy on the `cfg.eval_seeds` held-out
+/// workloads ([`held_out_seed`] — disjoint from every training seed).
+pub fn evaluate(env: &Env, cfg: &TrainConfig, policy: &dyn QueuePolicy) -> Result<EvalStats> {
+    let opts = fleet_opts(cfg);
+    let (mut goodput, mut miss) = (0.0, 0.0);
+    let (mut completed, mut met) = (0usize, 0usize);
+    for i in 0..cfg.eval_seeds {
+        let (jobs, churn) = workload(env, cfg.jobs, cfg.horizon, held_out_seed(i));
+        let m = simulate_fleet_with(env, &jobs, &churn, &BestFit, policy, &opts)?;
+        goodput += m.goodput_per_hour;
+        miss += m.deadline_miss_rate;
+        completed += m.completed;
+        met += m.deadline_met;
+    }
+    let n = cfg.eval_seeds.max(1) as f64;
+    Ok(EvalStats {
+        policy: policy.name().to_string(),
+        goodput: goodput / n,
+        miss_rate: miss / n,
+        completed,
+        met,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Training/eval seed spaces cannot collide: even vs odd.
+    #[test]
+    fn seed_spaces_are_disjoint() {
+        for s in [0u64, 42, 7_000_000] {
+            for e in 0..50 {
+                assert_eq!(train_seed(s, e) & 1, 0);
+            }
+        }
+        for i in 0..50 {
+            assert_eq!(held_out_seed(i) & 1, 1);
+        }
+    }
+
+    #[test]
+    fn workloads_are_deterministic_and_sorted() {
+        let env = Env::env_a();
+        let (a_jobs, a_churn) = workload(&env, 30, 48.0 * 3600.0, held_out_seed(0));
+        let (b_jobs, b_churn) = workload(&env, 30, 48.0 * 3600.0, held_out_seed(0));
+        assert_eq!(a_jobs.len(), 30);
+        assert_eq!(a_churn, b_churn);
+        for (x, y) in a_jobs.iter().zip(&b_jobs) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.deadline_mult.to_bits(), y.deadline_mult.to_bits());
+        }
+        for w in a_jobs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "respaced arrivals stay sorted");
+        }
+        for (i, j) in a_jobs.iter().enumerate() {
+            assert_eq!(j.id, i, "ids stay index-aligned");
+            assert!((0.9..=4.0).contains(&j.deadline_mult));
+        }
+        // different seeds give different workloads
+        let (c_jobs, _) = workload(&env, 30, 48.0 * 3600.0, held_out_seed(1));
+        assert_ne!(a_jobs[0].arrival.to_bits(), c_jobs[0].arrival.to_bits());
+    }
+}

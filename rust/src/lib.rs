@@ -34,6 +34,7 @@
 //! | [`fleet`]   | discrete-event multi-tenant scheduler: arrivals, churn, queue + placement policies, deadlines/SLOs, checkpointing |
 //! | [`fleet::eventq`] | pluggable event-queue backends for the fleet loop: calendar/bucket queue (default) and binary heap, bit-identical orderings |
 //! | [`fed`]     | round-based federated adapter-aggregation simulator: client selection, straggler policies, availability churn, secure-agg/DP knobs |
+//! | [`learn`]   | in-simulator RL scheduling: dependency-free DQN over fleet decision points, exported as a loadable queue policy |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
 //! | [`data`]    | synthetic GLUE-like workload generators |
 //! | [`exp`]     | typed `Experiment`/`Report` API + name-addressed registry of every paper table/figure |
@@ -152,6 +153,39 @@
 //! experiments surface the k-vs-overhead tradeoff and the per-user
 //! SLO/fairness breakdown.
 //!
+//! ## Training a policy in-sim (the `learn` subsystem)
+//!
+//! Queue disciplines don't have to be hand-written: [`learn`] trains
+//! one *inside* the fleet simulator. Every dispatch decision becomes a
+//! state, every placeable queued job an action
+//! ([`learn::featurize`] — queue depth, oracle ETA, deadline slack,
+//! laxity, pool occupancy), and the per-job outcome the reward. The
+//! stack is dependency-free and bit-deterministic: a seeded dense net
+//! ([`learn::Mlp`]), a bounded replay buffer ([`learn::Replay`]), and
+//! an ε-greedy fitted-Q agent ([`learn::DqnAgent`]).
+//!
+//! 1. **train**: `pacpp learn --episodes 40 --jobs 60 --weights w.json`
+//!    runs [`learn::train`] — episodes of
+//!    [`fleet::simulate_fleet_with`] under the exploring
+//!    [`learn::TrainerQueue`], over Weibull/UUniFast-diversified seeded
+//!    workloads ([`learn::workload`]) — then dumps the weights as JSON
+//!    (bit-exact round trip via [`util::json`]);
+//! 2. **evaluate**: the same invocation reloads the dump and runs
+//!    [`learn::evaluate`] on held-out seeds
+//!    ([`learn::held_out_seed`] — provably disjoint from every
+//!    training seed) against FIFO, EASY-backfill and EDF; the
+//!    `fleet_learn` experiment emits the training curve + eval table
+//!    as a typed [`exp::Report`];
+//! 3. **deploy**: wrap the weights in [`learn::LearnedQueue`]
+//!    (inference-only, implements [`fleet::QueuePolicy`]) and pass it
+//!    to [`fleet::simulate_fleet_with`] — it composes with every
+//!    placement policy like the built-in disciplines do.
+//!
+//! Same seed, same weights, bit for bit: `tests/prop_invariants.rs`
+//! pins training determinism, and `tests/learn.rs` pins the
+//! held-out-seed acceptance comparison against the hand-written
+//! disciplines.
+//!
 //! ## Adding a client-selection policy
 //!
 //! The federated layer ([`fed`]) is open the same way: which available
@@ -225,6 +259,7 @@ pub mod exec;
 pub mod exp;
 pub mod fed;
 pub mod fleet;
+pub mod learn;
 pub mod model;
 pub mod planner;
 pub mod profiler;

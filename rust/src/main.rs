@@ -22,11 +22,17 @@
 //!                [--select all|uniform|power-of-d|availability|fair[,..]]
 //!                [--straggler wait-all|deadline|over-select]
 //!                [--agg allreduce|allgather|star] [--seed 42]
-//!                [--trace stable|churny|flaky] [--net lan|wifi]
+//!                [--trace stable|churny|flaky] [--churn-file FILE]
+//!                [--net lan|wifi]
 //!                [--model t5-base] [--strategy pac+] [--horizon HOURS]
 //!                [--deadline-mult X] [--over-select S] [--secure-agg]
 //!                [--dp-cost SECS] [--jitter X] [--target ROUNDS]
 //!                [--shards N] [--format text|json|csv] [--out FILE]
+//! pacpp learn    [--env env_a] [--episodes 30] [--jobs 40] [--seed 42]
+//!                [--eval-seeds 3] [--horizon HOURS] [--deadline SCALE]
+//!                [--weights FILE] [--format text|json|csv] [--out FILE]
+//!                     (train the in-sim DQN scheduler, dump + reload its
+//!                      weights, and evaluate vs FIFO/backfill/EDF)
 //! pacpp timeline --env env_a [--microbatch 4] [--m 6] [--width 120]
 //!                                  (render a plan's 1F1B schedule as ASCII art)
 //! pacpp table    1|5|6|7           (deprecated alias for `exp run table<N>`)
@@ -49,6 +55,7 @@ use pacpp::fleet::{
     EventQueueKind, FleetOptions, PlacementPolicy, PolicyRegistry, QueuePolicyRegistry,
     TraceKind, DEFAULT_CKPT_COST,
 };
+use pacpp::learn::TrainConfig;
 use pacpp::model::graph::LayerGraph;
 use pacpp::model::{Method, ModelSpec, Precision};
 use pacpp::planner::{plan, PlannerOptions};
@@ -78,6 +85,7 @@ fn main() -> anyhow::Result<()> {
         Some("exp") => cmd_exp(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("fed") => cmd_fed(&args),
+        Some("learn") => cmd_learn(&args),
         Some("table") => cmd_table(&args),
         Some("fig") => cmd_fig(&args),
         Some("train") => cmd_train(&args),
@@ -85,8 +93,8 @@ fn main() -> anyhow::Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: pacpp <plan|simulate|strategies|exp|fleet|fed|timeline|table|fig|\
-                 train|info> [options]"
+                "usage: pacpp <plan|simulate|strategies|exp|fleet|fed|learn|timeline|table|\
+                 fig|train|info> [options]"
             );
             eprintln!("see rust/src/main.rs docs for options");
             Ok(())
@@ -114,12 +122,7 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let method = parse_method(args.get_or("method", "pa"));
     let registry = StrategyRegistry::with_defaults();
     let strategy_name = args.get_or("strategy", "pac+");
-    let Some(strategy) = registry.get(strategy_name) else {
-        anyhow::bail!(
-            "unknown strategy {strategy_name:?}; registered: {}",
-            registry.names().join(", ")
-        );
-    };
+    let strategy = registry.get_or_err(strategy_name)?;
     let profile = Profile::new(LayerGraph::new(spec.clone()), method, Precision::FP32, 128);
     // start from the strategy's own job mapping (PAC-Homo turns off
     // heterogeneity awareness, Standalone/DP use mini-batch granularity,
@@ -179,12 +182,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let method = parse_method(args.get_or("method", "pa+cache"));
     let registry = StrategyRegistry::with_defaults();
     let system_name = args.get_or("system", "pac+");
-    let Some(strategy) = registry.get(system_name) else {
-        anyhow::bail!(
-            "unknown system {system_name:?}; registered: {}",
-            registry.names().join(", ")
-        );
-    };
+    let strategy = registry.get_or_err(system_name)?;
     let profile = Profile::new(
         LayerGraph::new(spec.clone()),
         method,
@@ -454,12 +452,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let horizon_h = args.get_positive_f64("horizon", 48.0)?;
     let queue_name = args.get_str("queue", "fifo")?;
     let queue_registry = QueuePolicyRegistry::with_defaults();
-    let Some(queue) = queue_registry.get(queue_name) else {
-        anyhow::bail!(
-            "unknown queue policy {queue_name:?}; registered: {}",
-            queue_registry.names().join(", ")
-        );
-    };
+    let queue = queue_registry.get_or_err(queue_name)?;
     let deadline_scale = args.get_rate("deadline", 1.0)?;
     // `--ckpt 0` reads naturally as "off", so this flag takes a
     // non-negative count rather than the strictly-positive get_count
@@ -483,14 +476,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         policies.extend(registry.iter().cloned());
     } else {
         for one in spec.split(',') {
-            let Some(p) = registry.get(one.trim()) else {
-                anyhow::bail!(
-                    "unknown policy {:?}; registered: {}",
-                    one.trim(),
-                    registry.names().join(", ")
-                );
-            };
-            policies.push(p.clone());
+            policies.push(registry.get_or_err(one.trim())?.clone());
         }
     }
 
@@ -571,8 +557,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 /// simulation per selected client-selection policy, reported in the fed
 /// experiment schema. `--straggler` picks the round-end discipline,
 /// `--agg` the aggregation collective, `--trace` the client
-/// availability pattern, and `--secure-agg`/`--dp-cost` the privacy
-/// cost knobs.
+/// availability pattern (or `--churn-file` replays a recorded fleet
+/// churn trace as availability), and `--secure-agg`/`--dp-cost` the
+/// privacy cost knobs.
 fn cmd_fed(args: &Args) -> anyhow::Result<()> {
     let rounds = args.get_count("rounds", 50)?;
     let n_clients = args.get_count("clients", 24)?;
@@ -598,13 +585,31 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
     };
     let straggler_registry = StragglerRegistry::with_defaults();
     let straggler_name = args.get_str("straggler", "wait-all")?;
-    let Some(straggler) = straggler_registry.get(straggler_name) else {
-        anyhow::bail!(
-            "unknown straggler policy {straggler_name:?}; registered: {}",
-            straggler_registry.names().join(", ")
-        );
-    };
+    let straggler = straggler_registry.get_or_err(straggler_name)?;
     let horizon_h = args.get_positive_f64("horizon", 336.0)?;
+    // `--churn-file` replays a recorded *fleet* churn trace (see
+    // `fleet::churn_to_json` for the format) as the client
+    // availability pattern: client i mirrors device id i
+    // (`fed::traces_from_churn`). It replaces the generated `--trace`
+    // patterns entirely, so the two flags are mutually exclusive.
+    let churn_file = args.get("churn-file").map(String::from);
+    let churn_traces = match &churn_file {
+        Some(path) => {
+            anyhow::ensure!(
+                args.get("trace").is_none(),
+                "--trace and --churn-file are mutually exclusive"
+            );
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--churn-file {path}: {e}"))?;
+            let json = pacpp::util::json::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("--churn-file {path}: {e}"))?;
+            let events =
+                churn_from_json(&json).map_err(|e| anyhow::anyhow!("--churn-file {path}: {e}"))?;
+            Some(pacpp::fed::traces_from_churn(&events, n_clients, horizon_h * 3600.0))
+        }
+        None => None,
+    };
+    let trace_label = if churn_file.is_some() { "churn-file" } else { trace.name() };
     let deadline_mult = args.get_positive_f64("deadline-mult", 2.0)?;
     // `--over-select 0` reads naturally as "no spares" (the
     // over-select policy still floors it at one spare)
@@ -624,14 +629,7 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
         selects.extend(selection_registry.names().iter().map(|s| s.to_string()));
     } else {
         for one in spec.split(',') {
-            let Some(p) = selection_registry.get(one.trim()) else {
-                anyhow::bail!(
-                    "unknown selection policy {:?}; registered: {}",
-                    one.trim(),
-                    selection_registry.names().join(", ")
-                );
-            };
-            selects.push(p.name().to_string());
+            selects.push(selection_registry.get_or_err(one.trim())?.name().to_string());
         }
     }
 
@@ -643,7 +641,8 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
     .meta("clients", n_clients)
     .meta("k", k)
     .meta("seed", seed)
-    .meta("trace", trace.name())
+    .meta("trace", trace_label)
+    .meta("churn_file", churn_file.as_deref().unwrap_or("-"))
     .meta("net", net_name)
     .meta("agg", agg.name())
     .meta("model", &model.name)
@@ -679,12 +678,59 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
             target_rounds: target,
             shards,
         };
-        let m = simulate_fed(&opts)?;
+        let m = match &churn_traces {
+            Some(traces) => {
+                let clients = pacpp::fed::generate_clients(n_clients, seed);
+                pacpp::fed::simulate_fed_with(&clients, traces, &opts)?
+            }
+            None => simulate_fed(&opts)?,
+        };
         hits += m.oracle_hits;
         misses += m.oracle_misses;
-        report.push(exp::fed_row(net_name, &opts, &m));
+        report.push(exp::fed_row(net_name, trace_label, &opts, &m));
     }
     report = report.meta("oracle_hits_total", hits).meta("oracle_misses_total", misses);
+    emit_reports(&[report], format, false, args)
+}
+
+/// `pacpp learn`: train the in-simulator DQN scheduler
+/// ([`pacpp::learn`]) — episodes of the fleet simulator under the
+/// exploring trainer queue — then dump the weights as JSON, reload the
+/// dump, and evaluate the reloaded policy against FIFO, EASY-backfill
+/// and EDF on held-out seeds, all in one invocation. `--weights FILE`
+/// additionally persists the (reloaded) weights for later
+/// `LearnedQueue` use.
+fn cmd_learn(args: &Args) -> anyhow::Result<()> {
+    let env_name = args.get_str("env", "env_a")?;
+    let Some(env) = Env::by_name(env_name) else {
+        anyhow::bail!("unknown env {env_name:?} (env_a|env_b|<n>xnano)");
+    };
+    let d = TrainConfig::default();
+    let cfg = TrainConfig {
+        episodes: args.get_count("episodes", d.episodes)?,
+        jobs: args.get_count("jobs", d.jobs)?,
+        seed: args.get_seed("seed", d.seed)?,
+        eval_seeds: args.get_count("eval-seeds", d.eval_seeds)?,
+        horizon: args.get_positive_f64("horizon", d.horizon / 3600.0)? * 3600.0,
+        deadline_scale: args.get_rate("deadline", d.deadline_scale)?,
+        dqn: d.dqn,
+    };
+    let format = parse_format(args)?;
+    validate_out(args)?;
+    let weights_path = args.get("weights").map(String::from);
+    if let Some(path) = &weights_path {
+        let p = std::path::Path::new(path);
+        anyhow::ensure!(!p.is_dir(), "--weights {path}: is a directory, expected a file path");
+        pacpp::util::ensure_parent_dirs(path)
+            .map_err(|e| anyhow::anyhow!("--weights {path}: {e}"))?;
+    }
+
+    let (report, net) = exp::learn_report(&env, &cfg)?;
+    if let Some(path) = &weights_path {
+        let text = net.to_json().to_string_pretty();
+        pacpp::util::write_creating_dirs(path, &text)?;
+        eprintln!("wrote {path} ({} bytes, weights json)", text.len());
+    }
     emit_reports(&[report], format, false, args)
 }
 

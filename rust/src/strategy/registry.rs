@@ -6,22 +6,35 @@ use super::{
     Asteroid, DataParallel, HetPipe, PacHomo, PacPlus, ParallelismStrategy, PipelineParallel,
     Standalone,
 };
+use crate::util::registry::Registry;
 
-/// An ordered, name-addressed collection of strategies.
+impl crate::util::registry::Registered for dyn ParallelismStrategy {
+    fn name(&self) -> &str {
+        ParallelismStrategy::name(self)
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        ParallelismStrategy::aliases(self)
+    }
+    fn describe(&self) -> &str {
+        self.description()
+    }
+}
+
+/// An ordered, name-addressed collection of strategies — a
+/// [`Registry`] instantiation (uniform resolution semantics; see
+/// [`crate::util::registry`]).
 ///
 /// Registration order is preserved (it is the column order of the
 /// experiment tables). Canonical names are matched case-insensitively;
 /// each strategy may additionally expose lowercase
 /// [`aliases`](ParallelismStrategy::aliases) for CLI ergonomics
 /// (`"dp"`, `"eddl"`, `"pac-homo"`, ...).
-pub struct StrategyRegistry {
-    strategies: Vec<Arc<dyn ParallelismStrategy>>,
-}
+pub type StrategyRegistry = Registry<dyn ParallelismStrategy>;
 
 impl StrategyRegistry {
     /// An empty registry (build-your-own experiment line-ups).
     pub fn empty() -> StrategyRegistry {
-        StrategyRegistry { strategies: Vec::new() }
+        Registry::new("strategy")
     }
 
     /// All seven systems of the paper's evaluation, in Table V / Fig. 12
@@ -37,41 +50,6 @@ impl StrategyRegistry {
         r.register(Arc::new(Asteroid));
         r.register(Arc::new(HetPipe));
         r
-    }
-
-    /// Add a strategy; replaces an existing entry with the same
-    /// canonical name (so callers can shadow a built-in).
-    pub fn register(&mut self, s: Arc<dyn ParallelismStrategy>) {
-        if let Some(slot) = self.strategies.iter_mut().find(|e| e.name() == s.name()) {
-            *slot = s;
-        } else {
-            self.strategies.push(s);
-        }
-    }
-
-    /// Look up by canonical name (case-insensitive) or alias.
-    pub fn get(&self, name: &str) -> Option<&Arc<dyn ParallelismStrategy>> {
-        let q = name.to_ascii_lowercase();
-        self.strategies
-            .iter()
-            .find(|s| s.name().to_ascii_lowercase() == q || s.aliases().contains(&q.as_str()))
-    }
-
-    /// Canonical names in registration order.
-    pub fn names(&self) -> Vec<&str> {
-        self.strategies.iter().map(|s| s.name()).collect()
-    }
-
-    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn ParallelismStrategy>> {
-        self.strategies.iter()
-    }
-
-    pub fn len(&self) -> usize {
-        self.strategies.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.strategies.is_empty()
     }
 }
 

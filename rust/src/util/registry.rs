@@ -1,0 +1,259 @@
+//! The one generic name/alias registry behind every pluggable layer.
+//!
+//! Six subsystems resolve implementations by name — parallelism
+//! strategies, experiments, fleet placement and queue policies, fed
+//! client selection and straggler handling — and each used to carry its
+//! own copy of the same ~60-line registry. [`Registry<T>`] is that
+//! registry written once: an ordered, name-addressed collection of
+//! `Arc<T>` entries over the [`Registered`] trait.
+//!
+//! Semantics (uniform across every instantiation):
+//!
+//! * registration order is preserved — it is the table/CLI listing
+//!   order of every layer;
+//! * [`register`](Registry::register) replaces an existing entry with
+//!   the same canonical name, matched **case-insensitively**, so a
+//!   differently-cased registration shadows a built-in instead of
+//!   appending an unreachable twin;
+//! * [`get`](Registry::get) matches canonical names case-insensitively
+//!   first, then lowercase aliases — canonical names win, so an entry
+//!   whose name collides with another entry's alias stays reachable;
+//! * [`get_or_err`](Registry::get_or_err) turns an unknown name into
+//!   the one diagnostic every layer shows: `unknown <kind> <name>`,
+//!   a "did you mean …" suggestion when a registered name or alias is
+//!   within edit distance 2, and the registered alternatives.
+//!
+//! A layer opts in by implementing [`Registered`] for its trait object
+//! (delegating to the trait's own `name`/`aliases`/`description`) and
+//! exposing `pub type FooRegistry = Registry<dyn Foo>;` plus inherent
+//! `empty()`/`with_defaults()` constructors — see
+//! [`crate::fleet::QueuePolicyRegistry`] for the pattern.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// What [`Registry<T>`] needs from an entry: a canonical display name,
+/// optional lowercase lookup aliases, and a one-line description for
+/// listings. Implemented for each pluggable layer's trait object,
+/// delegating to the layer trait's own methods.
+pub trait Registered {
+    /// Canonical display name (stable: used in tables, JSON, the CLI).
+    fn name(&self) -> &str;
+
+    /// Lowercase lookup aliases accepted by [`Registry::get`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for listings and docs.
+    fn describe(&self) -> &str {
+        ""
+    }
+}
+
+/// An ordered, name-addressed collection of `Arc<T>` entries. See the
+/// [module docs](self) for the shared resolution semantics.
+pub struct Registry<T: ?Sized + Registered> {
+    kind: &'static str,
+    entries: Vec<Arc<T>>,
+}
+
+impl<T: ?Sized + Registered> Registry<T> {
+    /// An empty registry. `kind` is the human noun used in error
+    /// messages (`"strategy"`, `"queue policy"`, ...).
+    pub fn new(kind: &'static str) -> Registry<T> {
+        Registry { kind, entries: Vec::new() }
+    }
+
+    /// The noun this registry's diagnostics use.
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    /// Add an entry; replaces an existing entry with the same canonical
+    /// name (so callers can shadow a built-in). Matching is
+    /// case-insensitive, like [`get`](Registry::get) — a
+    /// differently-cased registration must shadow, not append an
+    /// unreachable twin.
+    pub fn register(&mut self, e: Arc<T>) {
+        let name = e.name().to_ascii_lowercase();
+        if let Some(slot) =
+            self.entries.iter_mut().find(|x| x.name().to_ascii_lowercase() == name)
+        {
+            *slot = e;
+        } else {
+            self.entries.push(e);
+        }
+    }
+
+    /// Look up by canonical name (case-insensitive) or alias. Canonical
+    /// names win over aliases, so an entry registered under a name that
+    /// collides with an earlier entry's alias is still reachable.
+    pub fn get(&self, name: &str) -> Option<&Arc<T>> {
+        let q = name.to_ascii_lowercase();
+        self.entries
+            .iter()
+            .find(|e| e.name().to_ascii_lowercase() == q)
+            .or_else(|| self.entries.iter().find(|e| e.aliases().contains(&q.as_str())))
+    }
+
+    /// Like [`get`](Registry::get), but an unknown name is an error of
+    /// the shape `unknown <kind> "<name>" (did you mean "…"?);
+    /// registered: …` — the one diagnostic the CLI and library both
+    /// show. The suggestion appears when a registered name or alias is
+    /// within edit distance 2.
+    pub fn get_or_err(&self, name: &str) -> Result<&Arc<T>> {
+        match self.get(name) {
+            Some(e) => Ok(e),
+            None => {
+                let hint = match self.closest(name) {
+                    Some(s) => format!(" (did you mean {s:?}?)"),
+                    None => String::new(),
+                };
+                bail!(
+                    "unknown {} {name:?}{hint}; registered: {}",
+                    self.kind,
+                    self.names().join(", ")
+                )
+            }
+        }
+    }
+
+    /// The registered name or alias closest to `name`, if any is within
+    /// edit distance 2 (and closer than replacing the whole query).
+    fn closest(&self, name: &str) -> Option<&str> {
+        let q = name.to_ascii_lowercase();
+        let mut best: Option<(usize, &str)> = None;
+        for e in &self.entries {
+            for cand in std::iter::once(e.name()).chain(e.aliases().iter().copied()) {
+                let d = levenshtein(&q, &cand.to_ascii_lowercase());
+                if d <= 2 && d < q.chars().count() && best.map(|(b, _)| d < b).unwrap_or(true) {
+                    best = Some((d, cand));
+                }
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+
+    /// Canonical names in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<T>> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Classic two-row Levenshtein edit distance over chars — small inputs
+/// only (names and aliases), so O(|a|·|b|) is fine.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Named {
+        name: &'static str,
+        aliases: &'static [&'static str],
+    }
+
+    impl Registered for Named {
+        fn name(&self) -> &str {
+            self.name
+        }
+        fn aliases(&self) -> &'static [&'static str] {
+            self.aliases
+        }
+        fn describe(&self) -> &str {
+            "a test entry"
+        }
+    }
+
+    fn registry() -> Registry<Named> {
+        let mut r = Registry::new("widget");
+        r.register(Arc::new(Named { name: "Alpha", aliases: &["a", "first"] }));
+        r.register(Arc::new(Named { name: "Beta", aliases: &["b"] }));
+        r
+    }
+
+    #[test]
+    fn canonical_beats_alias_and_lookup_is_case_insensitive() {
+        let mut r = registry();
+        assert_eq!(r.get("ALPHA").map(|e| e.name()), Some("Alpha"));
+        assert_eq!(r.get("first").map(|e| e.name()), Some("Alpha"));
+        // an entry *named* like an earlier alias is reachable: canonical
+        // match is tried across all entries before any alias
+        r.register(Arc::new(Named { name: "first", aliases: &[] }));
+        assert_eq!(r.get("first").map(|e| e.name()), Some("first"));
+    }
+
+    #[test]
+    fn register_replaces_case_insensitively() {
+        let mut r = registry();
+        let n = r.len();
+        r.register(Arc::new(Named { name: "ALPHA", aliases: &[] }));
+        assert_eq!(r.len(), n, "replace, not append");
+        assert_eq!(r.get("alpha").map(|e| e.name()), Some("ALPHA"));
+    }
+
+    #[test]
+    fn unknown_names_suggest_and_list() {
+        let r = registry();
+        let err = r.get_or_err("alpa").unwrap_err().to_string();
+        assert!(err.contains("unknown widget \"alpa\""), "{err}");
+        assert!(err.contains("(did you mean \"Alpha\"?)"), "{err}");
+        assert!(err.contains("registered: Alpha, Beta"), "{err}");
+        // far-off queries get no suggestion, just the list
+        let err = r.get_or_err("zzzzzz").unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("registered: Alpha, Beta"), "{err}");
+        // a 1-char query is never "2 edits from" everything: the hint
+        // must not fire when the whole query would be replaced
+        let err = r.get_or_err("x").unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn alias_typos_suggest_the_alias() {
+        let r = registry();
+        let err = r.get_or_err("firts").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"first\"?"), "{err}");
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("abc", "abd"), 1);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("fifo", "FIFO".to_ascii_lowercase().as_str()), 0);
+    }
+}

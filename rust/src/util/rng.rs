@@ -84,6 +84,39 @@ impl Rng {
     pub fn choose<'a, T>(&mut self, v: &'a [T]) -> &'a T {
         &v[self.range(0, v.len())]
     }
+
+    /// Weibull variate by inversion: `scale · (−ln(1−U))^{1/shape}`.
+    /// `shape < 1` gives heavy-tailed, bursty gaps (many tiny values,
+    /// rare huge ones); `shape = 1` is exponential; `shape > 1`
+    /// concentrates around the scale — the knob the `learn` training
+    /// grids turn to diversify inter-arrival patterns beyond the three
+    /// built-in trace kinds.
+    pub fn weibull(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "weibull needs positive shape/scale");
+        let u = self.f64();
+        scale * (-(1.0 - u).max(1e-300).ln()).powf(1.0 / shape)
+    }
+
+    /// UUniFast (Bini & Buttazzo): split `total` into `n` non-negative
+    /// parts whose sum is exactly re-normalized to `total`, uniformly
+    /// over the simplex of such splits. The classic way to spread a
+    /// utilization (or deadline-slack) budget across tasks without the
+    /// bias of independent draws.
+    pub fn uunifast(&mut self, n: usize, total: f64) -> Vec<f64> {
+        assert!(total >= 0.0, "uunifast needs a non-negative total");
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut sum = total;
+        for i in 1..n {
+            let next = sum * self.f64().powf(1.0 / (n - i) as f64);
+            out.push(sum - next);
+            sum = next;
+        }
+        out.push(sum);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +165,61 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.03, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    /// Weibull moments: shape 1 is exponential (mean = scale); shape 2
+    /// has mean `scale·√π/2`. Checked against sample means, plus
+    /// determinism and positivity.
+    #[test]
+    fn weibull_moments_and_determinism() {
+        let n = 50_000;
+        let sample = |shape: f64, scale: f64| -> Vec<f64> {
+            let mut r = Rng::new(23);
+            (0..n).map(|_| r.weibull(shape, scale)).collect()
+        };
+        let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+
+        let exp_like = sample(1.0, 120.0);
+        assert!(exp_like.iter().all(|&x| x >= 0.0));
+        assert!((mean(&exp_like) - 120.0).abs() / 120.0 < 0.03, "shape-1 mean");
+
+        let concentrated = sample(2.0, 100.0);
+        let expect = 100.0 * (std::f64::consts::PI).sqrt() / 2.0;
+        assert!((mean(&concentrated) - expect).abs() / expect < 0.03, "shape-2 mean");
+
+        // heavy tail: shape < 1 has a larger max/median ratio
+        let heavy = sample(0.5, 100.0);
+        let max_of = |xs: &[f64]| xs.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!(max_of(&heavy) > max_of(&concentrated));
+
+        // bit-identical under the same seed
+        assert_eq!(
+            sample(0.7, 33.0).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            sample(0.7, 33.0).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    /// UUniFast: every part non-negative, the parts sum to the total
+    /// (within float tolerance), edge cases n=0/n=1 behave, and the same
+    /// seed reproduces the same partition bit-for-bit.
+    #[test]
+    fn uunifast_partitions_the_total() {
+        let mut r = Rng::new(31);
+        for &(n, total) in &[(1usize, 5.0f64), (2, 1.0), (8, 3.5), (64, 10.0)] {
+            let parts = r.uunifast(n, total);
+            assert_eq!(parts.len(), n);
+            assert!(parts.iter().all(|&p| p >= 0.0), "negative part in {parts:?}");
+            let sum: f64 = parts.iter().sum();
+            assert!((sum - total).abs() < 1e-9 * total.max(1.0), "sum {sum} != {total}");
+        }
+        assert!(Rng::new(1).uunifast(0, 4.0).is_empty());
+        assert_eq!(Rng::new(2).uunifast(1, 4.0), vec![4.0]);
+        let a = Rng::new(77).uunifast(16, 8.0);
+        let b = Rng::new(77).uunifast(16, 8.0);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! equivalences (calendar event queue vs binary heap, incremental vs
 //! legacy dispatch, fed quoting shards), the EASY-backfill
 //! no-head-delay guarantee, the bounded-loss checkpoint arithmetic,
-//! the Jain fairness index range, and the `cluster::Network`
+//! the Jain fairness index range, the in-sim DQN training loop's
+//! same-config bit-determinism, and the `cluster::Network`
 //! collective-timing edge cases (n = 0/1, zero bytes, monotonicity).
 
 use pacpp::cluster::{Env, Network};
@@ -15,6 +16,7 @@ use pacpp::fleet::{
     CheckpointSpec, EventQueueKind, FleetMetrics, FleetOptions, PlacementPolicy,
     PreemptReplan, TraceKind,
 };
+use pacpp::learn::{evaluate, train, DqnConfig, LearnedQueue, TrainConfig};
 use pacpp::util::prop::{check, forall};
 
 #[derive(Debug)]
@@ -121,6 +123,44 @@ fn fleet_event_loop_is_deterministic() {
             check(a == b, format!("same-seed runs diverged:\n  {a:?}\n  {b:?}"))
         },
     );
+}
+
+/// Same `(env, config)` ⇒ bit-identical training: the whole episode
+/// curve (decisions taken, rewards, ε, fitted-Q losses), the trained
+/// weight dump, and the exported policy's held-out evaluation all
+/// match across two independent runs. This is the learn subsystem's
+/// reproducibility contract: a run is a pure function of its config.
+#[test]
+fn learn_training_is_bit_deterministic() {
+    let env = Env::env_a();
+    let cfg = TrainConfig {
+        episodes: 4,
+        jobs: 10,
+        eval_seeds: 1,
+        // a small replay gate so the SGD path actually runs at this size
+        dqn: DqnConfig {
+            min_replay: 16,
+            batch: 8,
+            batches_per_episode: 4,
+            ..DqnConfig::default()
+        },
+        ..TrainConfig::default()
+    };
+    let a = train(&env, &cfg).expect("train a");
+    let b = train(&env, &cfg).expect("train b");
+    assert_eq!(a.episodes, b.episodes, "episode curves diverged");
+    assert!(
+        a.episodes.iter().any(|e| e.loss.is_some()),
+        "config was meant to exercise the SGD path"
+    );
+    assert_eq!(
+        a.net.to_json().to_string_pretty(),
+        b.net.to_json().to_string_pretty(),
+        "weight dumps diverged"
+    );
+    let ea = evaluate(&env, &cfg, &LearnedQueue::new(a.net)).expect("eval a");
+    let eb = evaluate(&env, &cfg, &LearnedQueue::new(b.net)).expect("eval b");
+    assert_eq!(ea, eb, "held-out decisions diverged");
 }
 
 #[derive(Debug)]
