@@ -12,15 +12,19 @@
 //! next to the wall-clock summary. The 100k/1m scale cases are the
 //! scaling gate: their events/sec should stay within an order of
 //! magnitude of the 10k case. The `_churn` case layers a churn trace
-//! on top, adding the replan/restart paths to the measured loop.
+//! on top, adding the replan/restart paths to the measured loop. The
+//! `_traced` case re-runs the 100k stream with a fully-enabled
+//! `Observer` and prints the tracing overhead (the untraced 100k case
+//! doubles as the disabled-observer "costs nothing" gate).
 
 use pacpp::cluster::Env;
 use pacpp::fleet::{
-    generate_churn, simulate_fleet, simulate_fleet_with, BestFit, CheckpointSpec, FleetOptions,
-    Job, PreemptReplan,
+    generate_churn, simulate_fleet, simulate_fleet_observed, simulate_fleet_with, BestFit,
+    CheckpointSpec, FleetOptions, Job, PreemptReplan,
 };
 use pacpp::learn::{LearnedQueue, Mlp, N_FEATURES};
 use pacpp::model::ModelSpec;
+use pacpp::obs::{Observer, DEFAULT_TRACE_CAPACITY};
 use pacpp::util::bench::Bench;
 use pacpp::util::rng::Rng;
 
@@ -70,6 +74,7 @@ fn main() {
     // acceptance gate — the calendar queue and incremental dispatch
     // keep per-event cost flat as the backlog grows. The horizon is
     // widened so the tail drains even if arrivals outpace service.
+    let mut base_100k_mean: Option<f64> = None;
     for n in [100_000usize, 1_000_000] {
         let name = if n >= 1_000_000 {
             format!("fleet_event_loop_{}m_jobs", n / 1_000_000)
@@ -96,6 +101,41 @@ fn main() {
                 m.events,
                 m.completed
             );
+            if n == 100_000 {
+                base_100k_mean = Some(r.summary.mean);
+            }
+        }
+    }
+
+    // Observability gate. `fleet_event_loop_100k_jobs` above *is* the
+    // disabled-`Observer` path (every `simulate_fleet` call routes
+    // through the observed entry point with a disabled observer), so
+    // its events/sec holding steady is the "tracing off costs nothing"
+    // acceptance check. This companion re-times the same 100k stream
+    // with a fully-enabled observer (sample = 1, default ring) and
+    // prints the overhead `--trace-out` actually buys.
+    if b.enabled("fleet_event_loop_100k_jobs_traced") {
+        let jobs = uniform_jobs(100_000);
+        let scale_opts = FleetOptions { horizon: 1e10, ..Default::default() };
+        let m = simulate_fleet(&env, &jobs, &[], &BestFit, &scale_opts).unwrap();
+        let res = b
+            .run("fleet_event_loop_100k_jobs_traced", || {
+                let obs = Observer::with(1, DEFAULT_TRACE_CAPACITY);
+                simulate_fleet_observed(&env, &jobs, &[], &BestFit, &scale_opts, &obs).unwrap()
+            })
+            .cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.0} events/sec ({} events, sample=1)",
+                m.events as f64 / r.summary.mean,
+                m.events
+            );
+            if let Some(base) = base_100k_mean {
+                println!(
+                    "    -> enabled-observer overhead vs disabled path: {:+.1}%",
+                    (r.summary.mean / base - 1.0) * 100.0
+                );
+            }
         }
     }
 

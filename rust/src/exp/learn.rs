@@ -23,7 +23,8 @@ use anyhow::{Context, Result};
 
 use crate::cluster::Env;
 use crate::fleet::QueuePolicyRegistry;
-use crate::learn::{evaluate, train, LearnedQueue, Mlp, TrainConfig};
+use crate::learn::{evaluate, train_observed, LearnedQueue, Mlp, TrainConfig};
+use crate::obs::Observer;
 use crate::util::json::Json;
 
 use super::report::{Cell, ColType, Report};
@@ -54,7 +55,18 @@ const EVAL_BASELINES: &[&str] = &["fifo", "backfill", "edf"];
 /// the dump is bit-exact), so callers can persist exactly what was
 /// evaluated.
 pub fn learn_report(env: &Env, cfg: &TrainConfig) -> Result<(Report, Mlp)> {
-    let result = train(env, cfg)?;
+    learn_report_observed(env, cfg, &Observer::disabled())
+}
+
+/// [`learn_report`] with an [`Observer`]: training runs through
+/// [`crate::learn::train_observed`], so episode spans, fleet job events
+/// and the `training` wall-clock phase land in the trace.
+pub fn learn_report_observed(
+    env: &Env,
+    cfg: &TrainConfig,
+    obs: &Observer,
+) -> Result<(Report, Mlp)> {
+    let result = train_observed(env, cfg, obs)?;
 
     // round-trip the weights through the JSON dump format: what the
     // eval rows measure is what `--weights` / a later `from_json` gets

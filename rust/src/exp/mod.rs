@@ -58,7 +58,7 @@ pub use fleet::{
     fleet_checkpoint_report, fleet_churn_report, fleet_report, fleet_row, fleet_schema,
     fleet_users_report, fleet_users_schema,
 };
-pub use learn::{fleet_learn_report, learn_report, learn_schema};
+pub use learn::{fleet_learn_report, learn_report, learn_report_observed, learn_schema};
 pub use registry::{sweep_report, sweep_schema, ExpContext, Experiment, ExperimentRegistry};
-pub use report::{Cell, ColType, Column, Format, Report};
+pub use report::{Cell, ColType, Column, Format, Report, ELAPSED_SECS_META};
 pub use tables::*;

@@ -14,7 +14,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use super::accuracy::Budget;
-use super::report::{Cell, ColType, Report};
+use super::report::{Cell, ColType, Report, ELAPSED_SECS_META};
 use super::tables::TABLE_SEQ;
 use crate::cluster::Env;
 use crate::data::Task;
@@ -363,9 +363,21 @@ impl ExperimentRegistry {
         r
     }
 
-    /// Run one experiment by name or alias.
+    /// Run one experiment by name or alias, stamping the wall-clock it
+    /// took into the report's [`ELAPSED_SECS_META`] metadata (rendered
+    /// as the text footer, never part of any equality-tested cell).
     pub fn run(&self, name: &str, ctx: &ExpContext) -> Result<Report> {
-        self.get_or_err(name)?.run(ctx)
+        Self::timed_run(self.get_or_err(name)?.as_ref(), ctx)
+    }
+
+    /// Run `e`, stamping [`ELAPSED_SECS_META`] on success.
+    fn timed_run(e: &dyn Experiment, ctx: &ExpContext) -> Result<Report> {
+        let start = std::time::Instant::now();
+        let mut report = e.run(ctx)?;
+        report
+            .meta
+            .insert(ELAPSED_SECS_META.into(), format!("{:.3}", start.elapsed().as_secs_f64()));
+        Ok(report)
     }
 
     /// Run every registered experiment, the parallel-safe ones on worker
@@ -399,14 +411,15 @@ impl ExperimentRegistry {
             .collect();
         let mut slots: Vec<Option<Result<Report>>> =
             (0..experiments.len()).map(|_| None).collect();
-        let par_results =
-            crate::util::par_map(par_idx.len(), |k| experiments[par_idx[k]].run(ctx));
+        let par_results = crate::util::par_map(par_idx.len(), |k| {
+            Self::timed_run(experiments[par_idx[k]].as_ref(), ctx)
+        });
         for (k, res) in par_results.into_iter().enumerate() {
             slots[par_idx[k]] = Some(res);
         }
         for (i, e) in experiments.iter().enumerate() {
             if !e.parallel_safe() {
-                slots[i] = Some(e.run(ctx));
+                slots[i] = Some(Self::timed_run(e.as_ref(), ctx));
             }
         }
         slots
@@ -615,6 +628,22 @@ mod tests {
         r.register(Arc::new(Shadow));
         assert_eq!(r.len(), n, "case-insensitive replace, not an unreachable twin");
         assert_eq!(r.run("fig3", &ExpContext::new()).unwrap().title, "shadowed-upper");
+    }
+
+    #[test]
+    fn run_stamps_elapsed_wall_clock_meta() {
+        let r = ExperimentRegistry::with_defaults();
+        let rep = r.run("fig3", &ExpContext::new()).unwrap();
+        let v = rep.meta.get(ELAPSED_SECS_META).expect("elapsed_secs meta stamped by run");
+        assert!(v.parse::<f64>().unwrap() >= 0.0, "{v}");
+        let results = ExperimentRegistry::run_set(
+            &r.iter().take(2).collect::<Vec<_>>(),
+            &ExpContext::new(),
+        );
+        for res in results {
+            let rep = res.unwrap();
+            assert!(rep.meta.contains_key(ELAPSED_SECS_META), "{}", rep.name);
+        }
     }
 
     #[test]

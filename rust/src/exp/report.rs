@@ -28,6 +28,13 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 use crate::util::{fmt_bytes, fmt_secs};
 
+/// Meta key carrying the wall-clock seconds an experiment took
+/// ([`crate::exp::ExperimentRegistry::run`] stamps it). Wall-clock is
+/// non-deterministic, so the text renderer keeps it out of the
+/// `[k=v, ...]` provenance line and prints it as a trailing footer —
+/// and nothing equality-tested ever includes it.
+pub const ELAPSED_SECS_META: &str = "elapsed_secs";
+
 /// Output format for rendering a [`Report`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Format {
@@ -402,9 +409,13 @@ impl Report {
         let mut out = String::new();
         out.push_str(&self.title);
         out.push('\n');
-        if !self.meta.is_empty() {
-            let pairs: Vec<String> =
-                self.meta.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let pairs: Vec<String> = self
+            .meta
+            .iter()
+            .filter(|(k, _)| k.as_str() != ELAPSED_SECS_META)
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        if !pairs.is_empty() {
             out.push_str(&format!("  [{}]\n", pairs.join(", ")));
         }
         // column widths over header + every rendered cell, in chars —
@@ -445,6 +456,11 @@ impl Report {
         line(&header);
         for r in &rendered {
             line(r);
+        }
+        if let Some(secs) =
+            self.meta.get(ELAPSED_SECS_META).and_then(|s| s.parse::<f64>().ok())
+        {
+            out.push_str(&format!("  elapsed: {}\n", fmt_secs(secs)));
         }
         out
     }
@@ -613,6 +629,20 @@ mod tests {
         // header and rows align on the first column
         let lines: Vec<&str> = t.lines().collect();
         assert_eq!(lines.len(), 2 + 1 + 2, "title, meta, header, two rows");
+    }
+
+    #[test]
+    fn elapsed_meta_renders_as_footer_not_in_meta_line() {
+        let r = sample().meta(ELAPSED_SECS_META, "1.5");
+        let t = r.to_text();
+        assert!(!t.contains("elapsed_secs=1.5"), "kept out of the provenance line: {t}");
+        assert!(t.contains("env=env_a"), "other meta still renders: {t}");
+        assert!(t.ends_with("  elapsed: 1.50 s\n"), "footer: {t}");
+        assert_eq!(t.lines().count(), 2 + 1 + 2 + 1, "title, meta, header, rows, footer");
+        // a report whose only meta is the elapsed stamp skips the
+        // bracket line entirely
+        let bare = Report::new("x", "t").meta(ELAPSED_SECS_META, "0.25");
+        assert!(!bare.to_text().contains("[]"));
     }
 
     #[test]

@@ -56,9 +56,9 @@ pub mod straggler;
 
 pub use metrics::{ClientStat, FedMetrics};
 pub use round::{
-    generate_availability, generate_clients, simulate_fed, simulate_fed_with,
-    traces_from_churn, AggMode, ClientTrace, FedClient, FedOptions, FedTraceKind,
-    PAR_CLIENT_THRESHOLD, SECURE_KEY_BYTES,
+    generate_availability, generate_clients, simulate_fed, simulate_fed_observed,
+    simulate_fed_with, simulate_fed_with_observed, traces_from_churn, AggMode, ClientTrace,
+    FedClient, FedOptions, FedTraceKind, PAR_CLIENT_THRESHOLD, SECURE_KEY_BYTES,
 };
 pub use select::{
     AvailabilityAware, Candidate, ClientSelection, FairShare, PowerOfD, SelectCtx,

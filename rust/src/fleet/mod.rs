@@ -66,7 +66,10 @@ pub use queue::{
     EarliestDeadlineFirst, EasyBackfill, FifoQueue, LeastLaxity, QueueCtx, QueueDecision,
     QueueIndex, QueuePolicy, QueuePolicyRegistry, RunningSnapshot, ShortestJobFirst,
 };
-pub use sim::{simulate_fleet, simulate_fleet_with, FleetOptions, StrategyOracle};
+pub use sim::{
+    simulate_fleet, simulate_fleet_observed, simulate_fleet_with, simulate_fleet_with_observed,
+    FleetOptions, StrategyOracle,
+};
 pub use trace::{
     churn_from_json, churn_to_json, generate_churn, generate_jobs, ChurnEvent, ChurnKind,
     Job, TraceKind, DEFAULT_DEADLINE_MULT,

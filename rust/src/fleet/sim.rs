@@ -28,12 +28,13 @@
 //! `(pool, jobs, churn, policies, options)` tuple always produces a
 //! bit-identical [`FleetMetrics`] (enforced by a property test).
 
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::{Device, DeviceKind, Env};
 use crate::model::graph::LayerGraph;
 use crate::model::{Method, Precision};
+use crate::obs::{Counter, Metrics, Observer, PhaseGuard};
 use crate::profiler::Profile;
 use crate::sched::training;
 use crate::strategy::{ParallelismStrategy, StrategyRegistry, TrainJob};
@@ -101,8 +102,11 @@ pub struct StrategyOracle<'a> {
     network: crate::cluster::Network,
     service_memo: RefCell<BTreeMap<String, Option<f64>>>,
     migration_memo: RefCell<BTreeMap<String, f64>>,
-    hits: Cell<usize>,
-    misses: Cell<usize>,
+    hits: Counter,
+    misses: Counter,
+    /// Wall-clock observer for the miss path (the actual plan search);
+    /// `None` skips the phase timer entirely.
+    obs: Option<&'a Observer>,
 }
 
 impl<'a> StrategyOracle<'a> {
@@ -112,16 +116,43 @@ impl<'a> StrategyOracle<'a> {
             network,
             service_memo: RefCell::new(BTreeMap::new()),
             migration_memo: RefCell::new(BTreeMap::new()),
-            hits: Cell::new(0),
-            misses: Cell::new(0),
+            hits: Counter::new(),
+            misses: Counter::new(),
+            obs: None,
         }
+    }
+
+    /// Attach an [`Observer`]: memo misses (planner calls) run under
+    /// its `plan_search` wall-clock phase timer.
+    pub fn observed(mut self, obs: &'a Observer) -> Self {
+        self.obs = Some(obs);
+        self
+    }
+
+    /// The memo-hit counter, for adoption into a run's
+    /// [`Metrics`] registry (`oracle_hits`).
+    pub fn hits_counter(&self) -> &Counter {
+        &self.hits
+    }
+
+    /// The memo-miss counter (`oracle_misses`).
+    pub fn misses_counter(&self) -> &Counter {
+        &self.misses
     }
 
     /// Observe counters: memo `(hits, misses)` across both the service
     /// and migration memos — how many planner calls the shape
     /// memoization saved this run.
     pub fn cache_stats(&self) -> (usize, usize) {
-        (self.hits.get(), self.misses.get())
+        (self.hits.get() as usize, self.misses.get() as usize)
+    }
+
+    /// A `plan_search` wall-clock guard (no-op without an observer).
+    fn plan_timer(&self) -> PhaseGuard<'_> {
+        match self.obs {
+            Some(o) => o.timer("plan_search"),
+            None => PhaseGuard::noop(),
+        }
     }
 
     fn memo_key(job: &Job, devices: &[Device]) -> String {
@@ -161,10 +192,11 @@ impl<'a> StrategyOracle<'a> {
     pub fn migration_time(&self, job: &Job, devices: &[Device]) -> f64 {
         let key = Self::memo_key(job, devices);
         if let Some(v) = self.migration_memo.borrow().get(&key) {
-            self.hits.set(self.hits.get() + 1);
+            self.hits.inc();
             return *v;
         }
-        self.misses.set(self.misses.get() + 1);
+        self.misses.inc();
+        let _plan = self.plan_timer();
         let env = self.sub_env(devices);
         let t = training::redistribution_time(&self.profile(job), &env, job.samples);
         self.migration_memo.borrow_mut().insert(key, t);
@@ -179,10 +211,11 @@ impl PlanOracle for StrategyOracle<'_> {
         }
         let key = Self::memo_key(job, devices);
         if let Some(v) = self.service_memo.borrow().get(&key) {
-            self.hits.set(self.hits.get() + 1);
+            self.hits.inc();
             return *v;
         }
-        self.misses.set(self.misses.get() + 1);
+        self.misses.inc();
+        let _plan = self.plan_timer();
         let env = self.sub_env(devices);
         let tj = TrainJob::new(job.samples, job.epochs, job.seq, job.minibatch);
         let t = self
@@ -280,7 +313,11 @@ struct Sim<'a> {
     migration_overhead: f64,
     ckpt_count: usize,
     ckpt_overhead: f64,
-    events: usize,
+    /// Events processed, registered as `events` in the run's
+    /// [`Metrics`] registry.
+    events: Counter,
+    /// Trace/timer sink (a disabled observer is one branch per call).
+    obs: &'a Observer,
 }
 
 impl Sim<'_> {
@@ -345,6 +382,7 @@ impl Sim<'_> {
         if self.first_start[job].is_none() {
             self.first_start[job] = Some(now);
         }
+        self.obs.instant("fleet.job", "dispatch", job as u64, now);
         let token = self.tokens[job];
         let rj = RunningJob {
             devices: ids,
@@ -449,6 +487,7 @@ impl Sim<'_> {
     /// device that departed (already released), or `None` for an
     /// in-place degrade.
     fn churn_running_job(&mut self, job: usize, left: Option<usize>, now: f64) {
+        self.obs.instant("fleet.job", "preempt", job as u64, now);
         let rj = self.running.remove(&job).expect("churned job is running");
         self.tokens[job] += 1; // invalidate the scheduled Finish
         let survivors: Vec<usize> =
@@ -498,6 +537,7 @@ impl Sim<'_> {
         // job re-queues ahead of everything else (it has been waiting
         // longest).
         self.restarts += 1;
+        self.obs.instant("fleet.job", "restart", job as u64, now);
         if self.ckpt.is_some() {
             self.work_lost +=
                 (point.progress - self.ckpt_frac[job]).max(0.0) * rj.service_full;
@@ -565,9 +605,26 @@ pub fn simulate_fleet(
     policy: &dyn PlacementPolicy,
     opts: &FleetOptions,
 ) -> crate::Result<FleetMetrics> {
+    simulate_fleet_observed(env, jobs, churn, policy, opts, &Observer::disabled())
+}
+
+/// [`simulate_fleet`] under an explicit [`Observer`]: job-lifecycle
+/// trace events (enqueue → dispatch → preempt → restart → complete),
+/// per-event instants, and `event_loop`/`plan_search` wall-clock
+/// phases are recorded into `obs` when it is enabled. Observation is
+/// purely passive — the returned [`FleetMetrics`] are bit-identical
+/// with tracing on or off (property-pinned).
+pub fn simulate_fleet_observed(
+    env: &Env,
+    jobs: &[Job],
+    churn: &[ChurnEvent],
+    policy: &dyn PlacementPolicy,
+    opts: &FleetOptions,
+    obs: &Observer,
+) -> crate::Result<FleetMetrics> {
     let queue_registry = QueuePolicyRegistry::with_defaults();
     let queue_policy = queue_registry.get_or_err(&opts.queue)?;
-    simulate_fleet_with(env, jobs, churn, policy, queue_policy.as_ref(), opts)
+    simulate_fleet_with_observed(env, jobs, churn, policy, queue_policy.as_ref(), opts, obs)
 }
 
 /// Like [`simulate_fleet`], but over an explicit queue-policy *instance*
@@ -584,6 +641,20 @@ pub fn simulate_fleet_with(
     policy: &dyn PlacementPolicy,
     queue_policy: &dyn QueuePolicy,
     opts: &FleetOptions,
+) -> crate::Result<FleetMetrics> {
+    simulate_fleet_with_observed(env, jobs, churn, policy, queue_policy, opts, &Observer::disabled())
+}
+
+/// [`simulate_fleet_with`] under an explicit [`Observer`] — see
+/// [`simulate_fleet_observed`].
+pub fn simulate_fleet_with_observed(
+    env: &Env,
+    jobs: &[Job],
+    churn: &[ChurnEvent],
+    policy: &dyn PlacementPolicy,
+    queue_policy: &dyn QueuePolicy,
+    opts: &FleetOptions,
+    obs: &Observer,
 ) -> crate::Result<FleetMetrics> {
     let registry = StrategyRegistry::with_defaults();
     let strategy = registry.get_or_err(&opts.strategy)?;
@@ -618,7 +689,14 @@ pub fn simulate_fleet_with(
         }
     }
 
-    let oracle = StrategyOracle::new(strategy.as_ref(), env.network);
+    // The run's metric registry: the oracle's memo counters are
+    // adopted so `oracle_hits`/`oracle_misses` read live, `events`
+    // ticks in the loop, and `rescans_avoided` lands at the end — the
+    // legacy `FleetMetrics` fields below are reads of this registry.
+    let metrics = Metrics::new();
+    let oracle = StrategyOracle::new(strategy.as_ref(), env.network).observed(obs);
+    metrics.adopt_counter("oracle_hits", oracle.hits_counter());
+    metrics.adopt_counter("oracle_misses", oracle.misses_counter());
     // absolute deadlines against the ideal full-pool reference plan
     let deadlines: Vec<f64> = jobs
         .iter()
@@ -670,7 +748,8 @@ pub fn simulate_fleet_with(
         migration_overhead: 0.0,
         ckpt_count: 0,
         ckpt_overhead: 0.0,
-        events: 0,
+        events: metrics.counter("events"),
+        obs,
     };
     for job in jobs {
         sim.push(job.arrival, EventKind::Arrival(job.id));
@@ -680,13 +759,15 @@ pub fn simulate_fleet_with(
     }
 
     let mut hit_horizon = false;
-    while let Some((time, _seq, kind)) = sim.eventq.pop() {
+    let loop_timer = obs.timer("event_loop");
+    while let Some((time, seq, kind)) = sim.eventq.pop() {
         if time > sim.horizon {
             hit_horizon = true;
             break;
         }
         sim.now = time;
-        sim.events += 1;
+        sim.events.inc();
+        sim.obs.instant("sim.event", "event", seq, time);
         match kind {
             EventKind::Arrival(id) => {
                 // vet the arrival once: a job infeasible on the whole
@@ -702,6 +783,7 @@ pub fn simulate_fleet_with(
                 {
                     sim.failed += 1;
                 } else {
+                    sim.obs.instant("fleet.job", "enqueue", id as u64, time);
                     sim.queue.push_back(id);
                     if let Some(ix) = &sim.index {
                         ix.on_enqueue_back(id);
@@ -721,6 +803,9 @@ pub fn simulate_fleet_with(
                     sim.release(id, time);
                 }
                 sim.finish_at[job] = Some(time);
+                sim.obs.instant("fleet.job", "complete", job as u64, time);
+                let arrival = sim.jobs[job].arrival;
+                sim.obs.span("fleet.job", "job", job as u64, arrival, time - arrival);
                 if let Some(ix) = &sim.index {
                     ix.on_state_change(); // devices were freed
                 }
@@ -729,6 +814,7 @@ pub fn simulate_fleet_with(
         }
         sim.try_dispatch(time);
     }
+    drop(loop_timer);
 
     let end = if hit_horizon { sim.horizon } else { sim.now };
     // attempts cut off by the horizon never reach their churn/Finish
@@ -784,7 +870,11 @@ pub fn simulate_fleet_with(
         })
         .collect();
 
-    let (oracle_hits, oracle_misses) = sim.oracle.cache_stats();
+    metrics
+        .counter("rescans_avoided")
+        .add(sim.index.as_ref().map_or(0, |ix| ix.rescans_avoided()) as u64);
+    obs.absorb(&metrics);
+    // the legacy observe fields are reads of the metric registry
     Ok(FleetMetrics::assemble(RawFleet {
         per_job,
         failed: sim.failed,
@@ -797,10 +887,10 @@ pub fn simulate_fleet_with(
         migration_overhead: sim.migration_overhead,
         ckpt_count: sim.ckpt_count,
         ckpt_overhead: sim.ckpt_overhead,
-        events: sim.events,
-        oracle_hits,
-        oracle_misses,
-        rescans_avoided: sim.index.as_ref().map_or(0, |ix| ix.rescans_avoided()),
+        events: metrics.value("events") as usize,
+        oracle_hits: metrics.value("oracle_hits") as usize,
+        oracle_misses: metrics.value("oracle_misses") as usize,
+        rescans_avoided: metrics.value("rescans_avoided") as usize,
     }))
 }
 

@@ -49,6 +49,6 @@ pub use net::{Dense, Mlp};
 pub use policy::{EpisodeOutcome, LearnedQueue, TrainerQueue, CANDIDATE_CAP};
 pub use replay::{Replay, Transition};
 pub use train::{
-    evaluate, held_out_seed, train, train_seed, workload, EpisodeStats, EvalStats,
-    TrainConfig, TrainResult,
+    evaluate, held_out_seed, train, train_observed, train_seed, workload, EpisodeStats,
+    EvalStats, TrainConfig, TrainResult,
 };

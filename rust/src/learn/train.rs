@@ -27,9 +27,10 @@ use anyhow::Result;
 
 use crate::cluster::Env;
 use crate::fleet::{
-    generate_churn, generate_jobs, simulate_fleet_with, BestFit, ChurnEvent, FleetOptions,
-    Job, QueuePolicy, TraceKind,
+    generate_churn, generate_jobs, simulate_fleet_with, simulate_fleet_with_observed, BestFit,
+    ChurnEvent, FleetOptions, Job, QueuePolicy, TraceKind,
 };
+use crate::obs::Observer;
 use crate::util::rng::Rng;
 
 use super::agent::{DqnAgent, DqnConfig};
@@ -147,13 +148,27 @@ pub struct TrainResult {
 
 /// Run the training loop. Bit-deterministic in `(env, cfg)`.
 pub fn train(env: &Env, cfg: &TrainConfig) -> Result<TrainResult> {
+    train_observed(env, cfg, &Observer::disabled())
+}
+
+/// [`train`] with an [`Observer`]: episodes become `learn.episode`
+/// spans laid end-to-end on a cumulative virtual-makespan axis, each
+/// episode's fleet-level job events are traced through
+/// [`simulate_fleet_with_observed`], and the whole loop runs under the
+/// `training` wall-clock phase. Observation never perturbs training
+/// (property-pinned weight determinism still holds).
+pub fn train_observed(env: &Env, cfg: &TrainConfig, obs: &Observer) -> Result<TrainResult> {
+    let training_timer = obs.timer("training");
     let opts = fleet_opts(cfg);
     let trainer = TrainerQueue::new(DqnAgent::new(cfg.dqn.clone(), cfg.seed));
     let mut episodes = Vec::with_capacity(cfg.episodes);
+    let mut virtual_t = 0.0f64;
     for e in 0..cfg.episodes {
         let seed = train_seed(cfg.seed, e);
         let (jobs, churn) = workload(env, cfg.jobs, cfg.horizon, seed);
-        let m = simulate_fleet_with(env, &jobs, &churn, &BestFit, &trainer, &opts)?;
+        let m = simulate_fleet_with_observed(env, &jobs, &churn, &BestFit, &trainer, &opts, obs)?;
+        obs.span("learn.episode", "episode", e as u64, virtual_t, m.makespan);
+        virtual_t += m.makespan;
         let out = trainer.finish_episode(&m);
         episodes.push(EpisodeStats {
             episode: e,
@@ -168,6 +183,7 @@ pub fn train(env: &Env, cfg: &TrainConfig) -> Result<TrainResult> {
             met: m.deadline_met,
         });
     }
+    drop(training_timer);
     Ok(TrainResult { episodes, net: trainer.into_agent().into_net() })
 }
 

@@ -35,6 +35,7 @@
 //! | [`fleet::eventq`] | pluggable event-queue backends for the fleet loop: calendar/bucket queue (default) and binary heap, bit-identical orderings |
 //! | [`fed`]     | round-based federated adapter-aggregation simulator: client selection, straggler policies, availability churn, secure-agg/DP knobs |
 //! | [`learn`]   | in-simulator RL scheduling: dependency-free DQN over fleet decision points, exported as a loadable queue policy |
+//! | [`obs`]     | observability: typed metric registry, virtual-time span tracing (Chrome/Perfetto + JSONL export), wall-clock phase timers, all behind a zero-cost-when-disabled `Observer` |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
 //! | [`data`]    | synthetic GLUE-like workload generators |
 //! | [`exp`]     | typed `Experiment`/`Report` API + name-addressed registry of every paper table/figure |
@@ -215,6 +216,41 @@
 //! policies by registry name; the `fed` / `fed_select` experiments
 //! compare every registered policy on the shared grids.
 //!
+//! ## Adding an instrumentation point
+//!
+//! Observability is one substrate ([`obs`]) with three faces — named
+//! metrics ([`obs::Metrics`]), virtual-time trace events
+//! ([`obs::trace`]) and wall-clock phase timers ([`obs::timer`]) —
+//! carried through the simulators by the [`obs::Observer`] handle
+//! (`&Observer`, [`disabled`](obs::Observer::disabled) by default). To
+//! instrument new code:
+//!
+//! 1. **counter/gauge/histogram**: register into the run's
+//!    [`obs::Metrics`] (`metrics.counter("my_counter")` returns a
+//!    shared [`obs::Counter`] handle — `inc()` in the hot path, read
+//!    it back when assembling the run's metrics struct, as
+//!    `fleet::sim` does for `events`/`oracle_hits`). Counters owned by
+//!    a collaborator join the registry via
+//!    [`adopt_counter`](obs::Metrics::adopt_counter);
+//! 2. **trace event**: call
+//!    [`obs.instant(cat, name, id, ts)`](obs::Observer::instant) or
+//!    [`obs.span(cat, name, id, ts, dur)`](obs::Observer::span) with
+//!    the **virtual** clock — sampling (`id % N`) and ring bounding
+//!    are applied inside; a disabled observer costs one branch;
+//! 3. **wall-clock phase**: wrap the region in
+//!    [`obs.time("phase", f)`](obs::Observer::time) or hold an RAII
+//!    [`obs.timer("phase")`](obs::Observer::timer) guard. Wall
+//!    readings are non-deterministic, so surface them only in report
+//!    *metadata* / CLI footers, never in equality-tested metrics;
+//! 4. run `cargo test`: `tests/prop_invariants.rs` pins that tracing
+//!    on vs. off never changes `FleetMetrics`/`FedMetrics`, and the
+//!    trace round-trip test shows the export-reparse contract.
+//!
+//! `pacpp fleet|fed|learn --trace-out FILE [--trace-sample N]` exports
+//! Chrome trace-event JSON (Perfetto-loadable; `.jsonl` extension
+//! switches to JSONL), and every `exp` run stamps `elapsed_secs` into
+//! its report metadata.
+//!
 //! ## Scaling knobs
 //!
 //! The simulators are sized for 1M-job fleet traces and 100k-client
@@ -261,6 +297,7 @@ pub mod fed;
 pub mod fleet;
 pub mod learn;
 pub mod model;
+pub mod obs;
 pub mod planner;
 pub mod profiler;
 pub mod quant;

@@ -17,6 +17,7 @@
 //!                [--churn-file FILE] [--horizon HOURS] [--deadline SCALE]
 //!                [--ckpt K] [--ckpt-cost SECS] [--strategy pac+]
 //!                [--event-queue calendar|heap] [--legacy-dispatch]
+//!                [--trace-out FILE] [--trace-sample N]
 //!                [--format text|json|csv] [--out FILE]
 //! pacpp fed      [--rounds 50] [--clients 24] [--k 6]
 //!                [--select all|uniform|power-of-d|availability|fair[,..]]
@@ -27,10 +28,12 @@
 //!                [--model t5-base] [--strategy pac+] [--horizon HOURS]
 //!                [--deadline-mult X] [--over-select S] [--secure-agg]
 //!                [--dp-cost SECS] [--jitter X] [--target ROUNDS]
-//!                [--shards N] [--format text|json|csv] [--out FILE]
+//!                [--shards N] [--trace-out FILE] [--trace-sample N]
+//!                [--format text|json|csv] [--out FILE]
 //! pacpp learn    [--env env_a] [--episodes 30] [--jobs 40] [--seed 42]
 //!                [--eval-seeds 3] [--horizon HOURS] [--deadline SCALE]
-//!                [--weights FILE] [--format text|json|csv] [--out FILE]
+//!                [--weights FILE] [--trace-out FILE] [--trace-sample N]
+//!                [--format text|json|csv] [--out FILE]
 //!                     (train the in-sim DQN scheduler, dump + reload its
 //!                      weights, and evaluate vs FIFO/backfill/EDF)
 //! pacpp timeline --env env_a [--microbatch 4] [--m 6] [--width 120]
@@ -48,16 +51,18 @@ use pacpp::data::SyntheticTask;
 use pacpp::exec::{self, TrainOptions};
 use pacpp::exp::{self, ExpContext, ExperimentRegistry, Format, Report};
 use pacpp::fed::{
-    simulate_fed, AggMode, FedOptions, FedTraceKind, SelectionRegistry, StragglerRegistry,
+    simulate_fed_observed, AggMode, FedOptions, FedTraceKind, SelectionRegistry,
+    StragglerRegistry,
 };
 use pacpp::fleet::{
-    churn_from_json, generate_churn, generate_jobs, simulate_fleet, CheckpointSpec,
+    churn_from_json, generate_churn, generate_jobs, simulate_fleet_observed, CheckpointSpec,
     EventQueueKind, FleetOptions, PlacementPolicy, PolicyRegistry, QueuePolicyRegistry,
     TraceKind, DEFAULT_CKPT_COST,
 };
 use pacpp::learn::TrainConfig;
 use pacpp::model::graph::LayerGraph;
 use pacpp::model::{Method, ModelSpec, Precision};
+use pacpp::obs::{Observer, DEFAULT_TRACE_CAPACITY};
 use pacpp::planner::{plan, PlannerOptions};
 use pacpp::profiler::Profile;
 use pacpp::runtime::Runtime;
@@ -322,6 +327,59 @@ fn validate_out(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse the shared tracing flags of `fleet`/`fed`/`learn`:
+/// `--trace-out FILE` enables the observer and picks the export format
+/// by extension (`.jsonl` → JSONL, anything else → Chrome trace-event
+/// JSON, Perfetto-loadable); `--trace-sample N` keeps 1-in-N trace
+/// subjects. The destination is validated up front like `--out`.
+fn parse_observer(args: &Args) -> anyhow::Result<(Observer, Option<String>)> {
+    let sample = args.get_count("trace-sample", 1)? as u64;
+    let trace_out = match args.get_str("trace-out", "")? {
+        "" => None,
+        path => Some(path.to_string()),
+    };
+    if let Some(path) = &trace_out {
+        let p = std::path::Path::new(path);
+        anyhow::ensure!(
+            !p.is_dir(),
+            "--trace-out {path}: is a directory, expected a file path"
+        );
+        pacpp::util::ensure_parent_dirs(path)
+            .map_err(|e| anyhow::anyhow!("--trace-out {path}: {e}"))?;
+    }
+    let obs = if trace_out.is_some() {
+        Observer::with(sample, DEFAULT_TRACE_CAPACITY)
+    } else {
+        Observer::disabled()
+    };
+    Ok((obs, trace_out))
+}
+
+/// Shared tail of the traced subcommands: write the trace file (if
+/// requested) and print the wall-clock phase footer on stderr.
+fn finish_observer(obs: &Observer, trace_out: &Option<String>) -> anyhow::Result<()> {
+    if let Some(path) = trace_out {
+        let text = if path.ends_with(".jsonl") {
+            obs.to_jsonl()
+        } else {
+            let mut s = obs.to_chrome_json().to_string_pretty();
+            s.push('\n');
+            s
+        };
+        pacpp::util::write_creating_dirs(path, &text)?;
+        let (held, recorded, dropped) = obs.trace_counts();
+        eprintln!(
+            "wrote {path} ({} bytes, {held} trace events held, {recorded} recorded, \
+             {dropped} overwritten)",
+            text.len()
+        );
+    }
+    for (phase, stat) in obs.wall_phases() {
+        eprintln!("  wall {phase}: {} over {} call(s)", fmt_secs(stat.secs), stat.count);
+    }
+    Ok(())
+}
+
 /// Run registry experiments by name and render them. Names, the output
 /// format and the `--out` destination are validated *before* anything
 /// runs — a typo in the last name or in `--format` must not cost a
@@ -468,6 +526,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let incremental_queue = !args.flag("legacy-dispatch");
     let format = parse_format(args)?;
     validate_out(args)?;
+    let (obs, trace_out) = parse_observer(args)?;
 
     let registry = PolicyRegistry::with_defaults();
     let spec = args.get_str("policy", "all")?;
@@ -529,8 +588,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     .meta("incremental_queue", incremental_queue);
     // observe counters, summed over the policy rows
     let (mut events, mut hits, mut misses, mut rescans) = (0usize, 0usize, 0usize, 0usize);
+    let t0 = std::time::Instant::now();
     for policy in &policies {
-        let m = simulate_fleet(&env, &jobs, &churn, policy.as_ref(), &opts)?;
+        let m = simulate_fleet_observed(&env, &jobs, &churn, policy.as_ref(), &opts, &obs)?;
         events += m.events;
         hits += m.oracle_hits;
         misses += m.oracle_misses;
@@ -549,7 +609,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         .meta("events_total", events)
         .meta("oracle_hits_total", hits)
         .meta("oracle_misses_total", misses)
-        .meta("rescans_avoided_total", rescans);
+        .meta("rescans_avoided_total", rescans)
+        .meta(exp::ELAPSED_SECS_META, format!("{:.3}", t0.elapsed().as_secs_f64()));
+    finish_observer(&obs, &trace_out)?;
     emit_reports(&[report], format, false, args)
 }
 
@@ -621,6 +683,7 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
     let shards = args.get_count0("shards", 0)?;
     let format = parse_format(args)?;
     validate_out(args)?;
+    let (obs, trace_out) = parse_observer(args)?;
 
     let selection_registry = SelectionRegistry::with_defaults();
     let spec = args.get_str("select", "all")?;
@@ -656,6 +719,7 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
     .meta("shards", shards);
     // observe counters, summed over the selection rows
     let (mut hits, mut misses) = (0usize, 0usize);
+    let t0 = std::time::Instant::now();
     for select in &selects {
         let opts = FedOptions {
             rounds,
@@ -681,15 +745,19 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
         let m = match &churn_traces {
             Some(traces) => {
                 let clients = pacpp::fed::generate_clients(n_clients, seed);
-                pacpp::fed::simulate_fed_with(&clients, traces, &opts)?
+                pacpp::fed::simulate_fed_with_observed(&clients, traces, &opts, &obs)?
             }
-            None => simulate_fed(&opts)?,
+            None => simulate_fed_observed(&opts, &obs)?,
         };
         hits += m.oracle_hits;
         misses += m.oracle_misses;
         report.push(exp::fed_row(net_name, trace_label, &opts, &m));
     }
-    report = report.meta("oracle_hits_total", hits).meta("oracle_misses_total", misses);
+    report = report
+        .meta("oracle_hits_total", hits)
+        .meta("oracle_misses_total", misses)
+        .meta(exp::ELAPSED_SECS_META, format!("{:.3}", t0.elapsed().as_secs_f64()));
+    finish_observer(&obs, &trace_out)?;
     emit_reports(&[report], format, false, args)
 }
 
@@ -717,6 +785,7 @@ fn cmd_learn(args: &Args) -> anyhow::Result<()> {
     };
     let format = parse_format(args)?;
     validate_out(args)?;
+    let (obs, trace_out) = parse_observer(args)?;
     let weights_path = args.get("weights").map(String::from);
     if let Some(path) = &weights_path {
         let p = std::path::Path::new(path);
@@ -725,12 +794,17 @@ fn cmd_learn(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("--weights {path}: {e}"))?;
     }
 
-    let (report, net) = exp::learn_report(&env, &cfg)?;
+    let t0 = std::time::Instant::now();
+    let (mut report, net) = exp::learn_report_observed(&env, &cfg, &obs)?;
+    report
+        .meta
+        .insert(exp::ELAPSED_SECS_META.into(), format!("{:.3}", t0.elapsed().as_secs_f64()));
     if let Some(path) = &weights_path {
         let text = net.to_json().to_string_pretty();
         pacpp::util::write_creating_dirs(path, &text)?;
         eprintln!("wrote {path} ({} bytes, weights json)", text.len());
     }
+    finish_observer(&obs, &trace_out)?;
     emit_reports(&[report], format, false, args)
 }
 

@@ -1,0 +1,245 @@
+//! `obs::metrics` — a typed registry of named counters, gauges and
+//! streaming histograms.
+//!
+//! The simulators used to staple observe counters straight onto their
+//! metrics structs (`events`, `oracle_hits`, …). Those fields survive —
+//! they are the public accounting surface — but the *live* values now
+//! flow through this registry: each run constructs one [`Metrics`],
+//! registers its counters by name (or adopts counters owned by a
+//! collaborator like [`crate::fleet::StrategyOracle`]), and reads the
+//! registry back when assembling its metrics struct. The registry is a
+//! pure accounting layer: it never influences simulation decisions, so
+//! same-seed runs stay bit-identical whether or not anyone looks.
+//!
+//! Counters are shared handles ([`Counter`], an `Rc<Cell<u64>>`): the
+//! hot loop increments through the same cell the registry reads, so
+//! there is no sync point and no double bookkeeping. Histograms reuse
+//! [`QuantileSketch`] — exact below [`SKETCH_EXACT_LIMIT`]
+//! observations, streaming P² above it — so a million-sample run never
+//! materialises its sample vector.
+
+use crate::util::json::Json;
+use crate::util::stats::{QuantileSketch, SKETCH_EXACT_LIMIT};
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// The quantiles every registry histogram tracks.
+pub const HIST_QUANTILES: [f64; 3] = [0.50, 0.95, 0.99];
+
+/// A named monotone counter: a cheap shared handle (`Rc<Cell<u64>>`)
+/// that both the hot loop and the [`Metrics`] registry can hold.
+/// Cloning shares the underlying cell.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Rc<Cell<u64>>);
+
+impl Counter {
+    /// A detached counter at zero (adopt it into a registry with
+    /// [`Metrics::adopt_counter`] to make it readable by name).
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.set(self.0.get() + 1);
+    }
+
+    /// Increment by `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.set(self.0.get() + n);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.get()
+    }
+}
+
+/// One run's registry of named counters, gauges and histograms.
+///
+/// Interior-mutable (`&self` everywhere) so a registry can be threaded
+/// through code that already borrows the simulator state; not `Sync` —
+/// each parallel worker builds its own.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: RefCell<BTreeMap<String, Counter>>,
+    gauges: RefCell<BTreeMap<String, f64>>,
+    hists: RefCell<BTreeMap<String, QuantileSketch>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Register-or-get the counter called `name`, returning a shared
+    /// handle to it.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counters
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Adopt an externally owned counter under `name`: the registry
+    /// holds a handle to the *same* cell, so later increments through
+    /// either handle are visible to both. Replaces any counter already
+    /// registered under that name.
+    pub fn adopt_counter(&self, name: &str, counter: &Counter) {
+        self.counters
+            .borrow_mut()
+            .insert(name.to_string(), counter.clone());
+    }
+
+    /// Current value of the counter called `name` (0 if unregistered).
+    pub fn value(&self, name: &str) -> u64 {
+        self.counters.borrow().get(name).map_or(0, Counter::get)
+    }
+
+    /// Set the gauge called `name` (last write wins).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges.borrow_mut().insert(name.to_string(), value);
+    }
+
+    /// Current value of the gauge called `name`.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.borrow().get(name).copied()
+    }
+
+    /// Feed one observation into the histogram called `name`
+    /// (registered on first use, tracking [`HIST_QUANTILES`]).
+    pub fn observe(&self, name: &str, x: f64) {
+        self.hists
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_insert_with(|| QuantileSketch::new(&HIST_QUANTILES, SKETCH_EXACT_LIMIT))
+            .add(x);
+    }
+
+    /// Number of observations the histogram called `name` has seen.
+    pub fn hist_len(&self, name: &str) -> usize {
+        self.hists.borrow().get(name).map_or(0, QuantileSketch::len)
+    }
+
+    /// Fold another registry's counters and gauges into this one:
+    /// counter values are *added* (so repeated runs accumulate), gauges
+    /// are overwritten. Histograms are per-run state and do not merge.
+    pub fn absorb(&self, other: &Metrics) {
+        for (name, c) in other.counters.borrow().iter() {
+            self.counter(name).add(c.get());
+        }
+        for (name, &v) in other.gauges.borrow().iter() {
+            self.set_gauge(name, v);
+        }
+    }
+
+    /// The registry as JSON: `{"counters": {..}, "gauges": {..},
+    /// "histograms": {name: {count, p50, p95, p99}}}` — deterministic
+    /// key order courtesy of the BTreeMaps.
+    pub fn snapshot(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .borrow()
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::from(c.get())))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .borrow()
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::from(v)))
+            .collect();
+        let hists: BTreeMap<String, Json> = self
+            .hists
+            .borrow()
+            .iter()
+            .map(|(k, sketch)| {
+                let qs = sketch.quantile_many(&HIST_QUANTILES);
+                let mut h = vec![("count".to_string(), Json::from(sketch.len()))];
+                for (&q, v) in HIST_QUANTILES.iter().zip(qs) {
+                    let key = format!("p{:02}", (q * 100.0).round() as u64);
+                    h.push((key, v.map_or(Json::Null, Json::from)));
+                }
+                (k.clone(), Json::Obj(h.into_iter().collect()))
+            })
+            .collect();
+        Json::Obj(
+            [
+                ("counters".to_string(), Json::Obj(counters)),
+                ("gauges".to_string(), Json::Obj(gauges)),
+                ("histograms".to_string(), Json::Obj(hists)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_share_their_cell() {
+        let m = Metrics::new();
+        let a = m.counter("events");
+        let b = m.counter("events");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(m.value("events"), 3);
+        assert_eq!(m.value("missing"), 0);
+    }
+
+    #[test]
+    fn adopted_counters_stay_live() {
+        let owned = Counter::new();
+        owned.add(5);
+        let m = Metrics::new();
+        m.adopt_counter("oracle_hits", &owned);
+        owned.inc();
+        assert_eq!(m.value("oracle_hits"), 6);
+    }
+
+    #[test]
+    fn absorb_adds_counters_and_overwrites_gauges() {
+        let a = Metrics::new();
+        a.counter("events").add(10);
+        a.set_gauge("pool", 4.0);
+        let b = Metrics::new();
+        b.counter("events").add(7);
+        b.set_gauge("pool", 8.0);
+        a.absorb(&b);
+        assert_eq!(a.value("events"), 17);
+        assert_eq!(a.gauge("pool"), Some(8.0));
+    }
+
+    #[test]
+    fn snapshot_has_stable_shape() {
+        let m = Metrics::new();
+        m.counter("events").add(3);
+        m.set_gauge("devices", 8.0);
+        for i in 0..100 {
+            m.observe("latency", i as f64);
+        }
+        let snap = m.snapshot();
+        let text = snap.to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        let at = |path: &[&str]| -> f64 {
+            path.iter()
+                .fold(&back, |j, k| j.get(k).unwrap_or_else(|| panic!("missing {k}")))
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(at(&["counters", "events"]), 3.0);
+        assert_eq!(at(&["gauges", "devices"]), 8.0);
+        assert_eq!(at(&["histograms", "latency", "count"]), 100.0);
+        assert!(at(&["histograms", "latency", "p50"]) > 0.0);
+        assert_eq!(m.hist_len("latency"), 100);
+    }
+}

@@ -1,0 +1,266 @@
+//! `obs` — the deterministic observability layer: typed metrics
+//! ([`metrics`]), virtual-time span/event tracing ([`trace`]) and
+//! wall-clock phase timers ([`timer`]), tied together by the
+//! zero-cost-when-disabled [`Observer`] handle the simulators thread
+//! through their loops.
+//!
+//! Design rules, in priority order:
+//!
+//! 1. **Never perturb the run.** Observation is read-only: no RNG
+//!    draws, no float arithmetic feeding back into decisions, no
+//!    reordering. Tracing on vs. off yields bit-identical
+//!    [`crate::fleet::FleetMetrics`] / [`crate::fed::FedMetrics`]
+//!    (property-pinned in `tests/prop_invariants.rs`).
+//! 2. **Free when off.** [`Observer::disabled`] is a `None`; every
+//!    recording call is one predictable branch. The `bench_fleet`
+//!    `fleet_event_loop_100k_jobs` case gates the disabled path.
+//! 3. **Bounded when on.** The trace ring has fixed capacity and a
+//!    sampling knob ([`Observer::with`]), so a 1M-job run traces its
+//!    tail instead of exhausting memory.
+//!
+//! Entry points: `pacpp fleet|fed|learn --trace-out FILE
+//! --trace-sample N` on the CLI, or the library's `*_observed`
+//! variants ([`crate::fleet::simulate_fleet_observed`],
+//! [`crate::fed::simulate_fed_observed`],
+//! [`crate::learn::train_observed`]). See the crate docs ("Adding an
+//! instrumentation point") for how to record from new code.
+
+pub mod metrics;
+pub mod timer;
+pub mod trace;
+
+pub use metrics::{Counter, Metrics, HIST_QUANTILES};
+pub use timer::{PhaseGuard, PhaseStat, Timers};
+pub use trace::{TraceEvent, TraceRing, DEFAULT_TRACE_CAPACITY};
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+
+/// The handle the simulators carry: either disabled (a `None`, every
+/// call a no-op branch) or an enabled recorder owning a trace ring,
+/// phase timers and an accumulating metrics registry.
+#[derive(Debug, Default)]
+pub struct Observer {
+    state: Option<Box<ObsState>>,
+}
+
+#[derive(Debug)]
+struct ObsState {
+    /// Record subjects whose id satisfies `id % sample == 0` (≥ 1).
+    sample: u64,
+    ring: RefCell<TraceRing>,
+    timers: Timers,
+    /// Per-run registries absorbed here ([`Observer::absorb`]) so a
+    /// multi-run CLI invocation exports one combined snapshot.
+    metrics: Metrics,
+}
+
+impl Observer {
+    /// The no-op observer: records nothing, costs one branch per call.
+    pub fn disabled() -> Observer {
+        Observer { state: None }
+    }
+
+    /// An enabled observer recording every subject at default capacity.
+    pub fn enabled() -> Observer {
+        Observer::with(1, DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// An enabled observer keeping 1-in-`sample` subjects (job ids,
+    /// round numbers, …; clamped to ≥ 1) in a `capacity`-event ring.
+    pub fn with(sample: u64, capacity: usize) -> Observer {
+        Observer {
+            state: Some(Box::new(ObsState {
+                sample: sample.max(1),
+                ring: RefCell::new(TraceRing::new(capacity)),
+                timers: Timers::new(),
+                metrics: Metrics::new(),
+            })),
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Whether subject `id` falls in the sampled set (false when
+    /// disabled) — the gate every recording call applies itself; call
+    /// it directly only to skip *building* expensive event arguments.
+    #[inline]
+    pub fn sampled(&self, id: u64) -> bool {
+        match &self.state {
+            Some(s) => id % s.sample == 0,
+            None => false,
+        }
+    }
+
+    /// Record an instant event at virtual time `ts` if `id` is sampled.
+    #[inline]
+    pub fn instant(&self, cat: &'static str, name: &'static str, id: u64, ts: f64) {
+        if let Some(s) = &self.state {
+            if id % s.sample == 0 {
+                s.ring
+                    .borrow_mut()
+                    .record(TraceEvent { ts, dur: None, cat, name, id });
+            }
+        }
+    }
+
+    /// Record a span `[ts, ts + dur]` of virtual time if `id` is
+    /// sampled.
+    #[inline]
+    pub fn span(&self, cat: &'static str, name: &'static str, id: u64, ts: f64, dur: f64) {
+        if let Some(s) = &self.state {
+            if id % s.sample == 0 {
+                s.ring
+                    .borrow_mut()
+                    .record(TraceEvent { ts, dur: Some(dur), cat, name, id });
+            }
+        }
+    }
+
+    /// Run `f` under the wall-clock timer for `phase` (runs `f`
+    /// untimed when disabled).
+    #[inline]
+    pub fn time<T>(&self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        match &self.state {
+            Some(s) => {
+                let _guard = s.timers.start(phase);
+                f()
+            }
+            None => f(),
+        }
+    }
+
+    /// An RAII wall-clock guard for `phase` (a no-op guard when
+    /// disabled) — for phases that span `?`-bearing code.
+    pub fn timer(&self, phase: &'static str) -> PhaseGuard<'_> {
+        match &self.state {
+            Some(s) => s.timers.start(phase),
+            None => PhaseGuard::noop(),
+        }
+    }
+
+    /// Fold a run's metrics registry into the observer's accumulator
+    /// (counters add, gauges overwrite); no-op when disabled.
+    pub fn absorb(&self, m: &Metrics) {
+        if let Some(s) = &self.state {
+            s.metrics.absorb(m);
+        }
+    }
+
+    /// Count of trace events held, total recorded and overwritten.
+    pub fn trace_counts(&self) -> (usize, u64, u64) {
+        match &self.state {
+            Some(s) => {
+                let ring = s.ring.borrow();
+                (ring.len(), ring.recorded(), ring.dropped())
+            }
+            None => (0, 0, 0),
+        }
+    }
+
+    /// Wall-clock phase snapshot (empty when disabled).
+    pub fn wall_phases(&self) -> Vec<(&'static str, PhaseStat)> {
+        match &self.state {
+            Some(s) => s.timers.snapshot(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Everything recorded so far as Chrome trace-event JSON: the ring
+    /// plus `otherData` carrying the sampling knob, the absorbed
+    /// metrics snapshot and the wall-clock phases.
+    pub fn to_chrome_json(&self) -> Json {
+        match &self.state {
+            Some(s) => {
+                let timers: Json = crate::util::json::obj(
+                    s.timers
+                        .snapshot()
+                        .iter()
+                        .map(|(phase, stat)| {
+                            (
+                                *phase,
+                                crate::util::json::obj(vec![
+                                    ("secs", Json::from(stat.secs)),
+                                    ("count", Json::from(stat.count)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                );
+                s.ring.borrow().to_chrome(vec![
+                    ("sample", Json::from(s.sample)),
+                    ("metrics", s.metrics.snapshot()),
+                    ("wall", timers),
+                ])
+            }
+            None => TraceRing::new(1).to_chrome(Vec::new()),
+        }
+    }
+
+    /// Everything recorded so far as JSONL (empty when disabled).
+    pub fn to_jsonl(&self) -> String {
+        match &self.state {
+            Some(s) => s.ring.borrow().to_jsonl(),
+            None => String::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_observer_records_nothing() {
+        let obs = Observer::disabled();
+        assert!(!obs.is_enabled());
+        assert!(!obs.sampled(0));
+        obs.instant("cat", "name", 0, 1.0);
+        obs.span("cat", "name", 0, 1.0, 2.0);
+        let ran = obs.time("phase", || 42);
+        assert_eq!(ran, 42);
+        drop(obs.timer("phase"));
+        assert_eq!(obs.trace_counts(), (0, 0, 0));
+        assert!(obs.wall_phases().is_empty());
+        assert!(obs.to_jsonl().is_empty());
+        let chrome = obs.to_chrome_json();
+        assert!(chrome.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn sampling_keeps_one_in_n_subjects() {
+        let obs = Observer::with(3, 64);
+        for id in 0..10u64 {
+            obs.instant("sim.event", "tick", id, id as f64);
+        }
+        // ids 0, 3, 6, 9
+        assert_eq!(obs.trace_counts().0, 4);
+        assert!(obs.sampled(6) && !obs.sampled(7));
+    }
+
+    #[test]
+    fn timers_and_metrics_surface_in_chrome_export() {
+        let obs = Observer::enabled();
+        obs.time("plan_search", || std::hint::black_box(17));
+        let m = Metrics::new();
+        m.counter("events").add(9);
+        obs.absorb(&m);
+        obs.span("fleet.job", "run", 4, 10.0, 5.0);
+        let chrome = obs.to_chrome_json();
+        let other = chrome.get("otherData").unwrap();
+        assert_eq!(other.get("sample").unwrap().as_f64(), Some(1.0));
+        let events = other
+            .get("metrics")
+            .unwrap()
+            .get("counters")
+            .unwrap()
+            .get("events")
+            .unwrap();
+        assert_eq!(events.as_f64(), Some(9.0));
+        let wall = other.get("wall").unwrap().get("plan_search").unwrap();
+        assert_eq!(wall.get("count").unwrap().as_f64(), Some(1.0));
+    }
+}

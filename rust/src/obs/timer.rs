@@ -1,0 +1,108 @@
+//! `obs::timer` — wall-clock phase timers.
+//!
+//! Virtual time (what [`crate::obs::trace`] records) says what the
+//! *simulated* system did; these timers say where the *simulator's*
+//! wall-clock went — planner σ-search vs the event loop vs training.
+//! Each phase accumulates total seconds and an invocation count, so
+//! "plan_search: 1.2 s over 37 calls" falls straight out. Wall-clock
+//! readings are inherently non-deterministic, so they surface only in
+//! report *metadata* and CLI footers — never inside the
+//! equality-tested metrics structs.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulated wall-clock for one phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseStat {
+    /// Total seconds across all invocations.
+    pub secs: f64,
+    /// Number of timed invocations.
+    pub count: u64,
+}
+
+/// A set of named phase accumulators (interior-mutable, single-thread).
+#[derive(Debug, Default)]
+pub struct Timers {
+    phases: RefCell<BTreeMap<&'static str, PhaseStat>>,
+}
+
+impl Timers {
+    pub fn new() -> Timers {
+        Timers::default()
+    }
+
+    /// Fold `secs` of wall-clock into `phase`.
+    pub fn record(&self, phase: &'static str, secs: f64) {
+        let mut phases = self.phases.borrow_mut();
+        let stat = phases.entry(phase).or_default();
+        stat.secs += secs;
+        stat.count += 1;
+    }
+
+    /// Start a guard that records into `phase` when dropped.
+    pub fn start<'a>(&'a self, phase: &'static str) -> PhaseGuard<'a> {
+        PhaseGuard { timers: Some((self, phase, Instant::now())) }
+    }
+
+    /// All phases with their accumulated stats, name-ordered.
+    pub fn snapshot(&self) -> Vec<(&'static str, PhaseStat)> {
+        self.phases.borrow().iter().map(|(&k, &v)| (k, v)).collect()
+    }
+}
+
+/// RAII handle from [`Timers::start`]: measures from construction to
+/// drop, so early returns and `?` still get timed.
+pub struct PhaseGuard<'a> {
+    timers: Option<(&'a Timers, &'static str, Instant)>,
+}
+
+impl PhaseGuard<'_> {
+    /// A guard that times nothing — the disabled-observer arm.
+    pub fn noop() -> PhaseGuard<'static> {
+        PhaseGuard { timers: None }
+    }
+}
+
+impl Drop for PhaseGuard<'_> {
+    fn drop(&mut self) {
+        if let Some((timers, phase, start)) = self.timers.take() {
+            timers.record(phase, start.elapsed().as_secs_f64());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate_time_and_count() {
+        let t = Timers::new();
+        t.record("plan_search", 0.5);
+        t.record("plan_search", 0.25);
+        t.record("event_loop", 1.0);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 2);
+        // BTreeMap: name-ordered
+        assert_eq!(snap[0].0, "event_loop");
+        assert_eq!(snap[0].1, PhaseStat { secs: 1.0, count: 1 });
+        assert_eq!(snap[1].0, "plan_search");
+        assert_eq!(snap[1].1, PhaseStat { secs: 0.75, count: 2 });
+    }
+
+    #[test]
+    fn guard_records_on_drop_and_noop_does_not() {
+        let t = Timers::new();
+        {
+            let _g = t.start("scoped");
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].1.count, 1);
+        assert!(snap[0].1.secs >= 0.0);
+        drop(PhaseGuard::noop());
+        assert_eq!(t.snapshot().len(), 1);
+    }
+}

@@ -1,0 +1,214 @@
+//! `obs::trace` — a bounded ring-buffer span/event recorder keyed by
+//! **virtual** simulation time.
+//!
+//! Every recorded [`TraceEvent`] carries the sim clock (`ts`, seconds
+//! of virtual time), an optional duration (present ⇒ a span, absent ⇒
+//! an instant), a static category/name pair and a numeric id (job id,
+//! round number, episode index, …). The buffer is a fixed-capacity
+//! ring: once full, the oldest events are overwritten and tallied in
+//! `dropped`, so a 1M-job run records the *tail* of its history in
+//! bounded memory. Sampling lives one level up, in
+//! [`crate::obs::Observer`] — the ring itself keeps everything it is
+//! handed.
+//!
+//! Two export formats, both via [`crate::util::json`]:
+//!
+//! * [`TraceRing::to_chrome`] — Chrome trace-event JSON
+//!   (`{"traceEvents": [...]}`), loadable in Perfetto / `chrome://
+//!   tracing`; spans become `ph: "X"` complete events, instants
+//!   `ph: "i"`, with the virtual clock mapped onto microseconds;
+//! * [`TraceRing::to_jsonl`] — one compact JSON object per line, for
+//!   `grep`/`jq`-style processing.
+
+use crate::util::json::{obj, Json};
+
+/// Default ring capacity: enough for every event of a mid-size run,
+/// ~5 MB worst case at scale.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// One recorded span (with `dur`) or instant (without), stamped in
+/// virtual seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual-time start, seconds.
+    pub ts: f64,
+    /// Virtual duration in seconds; `None` marks an instant event.
+    pub dur: Option<f64>,
+    /// Coarse grouping (`"fleet.job"`, `"fed.round"`, `"sim.event"`, …).
+    pub cat: &'static str,
+    /// The specific transition or phase (`"dispatch"`, `"upload"`, …).
+    pub name: &'static str,
+    /// Subject id: job id, round number, episode index, event seq.
+    pub id: u64,
+}
+
+/// Fixed-capacity ring of [`TraceEvent`]s: O(1) record, oldest-first
+/// iteration, overwrite-on-full with a `dropped` tally.
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    /// Next overwrite position once `buf.len() == cap`.
+    head: usize,
+    recorded: u64,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing {
+            cap: capacity.max(1),
+            buf: Vec::new(),
+            head: 0,
+            recorded: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Record one event, overwriting the oldest if the ring is full.
+    pub fn record(&mut self, ev: TraceEvent) {
+        self.recorded += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events ever recorded (dropped ones included).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Held events, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// The ring as Chrome trace-event JSON. `other_data` lands in the
+    /// top-level `otherData` object (run metadata, metric snapshots).
+    /// The virtual clock maps to trace microseconds (1 sim second =
+    /// 1 s of trace time), instants carry thread scope.
+    pub fn to_chrome(&self, other_data: Vec<(&str, Json)>) -> Json {
+        let events: Json = self
+            .iter()
+            .map(|ev| {
+                let mut fields = vec![
+                    ("name", Json::from(ev.name)),
+                    ("cat", Json::from(ev.cat)),
+                    ("ph", Json::from(if ev.dur.is_some() { "X" } else { "i" })),
+                    ("ts", Json::from(ev.ts * 1e6)),
+                    ("pid", Json::from(0usize)),
+                    ("tid", Json::from(0usize)),
+                    ("args", obj(vec![("id", Json::from(ev.id))])),
+                ];
+                match ev.dur {
+                    Some(d) => fields.push(("dur", Json::from(d * 1e6))),
+                    None => fields.push(("s", Json::from("t"))),
+                }
+                obj(fields)
+            })
+            .collect();
+        let mut other = vec![
+            ("recorded", Json::from(self.recorded)),
+            ("dropped", Json::from(self.dropped)),
+        ];
+        other.extend(other_data);
+        obj(vec![
+            ("traceEvents", events),
+            ("displayTimeUnit", Json::from("ms")),
+            ("otherData", obj(other)),
+        ])
+    }
+
+    /// The ring as JSONL: one compact object per held event, oldest
+    /// first, trailing newline included when non-empty.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.iter() {
+            let mut fields = vec![
+                ("ts", Json::from(ev.ts)),
+                ("cat", Json::from(ev.cat)),
+                ("name", Json::from(ev.name)),
+                ("id", Json::from(ev.id)),
+            ];
+            if let Some(d) = ev.dur {
+                fields.push(("dur", Json::from(d)));
+            }
+            out.push_str(&obj(fields).to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts: f64, id: u64) -> TraceEvent {
+        TraceEvent { ts, dur: None, cat: "test", name: "tick", id }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_tallies_drops() {
+        let mut r = TraceRing::new(3);
+        for i in 0..5u64 {
+            r.record(ev(i as f64, i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.dropped(), 2);
+        let ids: Vec<u64> = r.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest-first, oldest two overwritten");
+    }
+
+    #[test]
+    fn chrome_export_reparses_with_span_and_instant_shapes() {
+        let mut r = TraceRing::new(16);
+        r.record(ev(1.0, 7));
+        r.record(TraceEvent { ts: 2.0, dur: Some(0.5), cat: "fleet.job", name: "run", id: 7 });
+        let json = r.to_chrome(vec![("seed", Json::from(42usize))]);
+        let back = Json::parse(&json.to_string_compact()).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(events[0].get("ts").unwrap().as_f64(), Some(1e6));
+        assert_eq!(events[1].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(events[1].get("dur").unwrap().as_f64(), Some(0.5e6));
+        let other = back.get("otherData").unwrap();
+        assert_eq!(other.get("seed").unwrap().as_f64(), Some(42.0));
+        assert_eq!(other.get("recorded").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn jsonl_export_is_one_object_per_line() {
+        let mut r = TraceRing::new(16);
+        r.record(ev(1.0, 0));
+        r.record(ev(2.0, 1));
+        let jsonl = r.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("cat").unwrap().as_str(), Some("test"));
+        }
+        assert!(TraceRing::new(4).to_jsonl().is_empty());
+    }
+}

@@ -346,6 +346,36 @@ mod tests {
     }
 
     #[test]
+    fn trace_flags_validate_like_the_rest() {
+        let a = parse("fleet --trace-out out/trace.json --trace-sample 4");
+        assert_eq!(a.get_str("trace-out", "").unwrap(), "out/trace.json");
+        assert_eq!(a.get_count("trace-sample", 1).unwrap(), 4);
+        // absent → defaults (tracing off, record everything)
+        assert_eq!(parse("fleet").get_str("trace-out", "").unwrap(), "");
+        assert_eq!(parse("fleet").get_count("trace-sample", 1).unwrap(), 1);
+        // zero, negative, fractional, textual and value-less samples
+        // all get the uniform diagnostic
+        for argv in [
+            "fleet --trace-sample 0",
+            "fleet --trace-sample -3",
+            "fleet --trace-sample 1.5",
+            "fleet --trace-sample many",
+            "fleet --trace-sample",
+        ] {
+            let err = parse(argv).get_count("trace-sample", 1).unwrap_err().to_string();
+            assert!(err.contains("invalid value for --trace-sample"), "{argv}: {err}");
+            assert!(err.contains("positive integer"), "{argv}: {err}");
+        }
+        // `--trace-out --format json`: the swallowed value surfaces as
+        // an error, not a silent no-trace run
+        let err = parse("fleet --trace-out --format json")
+            .get_str("trace-out", "")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("invalid value for --trace-out"), "{err}");
+    }
+
+    #[test]
     fn checked_floats() {
         let a = parse("fleet --churn 2.5 --horizon 12");
         assert!((a.get_rate("churn", 0.0).unwrap() - 2.5).abs() < 1e-12);

@@ -5,19 +5,25 @@
 //! legacy dispatch, fed quoting shards), the EASY-backfill
 //! no-head-delay guarantee, the bounded-loss checkpoint arithmetic,
 //! the Jain fairness index range, the in-sim DQN training loop's
-//! same-config bit-determinism, and the `cluster::Network`
-//! collective-timing edge cases (n = 0/1, zero bytes, monotonicity).
+//! same-config bit-determinism, the `cluster::Network`
+//! collective-timing edge cases (n = 0/1, zero bytes, monotonicity),
+//! and the observability layer's non-interference contract (tracing
+//! on vs off is metric-identical; trace exports round-trip through
+//! `util::json` and reconcile with the `events` counter).
 
 use pacpp::cluster::{Env, Network};
 use pacpp::exec::partition_layers;
-use pacpp::fed::{simulate_fed, FedOptions, FedTraceKind};
+use pacpp::fed::{simulate_fed, simulate_fed_observed, FedOptions, FedTraceKind};
 use pacpp::fleet::{
-    generate_churn, generate_jobs, jain_index, simulate_fleet, AttemptTimeline, BestFit,
-    CheckpointSpec, EventQueueKind, FleetMetrics, FleetOptions, PlacementPolicy,
-    PreemptReplan, TraceKind,
+    generate_churn, generate_jobs, jain_index, simulate_fleet, simulate_fleet_observed,
+    AttemptTimeline, BestFit, CheckpointSpec, EventQueueKind, FleetMetrics, FleetOptions,
+    PlacementPolicy, PreemptReplan, TraceKind,
 };
 use pacpp::learn::{evaluate, train, DqnConfig, LearnedQueue, TrainConfig};
+use pacpp::obs::Observer;
+use pacpp::util::json::Json;
 use pacpp::util::prop::{check, forall};
+use pacpp::util::write_creating_dirs;
 
 #[derive(Debug)]
 struct SplitCase {
@@ -544,4 +550,94 @@ fn fleet_fairness_matches_user_structure() {
     let m = simulate_fleet(&env, &multi, &[], &BestFit, &FleetOptions::default()).unwrap();
     assert!(m.per_user.len() > 1, "20 jobs over 4 users");
     assert!(m.fairness > 0.0 && m.fairness <= 1.0 + 1e-9, "{}", m.fairness);
+}
+
+/// Tracing is observation, not participation: running the same seed
+/// with a fully-enabled [`Observer`] must leave every `FleetMetrics`
+/// and `FedMetrics` field bit-identical to the untraced run.
+#[test]
+fn tracing_never_changes_the_metrics() {
+    let env = Env::env_b();
+    let opts = FleetOptions::default();
+    forall(
+        0x0B5E7,
+        3,
+        |g| FleetCase { seed: 1 + g.int(0, 1_000_000) as u64 * 2_654_435_761, n_jobs: g.int(5, 10) },
+        |case| {
+            let jobs = generate_jobs(TraceKind::Bursty, case.n_jobs, case.seed);
+            let churn = generate_churn(&env, opts.horizon, 3.0, case.seed);
+            let plain = simulate_fleet(&env, &jobs, &churn, &PreemptReplan, &opts)
+                .map_err(|e| e.to_string())?;
+            let obs = Observer::enabled();
+            let traced =
+                simulate_fleet_observed(&env, &jobs, &churn, &PreemptReplan, &opts, &obs)
+                    .map_err(|e| e.to_string())?;
+            check(plain == traced, "tracing changed the fleet metrics".to_string())?;
+            let (held, recorded, _) = obs.trace_counts();
+            check(
+                held > 0 && recorded > 0,
+                "enabled observer recorded nothing on a fleet run".to_string(),
+            )?;
+
+            let fed_opts = FedOptions {
+                rounds: 4,
+                clients: 12,
+                k: 4,
+                seed: case.seed,
+                trace: FedTraceKind::Flaky,
+                ..Default::default()
+            };
+            let plain = simulate_fed(&fed_opts).map_err(|e| e.to_string())?;
+            let traced = simulate_fed_observed(&fed_opts, &Observer::enabled())
+                .map_err(|e| e.to_string())?;
+            check(plain == traced, "tracing changed the fed metrics".to_string())
+        },
+    );
+}
+
+/// The exported Chrome trace round-trips through `util::json` and its
+/// per-event instants reconcile with the metrics registry: with
+/// `sample = 1` and an ample ring, the number of `sim.event` trace
+/// events equals the run's `events` counter exactly.
+#[test]
+fn trace_export_round_trips_and_matches_the_event_counter() {
+    let env = Env::env_a();
+    let opts = FleetOptions::default();
+    let jobs = generate_jobs(TraceKind::Steady, 25, 11);
+    let churn = generate_churn(&env, opts.horizon, 2.0, 11);
+    let obs = Observer::with(1, 1 << 20);
+    let m = simulate_fleet_observed(&env, &jobs, &churn, &BestFit, &opts, &obs).unwrap();
+
+    let path_buf = std::env::temp_dir()
+        .join(format!("pacpp_trace_rt_{}", std::process::id()))
+        .join("fleet_trace.json");
+    let path = path_buf.to_str().unwrap();
+    write_creating_dirs(path, &obs.to_chrome_json().to_string_pretty()).unwrap();
+    let text = std::fs::read_to_string(path).unwrap();
+    let parsed = Json::parse(&text).expect("exported trace must re-parse via util::json");
+
+    let events = parsed
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    let sim_events = events
+        .iter()
+        .filter(|ev| ev.get("cat").and_then(|c| c.as_str()) == Some("sim.event"))
+        .count();
+    assert_eq!(
+        sim_events, m.events,
+        "sim.event trace instants must equal the `events` counter"
+    );
+    // the export carries the reconciliation metadata alongside
+    let recorded = parsed
+        .get("otherData")
+        .and_then(|o| o.get("recorded"))
+        .and_then(|r| r.as_u64())
+        .expect("otherData.recorded");
+    let (held, obs_recorded, dropped) = obs.trace_counts();
+    assert_eq!(recorded, obs_recorded);
+    assert_eq!(dropped, 0, "ample ring must not overwrite");
+    assert_eq!(held as u64, obs_recorded);
+    assert!(sim_events <= held, "instants are a subset of held events");
+    std::fs::remove_dir_all(path_buf.parent().unwrap()).unwrap();
 }
