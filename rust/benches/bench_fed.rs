@@ -14,9 +14,11 @@
 //! case runs the flaky trace + deadline cutoff, adding the dropout and
 //! partial-aggregation paths to the measured loop. The 100k-client
 //! scale case drives the SoA per-client state and the sharded quoting
-//! pass — the population size the paper's edge pools imply.
+//! pass — the population size the paper's edge pools imply — and the
+//! `fed_async_100k_clients` case runs the same population through the
+//! FedBuff-style buffered engine with Oort-style utility selection.
 
-use pacpp::fed::{simulate_fed, FedOptions, FedTraceKind};
+use pacpp::fed::{simulate_fed, AggregationMode, FedOptions, FedTraceKind};
 use pacpp::util::bench::Bench;
 
 fn main() {
@@ -79,6 +81,38 @@ fn main() {
                 m.aggregated_total,
                 m.dropped_total,
                 m.stalls
+            );
+        }
+    }
+
+    // Async scale case: 100k clients through the FedBuff-style
+    // buffered engine with utility selection — per-dispatch candidate
+    // scans and the arrival heap are the measured loop here, the
+    // async analogue of the sync 100k case above.
+    if b.enabled("fed_async_100k_clients") {
+        let opts = FedOptions {
+            rounds: 10,
+            clients: 100_000,
+            k: 128,
+            agg_mode: AggregationMode::Async,
+            buffer_k: 32,
+            select: "utility".into(),
+            trace: FedTraceKind::Churny,
+            ..Default::default()
+        };
+        let m = simulate_fed(&opts).unwrap();
+        assert!(m.rounds > 0, "async scale bench run must complete rounds");
+        let res = b
+            .run("fed_async_100k_clients", || simulate_fed(&opts).unwrap())
+            .cloned();
+        if let Some(r) = res {
+            println!(
+                "    -> {:.1} rounds/sec ({} rounds, {} aggregated, {} dropped, stale p50 {:?})",
+                m.rounds as f64 / r.summary.mean,
+                m.rounds,
+                m.aggregated_total,
+                m.dropped_total,
+                m.staleness_p50
             );
         }
     }

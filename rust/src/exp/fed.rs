@@ -9,7 +9,8 @@
 
 use crate::cluster::Network;
 use crate::fed::{
-    simulate_fed, FedMetrics, FedOptions, FedTraceKind, SelectionRegistry, StragglerRegistry,
+    simulate_fed, AggregationMode, FedMetrics, FedOptions, FedTraceKind, SelectionRegistry,
+    StragglerRegistry,
 };
 use crate::util::par_map;
 
@@ -37,6 +38,7 @@ pub fn fed_schema(name: &str, title: &str) -> Report {
         .column("select", ColType::Str)
         .column("straggler", ColType::Str)
         .column("agg", ColType::Str)
+        .column("mode", ColType::Str) // sync cohorts or async buffered folding
         .column("clients", ColType::Int)
         .column("k", ColType::Int)
         .column("rounds", ColType::Int)
@@ -50,6 +52,9 @@ pub fn fed_schema(name: &str, title: &str) -> Report {
         .column("bytes_down", ColType::Bytes)
         .column("fairness", ColType::Float) // Jain over participation counts
         .column("eff_rounds", ColType::Float) // participation-weighted progress
+        .column("rph", ColType::Float) // effective rounds per virtual hour
+        .column("stale_p50", ColType::Float) // per-delta staleness (async only)
+        .column("stale_p95", ColType::Float)
         .column("to_target", ColType::Int) // rounds to the convergence proxy
         .column("t_target", ColType::Secs)
         .column("makespan", ColType::Secs)
@@ -66,6 +71,7 @@ pub fn fed_row(net: &str, trace: &str, opts: &FedOptions, m: &FedMetrics) -> Vec
         Cell::Str(opts.select.clone()),
         Cell::Str(opts.straggler.clone()),
         Cell::Str(opts.agg.name().into()),
+        Cell::Str(opts.agg_mode.name().into()),
         Cell::Int(opts.clients as i64),
         Cell::Int(opts.k as i64),
         Cell::Int(m.rounds as i64),
@@ -79,6 +85,9 @@ pub fn fed_row(net: &str, trace: &str, opts: &FedOptions, m: &FedMetrics) -> Vec
         Cell::Bytes(m.bytes_down),
         Cell::Float(m.participation_fairness),
         Cell::Float(m.effective_rounds),
+        Cell::Float(m.rounds_per_hour),
+        Cell::opt(m.staleness_p50, Cell::Float),
+        Cell::opt(m.staleness_p95, Cell::Float),
         Cell::opt(m.rounds_to_target, |r| Cell::Int(r as i64)),
         Cell::opt(m.time_to_target, Cell::Secs),
         Cell::Secs(m.makespan),
@@ -105,26 +114,39 @@ fn net_by_name(name: &str) -> Network {
 
 /// `fed` — the mitigation grid: every selection policy × every
 /// straggler policy on the shared churny population (LAN, ring
-/// AllReduce). The dropped/round-time columns show what each straggler
-/// discipline buys; the fairness column what each selector costs.
+/// AllReduce), plus one async buffered-aggregation row per selection
+/// policy (no straggler barrier to vary). The dropped/round-time
+/// columns show what each straggler discipline buys; the fairness
+/// column what each selector costs; the rph/staleness columns what
+/// dropping the barrier buys and pays.
 pub fn fed_report() -> Report {
     let selections = SelectionRegistry::with_defaults();
     let stragglers = StragglerRegistry::with_defaults();
-    let mut combos: Vec<(String, String)> = Vec::new();
+    let base = base_opts();
+    let mut combos: Vec<FedOptions> = Vec::new();
     for select in selections.names() {
         for straggler in stragglers.names() {
-            combos.push((select.to_string(), straggler.to_string()));
+            combos.push(FedOptions {
+                select: select.to_string(),
+                straggler: straggler.to_string(),
+                ..base.clone()
+            });
         }
     }
-    let base = base_opts();
-    let results = par_map(combos.len(), |i| {
-        let (select, straggler) = &combos[i];
-        let opts = FedOptions {
-            select: select.clone(),
-            straggler: straggler.clone(),
+    for select in selections.names() {
+        combos.push(FedOptions {
+            select: select.to_string(),
+            // bypassed in async mode, but the column must still hold a
+            // canonical registry name
+            straggler: "Wait-all".into(),
+            agg_mode: AggregationMode::Async,
             ..base.clone()
-        };
-        (opts.clone(), simulate_fed(&opts).expect("default fed policies are registered"))
+        });
+    }
+    let results = par_map(combos.len(), |i| {
+        let opts = combos[i].clone();
+        let m = simulate_fed(&opts).expect("default fed policies are registered");
+        (opts, m)
     });
 
     let mut report = fed_schema(
@@ -221,14 +243,15 @@ mod tests {
     #[test]
     fn fed_grid_covers_selection_by_straggler() {
         let rep = fed_report();
-        // 4 selection x 3 straggler policies
-        assert_eq!(rep.n_rows(), 12);
+        // 5 selection x 3 straggler policies, plus 5 async rows
+        assert_eq!(rep.n_rows(), 20);
         for (col, want) in [
             (
                 "select",
-                vec!["Uniform", "Power-of-d", "Availability-aware", "Fair-share"],
+                vec!["Uniform", "Power-of-d", "Availability-aware", "Fair-share", "Utility"],
             ),
             ("straggler", vec!["Wait-all", "Deadline", "Over-select"]),
+            ("mode", vec!["sync", "async"]),
         ] {
             let values = str_values(&rep, col);
             for w in want {
@@ -236,10 +259,20 @@ mod tests {
             }
         }
         for col in
-            ["agg", "rounds", "aggregated", "dropped", "p50", "p95", "bytes_up",
-             "fairness", "eff_rounds", "to_target", "makespan"]
+            ["agg", "mode", "rounds", "aggregated", "dropped", "p50", "p95", "bytes_up",
+             "fairness", "eff_rounds", "rph", "stale_p50", "to_target", "makespan"]
         {
             assert!(rep.columns().iter().any(|c| c.name == col), "missing column {col}");
+        }
+        // staleness is an async-only concept: absent from every sync
+        // row, present in every async row
+        for i in 0..rep.n_rows() {
+            let mode = rep.cell(i, "mode").unwrap().as_str().unwrap().to_string();
+            let stale = rep.cell(i, "stale_p50").and_then(|c| c.as_f64());
+            match mode.as_str() {
+                "async" => assert!(stale.is_some(), "row {i}: async rows report staleness"),
+                _ => assert!(stale.is_none(), "row {i}: sync rows have no staleness"),
+            }
         }
         for i in 0..rep.n_rows() {
             let rounds = rep.cell(i, "rounds").unwrap().as_f64().unwrap();
@@ -254,21 +287,21 @@ mod tests {
             assert!(fairness > 0.0 && fairness <= 1.0 + 1e-9, "row {i}: {fairness}");
             assert!(rep.cell(i, "bytes_up").unwrap().as_f64().unwrap() > 0.0, "row {i}");
         }
-        // observe counters ride along in the metadata: 12 cells × 24
+        // observe counters ride along in the metadata: 20 cells × 24
         // quoted clients each
         for key in ["oracle_hits_total", "oracle_misses_total"] {
             assert!(rep.meta.contains_key(key), "missing meta {key}");
         }
         let hits: usize = rep.meta["oracle_hits_total"].parse().unwrap();
         let misses: usize = rep.meta["oracle_misses_total"].parse().unwrap();
-        assert_eq!(hits + misses, 12 * GRID_CLIENTS, "one quote per client per cell");
+        assert_eq!(hits + misses, 20 * GRID_CLIENTS, "one quote per client per cell");
     }
 
     #[test]
     fn fed_select_grid_covers_traces_and_networks() {
         let rep = fed_select_report();
-        // 4 selection x 3 traces x 2 networks
-        assert_eq!(rep.n_rows(), 24);
+        // 5 selection x 3 traces x 2 networks
+        assert_eq!(rep.n_rows(), 30);
         for (col, want) in [
             ("net", vec!["lan", "wifi"]),
             ("trace", vec!["stable", "churny", "flaky"]),

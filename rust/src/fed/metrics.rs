@@ -46,6 +46,11 @@ pub(crate) struct RawFed {
     /// Strategy-oracle memo hits / misses while quoting client compute.
     pub oracle_hits: usize,
     pub oracle_misses: usize,
+    /// Per-delta staleness percentiles (global rounds advanced between
+    /// a delta's dispatch and its fold); `None` in sync mode, where a
+    /// delta can never be stale.
+    pub staleness_p50: Option<f64>,
+    pub staleness_p95: Option<f64>,
 }
 
 /// Aggregate outcome of one federated run. All fields are deterministic
@@ -54,11 +59,14 @@ pub(crate) struct RawFed {
 /// whole values with `==`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FedMetrics {
-    /// Rounds fully completed within the horizon.
+    /// Rounds fully completed within the horizon (in async mode:
+    /// logical buffer closes).
     pub rounds: usize,
     /// Virtual time at which the simulation ended, seconds.
     pub makespan: f64,
-    /// Round-duration percentiles over the completed rounds, seconds.
+    /// Round-duration percentiles over the completed rounds, seconds
+    /// (in async mode these are buffer-close intervals: virtual time
+    /// between consecutive logical-round closes).
     pub round_p50: Option<f64>,
     pub round_p95: Option<f64>,
     pub round_p99: Option<f64>,
@@ -92,6 +100,16 @@ pub struct FedMetrics {
     pub oracle_hits: usize,
     /// Strategy-oracle memo misses — distinct plans actually computed.
     pub oracle_misses: usize,
+    /// Per-delta staleness percentiles: how many logical rounds the
+    /// global adapter advanced between a delta's dispatch and its fold.
+    /// Always `None` in sync mode (a cohort's deltas fold into the
+    /// round they were dispatched for).
+    pub staleness_p50: Option<f64>,
+    pub staleness_p95: Option<f64>,
+    /// Effective aggregation throughput: `effective_rounds` per virtual
+    /// hour of makespan (`0` for an empty run). The headline async-vs-
+    /// sync comparison number.
+    pub rounds_per_hour: f64,
     /// Per-client accounting, ascending client id.
     pub per_client: Vec<ClientStat>,
 }
@@ -131,6 +149,13 @@ impl FedMetrics {
             agg_time_total: raw.agg_time,
             oracle_hits: raw.oracle_hits,
             oracle_misses: raw.oracle_misses,
+            staleness_p50: raw.staleness_p50,
+            staleness_p95: raw.staleness_p95,
+            rounds_per_hour: if raw.makespan > 0.0 {
+                raw.effective_rounds / (raw.makespan / 3600.0)
+            } else {
+                0.0
+            },
             per_client: raw.per_client,
         }
     }
@@ -164,6 +189,8 @@ mod tests {
             time_to_target: None,
             oracle_hits: 0,
             oracle_misses: 0,
+            staleness_p50: None,
+            staleness_p95: None,
         }
     }
 
@@ -189,6 +216,20 @@ mod tests {
         assert_eq!(m.round_p50, None);
         assert_eq!(m.participation_fairness, 1.0, "vacuous fairness is perfect");
         assert_eq!(m.rounds_to_target, None);
+        assert_eq!(m.staleness_p50, None);
+        assert_eq!(m.rounds_per_hour, 0.0, "empty effective progress, zero throughput");
+    }
+
+    #[test]
+    fn rounds_per_hour_follows_effective_progress_over_makespan() {
+        let mut r = raw(vec![100.0; 4], vec![stat(0, 4, 4)]);
+        r.effective_rounds = 4.0;
+        r.makespan = 7200.0; // two virtual hours
+        let m = FedMetrics::assemble(r);
+        assert!((m.rounds_per_hour - 2.0).abs() < 1e-12, "{}", m.rounds_per_hour);
+        // a zero-makespan run divides by nothing
+        let m = FedMetrics::assemble(RawFed { makespan: 0.0, ..raw(vec![], vec![]) });
+        assert_eq!(m.rounds_per_hour, 0.0);
     }
 
     #[test]

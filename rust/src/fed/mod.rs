@@ -18,7 +18,9 @@
 //!   pluggable [`ClientSelection`] resolved by name through
 //!   [`SelectionRegistry`] ([`select`]: uniform-random, power-of-d
 //!   fastest by oracle estimate, availability-aware over the churn
-//!   traces, participation-fairness balancing);
+//!   traces, participation-fairness balancing, Oort-style utility —
+//!   statistical-utility proxy × availability with seeded
+//!   exploration);
 //! * **communication** — dissemination, adapter-delta uploads and the
 //!   aggregation collective (ring AllReduce / all-gather / a
 //!   parameter-server star) are timed through [`crate::cluster::Network`],
@@ -26,20 +28,26 @@
 //! * **stragglers** — when a round closes and whose updates count is a
 //!   pluggable [`StragglerPolicy`] ([`straggler`]: wait-all, deadline
 //!   cutoff with partial aggregation, over-select K+s);
+//! * **aggregation mode** — cohort-synchronous rounds or FedBuff-style
+//!   asynchronous buffered folding ([`AggregationMode`]): in async
+//!   mode deltas fold as they arrive, a logical round closes every
+//!   [`FedOptions::buffer_k`] folds, there is no straggler barrier,
+//!   and per-delta staleness is tracked;
 //! * **churn** — every client has a seeded availability trace
 //!   ([`ClientTrace`]); a window closing mid-round is a dropout the
 //!   server only detects by timeout;
-//! * **accounting** — [`FedMetrics`]: round-time p50/p95/p99, bytes
-//!   up/down per client, stragglers dropped, per-client participation
-//!   with a Jain fairness index, and a participation-weighted
-//!   rounds-to-target convergence proxy.
+//! * **accounting** — [`FedMetrics`]: round-time p50/p95/p99 (buffer-
+//!   close intervals in async mode), bytes up/down per client,
+//!   stragglers dropped, per-client participation with a Jain fairness
+//!   index, staleness p50/p95, effective rounds per hour, and a
+//!   participation-weighted rounds-to-target convergence proxy.
 //!
 //! Entry points: [`simulate_fed`] / [`simulate_fed_with`] (library),
 //! the `fed` / `fed_select` experiments in
 //! [`crate::exp::ExperimentRegistry::with_defaults`], and the
 //! `pacpp fed` CLI subcommand (`--rounds`, `--clients`, `--select`,
-//! `--straggler`, `--agg`, `--seed`, `--trace`, `--strategy`,
-//! `--shards`). The round engine keeps per-client state in compact
+//! `--straggler`, `--agg`, `--agg-mode`, `--buffer-k`, `--seed`,
+//! `--trace`, `--strategy`, `--shards`). The round engine keeps per-client state in compact
 //! structure-of-arrays form and shards the per-client quoting/trace
 //! passes across cores at ≥ [`PAR_CLIENT_THRESHOLD`] clients
 //! ([`FedOptions::shards`], property-tested shard-invariant), so 100k
@@ -57,12 +65,13 @@ pub mod straggler;
 pub use metrics::{ClientStat, FedMetrics};
 pub use round::{
     generate_availability, generate_clients, simulate_fed, simulate_fed_observed,
-    simulate_fed_with, simulate_fed_with_observed, traces_from_churn, AggMode, ClientTrace,
-    FedClient, FedOptions, FedTraceKind, PAR_CLIENT_THRESHOLD, SECURE_KEY_BYTES,
+    simulate_fed_with, simulate_fed_with_observed, traces_from_churn, AggMode, AggregationMode,
+    ClientTrace, FedClient, FedOptions, FedTraceKind, PAR_CLIENT_THRESHOLD, SECURE_KEY_BYTES,
 };
 pub use select::{
     AvailabilityAware, Candidate, ClientSelection, FairShare, PowerOfD, SelectCtx,
-    SelectionRegistry, UniformRandom, AVAIL_SAFETY, POWER_OF_D,
+    SelectionRegistry, UniformRandom, UtilityAware, AVAIL_SAFETY, POWER_OF_D, UTILITY_DECAY,
+    UTILITY_EXPLORE,
 };
 pub use straggler::{
     ClientRoundResult, DeadlineCutoff, OverSelect, RoundDecision, SelectedOutcome,

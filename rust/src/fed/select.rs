@@ -24,7 +24,11 @@
 //!   ones that will not drop out mid-round), breaking ties toward
 //!   historically-available clients;
 //! * [`FairShare`] — participation balancing: least-aggregated-first,
-//!   driving the per-client participation Jain index toward 1.
+//!   driving the per-client participation Jain index toward 1;
+//! * [`UtilityAware`] — Oort-style utility selection: rank by a
+//!   deterministic statistical-utility proxy (√samples decayed by
+//!   participation) × the availability estimate, with a seeded
+//!   exploration fraction so under-observed clients still get tried.
 
 use std::sync::Arc;
 
@@ -44,6 +48,10 @@ pub struct Candidate {
     pub avail_frac: f64,
     /// Rounds whose aggregate included this client so far.
     pub participation: usize,
+    /// Training samples in the client's private dataset (the
+    /// statistical-utility signal: more unseen data, more useful
+    /// delta).
+    pub samples: usize,
 }
 
 /// What a selection decision sees. `candidates` holds every available,
@@ -215,6 +223,62 @@ impl ClientSelection for FairShare {
     }
 }
 
+/// Fraction of each [`UtilityAware`] cohort filled by exploration —
+/// uniform picks from outside the top-utility set.
+pub const UTILITY_EXPLORE: f64 = 0.2;
+
+/// Per-participation decay of the statistical-utility proxy: each
+/// aggregated round shrinks a client's expected marginal contribution
+/// (its gradient news has already been folded in).
+pub const UTILITY_DECAY: f64 = 0.8;
+
+/// Oort-style utility-aware selection: score every candidate by a
+/// statistical-utility proxy — `√samples` (diminishing returns in data
+/// volume) decayed by [`UTILITY_DECAY`]^participation (already-heard
+/// clients carry less news) — times the long-run availability estimate
+/// (a delta that never arrives has no utility). The top scorers fill
+/// `1 − UTILITY_EXPLORE` of the cohort; the rest is uniform exploration
+/// from the remaining candidates, drawn from the engine's per-round
+/// seeded RNG so runs stay bit-identical.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UtilityAware;
+
+impl ClientSelection for UtilityAware {
+    fn name(&self) -> &str {
+        "Utility"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["utility", "oort", "utility-aware"]
+    }
+
+    fn description(&self) -> &str {
+        "Oort-style: statistical utility x availability, with seeded exploration"
+    }
+
+    fn select(&self, ctx: &SelectCtx, rng: &mut Rng) -> Vec<usize> {
+        let score = |c: &Candidate| {
+            (c.samples as f64).sqrt()
+                * UTILITY_DECAY.powi(c.participation.min(512) as i32)
+                * c.avail_frac.max(1e-6)
+        };
+        let scores: Vec<f64> = ctx.candidates.iter().map(score).collect();
+        let mut idx: Vec<usize> = (0..ctx.candidates.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b]
+                .total_cmp(&scores[a])
+                .then(ctx.candidates[a].id.cmp(&ctx.candidates[b].id))
+        });
+        let explore = ((ctx.want as f64) * UTILITY_EXPLORE).floor() as usize;
+        let exploit = ctx.want - explore;
+        let mut picked: Vec<usize> = idx[..exploit.min(idx.len())].to_vec();
+        let mut rest: Vec<usize> = idx[picked.len()..].to_vec();
+        rng.shuffle(&mut rest);
+        picked.extend(rest.into_iter().take(ctx.want - picked.len()));
+        picked.into_iter().map(|i| ctx.candidates[i].id).collect()
+    }
+}
+
 impl crate::util::registry::Registered for dyn ClientSelection {
     fn name(&self) -> &str {
         ClientSelection::name(self)
@@ -239,14 +303,15 @@ impl SelectionRegistry {
         crate::util::registry::Registry::new("selection policy")
     }
 
-    /// The four built-ins: uniform, power-of-d, availability-aware,
-    /// fair-share.
+    /// The five built-ins: uniform, power-of-d, availability-aware,
+    /// fair-share, utility.
     pub fn with_defaults() -> SelectionRegistry {
         let mut r = SelectionRegistry::empty();
         r.register(Arc::new(UniformRandom));
         r.register(Arc::new(PowerOfD));
         r.register(Arc::new(AvailabilityAware));
         r.register(Arc::new(FairShare));
+        r.register(Arc::new(UtilityAware));
         r
     }
 }
@@ -262,7 +327,7 @@ mod tests {
     use super::*;
 
     fn cand(id: usize, est: f64, up: f64, frac: f64, part: usize) -> Candidate {
-        Candidate { id, est, up_remaining: up, avail_frac: frac, participation: part }
+        Candidate { id, est, up_remaining: up, avail_frac: frac, participation: part, samples: 256 }
     }
 
     fn ctx(candidates: &[Candidate], want: usize) -> SelectCtx {
@@ -327,7 +392,7 @@ mod tests {
         let r = SelectionRegistry::with_defaults();
         assert_eq!(
             r.names(),
-            vec!["Uniform", "Power-of-d", "Availability-aware", "Fair-share"]
+            vec!["Uniform", "Power-of-d", "Availability-aware", "Fair-share", "Utility"]
         );
         for (query, want) in [
             ("uniform", "Uniform"),
@@ -337,10 +402,61 @@ mod tests {
             ("avail", "Availability-aware"),
             ("fair", "Fair-share"),
             ("least-participated", "Fair-share"),
+            ("oort", "Utility"),
+            ("utility-aware", "Utility"),
         ] {
             assert_eq!(r.get(query).map(|p| p.name()), Some(want), "query {query:?}");
         }
         assert!(r.get("oracle").is_none());
+    }
+
+    /// Pure-exploit cohorts (want too small for an exploration slot)
+    /// rank by the utility score: data volume up, participation and
+    /// absence down.
+    #[test]
+    fn utility_prefers_rich_unheard_available_clients() {
+        let base = |id: usize, samples: usize, part: usize, frac: f64| Candidate {
+            id,
+            est: 100.0,
+            up_remaining: f64::INFINITY,
+            avail_frac: frac,
+            participation: part,
+            samples,
+        };
+        let cands = vec![
+            base(0, 1024, 0, 1.0), // the full-utility client
+            base(1, 128, 0, 1.0),  // little data
+            base(2, 1024, 10, 1.0), // already heard ten times
+            base(3, 1024, 0, 0.2), // rarely reachable
+        ];
+        // want = 2 → explore = floor(0.4) = 0: deterministic exploit
+        let picked = UtilityAware.select(&ctx(&cands, 2), &mut Rng::new(1));
+        assert_eq!(picked, vec![0, 1], "sqrt(1024) beats decay^10 and 0.2 availability");
+    }
+
+    /// With an exploration slot in play the exploit prefix is still the
+    /// top of the utility ranking, the explore tail comes from outside
+    /// it via the seeded RNG, and equal seeds reproduce the cohort.
+    #[test]
+    fn utility_exploration_is_seeded_and_fills_the_cohort() {
+        let cands: Vec<Candidate> =
+            (0..10).map(|i| cand(i, 100.0, f64::INFINITY, 1.0, 0)).collect();
+        // want = 5 → explore = 1, exploit = 4; equal scores tie-break by id
+        let a = UtilityAware.select(&ctx(&cands, 5), &mut Rng::new(7));
+        let b = UtilityAware.select(&ctx(&cands, 5), &mut Rng::new(7));
+        assert_eq!(a, b, "same rng seed, same cohort");
+        assert_eq!(a.len(), 5);
+        assert_eq!(&a[..4], &[0, 1, 2, 3], "exploit prefix follows the ranking");
+        assert!(a[4] >= 4, "the explore slot comes from outside the exploit set: {a:?}");
+        let mut dedup = a.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 5, "picks are distinct");
+        // some seed disagrees on the explore slot — it is a real draw
+        let varied = (0..20u64)
+            .map(|s| UtilityAware.select(&ctx(&cands, 5), &mut Rng::new(s))[4])
+            .collect::<std::collections::BTreeSet<usize>>();
+        assert!(varied.len() > 1, "exploration never varied across 20 seeds");
     }
 
     #[test]

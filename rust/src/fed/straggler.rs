@@ -184,11 +184,20 @@ impl StragglerPolicy for DeadlineCutoff {
         // everyone resolving early closes the round early; otherwise the
         // deadline does
         let end = ctx.resolved_all().min(deadline);
-        let aggregated = (0..ctx.outcomes.len())
+        let aggregated: Vec<usize> = (0..ctx.outcomes.len())
             .filter(|&i| {
                 ctx.outcomes[i].finished_at().map(|f| f <= end + 1e-9).unwrap_or(false)
             })
             .collect();
+        // degenerate cohort: nobody beat the deadline (every selected
+        // client dropped out, or finished only past the cutoff). The
+        // deadline anchored on give-up *estimates*, so closing at it
+        // would end an empty round earlier than the dropouts actually
+        // resolved — fall back to waiting them out, and return the
+        // empty aggregate explicitly
+        if aggregated.is_empty() {
+            return RoundDecision { end_offset: ctx.resolved_all(), aggregated };
+        }
         RoundDecision { end_offset: end, aggregated }
     }
 }
@@ -334,6 +343,25 @@ mod tests {
         let d = DeadlineCutoff.decide(&ctx(2, &outcomes));
         assert_eq!(d.end_offset, 200.0);
         assert_eq!(d.aggregated, vec![0]);
+    }
+
+    /// ISSUE-9 satellite: the degenerate cohort. When *every* selected
+    /// client drops out, the deadline (anchored on give-up estimates)
+    /// must not close an empty round before the dropouts actually
+    /// resolved — the cutoff falls back to `resolved_all()` and returns
+    /// the empty aggregate explicitly.
+    #[test]
+    fn deadline_all_dropped_cohort_waits_out_the_dropouts() {
+        let outcomes = vec![drop_(0, 100.0), drop_(1, 200.0), drop_(2, 150.0)];
+        let d = DeadlineCutoff.decide(&ctx(3, &outcomes));
+        assert!(d.aggregated.is_empty(), "nothing arrived, nothing aggregates");
+        assert_eq!(d.end_offset, 600.0, "waits for the slowest give-up, not 2 x median");
+
+        // same fallback when the only finisher lands past the cutoff
+        let outcomes = vec![fin(0, 100.0, 250.0), drop_(1, 100.0)];
+        let d = DeadlineCutoff.decide(&ctx(2, &outcomes));
+        assert!(d.aggregated.is_empty(), "the 250 s arrival missed the 200 s deadline");
+        assert_eq!(d.end_offset, 300.0, "resolves at the dropout detection");
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //! | [`exec`]    | real multi-threaded hybrid-parallel training engine |
 //! | [`fleet`]   | discrete-event multi-tenant scheduler: arrivals, churn, queue + placement policies, deadlines/SLOs, checkpointing |
 //! | [`fleet::eventq`] | pluggable event-queue backends for the fleet loop: calendar/bucket queue (default) and binary heap, bit-identical orderings |
-//! | [`fed`]     | round-based federated adapter-aggregation simulator: client selection, straggler policies, availability churn, secure-agg/DP knobs |
+//! | [`fed`]     | federated adapter-aggregation simulator: sync rounds or FedBuff-style async buffered folding, client selection (incl. Oort-style utility), straggler policies, availability churn, staleness accounting, secure-agg/DP knobs |
 //! | [`learn`]   | in-simulator RL scheduling: dependency-free DQN over fleet decision points, exported as a loadable queue policy |
 //! | [`obs`]     | observability: typed metric registry, virtual-time span tracing (Chrome/Perfetto + JSONL export), wall-clock phase timers, all behind a zero-cost-when-disabled `Observer` |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
@@ -192,8 +192,8 @@
 //! The federated layer ([`fed`]) is open the same way: which available
 //! clients join a round is a [`fed::ClientSelection`] resolved by name
 //! through [`fed::SelectionRegistry`], composing with any
-//! [`fed::StragglerPolicy`] and aggregation mode. To add one (say, an
-//! Oort-style utility sampler):
+//! [`fed::StragglerPolicy`] and aggregation mode. To add one (say, a
+//! gradient-norm-informed sampler):
 //!
 //! 1. implement the trait — [`name`](fed::ClientSelection::name)
 //!    (stable display name) and
@@ -206,15 +206,52 @@
 //!    keeps same-seed runs bit-identical under your policy;
 //! 2. register it: [`fed::SelectionRegistry::register`] on top of
 //!    [`with_defaults`](fed::SelectionRegistry::with_defaults)
-//!    (uniform, power-of-d, availability-aware, fair-share) — or add
-//!    it to `with_defaults` if it should ship by default;
+//!    (uniform, power-of-d, availability-aware, fair-share,
+//!    Oort-style utility) — or add it to `with_defaults` if it should
+//!    ship by default;
 //! 3. run `cargo test`: `tests/fed.rs` pins same-seed determinism
-//!    across every selection × straggler combination and shows how the
+//!    across every selection × straggler combination — and across
+//!    every selection policy in async mode — and shows how the
 //!    availability-aware acceptance comparison is engineered.
 //!
 //! `pacpp fed --select <name>` and [`fed::FedOptions::select`] resolve
 //! policies by registry name; the `fed` / `fed_select` experiments
 //! compare every registered policy on the shared grids.
+//!
+//! ## Adding an aggregation mode
+//!
+//! *When* deltas combine is the third open axis of the federated
+//! layer: [`fed::AggregationMode`] picks the round engine.
+//! `Sync` runs cohort rounds (select K, wait per the straggler
+//! policy, aggregate, advance); `Async` is FedBuff-style buffered
+//! folding (deltas fold on arrival, a logical round closes every
+//! [`fed::FedOptions::buffer_k`] folds, no barrier, staleness
+//! tracked). The two engines live side by side in `fed::round`
+//! behind one options struct. To add a mode (say, semi-synchronous
+//! tiers or staleness-weighted folding):
+//!
+//! 1. add the variant to [`fed::AggregationMode`] (its `ALL`, `name`
+//!    and `parse` tables — the CLI, experiment metadata and reports
+//!    all go through them), and give it an engine function in
+//!    `fed::round` next to `run_sync`/`run_async`, dispatched from
+//!    `simulate_fed_with_observed`. Engines share the prepared
+//!    inputs (feasibility-filtered clients, oracle base estimates,
+//!    traces) and return the same `RawFed` tallies — derive a
+//!    distinct seed salt for any new randomness stream so modes
+//!    never share RNG state;
+//! 2. surface it: `pacpp fed --agg-mode <name>` parses through
+//!    [`fed::AggregationMode`]; extend the `fed` experiment grid if
+//!    the mode should appear in the shipped reports;
+//! 3. run `cargo test`: `tests/fed.rs` pins bit-determinism per mode,
+//!    that sync ignores async-only knobs, and the async-vs-wait-all
+//!    throughput acceptance; `tests/prop_invariants.rs` pins that
+//!    tracing never changes either engine's metrics. Mirror those
+//!    four pins for any new mode.
+//!
+//! [`fed::FedMetrics`] reports the async-specific accounting
+//! (`staleness_p50`/`p95`, `rounds_per_hour`) as `Option`s that stay
+//! `None`/mode-neutral under `Sync`, so one metrics struct serves
+//! every mode.
 //!
 //! ## Adding an instrumentation point
 //!

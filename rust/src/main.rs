@@ -20,9 +20,10 @@
 //!                [--trace-out FILE] [--trace-sample N]
 //!                [--format text|json|csv] [--out FILE]
 //! pacpp fed      [--rounds 50] [--clients 24] [--k 6]
-//!                [--select all|uniform|power-of-d|availability|fair[,..]]
+//!                [--select all|uniform|power-of-d|availability|fair|utility[,..]]
 //!                [--straggler wait-all|deadline|over-select]
-//!                [--agg allreduce|allgather|star] [--seed 42]
+//!                [--agg allreduce|allgather|star]
+//!                [--agg-mode sync|async] [--buffer-k K] [--seed 42]
 //!                [--trace stable|churny|flaky] [--churn-file FILE]
 //!                [--net lan|wifi]
 //!                [--model t5-base] [--strategy pac+] [--horizon HOURS]
@@ -51,8 +52,8 @@ use pacpp::data::SyntheticTask;
 use pacpp::exec::{self, TrainOptions};
 use pacpp::exp::{self, ExpContext, ExperimentRegistry, Format, Report};
 use pacpp::fed::{
-    simulate_fed_observed, AggMode, FedOptions, FedTraceKind, SelectionRegistry,
-    StragglerRegistry,
+    simulate_fed_observed, AggMode, AggregationMode, FedOptions, FedTraceKind,
+    SelectionRegistry, StragglerRegistry,
 };
 use pacpp::fleet::{
     churn_from_json, generate_churn, generate_jobs, simulate_fleet_observed, CheckpointSpec,
@@ -635,6 +636,12 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
     let Some(agg) = AggMode::parse(agg_name) else {
         anyhow::bail!("unknown aggregation mode {agg_name:?} (allreduce|allgather|star)");
     };
+    let agg_mode_name = args.get_str("agg-mode", "sync")?;
+    let Some(agg_mode) = AggregationMode::parse(agg_mode_name) else {
+        anyhow::bail!("unknown aggregation timing {agg_mode_name:?} (sync|async)");
+    };
+    // async buffer size; 0 = auto (one buffer per K folds)
+    let buffer_k = args.get_count0("buffer-k", 0)?;
     let net_name = args.get_str("net", "lan")?;
     let network = match net_name {
         "lan" => Network::lan_1gbps(),
@@ -708,6 +715,8 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
     .meta("churn_file", churn_file.as_deref().unwrap_or("-"))
     .meta("net", net_name)
     .meta("agg", agg.name())
+    .meta("agg_mode", agg_mode.name())
+    .meta("buffer_k", buffer_k)
     .meta("model", &model.name)
     .meta("straggler", straggler.name())
     .meta("strategy", args.get_str("strategy", "pac+")?)
@@ -728,6 +737,8 @@ fn cmd_fed(args: &Args) -> anyhow::Result<()> {
             select: select.clone(),
             straggler: straggler.name().to_string(),
             agg,
+            agg_mode,
+            buffer_k,
             seed,
             trace,
             strategy: args.get_str("strategy", "pac+")?.to_string(),

@@ -389,6 +389,56 @@ mod tests {
     }
 
     #[test]
+    fn sketch_hands_off_exactly_past_the_exact_limit() {
+        // Pins the spill boundary: `SKETCH_EXACT_LIMIT` observations
+        // still answer bit-identically to the sorted-exact path, the
+        // very next observation flips the sketch into P² streaming
+        // mode (estimates only), and an untouched sketch keeps
+        // answering `None`.
+        assert_eq!(QuantileSketch::new(&[0.5], SKETCH_EXACT_LIMIT).quantile(0.5), None);
+
+        let mut sketch = QuantileSketch::new(&[0.5, 0.95], SKETCH_EXACT_LIMIT);
+        let mut vals = Vec::new();
+        let mut x = 7u64;
+        let mut next = || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (x >> 11) as f64 / (1u64 << 53) as f64 * 500.0
+        };
+        let exact_at = |vals: &[f64], q: f64| {
+            let mut sorted = vals.to_vec();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            percentile(&sorted, q)
+        };
+        for _ in 0..SKETCH_EXACT_LIMIT - 1 {
+            let v = next();
+            vals.push(v);
+            sketch.add(v);
+        }
+        assert!(sketch.is_exact(), "LIMIT - 1 observations must stay exact");
+        assert_eq!(sketch.quantile(0.5), exact_at(&vals, 0.5), "bitwise at LIMIT - 1");
+
+        let v = next();
+        vals.push(v);
+        sketch.add(v); // observation number LIMIT: the last exact one
+        assert!(sketch.is_exact(), "exactly LIMIT observations must stay exact");
+        assert_eq!(sketch.quantile(0.95), exact_at(&vals, 0.95), "bitwise at LIMIT");
+
+        let v = next();
+        vals.push(v);
+        sketch.add(v); // LIMIT + 1 spills into streaming mode
+        assert!(!sketch.is_exact(), "LIMIT + 1 observations must spill to P²");
+        assert_eq!(sketch.len(), SKETCH_EXACT_LIMIT + 1);
+        for q in [0.5, 0.95] {
+            let est = sketch.quantile(q).unwrap();
+            let exact = exact_at(&vals, q).unwrap();
+            assert!(
+                (est - exact).abs() < 5.0, // 1% of the 500-wide uniform range
+                "q={q} just past the spill: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
     fn sketch_is_deterministic() {
         let feed = |seed: u64| {
             let mut s = QuantileSketch::new(&[0.5, 0.99], 64);

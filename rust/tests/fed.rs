@@ -1,9 +1,12 @@
 //! Federated-simulator integration tests: the availability-aware
 //! acceptance comparison (strictly more rounds than uniform-random on
-//! the same churny population within a fixed horizon), same-options
-//! bit-identical determinism across every selection × straggler
-//! combination, straggler-policy separations, and end-to-end coverage
-//! of the `fed` experiments through the registry.
+//! the same churny population within a fixed horizon), the async
+//! buffered-aggregation acceptance (strictly more logical rounds than
+//! wait-all in the same virtual time, with staleness reported),
+//! same-options bit-identical determinism across every selection ×
+//! straggler combination in both aggregation modes, straggler-policy
+//! separations, and end-to-end coverage of the `fed` experiments
+//! through the registry.
 //!
 //! The engineered scenarios follow the fleet tests' probe pattern:
 //! round times are *measured* by probe runs, then horizons and margins
@@ -14,8 +17,8 @@
 use pacpp::cluster::DeviceKind;
 use pacpp::exp::{Cell, ExpContext, ExperimentRegistry, Format, Report};
 use pacpp::fed::{
-    simulate_fed, simulate_fed_with, ClientTrace, FedClient, FedOptions, FedTraceKind,
-    SelectionRegistry, StragglerRegistry,
+    simulate_fed, simulate_fed_with, AggregationMode, ClientTrace, FedClient, FedOptions,
+    FedTraceKind, SelectionRegistry, StragglerRegistry,
 };
 use pacpp::util::json::Json;
 use pacpp::util::prop::{check, forall};
@@ -140,14 +143,19 @@ fn availability_aware_completes_strictly_more_rounds_than_uniform() {
 fn deadline_cutoff_caps_dropout_stalls() {
     let horizon_gen = 80.0 * 3600.0;
     let (clients, traces) = flaky_population(8, horizon_gen, 60.0, 0.5);
-    // k=4 of 8: every round must select at least 3 flaky clients, so
-    // every wait-all round stalls at 3x while every deadline round is
-    // cut at 2x the median estimate
+    // k=4 of 8 with availability-aware selection: the stable client is
+    // in every cohort (so a deadline cohort always has a finisher) and
+    // at least 3 flaky picks ride along, so every wait-all round stalls
+    // at 3x while every deadline round is cut at 2x the median
+    // estimate. (Uniform selection would occasionally draw all-flaky
+    // cohorts, which the degenerate-cohort fix now makes wait out the
+    // dropouts instead of aggregating nothing early — identical to
+    // wait-all, which would erase the separation this test asserts.)
     let base = FedOptions {
         rounds: 6,
         clients: 8,
         k: 4,
-        select: "uniform".into(),
+        select: "availability".into(),
         jitter: 0.0,
         deadline_mult: 2.0,
         ..Default::default()
@@ -172,6 +180,102 @@ fn deadline_cutoff_caps_dropout_stalls() {
         cut.round_p99,
         wait.round_p99
     );
+}
+
+/// The ISSUE-9 async acceptance run: FedBuff-style buffered folding
+/// completes **strictly more aggregated logical rounds than
+/// synchronous wait-all within the same virtual-time horizon** on an
+/// engineered flaky population.
+///
+/// Construction (probed, not tuned): k=2 of 8 over one always-up
+/// client and 7 flaky ones whose 60 s up-windows are far shorter than
+/// a round. Availability-aware selection puts the stable client plus
+/// one doomed flaky pick in every cohort, so each synchronous wait-all
+/// round stalls at the server's 3× give-up timeout. The sync probe
+/// measures that makespan; the async run gets exactly that much
+/// virtual time. With no barrier, the stable client redispatches the
+/// moment its delta folds (buffer_k = 1 closes a logical round per
+/// fold) while flaky give-up timers burn in the background — roughly
+/// 3× the logical-round rate, asserted only as *strictly more*.
+#[test]
+fn async_buffered_completes_strictly_more_rounds_than_wait_all() {
+    const ROUNDS: usize = 6;
+    let horizon_gen = 240.0 * 3600.0;
+    let (clients, traces) = flaky_population(8, horizon_gen, 60.0, 0.5);
+    let base = FedOptions {
+        rounds: ROUNDS,
+        clients: 8,
+        k: 2,
+        select: "availability".into(),
+        straggler: "wait-all".into(),
+        jitter: 0.0,
+        buffer_k: 1,
+        ..Default::default()
+    };
+
+    // sync probe: every round aggregates the stable client and drops
+    // its flaky co-pick after the 3x dropout-detection stall
+    let sync = simulate_fed_with(&clients, &traces, &base).unwrap();
+    assert_eq!(sync.rounds, ROUNDS, "sync probe must complete: {sync:?}");
+    assert_eq!(sync.dropped_total, ROUNDS, "every round drops its flaky pick: {sync:?}");
+    assert!(
+        sync.makespan * 1.1 < horizon_gen,
+        "traces must cover the run: {} vs {horizon_gen}",
+        sync.makespan
+    );
+    assert_eq!(sync.staleness_p50, None, "sync deltas are never stale: {sync:?}");
+
+    // same population, same virtual-time budget, async buffered folding
+    let async_m = simulate_fed_with(
+        &clients,
+        &traces,
+        &FedOptions {
+            agg_mode: AggregationMode::Async,
+            rounds: ROUNDS * 100, // horizon-bound, not round-bound
+            horizon: sync.makespan,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    assert!(
+        async_m.rounds > sync.rounds,
+        "async buffered folding must close strictly more logical rounds \
+         in the same horizon: async {} vs wait-all {}",
+        async_m.rounds,
+        sync.rounds
+    );
+    assert!(async_m.staleness_p50.is_some(), "async runs report staleness: {async_m:?}");
+    assert!(
+        async_m.rounds_per_hour > sync.rounds_per_hour,
+        "barrier-free folding must raise effective throughput: {} vs {}",
+        async_m.rounds_per_hour,
+        sync.rounds_per_hour
+    );
+    assert_eq!(
+        async_m.aggregated_total + async_m.dropped_total,
+        async_m.selected_total,
+        "selection outcomes must partition in async mode too: {async_m:?}"
+    );
+}
+
+/// Sync mode is completely untouched by the async knobs: whatever
+/// `buffer_k` says, a sync run is bit-identical to the default-options
+/// run (the pre-async behavior) and never reports staleness.
+#[test]
+fn sync_mode_ignores_async_knobs_bit_for_bit() {
+    let base = FedOptions {
+        rounds: 4,
+        clients: 12,
+        k: 4,
+        trace: FedTraceKind::Flaky,
+        ..Default::default()
+    };
+    let a = simulate_fed(&base).unwrap();
+    assert_eq!(a.staleness_p50, None, "{a:?}");
+    for buffer_k in [1usize, 3, 64] {
+        let b = simulate_fed(&FedOptions { buffer_k, ..base.clone() }).unwrap();
+        assert_eq!(a, b, "buffer_k {buffer_k} leaked into a sync run");
+    }
 }
 
 #[derive(Debug)]
@@ -212,6 +316,51 @@ fn fed_is_bit_identical_across_every_policy_combination() {
                     check(
                         a == b,
                         format!("{select} x {straggler} diverged:\n  {a:?}\n  {b:?}"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Async mode is itself bit-deterministic for the same options, across
+/// **every registered selection policy** and multiple buffer sizes
+/// (the straggler barrier is bypassed in async mode, so selection is
+/// the policy axis that matters) — the ISSUE-9 determinism acceptance.
+#[test]
+fn fed_async_is_bit_identical_across_every_selection_policy() {
+    let selections = SelectionRegistry::with_defaults();
+    forall(
+        0xA5FED_5EED,
+        2,
+        |g| FedCase {
+            seed: 1 + g.int(0, 1_000_000) as u64 * 2_654_435_761,
+            rounds: 4 + g.int(0, 4),
+        },
+        |case| {
+            for select in selections.names() {
+                for buffer_k in [1usize, 3] {
+                    let opts = FedOptions {
+                        rounds: case.rounds,
+                        clients: 12,
+                        k: 4,
+                        select: select.to_string(),
+                        agg_mode: AggregationMode::Async,
+                        buffer_k,
+                        seed: case.seed,
+                        trace: FedTraceKind::Flaky,
+                        ..Default::default()
+                    };
+                    let a = simulate_fed(&opts).map_err(|e| e.to_string())?;
+                    let b = simulate_fed(&opts).map_err(|e| e.to_string())?;
+                    check(
+                        a == b,
+                        format!("async {select} x buffer_k {buffer_k} diverged:\n  {a:?}\n  {b:?}"),
+                    )?;
+                    check(
+                        a.aggregated_total + a.dropped_total == a.selected_total,
+                        format!("async outcomes must partition selections: {a:?}"),
                     )?;
                 }
             }
@@ -266,7 +415,8 @@ fn fed_experiment_covers_grid_and_roundtrips_json() {
         v.dedup();
         v
     };
-    assert_eq!(distinct("select").len(), 4, "selects: {:?}", distinct("select"));
+    assert_eq!(distinct("select").len(), 5, "selects: {:?}", distinct("select"));
+    assert_eq!(distinct("mode"), vec!["async", "sync"], "modes: {:?}", distinct("mode"));
     assert_eq!(distinct("straggler").len(), 3, "stragglers: {:?}", distinct("straggler"));
     for col in ["rounds", "p50", "p95", "p99", "bytes_up", "bytes_down", "fairness"] {
         assert!(rep.columns().iter().any(|c| c.name == col), "missing {col}");

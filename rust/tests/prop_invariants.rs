@@ -2,7 +2,8 @@
 //! `exec::partition_layers` (the pipelined engine's stage splitter),
 //! the fleet event loop's same-seed determinism, the scaling-path
 //! equivalences (calendar event queue vs binary heap, incremental vs
-//! legacy dispatch, fed quoting shards), the EASY-backfill
+//! legacy dispatch, fed quoting shards), the fed `ClientTrace`
+//! boundary semantics at exact toggle instants, the EASY-backfill
 //! no-head-delay guarantee, the bounded-loss checkpoint arithmetic,
 //! the Jain fairness index range, the in-sim DQN training loop's
 //! same-config bit-determinism, the `cluster::Network`
@@ -13,7 +14,9 @@
 
 use pacpp::cluster::{Env, Network};
 use pacpp::exec::partition_layers;
-use pacpp::fed::{simulate_fed, simulate_fed_observed, FedOptions, FedTraceKind};
+use pacpp::fed::{
+    simulate_fed, simulate_fed_observed, AggregationMode, ClientTrace, FedOptions, FedTraceKind,
+};
 use pacpp::fleet::{
     generate_churn, generate_jobs, jain_index, simulate_fleet, simulate_fleet_observed,
     AttemptTimeline, BestFit, CheckpointSpec, EventQueueKind, FleetMetrics, FleetOptions,
@@ -264,6 +267,76 @@ fn fed_shard_count_is_metric_invariant() {
                 let b = simulate_fed(&FedOptions { shards, ..base.clone() })
                     .map_err(|e| e.to_string())?;
                 check(a == b, format!("shards={shards} changed the metrics"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug)]
+struct TraceCase {
+    start_up: bool,
+    toggles: Vec<f64>,
+    horizon: f64,
+}
+
+/// `ClientTrace` boundary semantics at the *exact* toggle instants:
+/// the state changes at the flip (a toggle at `t` belongs to the new
+/// state, closed-open intervals), and the three views the round
+/// engines consume — `available_at`, `up_remaining`,
+/// `next_toggle_after` — agree with the flip-parity ground truth at
+/// every probe: just before, exactly on, and just after each toggle.
+/// Pins the off-by-one-window bug class the ISSUE-9 `up_remaining`
+/// fix closed.
+#[test]
+fn client_trace_views_agree_at_exact_toggle_instants() {
+    forall(
+        0x7066_1E5,
+        60,
+        |g| {
+            let n = g.int(1, 8);
+            let mut toggles = Vec::new();
+            let mut t = 0.0;
+            for _ in 0..n {
+                t += g.f64(0.5, 10.0);
+                toggles.push(t);
+            }
+            TraceCase { start_up: g.bool(), toggles, horizon: t + g.f64(0.5, 10.0) }
+        },
+        |case| {
+            let trace = ClientTrace::new(case.start_up, case.toggles.clone(), case.horizon);
+            for (i, &tog) in case.toggles.iter().enumerate() {
+                let eps = 1e-7; // far below the >= 0.5 inter-toggle gap
+                for t in [tog - eps, tog, tog + eps] {
+                    // ground truth: parity of flips at or before t
+                    let flips = case.toggles.iter().filter(|&&x| x <= t).count();
+                    let expect_up = case.start_up ^ (flips % 2 == 1);
+                    let expect_next = case.toggles.iter().copied().find(|&x| x > t);
+                    check(
+                        trace.available_at(t) == expect_up,
+                        format!(
+                            "available_at({t}) != flip parity ({flips} flips) at toggle {i}"
+                        ),
+                    )?;
+                    check(
+                        trace.next_toggle_after(t) == expect_next,
+                        format!(
+                            "next_toggle_after({t}) = {:?}, expected {expect_next:?}",
+                            trace.next_toggle_after(t)
+                        ),
+                    )?;
+                    let rem = trace.up_remaining(t);
+                    if expect_up {
+                        let expect_rem = expect_next.map_or(f64::INFINITY, |x| x - t);
+                        check(
+                            rem == expect_rem,
+                            format!("up_remaining({t}) = {rem}, expected {expect_rem}"),
+                        )?;
+                        check(rem > 0.0, format!("up at {t} yet zero headroom"))?;
+                    } else {
+                        check(rem == 0.0, format!("down at {t} yet up_remaining = {rem}"))?;
+                    }
+                }
             }
             Ok(())
         },
@@ -590,7 +663,15 @@ fn tracing_never_changes_the_metrics() {
             let plain = simulate_fed(&fed_opts).map_err(|e| e.to_string())?;
             let traced = simulate_fed_observed(&fed_opts, &Observer::enabled())
                 .map_err(|e| e.to_string())?;
-            check(plain == traced, "tracing changed the fed metrics".to_string())
+            check(plain == traced, "tracing changed the fed metrics".to_string())?;
+
+            // and the async buffered engine honors the same contract
+            let async_opts =
+                FedOptions { agg_mode: AggregationMode::Async, ..fed_opts.clone() };
+            let plain = simulate_fed(&async_opts).map_err(|e| e.to_string())?;
+            let traced = simulate_fed_observed(&async_opts, &Observer::enabled())
+                .map_err(|e| e.to_string())?;
+            check(plain == traced, "tracing changed the async fed metrics".to_string())
         },
     );
 }
