@@ -36,6 +36,8 @@
 //! | [`fed`]     | federated adapter-aggregation simulator: sync rounds or FedBuff-style async buffered folding, client selection (incl. Oort-style utility), straggler policies, availability churn, staleness accounting, secure-agg/DP knobs |
 //! | [`learn`]   | in-simulator RL scheduling: dependency-free DQN over fleet decision points, exported as a loadable queue policy |
 //! | [`obs`]     | observability: typed metric registry, virtual-time span tracing (Chrome/Perfetto + JSONL export), wall-clock phase timers, all behind a zero-cost-when-disabled `Observer` |
+//! | [`obs::analyze`] | offline trace analyzer: per-(category, name) span aggregates, critical-path/straggler attribution, gap/bubble accounting over exported traces (`pacpp trace summarize`) |
+//! | [`obs::regress`] | benchmark history + regression gate: declarative series extraction from `BENCH_*.json`, append-only JSONL history, deterministic baseline/median verdicts (`pacpp bench`) |
 //! | [`quant`]   | block-wise INT8/INT4 quantization (paper Eq. 1–2) |
 //! | [`data`]    | synthetic GLUE-like workload generators |
 //! | [`exp`]     | typed `Experiment`/`Report` API + name-addressed registry of every paper table/figure |
@@ -286,7 +288,44 @@
 //! `pacpp fleet|fed|learn --trace-out FILE [--trace-sample N]` exports
 //! Chrome trace-event JSON (Perfetto-loadable; `.jsonl` extension
 //! switches to JSONL), and every `exp` run stamps `elapsed_secs` into
-//! its report metadata.
+//! its report metadata. `pacpp trace summarize FILE` then reads either
+//! export back offline ([`obs::analyze`]): per-(category, name) span
+//! aggregates, the longest (category, id) span groups with straggler
+//! attribution (`critical_<cat>` metadata names each category's worst
+//! group), per-category gap/bubble accounting, and ring-coverage
+//! stats from the recorded/dropped tallies the exports embed.
+//!
+//! ## Trending a benchmark
+//!
+//! Any machine-readable artifact the CLI writes — a report
+//! (`--format json --out`), a `BENCH_OUT=<file> cargo bench` dump, a
+//! `--trace-out` Chrome trace — can be tracked across commits without
+//! bespoke scripts ([`obs::regress`]):
+//!
+//! 1. **record**: `pacpp bench record BENCH_fleet.json --history
+//!    bench_history.jsonl --label $(git rev-parse --short HEAD)`
+//!    flattens the artifact into named scalar series
+//!    (`fleet.meta.events_total`, `fleet.row.<env>/<policy>.goodput`,
+//!    `bench.<suite>.<case>.p50`, ...) and appends one JSONL point per
+//!    series. `--extract name=rows[0][2]` adds custom key-path pulls;
+//! 2. **gate**: `pacpp bench compare BENCH_fleet.json --baseline
+//!    ci/bench_baseline.json` re-extracts and fails (nonzero exit,
+//!    after printing the verdict table) on any series off its baseline
+//!    by more than the tolerance, in its worse direction
+//!    ([`obs::regress::Direction`] is inferred from the series name —
+//!    `*.p95`, `*.makespan` lower-better; goodput-style higher-better
+//!    — and can be pinned per series in the baseline file). Seed a
+//!    baseline with `bench record --baseline-out`: only deterministic
+//!    series are gated, wall-clock ones (`*.wall.*`, `bench.*`) are
+//!    recorded for trending but never gate;
+//! 3. **trend**: `pacpp bench compare --history bench_history.jsonl`
+//!    gates the newest point against the median of the trailing
+//!    `--window` instead of a fixed baseline, and `pacpp bench trend`
+//!    prints per-series first/median/last with the relative change.
+//!
+//! CI runs the record → compare loop on every push (see
+//! `.github/workflows/ci.yml`, "Bench regression gate") and uploads
+//! the history; `ci/bench_baseline.json` holds the committed gate.
 //!
 //! ## Scaling knobs
 //!

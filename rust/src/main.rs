@@ -37,6 +37,23 @@
 //!                [--format text|json|csv] [--out FILE]
 //!                     (train the in-sim DQN scheduler, dump + reload its
 //!                      weights, and evaluate vs FIFO/backfill/EDF)
+//! pacpp trace    summarize <FILE> [--section summary|critical|gaps|all]
+//!                [--top N] [--format text|json|csv] [--out FILE]
+//!                     (offline analysis of a --trace-out artifact:
+//!                      per-category aggregates, critical paths/stragglers,
+//!                      gap/bubble accounting)
+//! pacpp bench    record <FILE...> [--history bench_history.jsonl]
+//!                [--label LABEL] [--extract name=key.path[,..]]
+//!                [--baseline-out FILE] [--tolerance 0.05]
+//!                     (extract scalar series from BENCH_*.json reports /
+//!                      bench dumps / traces and append them to the history)
+//! pacpp bench    compare <FILE...> --baseline FILE [--tolerance T]
+//! pacpp bench    compare --history bench_history.jsonl [--window 8]
+//!                [--tolerance 0.05]
+//!                     (deterministic regression verdict; exits nonzero on
+//!                      any regressed series)
+//! pacpp bench    trend [--history bench_history.jsonl] [--series SUBSTR]
+//!                [--window 8] [--format text|json|csv] [--out FILE]
 //! pacpp timeline --env env_a [--microbatch 4] [--m 6] [--width 120]
 //!                                  (render a plan's 1F1B schedule as ASCII art)
 //! pacpp table    1|5|6|7           (deprecated alias for `exp run table<N>`)
@@ -63,6 +80,11 @@ use pacpp::fleet::{
 use pacpp::learn::TrainConfig;
 use pacpp::model::graph::LayerGraph;
 use pacpp::model::{Method, ModelSpec, Precision};
+use pacpp::obs::analyze::{analyze, critical_report, gaps_report, summary_report, TraceDoc};
+use pacpp::obs::regress::{
+    compare_to_baseline, compare_to_history, extract, trend_report, Baseline, BenchHistory,
+    HistoryPoint,
+};
 use pacpp::obs::{Observer, DEFAULT_TRACE_CAPACITY};
 use pacpp::planner::{plan, PlannerOptions};
 use pacpp::profiler::Profile;
@@ -92,6 +114,8 @@ fn main() -> anyhow::Result<()> {
         Some("fleet") => cmd_fleet(&args),
         Some("fed") => cmd_fed(&args),
         Some("learn") => cmd_learn(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("bench") => cmd_bench(&args),
         Some("table") => cmd_table(&args),
         Some("fig") => cmd_fig(&args),
         Some("train") => cmd_train(&args),
@@ -99,8 +123,8 @@ fn main() -> anyhow::Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: pacpp <plan|simulate|strategies|exp|fleet|fed|learn|timeline|table|\
-                 fig|train|info> [options]"
+                "usage: pacpp <plan|simulate|strategies|exp|fleet|fed|learn|trace|bench|\
+                 timeline|table|fig|train|info> [options]"
             );
             eprintln!("see rust/src/main.rs docs for options");
             Ok(())
@@ -374,6 +398,13 @@ fn finish_observer(obs: &Observer, trace_out: &Option<String>) -> anyhow::Result
              {dropped} overwritten)",
             text.len()
         );
+        if dropped > 0 {
+            eprintln!(
+                "warning: trace ring overflowed — the oldest {dropped} of {recorded} events \
+                 were overwritten, so {path} holds only the run's tail (raise --trace-sample \
+                 to thin the stream)"
+            );
+        }
     }
     for (phase, stat) in obs.wall_phases() {
         eprintln!("  wall {phase}: {} over {} call(s)", fmt_secs(stat.secs), stat.count);
@@ -488,6 +519,238 @@ fn emit_reports(
         None => print!("{rendered}"),
     }
     Ok(())
+}
+
+/// `pacpp trace <summarize>`: offline analysis of a `--trace-out`
+/// artifact (Chrome trace-event JSON or JSONL — format sniffed, not
+/// extension-guessed, so renamed files still load).
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("summarize") => cmd_trace_summarize(args),
+        other => anyhow::bail!(
+            "unknown trace action {:?}: usage: pacpp trace summarize <FILE> \
+             [--section summary|critical|gaps|all] [--top N] \
+             [--format text|json|csv] [--out FILE]",
+            other.unwrap_or("")
+        ),
+    }
+}
+
+/// `pacpp trace summarize FILE`: load the trace, reduce it via
+/// `obs::analyze`, and emit the requested report section(s) —
+/// per-(category, name) span aggregates, critical-path groups with
+/// straggler attribution, and per-category gap/bubble accounting.
+fn cmd_trace_summarize(args: &Args) -> anyhow::Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        anyhow::bail!("trace summarize: missing trace file argument");
+    };
+    let format = parse_format(args)?;
+    validate_out(args)?;
+    let section = args.get_str("section", "all")?;
+    let top = args.get_count("top", 10)?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let doc = TraceDoc::load(&text).map_err(|e| anyhow::anyhow!("loading {path}: {e:#}"))?;
+    let analysis = analyze(&doc);
+    let mut reports = Vec::new();
+    if matches!(section, "summary" | "all") {
+        reports.push(summary_report(&analysis));
+    }
+    if matches!(section, "critical" | "all") {
+        reports.push(critical_report(&analysis, top));
+    }
+    if matches!(section, "gaps" | "all") {
+        reports.push(gaps_report(&analysis));
+    }
+    anyhow::ensure!(
+        !reports.is_empty(),
+        "unknown --section {section:?} (summary|critical|gaps|all)"
+    );
+    for r in &mut reports {
+        r.meta.insert("source".to_string(), path.clone());
+    }
+    ensure_csv_single(format, reports.len())?;
+    let as_array = reports.len() > 1;
+    emit_reports(&reports, format, as_array, args)
+}
+
+/// `pacpp bench <record|compare|trend>`: benchmark history and
+/// regression gating over the `BENCH_*.json` artifacts (`obs::regress`).
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("record") => cmd_bench_record(args),
+        Some("compare") => cmd_bench_compare(args),
+        Some("trend") => cmd_bench_trend(args),
+        other => anyhow::bail!(
+            "unknown bench action {:?}: usage: pacpp bench \
+             record <FILE...> [--history H] [--label L] [--baseline-out F] | \
+             compare <FILE...> --baseline F | compare --history H [--window N] | \
+             trend [--history H] [--series SUBSTR]",
+            other.unwrap_or("")
+        ),
+    }
+}
+
+/// Read + extract every artifact named on a `bench record`/`compare`
+/// command line. Returns `(series, values)` pairs; the series names are
+/// prefixed per the artifact shape (`<report>.meta.*`, `bench.*`,
+/// `trace.<stem>.*`). `--extract name=key.path[,..]` adds custom series
+/// pulled by `util::json` key-path (e.g. `goodput=meta.goodput` or
+/// `first_row=rows[0][2]`).
+fn extract_files(args: &Args, files: &[String]) -> anyhow::Result<Vec<(String, f64)>> {
+    anyhow::ensure!(!files.is_empty(), "no artifact files given");
+    let custom: Vec<(String, String)> = match args.get_str("extract", "")? {
+        "" => Vec::new(),
+        spec => spec
+            .split(',')
+            .map(|pair| {
+                pair.split_once('=')
+                    .map(|(n, p)| (n.to_string(), p.to_string()))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("--extract: expected name=key.path, got {pair:?}")
+                    })
+            })
+            .collect::<anyhow::Result<_>>()?,
+    };
+    let mut series = Vec::new();
+    for path in files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+        let json = pacpp::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("artifact");
+        let extracted = extract(&json, stem);
+        anyhow::ensure!(
+            !extracted.is_empty() || !custom.is_empty(),
+            "{path}: no recognizable series (expected a report, bench dump or trace)"
+        );
+        series.extend(extracted);
+        for (name, keypath) in &custom {
+            let v = json
+                .path_str(keypath)
+                .and_then(pacpp::util::json::Json::as_f64)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("--extract {name}={keypath}: no numeric value in {path}")
+                })?;
+            series.push((name.clone(), v));
+        }
+    }
+    Ok(series)
+}
+
+/// `pacpp bench record FILE...`: append each artifact's extracted
+/// series to the history (`--history`, default `bench_history.jsonl`)
+/// under `--label` (commit sha, date, ...; default "local").
+/// `--baseline-out FILE` additionally writes the gated (deterministic)
+/// series as a fresh regression baseline at `--tolerance`.
+fn cmd_bench_record(args: &Args) -> anyhow::Result<()> {
+    let files = &args.positional[1..];
+    let history = args.get_str("history", "bench_history.jsonl")?;
+    let label = args.get_str("label", "local")?;
+    let tolerance = args.get_rate("tolerance", 0.05)?;
+    anyhow::ensure!(!files.is_empty(), "bench record: no artifact files given");
+    let mut points = Vec::new();
+    for path in files {
+        let series = extract_files(args, std::slice::from_ref(path))?;
+        let source = std::path::Path::new(path)
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or(path)
+            .to_string();
+        for (name, value) in series {
+            points.push(HistoryPoint {
+                label: label.to_string(),
+                source: source.clone(),
+                series: name,
+                value,
+            });
+        }
+    }
+    pacpp::util::append_creating_dirs(history, &BenchHistory::render(&points))?;
+    eprintln!(
+        "recorded {} series from {} file(s) into {history} (label {label})",
+        points.len(),
+        files.len()
+    );
+    if let Some(out) = args.get("baseline-out") {
+        let series: Vec<(String, f64)> =
+            points.iter().map(|p| (p.series.clone(), p.value)).collect();
+        let baseline = Baseline::from_series(&series, tolerance);
+        let mut text = baseline.to_json().to_string_pretty();
+        text.push('\n');
+        pacpp::util::write_creating_dirs(out, &text)?;
+        eprintln!(
+            "wrote {out} ({} gated series, tolerance {tolerance})",
+            baseline.series.len()
+        );
+    }
+    Ok(())
+}
+
+/// `pacpp bench compare`: deterministic regression verdict. Two modes:
+/// `compare FILE... --baseline F` gates freshly extracted series
+/// against a committed baseline; `compare --history H` gates each
+/// series' newest history point against the median of its last
+/// `--window` points. The verdict report is emitted *before* the exit
+/// status so a failing CI run still shows the full table.
+fn cmd_bench_compare(args: &Args) -> anyhow::Result<()> {
+    let format = parse_format(args)?;
+    validate_out(args)?;
+    let baseline_path = args.get_str("baseline", "")?;
+    let history_path = args.get_str("history", "")?;
+    anyhow::ensure!(
+        (baseline_path == "") != (history_path == ""),
+        "bench compare: pass exactly one of --baseline FILE or --history FILE"
+    );
+    let verdict = if !baseline_path.is_empty() {
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow::anyhow!("cannot read {baseline_path}: {e}"))?;
+        let json = pacpp::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+        let mut baseline = Baseline::from_json(&json)
+            .map_err(|e| anyhow::anyhow!("{baseline_path}: {e:#}"))?;
+        baseline.tolerance = args.get_rate("tolerance", baseline.tolerance)?;
+        let current = extract_files(args, &args.positional[1..])?;
+        compare_to_baseline(&current, &baseline)
+    } else {
+        let text = std::fs::read_to_string(history_path)
+            .map_err(|e| anyhow::anyhow!("cannot read {history_path}: {e}"))?;
+        let hist = BenchHistory::parse(&text)?;
+        let window = args.get_count("window", 8)?;
+        let tolerance = args.get_rate("tolerance", 0.05)?;
+        compare_to_history(&hist, window, tolerance)
+    };
+    let mode = if baseline_path.is_empty() { "history" } else { "baseline" };
+    let mut report = verdict.report("Benchmark regression verdict");
+    report.meta.insert("mode".to_string(), mode.to_string());
+    emit_reports(std::slice::from_ref(&report), format, false, args)?;
+    let regressed = verdict.regressions();
+    anyhow::ensure!(
+        regressed.is_empty(),
+        "{} series regressed: {}",
+        regressed.len(),
+        regressed.join(", ")
+    );
+    Ok(())
+}
+
+/// `pacpp bench trend`: per-series first/median/last over the trailing
+/// `--window` history points, filtered by `--series` substring.
+fn cmd_bench_trend(args: &Args) -> anyhow::Result<()> {
+    let format = parse_format(args)?;
+    validate_out(args)?;
+    let history = args.get_str("history", "bench_history.jsonl")?;
+    let filter = args.get_str("series", "")?;
+    let window = args.get_count("window", 8)?;
+    let text = std::fs::read_to_string(history)
+        .map_err(|e| anyhow::anyhow!("cannot read {history}: {e}"))?;
+    let hist = BenchHistory::parse(&text)?;
+    let mut report = trend_report(&hist, filter, window);
+    report.meta.insert("history".to_string(), history.to_string());
+    emit_reports(std::slice::from_ref(&report), format, false, args)
 }
 
 /// `pacpp fleet`: one deterministic multi-tenant simulation per selected

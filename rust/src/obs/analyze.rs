@@ -1,0 +1,754 @@
+//! `obs::analyze` — deterministic offline analysis of trace artifacts.
+//!
+//! The consumer side of the trace ring: [`TraceDoc`] loads either
+//! export format `--trace-out` writes (Chrome trace-event JSON or
+//! JSONL, both via [`crate::util::json`]) and [`analyze`] reduces the
+//! event stream to four products, all pure functions of the input:
+//!
+//! * **per-(category, name) aggregates** ([`SpanAgg`]): event count
+//!   and, for spans, total/mean/p50/p95 virtual duration through the
+//!   same [`QuantileSketch`] the metric assemblers use at fleet scale;
+//! * **critical-path groups** ([`GroupPath`]): span events grouped by
+//!   `(category, id)` — one fed round, one fleet job lifecycle, one
+//!   learn episode — with start/end extent, busy time and the
+//!   *dominant phase* (the span name holding the largest share), so
+//!   the longest group per category names the straggler and the phase
+//!   that made it one;
+//! * **gap/bubble accounting** ([`CatTimeline`]): per category, the
+//!   merged-interval busy time vs the first-to-last window — the
+//!   fraction of the window no span covers is the pipeline bubble;
+//! * **coverage** ([`Coverage`]): held/recorded/dropped from the ring
+//!   tallies, so a truncated export reads as "the tail of the run",
+//!   never silently as the whole run.
+//!
+//! Each product renders as a typed [`Report`]
+//! ([`summary_report`]/[`critical_report`]/[`gaps_report`]), so
+//! text/JSON/CSV come free via the usual `--format`/`--out` plumbing.
+//! Entry point: `pacpp trace summarize <FILE>`.
+//!
+//! Determinism note: span aggregates and critical paths depend on
+//! which events the ring kept (sampling, overwrites), but the
+//! `counter_*` summary metadata comes from the *metrics snapshot*
+//! embedded in the Chrome export's `otherData`, which `--trace-sample`
+//! never perturbs — the sampling-invariance property test pins this.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::exp::report::{Cell, ColType, Report};
+use crate::util::json::Json;
+use crate::util::stats::{QuantileSketch, SKETCH_EXACT_LIMIT};
+
+use super::trace::TraceRing;
+
+/// One event loaded from a trace artifact — [`super::TraceEvent`] with
+/// owned strings (the names come from a file, not from static data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OwnedEvent {
+    /// Virtual-time start, seconds.
+    pub ts: f64,
+    /// Virtual duration in seconds; `None` marks an instant.
+    pub dur: Option<f64>,
+    pub cat: String,
+    pub name: String,
+    pub id: u64,
+}
+
+/// A loaded trace artifact: the events plus whatever run metadata the
+/// export carried (ring tallies, sampling knob, metrics counters).
+#[derive(Debug, Clone, Default)]
+pub struct TraceDoc {
+    pub events: Vec<OwnedEvent>,
+    /// Total events the run recorded (held + overwritten), when known.
+    pub recorded: Option<u64>,
+    /// Events the ring overwrote after filling, when known.
+    pub dropped: Option<u64>,
+    /// The `--trace-sample` knob the run used, when known.
+    pub sample: Option<u64>,
+    /// The metrics-registry counter snapshot from `otherData.metrics`
+    /// (Chrome exports only) — sampling-invariant aggregates.
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl TraceDoc {
+    /// Load either export format, sniffing by shape: a single JSON
+    /// document with a `traceEvents` array is a Chrome export,
+    /// anything else is treated as JSONL.
+    pub fn load(text: &str) -> Result<TraceDoc> {
+        if let Ok(json) = Json::parse(text) {
+            if json.get("traceEvents").is_some() {
+                return TraceDoc::from_chrome(&json);
+            }
+            // a one-line JSONL file parses as a single object too;
+            // fall through to the line-oriented loader
+        }
+        TraceDoc::from_jsonl(text)
+    }
+
+    /// Load a Chrome trace-event export ([`TraceRing::to_chrome`]).
+    pub fn from_chrome(json: &Json) -> Result<TraceDoc> {
+        let raw = json
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .context("chrome trace: missing traceEvents array")?;
+        let mut events = Vec::with_capacity(raw.len());
+        for (i, ev) in raw.iter().enumerate() {
+            let ctx = || format!("chrome trace: event {i}");
+            let ts = ev
+                .get("ts")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("{}: missing ts", ctx()))?;
+            events.push(OwnedEvent {
+                ts: ts / 1e6, // trace microseconds back to virtual seconds
+                dur: ev.get("dur").and_then(Json::as_f64).map(|d| d / 1e6),
+                cat: ev
+                    .get("cat")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("{}: missing cat", ctx()))?
+                    .to_string(),
+                name: ev
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("{}: missing name", ctx()))?
+                    .to_string(),
+                id: ev.path_str("args.id").and_then(Json::as_u64).unwrap_or(0),
+            });
+        }
+        let other = json.get("otherData");
+        let meta = |key: &str| other.and_then(|o| o.get(key)).and_then(Json::as_u64);
+        let mut counters = BTreeMap::new();
+        if let Some(c) = other
+            .and_then(|o| o.path_str("metrics.counters"))
+            .and_then(Json::as_obj)
+        {
+            for (k, v) in c {
+                counters.insert(k.clone(), v.as_u64().unwrap_or(0));
+            }
+        }
+        Ok(TraceDoc {
+            events,
+            recorded: meta("recorded"),
+            dropped: meta("dropped"),
+            sample: meta("sample"),
+            counters,
+        })
+    }
+
+    /// Load a JSONL export ([`TraceRing::to_jsonl`]): one object per
+    /// event (keyed by `ts`) plus the trailing `recorded`/`dropped`
+    /// metadata line.
+    pub fn from_jsonl(text: &str) -> Result<TraceDoc> {
+        let mut doc = TraceDoc::default();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let json = Json::parse(line).with_context(|| format!("jsonl trace: line {}", i + 1))?;
+            if json.get("ts").is_none() {
+                // the metadata trailer (or a foreign annotation line)
+                if let Some(r) = json.get("recorded").and_then(Json::as_u64) {
+                    doc.recorded = Some(r);
+                    doc.dropped = json.get("dropped").and_then(Json::as_u64);
+                    continue;
+                }
+                bail!("jsonl trace: line {} has neither ts nor recorded", i + 1);
+            }
+            doc.events.push(OwnedEvent {
+                ts: json.get("ts").and_then(Json::as_f64).unwrap_or(0.0),
+                dur: json.get("dur").and_then(Json::as_f64),
+                cat: json
+                    .get("cat")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("jsonl trace: line {}: missing cat", i + 1))?
+                    .to_string(),
+                name: json
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("jsonl trace: line {}: missing name", i + 1))?
+                    .to_string(),
+                id: json.get("id").and_then(Json::as_u64).unwrap_or(0),
+            });
+        }
+        Ok(doc)
+    }
+
+    /// Build directly from an in-memory ring (unit tests, in-process
+    /// analysis without an export round-trip).
+    pub fn from_ring(ring: &TraceRing) -> TraceDoc {
+        TraceDoc {
+            events: ring
+                .iter()
+                .map(|ev| OwnedEvent {
+                    ts: ev.ts,
+                    dur: ev.dur,
+                    cat: ev.cat.to_string(),
+                    name: ev.name.to_string(),
+                    id: ev.id,
+                })
+                .collect(),
+            recorded: Some(ring.recorded()),
+            dropped: Some(ring.dropped()),
+            sample: None,
+            counters: BTreeMap::new(),
+        }
+    }
+}
+
+/// Aggregate over one `(category, name)` event key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanAgg {
+    pub cat: String,
+    pub name: String,
+    /// All events with this key (spans and instants).
+    pub count: u64,
+    /// Events carrying a duration.
+    pub spans: u64,
+    /// Sum of span durations, virtual seconds.
+    pub total: f64,
+    pub mean: Option<f64>,
+    pub p50: Option<f64>,
+    pub p95: Option<f64>,
+}
+
+/// One `(category, id)` span group — a fed round, a fleet job
+/// lifecycle, a learn episode — reduced to its critical-path shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupPath {
+    pub cat: String,
+    pub id: u64,
+    /// Earliest span start, virtual seconds.
+    pub start: f64,
+    /// Latest span end.
+    pub end: f64,
+    /// Sum of span durations (may exceed `end - start` when phases
+    /// overlap).
+    pub busy: f64,
+    pub spans: u64,
+    /// The span name with the largest total duration in the group,
+    /// ties broken lexicographically.
+    pub dominant: String,
+    pub dominant_dur: f64,
+}
+
+impl GroupPath {
+    /// First-to-last extent of the group.
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Per-category busy/gap accounting over the merged span intervals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CatTimeline {
+    pub cat: String,
+    pub spans: u64,
+    /// First span start to last span end.
+    pub window: f64,
+    /// Time covered by at least one span (intervals merged).
+    pub busy: f64,
+    /// `window - busy`: time inside the window no span covers.
+    pub gap: f64,
+}
+
+impl CatTimeline {
+    /// Gap share of the window — the pipeline-bubble fraction.
+    pub fn bubble(&self) -> f64 {
+        if self.window > 0.0 {
+            self.gap / self.window
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Ring coverage: how much of the run the held events represent.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Coverage {
+    pub held: u64,
+    pub recorded: Option<u64>,
+    pub dropped: Option<u64>,
+}
+
+impl Coverage {
+    /// Fraction of recorded events still held (`None` when the export
+    /// carried no tallies; `1.0` for an empty but complete trace).
+    pub fn fraction(&self) -> Option<f64> {
+        let recorded = self.recorded?;
+        let dropped = self.dropped?;
+        if recorded == 0 {
+            return Some(1.0);
+        }
+        Some((recorded - dropped.min(recorded)) as f64 / recorded as f64)
+    }
+}
+
+/// Everything [`analyze`] computes from one [`TraceDoc`].
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    /// Sorted by `(cat, name)`.
+    pub aggs: Vec<SpanAgg>,
+    /// Sorted by extent, longest first (ties: `cat`, then `id`) — the
+    /// head is the whole trace's critical group.
+    pub groups: Vec<GroupPath>,
+    /// Sorted by `cat`.
+    pub timelines: Vec<CatTimeline>,
+    pub coverage: Coverage,
+    /// Metrics-registry counters carried by the export (sampling- and
+    /// ring-capacity-invariant, unlike everything span-derived).
+    pub counters: BTreeMap<String, u64>,
+    pub sample: Option<u64>,
+}
+
+impl Analysis {
+    /// The longest group in `cat` — its straggler — if any span group
+    /// exists there.
+    pub fn critical(&self, cat: &str) -> Option<&GroupPath> {
+        self.groups.iter().find(|g| g.cat == cat)
+    }
+}
+
+/// Reduce a loaded trace to its [`Analysis`]. Pure and deterministic:
+/// same document, same analysis, bit for bit.
+pub fn analyze(doc: &TraceDoc) -> Analysis {
+    // per-(cat, name) aggregates
+    struct Agg {
+        count: u64,
+        spans: u64,
+        total: f64,
+        sketch: QuantileSketch,
+    }
+    let mut aggs: BTreeMap<(String, String), Agg> = BTreeMap::new();
+    // per-(cat, id) span groups
+    struct Group {
+        start: f64,
+        end: f64,
+        busy: f64,
+        spans: u64,
+        phases: BTreeMap<String, f64>,
+    }
+    let mut groups: BTreeMap<(String, u64), Group> = BTreeMap::new();
+    // per-cat span intervals for gap accounting
+    let mut intervals: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+
+    for ev in &doc.events {
+        let agg = aggs.entry((ev.cat.clone(), ev.name.clone())).or_insert_with(|| Agg {
+            count: 0,
+            spans: 0,
+            total: 0.0,
+            sketch: QuantileSketch::new(&[0.5, 0.95], SKETCH_EXACT_LIMIT),
+        });
+        agg.count += 1;
+        let Some(dur) = ev.dur else { continue };
+        agg.spans += 1;
+        agg.total += dur;
+        agg.sketch.add(dur);
+
+        let g = groups.entry((ev.cat.clone(), ev.id)).or_insert_with(|| Group {
+            start: f64::INFINITY,
+            end: f64::NEG_INFINITY,
+            busy: 0.0,
+            spans: 0,
+            phases: BTreeMap::new(),
+        });
+        g.start = g.start.min(ev.ts);
+        g.end = g.end.max(ev.ts + dur);
+        g.busy += dur;
+        g.spans += 1;
+        *g.phases.entry(ev.name.clone()).or_insert(0.0) += dur;
+
+        intervals.entry(ev.cat.clone()).or_default().push((ev.ts, ev.ts + dur));
+    }
+
+    let aggs = aggs
+        .into_iter()
+        .map(|((cat, name), a)| {
+            let qs = a.sketch.quantile_many(&[0.5, 0.95]);
+            SpanAgg {
+                cat,
+                name,
+                count: a.count,
+                spans: a.spans,
+                total: a.total,
+                mean: (a.spans > 0).then(|| a.total / a.spans as f64),
+                p50: qs[0],
+                p95: qs[1],
+            }
+        })
+        .collect();
+
+    let mut groups: Vec<GroupPath> = groups
+        .into_iter()
+        .map(|((cat, id), g)| {
+            // dominant phase: largest total, ties to the
+            // lexicographically first name (BTreeMap order + strict >)
+            let (dominant, dominant_dur) = g
+                .phases
+                .iter()
+                .fold(("", 0.0), |best, (name, &dur)| {
+                    if dur > best.1 {
+                        (name.as_str(), dur)
+                    } else {
+                        best
+                    }
+                });
+            GroupPath {
+                cat,
+                id,
+                start: g.start,
+                end: g.end,
+                busy: g.busy,
+                spans: g.spans,
+                dominant: dominant.to_string(),
+                dominant_dur,
+            }
+        })
+        .collect();
+    groups.sort_by(|a, b| {
+        b.duration()
+            .total_cmp(&a.duration())
+            .then_with(|| a.cat.cmp(&b.cat))
+            .then_with(|| a.id.cmp(&b.id))
+    });
+
+    let timelines = intervals
+        .into_iter()
+        .map(|(cat, mut iv)| {
+            iv.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+            // max end, not last-by-start end: an early span can
+            // contain every later one
+            let end = iv.iter().fold(f64::NEG_INFINITY, |m, &(_, e)| m.max(e));
+            let window = end - iv[0].0;
+            let mut busy = 0.0;
+            let (mut lo, mut hi) = iv[0];
+            for &(s, e) in &iv[1..] {
+                if s > hi {
+                    busy += hi - lo;
+                    (lo, hi) = (s, e);
+                } else {
+                    hi = hi.max(e);
+                }
+            }
+            busy += hi - lo;
+            CatTimeline {
+                cat,
+                spans: iv.len() as u64,
+                window,
+                busy,
+                gap: (window - busy).max(0.0),
+            }
+        })
+        .collect();
+
+    Analysis {
+        aggs,
+        groups,
+        timelines,
+        coverage: Coverage {
+            held: doc.events.len() as u64,
+            recorded: doc.recorded,
+            dropped: doc.dropped,
+        },
+        counters: doc.counters.clone(),
+        sample: doc.sample,
+    }
+}
+
+/// An id as an `Int` cell, `Missing` past the f64-exact range the
+/// report schema enforces.
+fn id_cell(id: u64) -> Cell {
+    if id < 9_000_000_000_000_000 {
+        Cell::Int(id as i64)
+    } else {
+        Cell::Missing
+    }
+}
+
+/// Per-(category, name) aggregate table. The metadata carries the ring
+/// coverage and every metrics counter (`counter_<name>`) — the
+/// sampling-invariant part of the summary.
+pub fn summary_report(a: &Analysis) -> Report {
+    let mut r = Report::new("trace_summary", "Trace summary — per-category event aggregates")
+        .column("cat", ColType::Str)
+        .column("name", ColType::Str)
+        .column("kind", ColType::Str)
+        .column("count", ColType::Int)
+        .column("total", ColType::Secs)
+        .column("mean", ColType::Secs)
+        .column("p50", ColType::Secs)
+        .column("p95", ColType::Secs)
+        .meta("held", a.coverage.held);
+    if let Some(v) = a.coverage.recorded {
+        r = r.meta("recorded", v);
+    }
+    if let Some(v) = a.coverage.dropped {
+        r = r.meta("dropped", v);
+    }
+    if let Some(f) = a.coverage.fraction() {
+        r = r.meta("coverage", format!("{f:.4}"));
+    }
+    if let Some(s) = a.sample {
+        r = r.meta("sample", s);
+    }
+    for (k, v) in &a.counters {
+        r = r.meta(format!("counter_{k}"), v);
+    }
+    for agg in &a.aggs {
+        r.push(vec![
+            Cell::Str(agg.cat.clone()),
+            Cell::Str(agg.name.clone()),
+            Cell::Str(if agg.spans > 0 { "span" } else { "instant" }.into()),
+            Cell::Int(agg.count.min(9_000_000_000_000_000 - 1) as i64),
+            Cell::opt((agg.spans > 0).then_some(agg.total), Cell::Secs),
+            Cell::opt(agg.mean, Cell::Secs),
+            Cell::opt(agg.p50, Cell::Secs),
+            Cell::opt(agg.p95, Cell::Secs),
+        ]);
+    }
+    r
+}
+
+/// Critical-path table: the `top` longest span groups, with each
+/// category's longest group — its straggler — named in the metadata as
+/// `critical_<cat> = <id>`. `groups_total` records how many groups the
+/// cap hides.
+pub fn critical_report(a: &Analysis, top: usize) -> Report {
+    let mut r = Report::new(
+        "trace_critical",
+        "Trace critical paths — longest (category, id) span groups",
+    )
+    .column("cat", ColType::Str)
+    .column("id", ColType::Int)
+    .column("start", ColType::Secs)
+    .column("duration", ColType::Secs)
+    .column("spans", ColType::Int)
+    .column("busy", ColType::Secs)
+    .column("dominant", ColType::Str)
+    .column("dominant_dur", ColType::Secs)
+    .column("dominant_share", ColType::Float)
+    .meta("groups_total", a.groups.len())
+    .meta("shown", a.groups.len().min(top));
+    // straggler attribution: one meta entry per category
+    let mut seen = std::collections::BTreeSet::new();
+    for g in &a.groups {
+        if seen.insert(g.cat.clone()) {
+            r = r.meta(format!("critical_{}", g.cat), g.id);
+        }
+    }
+    for g in a.groups.iter().take(top) {
+        let dur = g.duration();
+        r.push(vec![
+            Cell::Str(g.cat.clone()),
+            id_cell(g.id),
+            Cell::Secs(g.start),
+            Cell::Secs(dur),
+            Cell::Int(g.spans.min(9_000_000_000_000_000 - 1) as i64),
+            Cell::Secs(g.busy),
+            Cell::Str(g.dominant.clone()),
+            Cell::Secs(g.dominant_dur),
+            Cell::opt((dur > 0.0).then(|| g.dominant_dur / dur), Cell::Float),
+        ]);
+    }
+    r
+}
+
+/// Gap/bubble table: per-category merged-interval busy time vs the
+/// first-to-last window.
+pub fn gaps_report(a: &Analysis) -> Report {
+    let mut r = Report::new("trace_gaps", "Trace gaps — per-category busy vs window")
+        .column("cat", ColType::Str)
+        .column("spans", ColType::Int)
+        .column("window", ColType::Secs)
+        .column("busy", ColType::Secs)
+        .column("gap", ColType::Secs)
+        .column("bubble", ColType::Float);
+    for t in &a.timelines {
+        r.push(vec![
+            Cell::Str(t.cat.clone()),
+            Cell::Int(t.spans.min(9_000_000_000_000_000 - 1) as i64),
+            Cell::Secs(t.window),
+            Cell::Secs(t.busy),
+            Cell::Secs(t.gap),
+            Cell::Float(t.bubble()),
+        ]);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceEvent;
+
+    fn span(cat: &'static str, name: &'static str, id: u64, ts: f64, dur: f64) -> TraceEvent {
+        TraceEvent { ts, dur: Some(dur), cat, name, id }
+    }
+
+    fn instant(cat: &'static str, name: &'static str, id: u64, ts: f64) -> TraceEvent {
+        TraceEvent { ts, dur: None, cat, name, id }
+    }
+
+    /// An engineered two-round fed trace: round 2 is the straggler and
+    /// its upload phase dominates.
+    fn engineered_ring() -> TraceRing {
+        let mut ring = TraceRing::new(64);
+        ring.record(instant("fed.round", "select", 1, 0.0));
+        ring.record(span("fed.round", "upload", 1, 0.0, 5.0));
+        ring.record(span("fed.round", "aggregate", 1, 5.0, 1.0));
+        ring.record(instant("fed.round", "select", 2, 10.0));
+        ring.record(span("fed.round", "upload", 2, 10.0, 20.0));
+        ring.record(span("fed.round", "aggregate", 2, 30.0, 2.0));
+        ring
+    }
+
+    #[test]
+    fn critical_path_names_the_straggler_round_and_its_phase() {
+        let a = analyze(&TraceDoc::from_ring(&engineered_ring()));
+        // two groups; round 2 ([10, 32], 22 s) beats round 1 ([0, 6], 6 s)
+        assert_eq!(a.groups.len(), 2);
+        let g = &a.groups[0];
+        assert_eq!((g.cat.as_str(), g.id), ("fed.round", 2));
+        assert_eq!(g.start, 10.0);
+        assert_eq!(g.duration(), 22.0);
+        assert_eq!(g.busy, 22.0);
+        assert_eq!(g.spans, 2);
+        assert_eq!(g.dominant, "upload");
+        assert_eq!(g.dominant_dur, 20.0);
+        assert_eq!(a.critical("fed.round").unwrap().id, 2);
+        assert!(a.critical("fleet.job").is_none());
+
+        let report = critical_report(&a, 10);
+        assert_eq!(report.meta.get("critical_fed.round"), Some(&"2".to_string()));
+        assert_eq!(report.cell(0, "id"), Some(&Cell::Int(2)));
+        assert_eq!(report.cell(0, "dominant"), Some(&Cell::Str("upload".into())));
+        assert_eq!(report.cell(1, "id"), Some(&Cell::Int(1)));
+        // the top cap is visible, never silent
+        let capped = critical_report(&a, 1);
+        assert_eq!(capped.n_rows(), 1);
+        assert_eq!(capped.meta.get("groups_total"), Some(&"2".to_string()));
+        assert_eq!(capped.meta.get("shown"), Some(&"1".to_string()));
+    }
+
+    #[test]
+    fn aggregates_split_spans_from_instants() {
+        let a = analyze(&TraceDoc::from_ring(&engineered_ring()));
+        // (fed.round, aggregate), (select), (upload) in BTreeMap order
+        let names: Vec<&str> = a.aggs.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["aggregate", "select", "upload"]);
+        let upload = &a.aggs[2];
+        assert_eq!((upload.count, upload.spans), (2, 2));
+        assert_eq!(upload.total, 25.0);
+        assert_eq!(upload.mean, Some(12.5));
+        assert_eq!(upload.p50, Some(12.5));
+        let select = &a.aggs[1];
+        assert_eq!((select.count, select.spans), (2, 0));
+        assert_eq!(select.mean, None);
+        let r = summary_report(&a);
+        assert_eq!(r.n_rows(), 3);
+        assert_eq!(r.cell(1, "kind"), Some(&Cell::Str("instant".into())));
+        assert_eq!(r.cell(1, "total"), Some(&Cell::Missing));
+    }
+
+    #[test]
+    fn gap_accounting_merges_overlaps_and_measures_bubbles() {
+        let mut ring = TraceRing::new(16);
+        // [0, 2] and [5, 6]: window 6, busy 3, gap 3, bubble 0.5
+        ring.record(span("x", "a", 1, 0.0, 2.0));
+        ring.record(span("x", "b", 2, 5.0, 1.0));
+        // overlapping [0, 2] + [1, 3]: busy 3, no gap
+        ring.record(span("y", "a", 1, 0.0, 2.0));
+        ring.record(span("y", "b", 2, 1.0, 2.0));
+        // containment: [0, 10] swallows [5, 6] — window is 10, not 6
+        ring.record(span("z", "a", 1, 0.0, 10.0));
+        ring.record(span("z", "b", 2, 5.0, 1.0));
+        let a = analyze(&TraceDoc::from_ring(&ring));
+        assert_eq!(a.timelines.len(), 3);
+        let x = &a.timelines[0];
+        assert_eq!((x.window, x.busy, x.gap), (6.0, 3.0, 3.0));
+        assert_eq!(x.bubble(), 0.5);
+        let y = &a.timelines[1];
+        assert_eq!((y.window, y.busy, y.gap), (3.0, 3.0, 0.0));
+        assert_eq!(y.bubble(), 0.0);
+        let z = &a.timelines[2];
+        assert_eq!((z.window, z.busy, z.gap), (10.0, 10.0, 0.0));
+        let r = gaps_report(&a);
+        assert_eq!(r.cell(0, "bubble"), Some(&Cell::Float(0.5)));
+    }
+
+    #[test]
+    fn empty_ring_analyzes_to_empty_reports() {
+        let ring = TraceRing::new(4);
+        let a = analyze(&TraceDoc::from_ring(&ring));
+        assert!(a.aggs.is_empty() && a.groups.is_empty() && a.timelines.is_empty());
+        assert_eq!(a.coverage.held, 0);
+        assert_eq!(a.coverage.fraction(), Some(1.0), "empty but complete");
+        for r in [summary_report(&a), critical_report(&a, 10), gaps_report(&a)] {
+            assert_eq!(r.n_rows(), 0);
+        }
+    }
+
+    #[test]
+    fn overwritten_ring_reports_partial_coverage() {
+        let mut ring = TraceRing::new(2);
+        for i in 0..10u64 {
+            ring.record(instant("sim.event", "tick", i, i as f64));
+        }
+        let a = analyze(&TraceDoc::from_ring(&ring));
+        assert_eq!(a.coverage.held, 2);
+        assert_eq!(a.coverage.recorded, Some(10));
+        assert_eq!(a.coverage.dropped, Some(8));
+        assert_eq!(a.coverage.fraction(), Some(0.2));
+        let r = summary_report(&a);
+        assert_eq!(r.meta.get("dropped"), Some(&"8".to_string()));
+        assert_eq!(r.meta.get("coverage"), Some(&"0.2000".to_string()));
+        // only the held tail contributes to the aggregates
+        assert_eq!(a.aggs[0].count, 2);
+    }
+
+    #[test]
+    fn jsonl_round_trip_preserves_events_and_tallies() {
+        let ring = engineered_ring();
+        let doc = TraceDoc::load(&ring.to_jsonl()).unwrap();
+        assert_eq!(doc.events.len(), 6);
+        assert_eq!(doc.recorded, Some(6));
+        assert_eq!(doc.dropped, Some(0));
+        assert_eq!(doc.events[1].dur, Some(5.0));
+        assert_eq!(doc.events[1].name, "upload");
+        let direct = TraceDoc::from_ring(&ring);
+        assert_eq!(doc.events, direct.events);
+    }
+
+    #[test]
+    fn chrome_round_trip_preserves_events_counters_and_tallies() {
+        let ring = engineered_ring();
+        let json = ring.to_chrome(vec![
+            ("sample", Json::from(3u64)),
+            (
+                "metrics",
+                crate::util::json::obj(vec![(
+                    "counters",
+                    crate::util::json::obj(vec![("events", Json::from(42u64))]),
+                )]),
+            ),
+        ]);
+        let doc = TraceDoc::load(&json.to_string_pretty()).unwrap();
+        assert_eq!(doc.events.len(), 6);
+        assert_eq!(doc.events, TraceDoc::from_ring(&ring).events, "µs mapping inverts");
+        assert_eq!(doc.sample, Some(3));
+        assert_eq!(doc.counters.get("events"), Some(&42));
+        let a = analyze(&doc);
+        assert_eq!(
+            summary_report(&a).meta.get("counter_events"),
+            Some(&"42".to_string())
+        );
+    }
+
+    #[test]
+    fn loader_rejects_garbage() {
+        assert!(TraceDoc::load("not json at all").is_err());
+        assert!(TraceDoc::from_jsonl("{\"no_ts\": 1}\n").is_err());
+        assert!(TraceDoc::from_chrome(&Json::parse("{}").unwrap()).is_err());
+        // event lines missing required fields
+        assert!(TraceDoc::from_jsonl("{\"ts\": 1.0, \"cat\": \"x\"}\n").is_err());
+    }
+}

@@ -2,7 +2,11 @@
 //! ([`metrics`]), virtual-time span/event tracing ([`trace`]) and
 //! wall-clock phase timers ([`timer`]), tied together by the
 //! zero-cost-when-disabled [`Observer`] handle the simulators thread
-//! through their loops.
+//! through their loops. The consumer side lives in [`analyze`]
+//! (offline trace analysis: per-category aggregates, critical paths,
+//! gap accounting — `pacpp trace summarize`) and [`regress`]
+//! (benchmark history + deterministic regression gating —
+//! `pacpp bench record|compare|trend`).
 //!
 //! Design rules, in priority order:
 //!
@@ -25,11 +29,15 @@
 //! [`crate::learn::train_observed`]). See the crate docs ("Adding an
 //! instrumentation point") for how to record from new code.
 
+pub mod analyze;
 pub mod metrics;
+pub mod regress;
 pub mod timer;
 pub mod trace;
 
+pub use analyze::{analyze, Analysis, TraceDoc};
 pub use metrics::{Counter, Metrics, HIST_QUANTILES};
+pub use regress::{compare_to_baseline, compare_to_history, Baseline, BenchHistory};
 pub use timer::{PhaseGuard, PhaseStat, Timers};
 pub use trace::{TraceEvent, TraceRing, DEFAULT_TRACE_CAPACITY};
 

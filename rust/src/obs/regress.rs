@@ -1,0 +1,848 @@
+//! `obs::regress` — benchmark history and deterministic regression
+//! gating over the `BENCH_*.json` artifacts.
+//!
+//! Three pieces:
+//!
+//! * [`extract`] — a declarative key-path walk (via
+//!   [`crate::util::json::Json::path_str`]) that flattens any artifact
+//!   the toolchain emits — an [`crate::exp::Report`] JSON, an array of
+//!   them, a `BENCH_OUT` bench-suite dump, a Chrome trace — into named
+//!   scalar series (`fleet_summary.meta.goodput`,
+//!   `bench.fleet.oracle.mean`, `trace.counter.events`, …);
+//! * [`BenchHistory`] — an append-only JSONL file of
+//!   `{label, source, series, value}` points, one line per series per
+//!   `pacpp bench record`, so trends live in the repo instead of in
+//!   whoever last eyeballed a CI log;
+//! * [`compare_to_baseline`] / [`compare_to_history`] — a deterministic
+//!   verdict: each series is checked against a reference (a committed
+//!   [`Baseline`], or the median of its last *N* history points) with
+//!   a relative tolerance and an explicit better-direction, rendered as
+//!   a typed [`Report`] with a machine-readable pass/fail row per
+//!   series. `pacpp bench compare` exits non-zero iff any gated series
+//!   regressed.
+//!
+//! What gets *gated* vs merely *recorded*: simulator outputs are
+//! deterministic (same seed ⇒ bit-identical metrics, pinned by the
+//! `tracing_never_changes_the_metrics` / shard-invariance property
+//! tests), so goodput, counters and rounds-per-hour regress exactly and
+//! a committed baseline transfers across machines. Wall-clock series
+//! (`*.wall.*`, `bench.*`) are machine-dependent: they are recorded
+//! into history for trending but excluded from
+//! [`Baseline::from_series`] gating by default.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::exp::report::{Cell, ColType, Report};
+use crate::util::json::{obj, Json};
+use crate::util::stats::percentile;
+
+/// Comparison tolerance floor: differences below this are noise from
+/// the JSON round-trip, never a regression.
+const EPS: f64 = 1e-12;
+
+/// Which way a series is supposed to move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Bigger is better (goodput, events/sec, hit rates).
+    Higher,
+    /// Smaller is better (latencies, misses, lost work).
+    Lower,
+}
+
+impl Direction {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Direction> {
+        match s {
+            "higher" => Some(Direction::Higher),
+            "lower" => Some(Direction::Lower),
+            _ => None,
+        }
+    }
+
+    /// Infer a series' better-direction from its name. Suffix/stem
+    /// heuristic over the vocabulary the report emitters actually use;
+    /// a [`Baseline`] entry can override per series.
+    pub fn infer(series: &str) -> Direction {
+        const LOWER_MARKS: [&str; 18] = [
+            "p50",
+            "p95",
+            "p99",
+            "mean",
+            "min",
+            "max",
+            "miss",
+            "makespan",
+            "elapsed_secs",
+            "work_lost",
+            "migration",
+            "ckpt_overhead",
+            "to_target",
+            "stale",
+            "dropped",
+            "failed",
+            "gap",
+            "bubble",
+        ];
+        let tail = series.rsplit('.').next().unwrap_or(series);
+        if LOWER_MARKS.iter().any(|m| tail.contains(m)) {
+            Direction::Lower
+        } else {
+            Direction::Higher
+        }
+    }
+}
+
+/// One recorded observation of one series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistoryPoint {
+    /// Run label (commit sha, date, "local") — opaque, newest last.
+    pub label: String,
+    /// Artifact the value came from (`BENCH_fleet.json`, …).
+    pub source: String,
+    pub series: String,
+    pub value: f64,
+}
+
+/// Append-only series store: the parsed view of `bench_history.jsonl`.
+#[derive(Debug, Clone, Default)]
+pub struct BenchHistory {
+    /// File order — append order — which is chronological by contract.
+    pub points: Vec<HistoryPoint>,
+}
+
+impl BenchHistory {
+    /// Parse the JSONL text (blank lines ignored, order preserved).
+    pub fn parse(text: &str) -> Result<BenchHistory> {
+        let mut points = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).with_context(|| format!("bench history: line {}", i + 1))?;
+            let field = |k: &str| {
+                j.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .with_context(|| format!("bench history: line {}: missing {k}", i + 1))
+            };
+            points.push(HistoryPoint {
+                label: field("label")?,
+                source: field("source")?,
+                series: field("series")?,
+                value: j
+                    .get("value")
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("bench history: line {}: missing value", i + 1))?,
+            });
+        }
+        Ok(BenchHistory { points })
+    }
+
+    /// The JSONL lines for `points` — what `pacpp bench record` appends.
+    pub fn render(points: &[HistoryPoint]) -> String {
+        let mut out = String::new();
+        for p in points {
+            out.push_str(
+                &obj(vec![
+                    ("label", Json::from(p.label.as_str())),
+                    ("source", Json::from(p.source.as_str())),
+                    ("series", Json::from(p.series.as_str())),
+                    ("value", Json::from(p.value)),
+                ])
+                .to_string_compact(),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// All values of one series, file (= chronological) order.
+    pub fn values(&self, series: &str) -> Vec<f64> {
+        self.points.iter().filter(|p| p.series == series).map(|p| p.value).collect()
+    }
+
+    /// Distinct series names, sorted.
+    pub fn series(&self) -> Vec<String> {
+        let set: std::collections::BTreeSet<String> =
+            self.points.iter().map(|p| p.series.clone()).collect();
+        set.into_iter().collect()
+    }
+}
+
+/// Per-series baseline entry: the reference value plus optional
+/// overrides for tolerance and direction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesSpec {
+    pub value: f64,
+    /// Overrides [`Baseline::tolerance`] when set.
+    pub tolerance: Option<f64>,
+    /// Overrides [`Direction::infer`] when set.
+    pub better: Option<Direction>,
+}
+
+/// A committed regression gate: reference values with a default
+/// relative tolerance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Baseline {
+    /// Default relative tolerance (0.05 = 5% of |reference|).
+    pub tolerance: f64,
+    pub series: BTreeMap<String, SeriesSpec>,
+}
+
+impl Baseline {
+    /// A series is *gated* (checked against the baseline / failing CI)
+    /// only when deterministic: wall-clock series — `.wall.` segments
+    /// and `bench.`-suite timings — are recorded for trending but vary
+    /// by machine, so they never gate.
+    pub fn gated(series: &str) -> bool {
+        !series.contains(".wall.") && !series.starts_with("bench.")
+    }
+
+    /// Build a baseline from freshly extracted series, keeping only the
+    /// gated (deterministic) ones — what `--baseline-out` writes.
+    pub fn from_series(series: &[(String, f64)], tolerance: f64) -> Baseline {
+        Baseline {
+            tolerance,
+            series: series
+                .iter()
+                .filter(|(name, _)| Baseline::gated(name))
+                .map(|(name, value)| {
+                    (name.clone(), SeriesSpec { value: *value, tolerance: None, better: None })
+                })
+                .collect(),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Baseline> {
+        let tolerance = j
+            .get("tolerance")
+            .and_then(Json::as_f64)
+            .context("baseline: missing tolerance")?;
+        if tolerance.is_nan() || tolerance < 0.0 {
+            bail!("baseline: tolerance must be >= 0, got {tolerance}");
+        }
+        let mut series = BTreeMap::new();
+        for (name, spec) in j
+            .get("series")
+            .and_then(Json::as_obj)
+            .context("baseline: missing series object")?
+        {
+            let value = spec
+                .get("value")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("baseline: series {name}: missing value"))?;
+            let better = match spec.get("better").and_then(Json::as_str) {
+                Some(s) => Some(
+                    Direction::parse(s)
+                        .with_context(|| format!("baseline: series {name}: bad direction {s}"))?,
+                ),
+                None => None,
+            };
+            series.insert(
+                name.clone(),
+                SeriesSpec {
+                    value,
+                    tolerance: spec.get("tolerance").and_then(Json::as_f64),
+                    better,
+                },
+            );
+        }
+        Ok(Baseline { tolerance, series })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series: Vec<(&str, Json)> = self
+            .series
+            .iter()
+            .map(|(name, s)| {
+                let mut fields = vec![("value", Json::from(s.value))];
+                if let Some(t) = s.tolerance {
+                    fields.push(("tolerance", Json::from(t)));
+                }
+                if let Some(b) = s.better {
+                    fields.push(("better", Json::from(b.as_str())));
+                }
+                (name.as_str(), obj(fields))
+            })
+            .collect();
+        obj(vec![
+            ("tolerance", Json::from(self.tolerance)),
+            (
+                "series",
+                Json::Obj(series.into_iter().map(|(k, v)| (k.to_string(), v)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Flatten one artifact into named scalar series. `name_hint` prefixes
+/// report-derived series when the artifact is a bare report (reports
+/// carry their own name, so the hint only matters for collision-free
+/// trace series).
+///
+/// Recognized shapes:
+///
+/// * **Report JSON** (`{"name", "columns", "rows", "meta"}`), or an
+///   array of them: every numeric meta entry becomes
+///   `<report>.meta.<key>` (except `elapsed_secs` →
+///   `<report>.wall.elapsed_secs`), plus the derived
+///   `<report>.wall.events_per_sec` (events_total / elapsed) and
+///   `<report>.meta.oracle_hit_rate` (hits / (hits + misses)) when the
+///   inputs are present. Every numeric row cell becomes
+///   `<report>.row.<label>.<column>`, where the label joins the row's
+///   `Str` cells with `/` (duplicate labels get `#2`, `#3`, …);
+/// * **bench suite** (`{"suite", "cases"}`, a `BENCH_OUT` dump):
+///   `bench.<suite>.<case>.<mean|p50|p99|min|max>`;
+/// * **Chrome trace** (`{"traceEvents", "otherData"}`):
+///   `trace.recorded`, `trace.dropped`, `trace.counter.<name>`.
+pub fn extract(j: &Json, name_hint: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    collect(j, name_hint, &mut out);
+    out
+}
+
+fn collect(j: &Json, hint: &str, out: &mut Vec<(String, f64)>) {
+    if let Some(arr) = j.as_arr() {
+        for item in arr {
+            collect(item, hint, out);
+        }
+        return;
+    }
+    if j.get("suite").is_some() && j.get("cases").is_some() {
+        collect_bench(j, out);
+    } else if j.get("traceEvents").is_some() {
+        collect_trace(j, hint, out);
+    } else if j.get("columns").is_some() && j.get("rows").is_some() {
+        collect_report(j, out);
+    }
+}
+
+fn collect_bench(j: &Json, out: &mut Vec<(String, f64)>) {
+    let suite = j.get("suite").and_then(Json::as_str).unwrap_or("unnamed");
+    let Some(cases) = j.get("cases").and_then(Json::as_arr) else { return };
+    for case in cases {
+        let name = case.get("name").and_then(Json::as_str).unwrap_or("unnamed");
+        for stat in ["mean", "p50", "p99", "min", "max"] {
+            if let Some(v) = case.get(stat).and_then(Json::as_f64) {
+                out.push((format!("bench.{suite}.{name}.{stat}"), v));
+            }
+        }
+    }
+}
+
+fn collect_trace(j: &Json, hint: &str, out: &mut Vec<(String, f64)>) {
+    let prefix = if hint.is_empty() { "trace".to_string() } else { format!("trace.{hint}") };
+    for tally in ["recorded", "dropped"] {
+        if let Some(v) = j.path_str(&format!("otherData.{tally}")).and_then(Json::as_f64) {
+            out.push((format!("{prefix}.{tally}"), v));
+        }
+    }
+    if let Some(counters) =
+        j.path_str("otherData.metrics.counters").and_then(Json::as_obj)
+    {
+        for (k, v) in counters {
+            if let Some(v) = v.as_f64() {
+                out.push((format!("{prefix}.counter.{k}"), v));
+            }
+        }
+    }
+}
+
+fn collect_report(j: &Json, out: &mut Vec<(String, f64)>) {
+    let Ok(report) = Report::from_json(j) else { return };
+    let name = report.name.clone();
+    let mut hits = None;
+    let mut misses = None;
+    let mut events = None;
+    let mut elapsed = None;
+    for (k, v) in &report.meta {
+        let Ok(v) = v.parse::<f64>() else { continue };
+        if !v.is_finite() {
+            continue;
+        }
+        match k.as_str() {
+            "elapsed_secs" => {
+                elapsed = Some(v);
+                out.push((format!("{name}.wall.elapsed_secs"), v));
+            }
+            _ => {
+                if k == "oracle_hits_total" {
+                    hits = Some(v);
+                }
+                if k == "oracle_misses_total" {
+                    misses = Some(v);
+                }
+                if k == "events_total" {
+                    events = Some(v);
+                }
+                out.push((format!("{name}.meta.{k}"), v));
+            }
+        }
+    }
+    if let (Some(e), Some(t)) = (events, elapsed) {
+        if t > 0.0 {
+            out.push((format!("{name}.wall.events_per_sec"), e / t));
+        }
+    }
+    if let (Some(h), Some(m)) = (hits, misses) {
+        if h + m > 0.0 {
+            out.push((format!("{name}.meta.oracle_hit_rate"), h / (h + m)));
+        }
+    }
+    // rows: label from the Str cells, values from the numeric ones
+    let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+    for row in report.rows() {
+        let labels: Vec<&str> = row
+            .iter()
+            .filter_map(|cell| match cell {
+                Cell::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        let mut label = if labels.is_empty() { "row".to_string() } else { labels.join("/") };
+        let n = seen.entry(label.clone()).or_insert(0);
+        *n += 1;
+        if *n > 1 {
+            label = format!("{label}#{n}");
+        }
+        for (col, cell) in report.columns().iter().zip(row) {
+            let Some(v) = cell.as_f64() else { continue };
+            out.push((format!("{name}.row.{label}.{}", col.name), v));
+        }
+    }
+}
+
+/// One series' comparison outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesVerdict {
+    pub series: String,
+    pub current: Option<f64>,
+    pub reference: Option<f64>,
+    pub tolerance: f64,
+    pub better: Direction,
+    /// `"pass"`, `"FAIL"`, `"new"` (no reference yet) or `"missing"`
+    /// (reference exists, current run did not produce the series).
+    pub status: &'static str,
+}
+
+impl SeriesVerdict {
+    fn judge(
+        series: String,
+        current: Option<f64>,
+        reference: Option<f64>,
+        tolerance: f64,
+        better: Direction,
+    ) -> SeriesVerdict {
+        let status = match (current, reference) {
+            (None, _) => "missing",
+            (Some(_), None) => "new",
+            (Some(c), Some(r)) => {
+                // delta thresholds handle negative references correctly
+                // (a plain ratio flips the inequality for r < 0)
+                let allowed = tolerance * r.abs();
+                let regressed = match better {
+                    Direction::Higher => c < r - allowed - EPS,
+                    Direction::Lower => c > r + allowed + EPS,
+                };
+                if regressed {
+                    "FAIL"
+                } else {
+                    "pass"
+                }
+            }
+        };
+        SeriesVerdict { series, current, reference, tolerance, better, status }
+    }
+
+    pub fn failed(&self) -> bool {
+        self.status == "FAIL" || self.status == "missing"
+    }
+}
+
+/// A full comparison: the per-series table plus the failing names.
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    pub rows: Vec<SeriesVerdict>,
+}
+
+impl Verdict {
+    /// Series that regressed (or went missing) — non-empty ⇒ CI fails.
+    pub fn regressions(&self) -> Vec<&str> {
+        self.rows.iter().filter(|r| r.failed()).map(|r| r.series.as_str()).collect()
+    }
+
+    /// The typed report: one row per series, pass/fail in `status`.
+    pub fn report(&self, title: &str) -> Report {
+        let mut r = Report::new("bench_regress", title)
+            .column("series", ColType::Str)
+            .column("current", ColType::Float)
+            .column("reference", ColType::Float)
+            .column("delta_pct", ColType::Float)
+            .column("tolerance", ColType::Float)
+            .column("better", ColType::Str)
+            .column("status", ColType::Str)
+            .meta("checked", self.rows.len())
+            .meta("regressed", self.regressions().len());
+        for row in &self.rows {
+            let delta = match (row.current, row.reference) {
+                (Some(c), Some(r)) if r.abs() > EPS => Some(100.0 * (c - r) / r.abs()),
+                _ => None,
+            };
+            r.push(vec![
+                Cell::Str(row.series.clone()),
+                Cell::opt(row.current, Cell::Float),
+                Cell::opt(row.reference, Cell::Float),
+                Cell::opt(delta, Cell::Float),
+                Cell::Float(row.tolerance),
+                Cell::Str(row.better.as_str().into()),
+                Cell::Str(row.status.into()),
+            ]);
+        }
+        r
+    }
+}
+
+/// Gate freshly extracted series against a committed [`Baseline`].
+/// Every baseline series must appear (else `"missing"`); extracted
+/// series the baseline does not know are reported as `"new"` and never
+/// fail; ungated (wall-clock) extractions are skipped entirely.
+pub fn compare_to_baseline(current: &[(String, f64)], baseline: &Baseline) -> Verdict {
+    let cur: BTreeMap<&str, f64> =
+        current.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let mut rows = Vec::new();
+    for (name, spec) in &baseline.series {
+        rows.push(SeriesVerdict::judge(
+            name.clone(),
+            cur.get(name.as_str()).copied(),
+            Some(spec.value),
+            spec.tolerance.unwrap_or(baseline.tolerance),
+            spec.better.unwrap_or_else(|| Direction::infer(name)),
+        ));
+    }
+    for (name, value) in current {
+        if Baseline::gated(name) && !baseline.series.contains_key(name) {
+            rows.push(SeriesVerdict::judge(
+                name.clone(),
+                Some(*value),
+                None,
+                baseline.tolerance,
+                Direction::infer(name),
+            ));
+        }
+    }
+    Verdict { rows }
+}
+
+/// Gate each series' newest history point against the median of its up
+/// to `window` preceding points. A series with no preceding points is
+/// `"new"`. All recorded series participate — history comparisons run
+/// on one machine, so wall-clock series are meaningful here.
+pub fn compare_to_history(hist: &BenchHistory, window: usize, tolerance: f64) -> Verdict {
+    let mut rows = Vec::new();
+    for series in hist.series() {
+        let values = hist.values(&series);
+        let (&current, prior) = values.split_last().expect("series() implies >= 1 point");
+        let start = prior.len().saturating_sub(window.max(1));
+        let mut refs: Vec<f64> = prior[start..].to_vec();
+        refs.sort_by(f64::total_cmp);
+        let reference = percentile(&refs, 0.5);
+        let better = Direction::infer(&series);
+        rows.push(SeriesVerdict::judge(series, Some(current), reference, tolerance, better));
+    }
+    Verdict { rows }
+}
+
+/// Trend table: per-series first/median/last over the trailing
+/// `window`, newest-label column included. `filter` is a substring
+/// match on the series name (empty keeps everything).
+pub fn trend_report(hist: &BenchHistory, filter: &str, window: usize) -> Report {
+    let mut r = Report::new("bench_trend", "Benchmark history trend")
+        .column("series", ColType::Str)
+        .column("points", ColType::Int)
+        .column("first", ColType::Float)
+        .column("median", ColType::Float)
+        .column("last", ColType::Float)
+        .column("change_pct", ColType::Float)
+        .meta("window", window)
+        .meta("labels", {
+            let set: std::collections::BTreeSet<&str> =
+                hist.points.iter().map(|p| p.label.as_str()).collect();
+            set.len()
+        });
+    for series in hist.series() {
+        if !filter.is_empty() && !series.contains(filter) {
+            continue;
+        }
+        let all = hist.values(&series);
+        let start = all.len().saturating_sub(window.max(1));
+        let vals = &all[start..];
+        let mut sorted = vals.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let first = vals[0];
+        let last = *vals.last().expect("series() implies >= 1 point");
+        let change =
+            (first.abs() > EPS).then(|| 100.0 * (last - first) / first.abs());
+        r.push(vec![
+            Cell::Str(series),
+            Cell::Int(vals.len() as i64),
+            Cell::Float(first),
+            Cell::opt(percentile(&sorted, 0.5), Cell::Float),
+            Cell::Float(last),
+            Cell::opt(change, Cell::Float),
+        ]);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_json() -> Json {
+        let mut r = Report::new("fleet_summary", "t")
+            .column("env", ColType::Str)
+            .column("policy", ColType::Str)
+            .column("goodput", ColType::Float)
+            .meta("jobs", 100)
+            .meta("events_total", 5000)
+            .meta("oracle_hits_total", 90)
+            .meta("oracle_misses_total", 10)
+            .meta("elapsed_secs", 2.0)
+            .meta("trace", "mixed"); // non-numeric meta: ignored
+        r.push(vec![Cell::Str("edge".into()), Cell::Str("fifo".into()), Cell::Float(0.9)]);
+        r.push(vec![Cell::Str("edge".into()), Cell::Str("edf".into()), Cell::Float(0.95)]);
+        r.to_json()
+    }
+
+    #[test]
+    fn extract_flattens_report_meta_rows_and_derived_series() {
+        let series = extract(&report_json(), "");
+        let get = |name: &str| {
+            series
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing series {name} in {series:?}"))
+        };
+        assert_eq!(get("fleet_summary.meta.jobs"), 100.0);
+        assert_eq!(get("fleet_summary.wall.elapsed_secs"), 2.0);
+        assert_eq!(get("fleet_summary.wall.events_per_sec"), 2500.0);
+        assert_eq!(get("fleet_summary.meta.oracle_hit_rate"), 0.9);
+        assert_eq!(get("fleet_summary.row.edge/fifo.goodput"), 0.9);
+        assert_eq!(get("fleet_summary.row.edge/edf.goodput"), 0.95);
+        assert!(!series.iter().any(|(k, _)| k.contains("trace")), "non-numeric meta skipped");
+    }
+
+    #[test]
+    fn extract_handles_bench_dumps_arrays_and_duplicate_row_labels() {
+        let bench = Json::parse(
+            r#"{"suite": "fleet", "cases": [{"name": "oracle", "mean": 0.01, "p50": 0.009}]}"#,
+        )
+        .unwrap();
+        let series = extract(&Json::Arr(vec![bench, report_json()]), "");
+        assert!(series.iter().any(|(k, v)| k == "bench.fleet.oracle.mean" && *v == 0.01));
+        assert!(series.iter().any(|(k, _)| k == "fleet_summary.meta.jobs"), "array recurses");
+
+        // duplicate labels disambiguate instead of colliding
+        let mut r = Report::new("dup", "t")
+            .column("env", ColType::Str)
+            .column("x", ColType::Int);
+        r.push(vec![Cell::Str("a".into()), Cell::Int(1)]);
+        r.push(vec![Cell::Str("a".into()), Cell::Int(2)]);
+        let series = extract(&r.to_json(), "");
+        assert!(series.iter().any(|(k, v)| k == "dup.row.a.x" && *v == 1.0));
+        assert!(series.iter().any(|(k, v)| k == "dup.row.a#2.x" && *v == 2.0));
+    }
+
+    #[test]
+    fn extract_reads_chrome_trace_tallies_and_counters() {
+        let mut ring = crate::obs::trace::TraceRing::new(4);
+        ring.record(crate::obs::trace::TraceEvent {
+            ts: 0.0,
+            dur: None,
+            cat: "sim.event",
+            name: "tick",
+            id: 0,
+        });
+        let json = ring.to_chrome(vec![(
+            "metrics",
+            obj(vec![("counters", obj(vec![("events", Json::from(12u64))]))]),
+        )]);
+        let series = extract(&json, "fleet");
+        assert!(series.iter().any(|(k, v)| k == "trace.fleet.recorded" && *v == 1.0));
+        assert!(series.iter().any(|(k, v)| k == "trace.fleet.counter.events" && *v == 12.0));
+    }
+
+    #[test]
+    fn direction_inference_knows_the_vocabulary() {
+        assert_eq!(Direction::infer("fleet_summary.meta.goodput"), Direction::Higher);
+        assert_eq!(Direction::infer("fed_summary.meta.rounds_per_hour"), Direction::Higher);
+        assert_eq!(Direction::infer("fleet_summary.row.edge/fifo.p95"), Direction::Lower);
+        assert_eq!(Direction::infer("bench.fleet.oracle.mean"), Direction::Lower);
+        assert_eq!(Direction::infer("x.wall.elapsed_secs"), Direction::Lower);
+        assert_eq!(Direction::infer("x.meta.deadline_miss_rate"), Direction::Lower);
+        assert_eq!(Direction::infer("trace.dropped"), Direction::Lower);
+    }
+
+    #[test]
+    fn baseline_gate_passes_within_tolerance_and_fails_outside() {
+        let base = Baseline::from_series(
+            &[
+                ("a.meta.goodput".to_string(), 1.0),
+                ("a.row.x.p95".to_string(), 10.0),
+                ("a.wall.elapsed_secs".to_string(), 5.0), // ungated, never stored
+                ("bench.s.c.mean".to_string(), 0.1),      // ungated
+            ],
+            0.05,
+        );
+        assert_eq!(base.series.len(), 2, "wall/bench series excluded from the gate");
+
+        // within tolerance both ways: pass
+        let v = compare_to_baseline(
+            &[("a.meta.goodput".to_string(), 0.96), ("a.row.x.p95".to_string(), 10.4)],
+            &base,
+        );
+        assert!(v.regressions().is_empty(), "{:?}", v.rows);
+
+        // goodput (higher-better) sinking past 5%: FAIL
+        let v = compare_to_baseline(
+            &[("a.meta.goodput".to_string(), 0.90), ("a.row.x.p95".to_string(), 10.0)],
+            &base,
+        );
+        assert_eq!(v.regressions(), vec!["a.meta.goodput"]);
+
+        // p95 (lower-better) growing past 5%: FAIL
+        let v = compare_to_baseline(
+            &[("a.meta.goodput".to_string(), 1.0), ("a.row.x.p95".to_string(), 11.0)],
+            &base,
+        );
+        assert_eq!(v.regressions(), vec!["a.row.x.p95"]);
+
+        // improvements never fail
+        let v = compare_to_baseline(
+            &[("a.meta.goodput".to_string(), 2.0), ("a.row.x.p95".to_string(), 1.0)],
+            &base,
+        );
+        assert!(v.regressions().is_empty());
+    }
+
+    #[test]
+    fn baseline_gate_flags_missing_and_reports_new() {
+        let base = Baseline::from_series(&[("a.meta.goodput".to_string(), 1.0)], 0.05);
+        let v = compare_to_baseline(&[("a.meta.fresh".to_string(), 3.0)], &base);
+        assert_eq!(v.regressions(), vec!["a.meta.goodput"], "missing series regress");
+        let new = v.rows.iter().find(|r| r.series == "a.meta.fresh").unwrap();
+        assert_eq!(new.status, "new");
+        assert!(!new.failed());
+        // the report renders a row per series with the verdict pinned
+        let rep = v.report("gate");
+        assert_eq!(rep.n_rows(), 2);
+        assert_eq!(rep.cell(0, "status"), Some(&Cell::Str("missing".into())));
+        assert_eq!(rep.meta.get("regressed"), Some(&"1".to_string()));
+    }
+
+    #[test]
+    fn baseline_handles_negative_references() {
+        let mut base = Baseline::from_series(&[("a.meta.reward".to_string(), -10.0)], 0.10);
+        base.series.get_mut("a.meta.reward").unwrap().better = Some(Direction::Higher);
+        // -10.5 is within 10% of |-10|: pass; -12 is not: FAIL
+        let v = compare_to_baseline(&[("a.meta.reward".to_string(), -10.5)], &base);
+        assert!(v.regressions().is_empty(), "{:?}", v.rows);
+        let v = compare_to_baseline(&[("a.meta.reward".to_string(), -12.0)], &base);
+        assert_eq!(v.regressions(), vec!["a.meta.reward"]);
+    }
+
+    #[test]
+    fn baseline_json_round_trips() {
+        let mut base = Baseline::from_series(
+            &[("a.meta.goodput".to_string(), 1.5), ("a.row.x.p95".to_string(), 9.0)],
+            0.05,
+        );
+        base.series.get_mut("a.row.x.p95").unwrap().tolerance = Some(0.2);
+        base.series.get_mut("a.meta.goodput").unwrap().better = Some(Direction::Higher);
+        let back = Baseline::from_json(&Json::parse(&base.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, base);
+        assert!(Baseline::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn history_round_trips_and_compares_newest_to_median() {
+        let mk = |label: &str, value: f64| HistoryPoint {
+            label: label.to_string(),
+            source: "BENCH_fleet.json".to_string(),
+            series: "fleet_summary.meta.goodput".to_string(),
+            value,
+        };
+        let points: Vec<HistoryPoint> = [1.0, 1.1, 0.9, 1.0, 0.5]
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| mk(&format!("c{i}"), v))
+            .collect();
+        let hist = BenchHistory::parse(&BenchHistory::render(&points)).unwrap();
+        assert_eq!(hist.points, points);
+        assert_eq!(hist.series(), vec!["fleet_summary.meta.goodput".to_string()]);
+
+        // newest (0.5) vs median of [1.0, 1.1, 0.9, 1.0] = 1.0: FAIL at 5%
+        let v = compare_to_history(&hist, 8, 0.05);
+        assert_eq!(v.regressions(), vec!["fleet_summary.meta.goodput"]);
+        let row = &v.rows[0];
+        assert_eq!(row.reference, Some(1.0));
+        assert_eq!(row.current, Some(0.5));
+
+        // a single point has no reference: "new", not a failure
+        let one = BenchHistory::parse(&BenchHistory::render(&points[..1])).unwrap();
+        let v = compare_to_history(&one, 8, 0.05);
+        assert_eq!(v.rows[0].status, "new");
+        assert!(v.regressions().is_empty());
+
+        // window=1 compares against the immediately preceding point only
+        let v = compare_to_history(&hist, 1, 0.05);
+        assert_eq!(v.rows[0].reference, Some(1.0), "median of [1.0]");
+    }
+
+    #[test]
+    fn history_parser_rejects_malformed_lines() {
+        assert!(BenchHistory::parse("not json\n").is_err());
+        assert!(BenchHistory::parse("{\"label\": \"x\"}\n").is_err());
+        let empty = BenchHistory::parse("\n\n").unwrap();
+        assert!(empty.points.is_empty());
+        assert!(empty.series().is_empty());
+    }
+
+    #[test]
+    fn trend_report_filters_and_windows() {
+        let mut points = Vec::new();
+        for (i, v) in [1.0, 2.0, 3.0, 4.0].iter().enumerate() {
+            points.push(HistoryPoint {
+                label: format!("c{i}"),
+                source: "s".into(),
+                series: "a.meta.goodput".into(),
+                value: *v,
+            });
+            points.push(HistoryPoint {
+                label: format!("c{i}"),
+                source: "s".into(),
+                series: "b.meta.rounds".into(),
+                value: 10.0,
+            });
+        }
+        let hist = BenchHistory::parse(&BenchHistory::render(&points)).unwrap();
+        let r = trend_report(&hist, "goodput", 3);
+        assert_eq!(r.n_rows(), 1, "filter keeps only the matching series");
+        // window 3 of [1,2,3,4] = [2,3,4]: first 2, last 4, +100%
+        assert_eq!(r.cell(0, "first"), Some(&Cell::Float(2.0)));
+        assert_eq!(r.cell(0, "last"), Some(&Cell::Float(4.0)));
+        assert_eq!(r.cell(0, "change_pct"), Some(&Cell::Float(100.0)));
+        let all = trend_report(&hist, "", 8);
+        assert_eq!(all.n_rows(), 2);
+    }
+}

@@ -138,7 +138,11 @@ impl TraceRing {
     }
 
     /// The ring as JSONL: one compact object per held event, oldest
-    /// first, trailing newline included when non-empty.
+    /// first, closed by one trailing metadata line
+    /// `{"dropped": M, "recorded": N}` — the same `recorded`/`dropped`
+    /// tallies `to_chrome` embeds in `otherData`, so a JSONL consumer
+    /// (`obs::analyze`) can tell a complete export from a truncated
+    /// one. Event lines carry `ts`; the metadata line does not.
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
         for ev in self.iter() {
@@ -154,6 +158,14 @@ impl TraceRing {
             out.push_str(&obj(fields).to_string_compact());
             out.push('\n');
         }
+        out.push_str(
+            &obj(vec![
+                ("recorded", Json::from(self.recorded)),
+                ("dropped", Json::from(self.dropped)),
+            ])
+            .to_string_compact(),
+        );
+        out.push('\n');
         out
     }
 }
@@ -198,17 +210,37 @@ mod tests {
     }
 
     #[test]
-    fn jsonl_export_is_one_object_per_line() {
+    fn jsonl_export_is_one_object_per_line_plus_meta_trailer() {
         let mut r = TraceRing::new(16);
         r.record(ev(1.0, 0));
         r.record(ev(2.0, 1));
         let jsonl = r.to_jsonl();
         let lines: Vec<&str> = jsonl.lines().collect();
-        assert_eq!(lines.len(), 2);
-        for line in lines {
+        assert_eq!(lines.len(), 3, "two events + one metadata trailer");
+        for line in &lines[..2] {
             let j = Json::parse(line).unwrap();
             assert_eq!(j.get("cat").unwrap().as_str(), Some("test"));
         }
-        assert!(TraceRing::new(4).to_jsonl().is_empty());
+        let meta = Json::parse(lines[2]).unwrap();
+        assert_eq!(meta.get("recorded").unwrap().as_u64(), Some(2));
+        assert_eq!(meta.get("dropped").unwrap().as_u64(), Some(0));
+        assert!(meta.get("ts").is_none(), "the trailer is not an event");
+        // an empty ring still exports a self-describing trailer
+        let empty = TraceRing::new(4).to_jsonl();
+        let meta = Json::parse(empty.trim_end()).unwrap();
+        assert_eq!(meta.get("recorded").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn jsonl_trailer_reports_overwrites() {
+        let mut r = TraceRing::new(2);
+        for i in 0..7u64 {
+            r.record(ev(i as f64, i));
+        }
+        let jsonl = r.to_jsonl();
+        let last = jsonl.lines().last().unwrap();
+        let meta = Json::parse(last).unwrap();
+        assert_eq!(meta.get("recorded").unwrap().as_u64(), Some(7));
+        assert_eq!(meta.get("dropped").unwrap().as_u64(), Some(5));
     }
 }

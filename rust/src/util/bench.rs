@@ -3,9 +3,20 @@
 //! `cargo bench` targets use [`Bench`] with `harness = false`. It performs
 //! warmup, adaptively picks an iteration count targeting a measurement
 //! window, and reports mean/p50/p99.
+//!
+//! Two environment knobs:
+//!
+//! * `BENCH_FILTER=<substring>` — run only matching cases (the
+//!   reliable spelling; argv filtering also works but cargo's own
+//!   `--bench` injection makes argv ambiguous across cargo versions);
+//! * `BENCH_OUT=<file>` — on drop, write the suite's results as JSON
+//!   (`{"suite": ..., "cases": [{name, iters, mean, p50, p99, min,
+//!   max}]}`), the machine-readable feed for `pacpp bench record` /
+//!   `obs::regress::BenchHistory`.
 
 use std::time::{Duration, Instant};
 
+use super::json::{obj, Json};
 use super::stats::Summary;
 
 /// One registered benchmark's result line.
@@ -37,12 +48,44 @@ pub struct Bench {
     warmup: Duration,
     results: Vec<BenchResult>,
     filter: Option<String>,
+    /// `BENCH_OUT` destination, captured at construction so a
+    /// mid-suite env change cannot split the output.
+    out: Option<String>,
+}
+
+/// The case filter from a bench binary's argv: the first token that is
+/// neither an option (`-...`) nor the value cargo attaches to its own
+/// `--bench` injection. The old "first non-`-` token" rule grabbed
+/// that `--bench` value (and test-harness positional filters) as a
+/// case filter, silently skipping every case.
+fn cli_filter<I: IntoIterator<Item = String>>(argv: I) -> Option<String> {
+    let mut after_bench = false;
+    for a in argv {
+        if after_bench {
+            after_bench = false;
+            continue;
+        }
+        if a == "--bench" {
+            after_bench = true;
+            continue;
+        }
+        if a.starts_with('-') {
+            continue;
+        }
+        return Some(a);
+    }
+    None
 }
 
 impl Bench {
     pub fn new(suite: &str) -> Bench {
-        // `cargo bench -- <filter>` filters by substring.
-        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        // `BENCH_FILTER=substr cargo bench` filters by substring;
+        // `cargo bench -- <filter>` works too where cargo passes the
+        // filter as a standalone token.
+        let filter = std::env::var("BENCH_FILTER")
+            .ok()
+            .filter(|s| !s.is_empty())
+            .or_else(|| cli_filter(std::env::args().skip(1)));
         println!("\n== bench suite: {suite} ==");
         println!(
             "{:<48} {:>12} {:>12} {:>12}",
@@ -59,6 +102,7 @@ impl Bench {
             warmup: Duration::from_millis(50),
             results: Vec::new(),
             filter,
+            out: std::env::var("BENCH_OUT").ok().filter(|s| !s.is_empty()),
         }
     }
 
@@ -120,14 +164,53 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// The `BENCH_OUT` JSON document for the results so far (also
+    /// written automatically on drop when the env var is set).
+    pub fn to_json(&self) -> Json {
+        let cases: Json = self
+            .results
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", Json::from(r.name.as_str())),
+                    ("iters", Json::from(r.iters)),
+                    ("mean", Json::from(r.summary.mean)),
+                    ("p50", Json::from(r.summary.p50)),
+                    ("p99", Json::from(r.summary.p99)),
+                    ("min", Json::from(r.summary.min)),
+                    ("max", Json::from(r.summary.max)),
+                ])
+            })
+            .collect();
+        obj(vec![("suite", Json::from(self.suite.as_str())), ("cases", cases)])
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        let Some(path) = self.out.clone() else { return };
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        match crate::util::write_creating_dirs(&path, &text) {
+            Ok(()) => eprintln!("wrote {path} ({} case(s), bench json)", self.results.len()),
+            Err(e) => eprintln!("BENCH_OUT: {e}"),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// `BENCH_OUT`/`BENCH_TARGET_MS` are process-global: tests that
+    /// construct a [`Bench`] serialize on this lock so one test's env
+    /// setup cannot leak into another's construction.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn bench_measures_something() {
+        let _env = ENV_LOCK.lock().unwrap();
         std::env::set_var("BENCH_TARGET_MS", "20");
         let mut b = Bench::new("test");
         let r = b
@@ -142,5 +225,44 @@ mod tests {
         let r = r.unwrap();
         assert!(r.summary.mean > 0.0);
         assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn cli_filter_skips_options_and_cargos_bench_value() {
+        let f = |toks: &[&str]| cli_filter(toks.iter().map(|s| s.to_string()));
+        assert_eq!(f(&[]), None);
+        assert_eq!(f(&["--bench"]), None, "cargo's bare injection");
+        assert_eq!(f(&["--bench", "bench_fleet"]), None, "cargo's --bench value");
+        assert_eq!(f(&["--bench", "bench_fleet", "oracle"]), Some("oracle".into()));
+        assert_eq!(f(&["oracle"]), Some("oracle".into()));
+        assert_eq!(f(&["-q", "--exact", "oracle"]), Some("oracle".into()));
+    }
+
+    #[test]
+    fn bench_out_writes_machine_readable_results_on_drop() {
+        let _env = ENV_LOCK.lock().unwrap();
+        let base = std::env::temp_dir().join(format!("pacpp_bo_{}", std::process::id()));
+        let path = base.join("bench.json");
+        std::env::set_var("BENCH_TARGET_MS", "20");
+        std::env::set_var("BENCH_OUT", path.to_str().unwrap());
+        {
+            let mut b = Bench::new("out_suite");
+            b.run("spin", || std::hint::black_box((0..100u64).sum::<u64>()));
+        } // drop writes the file
+        std::env::remove_var("BENCH_OUT");
+        let text = std::fs::read_to_string(&path).expect("BENCH_OUT file written on drop");
+        let json = Json::parse(&text).expect("bench json parses");
+        assert_eq!(json.get("suite").unwrap().as_str(), Some("out_suite"));
+        let cases = json.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        let case = &cases[0];
+        assert_eq!(case.get("name").unwrap().as_str(), Some("spin"));
+        for field in ["iters", "mean", "p50", "p99", "min", "max"] {
+            assert!(
+                case.get(field).and_then(Json::as_f64).is_some_and(|v| v >= 0.0),
+                "{field} missing or negative"
+            );
+        }
+        std::fs::remove_dir_all(&base).unwrap();
     }
 }

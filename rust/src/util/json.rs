@@ -56,6 +56,40 @@ impl Json {
         Some(cur)
     }
 
+    /// Dotted key-path access with array indices: `"meta.goodput"`,
+    /// `"rows[0][3]"`, `"otherData.metrics.counters.events"`. Keys
+    /// select object members, `[N]` selects array elements; the empty
+    /// path is the value itself. `None` on any miss or malformed
+    /// segment — the declarative extractor in `obs::regress` turns
+    /// that into a diagnostic naming the path.
+    pub fn path_str(&self, path: &str) -> Option<&Json> {
+        let mut cur = self;
+        if path.is_empty() {
+            return Some(cur);
+        }
+        for seg in path.split('.') {
+            let (key, mut rest) = match seg.find('[') {
+                Some(i) => (&seg[..i], &seg[i..]),
+                None => (seg, ""),
+            };
+            if !key.is_empty() {
+                cur = cur.get(key)?;
+            } else if rest.is_empty() {
+                return None; // empty segment: "a..b"
+            }
+            while let Some(r) = rest.strip_prefix('[') {
+                let end = r.find(']')?;
+                let idx: usize = r[..end].parse().ok()?;
+                cur = cur.as_arr()?.get(idx)?;
+                rest = &r[end + 1..];
+            }
+            if !rest.is_empty() {
+                return None; // trailing junk after the last ']'
+            }
+        }
+        Some(cur)
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -466,6 +500,24 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(42.0).to_string_compact(), "42");
         assert_eq!(Json::Num(0.5).to_string_compact(), "0.5");
+    }
+
+    #[test]
+    fn path_str_walks_keys_and_indices() {
+        let v = Json::parse(
+            r#"{"meta": {"goodput": "0.9"}, "rows": [[1, "a", 2.5], [3]], "n": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(v.path_str("n").unwrap().as_f64(), Some(7.0));
+        assert_eq!(v.path_str("meta.goodput").unwrap().as_str(), Some("0.9"));
+        assert_eq!(v.path_str("rows[0][2]").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.path_str("rows[1][0]").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.path_str(""), Some(&v), "empty path is the value itself");
+        for miss in ["absent", "meta.absent", "rows[9]", "rows[0][9]", "n[0]", "rows[x]",
+            "rows[0]junk", "meta..goodput"]
+        {
+            assert!(v.path_str(miss).is_none(), "{miss} should miss");
+        }
     }
 
     #[test]

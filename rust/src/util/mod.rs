@@ -87,6 +87,22 @@ pub fn write_creating_dirs(path: &str, contents: &str) -> crate::Result<()> {
     std::fs::write(path, contents).map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))
 }
 
+/// Append `contents` to `path`, creating the file and any missing
+/// parent directories first. The bench history (`obs::regress`) is an
+/// append-only JSONL file: every `pacpp bench record` adds lines and
+/// never rewrites what earlier commits recorded.
+pub fn append_creating_dirs(path: &str, contents: &str) -> crate::Result<()> {
+    use std::io::Write;
+    ensure_parent_dirs(path)?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open {path}: {e}"))?;
+    f.write_all(contents.as_bytes())
+        .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))
+}
+
 /// Format a duration in seconds adaptively (µs → hours).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -147,6 +163,17 @@ mod tests {
             .to_string();
         assert!(err.contains("cannot create directory"), "{err}");
         assert!(err.contains("blocker"), "{err}");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn append_creating_dirs_accumulates() {
+        let base = std::env::temp_dir().join(format!("pacpp_acd_{}", std::process::id()));
+        let nested = base.join("h/history.jsonl");
+        let path = nested.to_str().unwrap();
+        append_creating_dirs(path, "{\"a\": 1}\n").unwrap();
+        append_creating_dirs(path, "{\"a\": 2}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&nested).unwrap(), "{\"a\": 1}\n{\"a\": 2}\n");
         std::fs::remove_dir_all(&base).unwrap();
     }
 

@@ -1,0 +1,369 @@
+//! CLI-level tests for the observability consumers: `pacpp trace
+//! summarize` and `pacpp bench record|compare|trend`, driven through
+//! the real binary (`CARGO_BIN_EXE_pacpp`) exactly as CI invokes them.
+//! Everything here runs on engineered or freshly generated artifacts
+//! in a per-test temp directory — no network, no prebuilt fixtures.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+use pacpp::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pacpp_obs_cli_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn pacpp(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_pacpp"))
+        .args(args)
+        .output()
+        .expect("pacpp binary runs")
+}
+
+fn assert_ok(out: &Output, what: &str) {
+    assert!(
+        out.status.success(),
+        "{what} failed (status {:?}):\n{}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+fn read_json(path: &std::path::Path) -> Json {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
+}
+
+/// The engineered two-round JSONL trace from the `obs::analyze` unit
+/// tests, written as a file: round 2 is the straggler, upload dominates.
+fn engineered_trace(dir: &std::path::Path) -> PathBuf {
+    let path = dir.join("trace.jsonl");
+    let lines = [
+        r#"{"ts": 0, "cat": "fed.round", "name": "select", "id": 1}"#,
+        r#"{"ts": 0, "cat": "fed.round", "name": "upload", "id": 1, "dur": 5}"#,
+        r#"{"ts": 5, "cat": "fed.round", "name": "aggregate", "id": 1, "dur": 1}"#,
+        r#"{"ts": 10, "cat": "fed.round", "name": "select", "id": 2}"#,
+        r#"{"ts": 10, "cat": "fed.round", "name": "upload", "id": 2, "dur": 20}"#,
+        r#"{"ts": 30, "cat": "fed.round", "name": "aggregate", "id": 2, "dur": 2}"#,
+        r#"{"recorded": 6, "dropped": 0}"#,
+    ];
+    std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+    path
+}
+
+#[test]
+fn trace_summarize_pins_aggregates_and_straggler_attribution() {
+    let dir = tmp("summarize");
+    let trace = engineered_trace(&dir);
+    let out_path = dir.join("summary.json");
+    let out = pacpp(&[
+        "trace",
+        "summarize",
+        trace.to_str().unwrap(),
+        "--format",
+        "json",
+        "--out",
+        out_path.to_str().unwrap(),
+    ]);
+    assert_ok(&out, "trace summarize");
+
+    let reports = read_json(&out_path);
+    let reports = reports.as_arr().expect("--section all emits an array");
+    assert_eq!(reports.len(), 3, "summary + critical + gaps");
+
+    // summary: three (cat, name) aggregates, coverage complete
+    let summary = &reports[0];
+    assert_eq!(summary.get("name").unwrap().as_str(), Some("trace_summary"));
+    assert_eq!(summary.get("rows").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(summary.path_str("meta.recorded").unwrap().as_str(), Some("6"));
+    assert_eq!(summary.path_str("meta.dropped").unwrap().as_str(), Some("0"));
+
+    // critical: the straggler round and its dominant phase are named
+    let critical = &reports[1];
+    assert_eq!(critical.get("name").unwrap().as_str(), Some("trace_critical"));
+    assert_eq!(
+        critical.path_str("meta").unwrap().get("critical_fed.round").unwrap().as_str(),
+        Some("2"),
+        "round 2 (22 s) must out-rank round 1 (6 s)"
+    );
+    // row 0 = the straggler: id 2, dominant phase "upload" at 20 s
+    assert_eq!(critical.path_str("rows[0][1]").unwrap().as_u64(), Some(2));
+    assert_eq!(critical.path_str("rows[0][3]").unwrap().as_f64(), Some(22.0));
+    assert_eq!(critical.path_str("rows[0][6]").unwrap().as_str(), Some("upload"));
+    assert_eq!(critical.path_str("rows[0][7]").unwrap().as_f64(), Some(20.0));
+
+    // gaps: one fed.round timeline, window 32, busy 28, gap 4
+    let gaps = &reports[2];
+    assert_eq!(gaps.get("name").unwrap().as_str(), Some("trace_gaps"));
+    assert_eq!(gaps.path_str("rows[0][2]").unwrap().as_f64(), Some(32.0));
+    assert_eq!(gaps.path_str("rows[0][4]").unwrap().as_f64(), Some(4.0));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn trace_summarize_reads_a_real_fleet_export() {
+    let dir = tmp("real_trace");
+    let trace_path = dir.join("fleet_trace.json");
+    let out = pacpp(&[
+        "fleet",
+        "--jobs",
+        "6",
+        "--policy",
+        "fifo",
+        "--trace-out",
+        trace_path.to_str().unwrap(),
+        "--format",
+        "json",
+        "--out",
+        dir.join("fleet.json").to_str().unwrap(),
+    ]);
+    assert_ok(&out, "traced fleet run");
+
+    let summary_path = dir.join("summary.json");
+    let out = pacpp(&[
+        "trace",
+        "summarize",
+        trace_path.to_str().unwrap(),
+        "--section",
+        "summary",
+        "--format",
+        "json",
+        "--out",
+        summary_path.to_str().unwrap(),
+    ]);
+    assert_ok(&out, "trace summarize on a real export");
+    let summary = read_json(&summary_path);
+    assert!(
+        !summary.get("rows").unwrap().as_arr().unwrap().is_empty(),
+        "a traced fleet run must produce span/instant aggregates"
+    );
+    // the Metrics-derived counters ride along from otherData.metrics
+    assert!(
+        summary.path_str("meta.counter_events").is_some(),
+        "summary must carry the events counter"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn bench_record_then_compare_passes_on_its_own_baseline() {
+    let dir = tmp("record_compare");
+    let artifact = dir.join("BENCH_fleet.json");
+    let out = pacpp(&[
+        "fleet",
+        "--jobs",
+        "6",
+        "--policy",
+        "fifo",
+        "--format",
+        "json",
+        "--out",
+        artifact.to_str().unwrap(),
+    ]);
+    assert_ok(&out, "fleet artifact run");
+
+    let history = dir.join("bench_history.jsonl");
+    let baseline = dir.join("bench_baseline.json");
+    let out = pacpp(&[
+        "bench",
+        "record",
+        artifact.to_str().unwrap(),
+        "--history",
+        history.to_str().unwrap(),
+        "--label",
+        "seed",
+        "--baseline-out",
+        baseline.to_str().unwrap(),
+    ]);
+    assert_ok(&out, "bench record");
+    assert!(history.exists(), "record must append the history file");
+    let base = read_json(&baseline);
+    let series = base.get("series").unwrap().as_obj().unwrap();
+    assert!(!series.is_empty(), "a fleet report must yield gated series");
+    assert!(
+        series.keys().all(|k| !k.contains(".wall.") && !k.starts_with("bench.")),
+        "wall-clock series must not be gated: {:?}",
+        series.keys().collect::<Vec<_>>()
+    );
+
+    // the simulator is deterministic, so the same invocation compared
+    // against its own recorded baseline passes with zero regressions
+    let verdict_path = dir.join("verdict.json");
+    let out = pacpp(&[
+        "bench",
+        "compare",
+        artifact.to_str().unwrap(),
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--format",
+        "json",
+        "--out",
+        verdict_path.to_str().unwrap(),
+    ]);
+    assert_ok(&out, "bench compare vs own baseline");
+    let verdict = read_json(&verdict_path);
+    assert_eq!(verdict.path_str("meta.regressed").unwrap().as_str(), Some("0"));
+    assert_eq!(verdict.path_str("meta.mode").unwrap().as_str(), Some("baseline"));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn bench_compare_fails_on_an_injected_regression() {
+    let dir = tmp("regression");
+    let artifact = dir.join("BENCH_fleet.json");
+    assert_ok(
+        &pacpp(&[
+            "fleet",
+            "--jobs",
+            "6",
+            "--policy",
+            "fifo",
+            "--format",
+            "json",
+            "--out",
+            artifact.to_str().unwrap(),
+        ]),
+        "fleet artifact run",
+    );
+    let baseline = dir.join("base.json");
+    assert_ok(
+        &pacpp(&[
+            "bench",
+            "record",
+            artifact.to_str().unwrap(),
+            "--history",
+            dir.join("h.jsonl").to_str().unwrap(),
+            "--baseline-out",
+            baseline.to_str().unwrap(),
+        ]),
+        "bench record",
+    );
+
+    // inject a regression: force one series' reference far above the
+    // current value and pin its direction to higher-is-better
+    let mut base = read_json(&baseline);
+    let injected_series;
+    {
+        let Json::Obj(top) = &mut base else { panic!("baseline is an object") };
+        let Some(Json::Obj(series)) = top.get_mut("series") else {
+            panic!("baseline.series is an object")
+        };
+        let name = series.keys().next().unwrap().clone();
+        let Some(Json::Obj(spec)) = series.get_mut(&name) else { panic!("series spec") };
+        let current = spec.get("value").unwrap().as_f64().unwrap();
+        spec.insert("value".to_string(), Json::from(current.abs() * 10.0 + 100.0));
+        spec.insert("better".to_string(), Json::from("higher"));
+        injected_series = name;
+    }
+    let injected = dir.join("injected.json");
+    std::fs::write(&injected, base.to_string_pretty() + "\n").unwrap();
+
+    let out = pacpp(&[
+        "bench",
+        "compare",
+        artifact.to_str().unwrap(),
+        "--baseline",
+        injected.to_str().unwrap(),
+    ]);
+    assert!(
+        !out.status.success(),
+        "an injected >tolerance regression must exit nonzero"
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("regressed") && stderr.contains(&injected_series),
+        "the failure must name the regressed series {injected_series:?}:\n{stderr}"
+    );
+    // the verdict table is still emitted before the failing exit
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("FAIL"), "verdict table missing from stdout:\n{stdout}");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn bench_history_mode_and_trend() {
+    let dir = tmp("history");
+    let artifact = dir.join("BENCH_fleet.json");
+    assert_ok(
+        &pacpp(&[
+            "fleet",
+            "--jobs",
+            "6",
+            "--policy",
+            "fifo",
+            "--format",
+            "json",
+            "--out",
+            artifact.to_str().unwrap(),
+        ]),
+        "fleet artifact run",
+    );
+    let history = dir.join("h.jsonl");
+    for label in ["c1", "c2"] {
+        assert_ok(
+            &pacpp(&[
+                "bench",
+                "record",
+                artifact.to_str().unwrap(),
+                "--history",
+                history.to_str().unwrap(),
+                "--label",
+                label,
+            ]),
+            "bench record",
+        );
+    }
+
+    // identical runs: newest vs median of priors regresses nothing
+    let out = pacpp(&["bench", "compare", "--history", history.to_str().unwrap()]);
+    assert_ok(&out, "bench compare --history on identical runs");
+
+    let trend_path = dir.join("trend.json");
+    let out = pacpp(&[
+        "bench",
+        "trend",
+        "--history",
+        history.to_str().unwrap(),
+        "--format",
+        "json",
+        "--out",
+        trend_path.to_str().unwrap(),
+    ]);
+    assert_ok(&out, "bench trend");
+    let trend = read_json(&trend_path);
+    let rows = trend.get("rows").unwrap().as_arr().unwrap();
+    assert!(!rows.is_empty(), "trend must list the recorded series");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn cli_rejects_bad_invocations() {
+    // missing file
+    let out = pacpp(&["trace", "summarize", "/nonexistent/trace.json"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot read"));
+    // unknown trace action
+    assert!(!pacpp(&["trace", "frobnicate"]).status.success());
+    // compare needs exactly one reference source
+    let out = pacpp(&["bench", "compare", "--baseline", "a.json", "--history", "b.jsonl"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("exactly one"));
+    let out = pacpp(&["bench", "compare"]);
+    assert!(!out.status.success());
+    // record with no files
+    assert!(!pacpp(&["bench", "record"]).status.success());
+    // unknown section
+    let dir = tmp("bad_section");
+    let trace = engineered_trace(&dir);
+    let out = pacpp(&["trace", "summarize", trace.to_str().unwrap(), "--section", "nope"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown --section"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -23,6 +23,7 @@ use pacpp::fleet::{
     PlacementPolicy, PreemptReplan, TraceKind,
 };
 use pacpp::learn::{evaluate, train, DqnConfig, LearnedQueue, TrainConfig};
+use pacpp::obs::analyze::{analyze, summary_report, TraceDoc};
 use pacpp::obs::Observer;
 use pacpp::util::json::Json;
 use pacpp::util::prop::{check, forall};
@@ -721,4 +722,67 @@ fn trace_export_round_trips_and_matches_the_event_counter() {
     assert_eq!(held as u64, obs_recorded);
     assert!(sim_events <= held, "instants are a subset of held events");
     std::fs::remove_dir_all(path_buf.parent().unwrap()).unwrap();
+}
+
+/// `--trace-sample` thins the *event stream*, never the metrics
+/// registry: summarizing the same seeded run traced at sample 1 vs
+/// sample 3 must yield identical Metrics-derived aggregate counters
+/// (the `counter_*` metadata of `summary_report`), even though the
+/// span-derived rows legitimately differ.
+#[test]
+fn trace_summary_counters_are_sample_invariant() {
+    let env = Env::env_a();
+    let opts = FleetOptions::default();
+    forall(
+        0x5A11D,
+        3,
+        |g| FleetCase { seed: 1 + g.int(0, 1_000_000) as u64 * 2_654_435_761, n_jobs: g.int(8, 16) },
+        |case| {
+            let jobs = generate_jobs(TraceKind::Bursty, case.n_jobs, case.seed);
+            let churn = generate_churn(&env, opts.horizon, 2.0, case.seed);
+            let mut docs = Vec::new();
+            for sample in [1u64, 3] {
+                let obs = Observer::with(sample, 1 << 20);
+                simulate_fleet_observed(&env, &jobs, &churn, &BestFit, &opts, &obs)
+                    .map_err(|e| e.to_string())?;
+                let text = obs.to_chrome_json().to_string_pretty();
+                docs.push(TraceDoc::load(&text).map_err(|e| e.to_string())?);
+            }
+            let (full, thinned) = (&docs[0], &docs[1]);
+            check(
+                full.sample == Some(1) && thinned.sample == Some(3),
+                "exports must carry their sampling knob".to_string(),
+            )?;
+            check(
+                !full.counters.is_empty(),
+                "traced fleet run must absorb metrics counters".to_string(),
+            )?;
+            check(
+                full.counters == thinned.counters,
+                format!(
+                    "metrics counters must ignore --trace-sample: {:?} vs {:?}",
+                    full.counters, thinned.counters
+                ),
+            )?;
+            // and the rendered summaries agree on every counter_* entry
+            let counters = |doc: &TraceDoc| {
+                let report = summary_report(&analyze(doc));
+                report
+                    .meta
+                    .iter()
+                    .filter(|(k, _)| k.starts_with("counter_"))
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect::<Vec<_>>()
+            };
+            check(
+                counters(full) == counters(thinned),
+                "summary_report counter_* metadata must be sample-invariant".to_string(),
+            )?;
+            // sanity: thinning cannot increase the held event count
+            check(
+                thinned.events.len() <= full.events.len(),
+                "sample 3 held more events than sample 1".to_string(),
+            )
+        },
+    );
 }
